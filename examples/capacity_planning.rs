@@ -1,0 +1,87 @@
+//! Capacity planning (Eq. 23): size replica pools for a forecast traffic
+//! mix, sweeping the cost–latency trade-off β — the paper's "slower
+//! capacity-planning optimisation" instantiation g(N).
+//!
+//! Run: `cargo run --release --example capacity_planning`
+
+use la_imr::config::{Config, QualityClass};
+use la_imr::planner::{plan_capacity, route_tasks, RoutingProblem, TaskClass};
+
+fn main() {
+    let cfg = Config::default();
+    let (yolo, _) = cfg.model_by_name("yolov5m").unwrap();
+    let tau = cfg.slo_budget(yolo);
+
+    // Forecast: 4 req/s balanced robot traffic + 1 req/s precision
+    // inspection + 3 req/s low-latency safety stops.
+    let classes = vec![
+        TaskClass {
+            name: "safety-stop".into(),
+            quality: QualityClass::LowLatency,
+            lambda: 3.0,
+            slo: Some(0.5),
+            min_accuracy: 0.2,
+        },
+        TaskClass {
+            name: "manipulation".into(),
+            quality: QualityClass::Balanced,
+            lambda: 4.0,
+            slo: Some(tau),
+            min_accuracy: 0.5,
+        },
+        TaskClass {
+            name: "inspection".into(),
+            quality: QualityClass::Precise,
+            lambda: 1.0,
+            slo: Some(8.0),
+            min_accuracy: 0.7,
+        },
+    ];
+
+    println!("capacity plans across the β sweep (Eq. 23 objective):");
+    println!("{:>8} {:>14} {:>10} {:>12}  layout", "β", "worst-lat [s]", "cost", "objective");
+    for beta in [0.1, 1.0, 2.5, 10.0, 40.0] {
+        match plan_capacity(&cfg, &classes, beta) {
+            None => println!("{beta:>8}  infeasible"),
+            Some(plan) => {
+                let mut layout = String::new();
+                for (m, row) in plan.replicas.iter().enumerate() {
+                    for (i, &n) in row.iter().enumerate() {
+                        if n > 0 {
+                            layout.push_str(&format!(
+                                "{}@{}×{} ",
+                                cfg.models[m].name, cfg.instances[i].name, n
+                            ));
+                        }
+                    }
+                }
+                println!(
+                    "{beta:>8} {:>14.3} {:>10.1} {:>12.2}  {layout}",
+                    plan.worst_latency, plan.cost, plan.objective
+                );
+            }
+        }
+    }
+
+    // Then: route the same classes over the β=2.5 layout (Eq. 18).
+    let plan = plan_capacity(&cfg, &classes, cfg.slo.beta_cost).expect("feasible");
+    let routing = route_tasks(
+        &cfg,
+        &RoutingProblem {
+            classes: classes.clone(),
+            replicas: plan.replicas.clone(),
+        },
+    )
+    .expect("routable");
+    println!("\nrouting over the β={} layout (Eq. 18 min-max):", cfg.slo.beta_cost);
+    for p in routing {
+        println!(
+            "  {:<14} → {} on {} (predicted {:.3} s, SLO {:?})",
+            classes[p.class].name,
+            cfg.models[p.model].name,
+            cfg.instances[p.instance].name,
+            p.latency,
+            classes[p.class].slo
+        );
+    }
+}

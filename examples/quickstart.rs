@@ -1,0 +1,99 @@
+//! Quickstart: the 60-second tour of LA-IMR.
+//!
+//! 1. Load the AOT artifacts and run one real PJRT inference.
+//! 2. Evaluate the closed-form latency model (Eq. 15/17).
+//! 3. Route a handful of requests through Algorithm 1, showing the
+//!    instant-offload and scale-out decisions fire (Fig 5's control flow).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use la_imr::config::{Config, QualityClass};
+use la_imr::coordinator::state::ReplicaView;
+use la_imr::coordinator::{ControlState, Router};
+use la_imr::latency_model::LatencyModel;
+use la_imr::runtime::{postprocess, Runtime};
+use la_imr::workload::RobotFleet;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Config::default();
+
+    // ---- 1. Real inference through the PJRT runtime -------------------
+    println!("== 1. PJRT inference (python is not involved) ==");
+    match Runtime::load(std::path::Path::new("artifacts")) {
+        Err(e) => println!("   (skipped: {e}; run `make artifacts`)"),
+        Ok(rt) => {
+            let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+            for name in rt.model_names() {
+                let model = rt.model(name).unwrap();
+                let golden_err = model.golden_check()?;
+                let img = fleet.frame(0, 0, model.entry.input_shape[1]);
+                let t = model.time_one(&img)?;
+                let out = model.infer(&img)?;
+                let dets = postprocess(&out, rt.manifest.num_classes, 0.52);
+                println!(
+                    "   {name:<12} {:>6.2} ms/frame  {} detections  (golden err {golden_err:.1e})",
+                    t * 1e3,
+                    dets.len()
+                );
+            }
+        }
+    }
+
+    // ---- 2. The closed-form latency model ------------------------------
+    println!("\n== 2. Closed-form latency model g(λ, N) for YOLOv5m on edge ==");
+    let (yolo, _) = cfg.model_by_name("yolov5m").unwrap();
+    let lm = LatencyModel::from_config(&cfg, yolo, 0);
+    let tau = cfg.slo_budget(yolo);
+    println!(
+        "   SLO budget τ = x·L_m = {:.2}·{:.2} = {tau:.2} s",
+        cfg.slo.x_multiplier, 0.73
+    );
+    for lam in [1.0, 2.0, 4.0, 6.0] {
+        print!("   λ={lam}: ");
+        for n in [1u32, 2, 4, 8] {
+            let g = lm.g_lambda(lam, n);
+            if g.is_finite() {
+                print!("g(N={n})={g:.2}s{} ", if g <= tau { "✓" } else { "✗" });
+            } else {
+                print!("g(N={n})=∞ ");
+            }
+        }
+        let need = lm.required_replicas(lam, tau, 16);
+        println!("→ PM-HPA target N = {need:?}");
+    }
+
+    // ---- 3. Algorithm 1 in action --------------------------------------
+    println!("\n== 3. Algorithm 1: route, offload, scale (Fig 5 flow) ==");
+    let mut router = Router::new(&cfg);
+    let mut state = ControlState::new();
+    let home = router.home(yolo);
+    state.update(
+        home,
+        ReplicaView {
+            active: 1,
+            ready: 1,
+            desired: 1,
+            rho: 0.6,
+            queue_depth: 0,
+        },
+    );
+    // A burst of 10 requests inside one second.
+    for k in 0..10 {
+        let now = 0.1 * k as f64;
+        let d = router.route(yolo, now, &state);
+        println!(
+            "   t={now:.1}s → {:?} target=(m{},i{}) predicted={:.2}s{}",
+            d.reason,
+            d.target.model,
+            d.target.instance,
+            d.predicted,
+            if d.desired_updates.is_empty() {
+                String::new()
+            } else {
+                format!("  publish desired_replicas={}", d.desired_updates[0].1)
+            }
+        );
+    }
+    println!("\nNext: `laimr simulate --lambda 4 --policy la-imr` or `laimr repro all`.");
+    Ok(())
+}

@@ -1,0 +1,124 @@
+"""AOT lowering: JAX models -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO TEXT, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits artifacts/manifest.json (shapes + FLOPs, read by rust config)
+and an HLO op-count report used as the L2 fusion sanity check (§Perf).
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import collections
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import MODELS, NUM_CLASSES, build_infer_fn
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (0.5.1-safe path).
+
+    print_large_constants=True is ESSENTIAL: the default printer elides
+    big literals as `constant({...})`, and the rust-side text parser then
+    reads garbage — the model's closed-over weights would silently vanish
+    and the executable would ignore its input.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided constants"
+    return text
+
+
+def op_histogram(hlo_text: str) -> dict[str, int]:
+    """Count HLO ops per opcode — the L2 graph-shape report."""
+    hist: collections.Counter[str] = collections.Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\],{}\s]+?\s(\w+)\(", line)
+        if m:
+            hist[m.group(1)] += 1
+    return dict(hist)
+
+
+def lower_model(name: str):
+    spec = MODELS[name]
+    fn = build_infer_fn(spec)
+    image = jax.ShapeDtypeStruct(spec.input_shape, jnp.float32)
+    return spec, jax.jit(fn).lower(image)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts dir")
+    ap.add_argument("--models", nargs="*", default=list(MODELS))
+    args = ap.parse_args()
+
+    # `--out` may be the artifacts dir or (legacy Makefile) a single .hlo.txt
+    # path inside it; normalise to the directory.
+    out_dir = args.out
+    if out_dir.endswith(".txt"):
+        out_dir = os.path.dirname(out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest: dict[str, dict] = {"num_classes": NUM_CLASSES, "models": {}}
+    for name in args.models:
+        spec, lowered = lower_model(name)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        hist = op_histogram(text)
+
+        # Golden cross-check: a deterministic ramp input and the jax-side
+        # output. The rust integration tests re-run the compiled artifact
+        # on the same input and assert allclose — this is the contract
+        # that catches silent artifact corruption (e.g. elided constants).
+        n_in = 1
+        for d in spec.input_shape:
+            n_in *= d
+        ramp = (jnp.arange(n_in, dtype=jnp.float32) % 97.0) / 97.0
+        golden_in = ramp.reshape(spec.input_shape)
+        golden_out = jax.jit(build_infer_fn(spec))(golden_in)[0]
+        golden = [float(x) for x in jnp.asarray(golden_out).ravel()[:32]]
+
+        manifest["models"][name] = {
+            "hlo": f"{name}.hlo.txt",
+            "input_shape": list(spec.input_shape),
+            "output_shape": list(spec.output_shape),
+            "flops": spec.flops(),
+            "hlo_ops": hist,
+            "golden_prefix": golden,
+        }
+        print(
+            f"{name}: wrote {len(text)} chars -> {path} "
+            f"({spec.flops()/1e6:.2f} MFLOP, {sum(hist.values())} HLO ops)"
+        )
+
+    # Legacy Makefile stamp target (artifacts/model.hlo.txt) — keep it valid
+    # by symlinking the first model so `make -q artifacts` stays accurate.
+    stamp = os.path.join(out_dir, "model.hlo.txt")
+    first = f"{args.models[0]}.hlo.txt"
+    if os.path.islink(stamp) or os.path.exists(stamp):
+        os.remove(stamp)
+    os.symlink(first, stamp)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {os.path.join(out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

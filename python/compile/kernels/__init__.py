@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for the inference hot-spot (conv-as-matmul).
+
+Public surface:
+  matmul            — tiled Pallas matmul, optional fused bias + SiLU
+  matmul_bias_silu  — fused epilogue convenience wrapper
+  vmem_bytes        — VMEM-footprint estimator for a BlockSpec choice
+  ref               — pure-jnp oracles (correctness ground truth)
+"""
+
+from . import ref  # noqa: F401
+from .matmul import matmul, matmul_bias_silu, vmem_bytes  # noqa: F401

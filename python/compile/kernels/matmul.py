@@ -1,0 +1,153 @@
+"""L1 Pallas kernel: tiled matmul with fused bias + SiLU epilogue.
+
+This is the compute hot-spot of both mini-detectors (conv is expressed as
+im2col + matmul in model.py, so ~all FLOPs flow through here).
+
+TPU-idiomatic structure (see DESIGN.md §Hardware-Adaptation):
+  * the grid tiles (M, N, K) into (bm, bn, bk) blocks sized for the MXU
+    (multiples of 128 where the problem allows) and for VMEM residency —
+    three live f32 tiles of 128x128 are ~192 KiB, far under the ~16 MiB
+    VMEM budget, leaving room for double-buffered prefetch;
+  * the K-loop is the innermost grid dimension so each (i, j) output tile
+    accumulates in-place in VMEM across K steps (revolving accumulator);
+  * the bias + SiLU epilogue is fused into the final K step, avoiding an
+    HBM round-trip for the activation.
+
+MUST run with interpret=True on CPU-PJRT: real TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nsteps_k: int, fuse: str):
+    """Grid = (M/bm, N/bn, K/bk); accumulate over the trailing K axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    if fuse == "silu":
+        @pl.when(k == nsteps_k - 1)
+        def _epilogue():
+            z = o_ref[...]
+            o_ref[...] = z * (1.0 / (1.0 + jnp.exp(-z)))
+
+
+def _bias_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps_k: int, fuse: str):
+    """Same as _matmul_kernel but with a bias row added in the epilogue."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...]
+        if fuse == "silu":
+            z = z * (1.0 / (1.0 + jnp.exp(-z)))
+        o_ref[...] = z
+
+
+def _block(dim: int, target: int) -> int:
+    """Largest divisor of `dim` that is <= target (keeps grid exact)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "fuse", "interpret")
+)
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray | None = None,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    fuse: str = "none",
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled Pallas matmul: (M, K) @ (K, N) [+ b] [SiLU] -> (M, N).
+
+    Block sizes are clamped to divisors of the problem dims so the grid is
+    exact (no masking needed); 128 targets the MXU systolic array width.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert fuse in ("none", "silu")
+
+    bm = _block(m, bm)
+    bn = _block(n, bn)
+    bk = _block(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    nsteps_k = grid[2]
+
+    x_spec = pl.BlockSpec((bm, bk), lambda i, j, s: (i, s))
+    w_spec = pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
+    o_spec = pl.BlockSpec((bm, bn), lambda i, j, s: (i, j))
+
+    out_shape = jax.ShapeDtypeStruct((m, n), jnp.float32)
+
+    if b is None:
+        kern = functools.partial(_matmul_kernel, nsteps_k=nsteps_k, fuse=fuse)
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x.astype(jnp.float32), w.astype(jnp.float32))
+    else:
+        b_spec = pl.BlockSpec((1, bn), lambda i, j, s: (0, j))
+        kern = functools.partial(_bias_kernel, nsteps_k=nsteps_k, fuse=fuse)
+        out = pl.pallas_call(
+            kern,
+            grid=grid,
+            in_specs=[x_spec, w_spec, b_spec],
+            out_specs=o_spec,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(
+            x.astype(jnp.float32),
+            w.astype(jnp.float32),
+            b.astype(jnp.float32).reshape(1, -1),
+        )
+    return out.astype(x.dtype)
+
+
+def matmul_bias_silu(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, **kw
+) -> jnp.ndarray:
+    """Convenience wrapper matching ref.matmul_bias_silu_ref's signature."""
+    return matmul(x, w, b, fuse="silu", **kw)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated live VMEM per grid step: x, w, o tiles (+bias row).
+
+    Used by DESIGN.md §Perf to justify the BlockSpec choice and by
+    python/tests to assert the default tiling stays under budget.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn + bn)

@@ -1,0 +1,68 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has an oracle here with an identical
+signature. pytest (python/tests/) asserts allclose between kernel and
+oracle across a hypothesis-driven sweep of shapes and dtypes — this is
+the core correctness signal for Layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _silu(z: jnp.ndarray) -> jnp.ndarray:
+    return z * (1.0 / (1.0 + jnp.exp(-z)))
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain matmul oracle: (M, K) @ (K, N) -> (M, N) with f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def matmul_bias_silu_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+) -> jnp.ndarray:
+    """Fused matmul + bias + SiLU oracle.
+
+    SiLU(z) = z * sigmoid(z) — the activation used by both mini-detector
+    backbones (YOLOv5 and EfficientDet both use SiLU/Swish variants).
+    """
+    z = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    z = z + b.astype(jnp.float32)[None, :]
+    return _silu(z).astype(x.dtype)
+
+
+def im2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int) -> jnp.ndarray:
+    """im2col oracle: NHWC image -> (N*OH*OW, KH*KW*C) patch matrix.
+
+    'VALID' padding. This is the data-layout half of conv-as-matmul; the
+    compute half goes through matmul_bias_silu_ref / the Pallas kernel.
+    Patch column order is (kh, kw, c) to match model.py's weight reshape.
+    """
+    n, h, w, c = x.shape
+    oh = (h - kh) // stride + 1
+    ow = (w - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = x[:, i : i + oh * stride : stride, j : j + ow * stride : stride, :]
+            cols.append(patch.reshape(n * oh * ow, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_silu_ref(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, stride: int = 1
+) -> jnp.ndarray:
+    """Reference conv2d (VALID padding) + bias + SiLU via lax, NHWC / HWIO."""
+    import jax.lax as lax
+
+    z = lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    z = z + b.astype(jnp.float32)[None, None, None, :]
+    return _silu(z).astype(x.dtype)

@@ -1,0 +1,202 @@
+"""L2: the two quality-tier detection models served by LA-IMR.
+
+The paper's quality lanes are backed by EfficientDet-Lite0 (edge,
+low-latency) and YOLOv5m (balanced). We build two mini-detectors with the
+same *two-tier structure* and a compute-cost ratio mirroring Table II's
+R_m = 0.10 vs 1.00 CPU-s (see DESIGN.md §3 Substitutions): small conv
+backbones + a 1x1 detection head, all convs expressed as im2col + the L1
+Pallas matmul kernel so every FLOP flows through the kernel.
+
+Weights are generated deterministically from a per-model seed and closed
+over as HLO constants, so the AOT artifact is fully self-contained: the
+rust runtime feeds one image tensor and receives one detection tensor.
+
+Output: (num_cells, 4 + NUM_CLASSES) f32, sigmoid-activated —
+[cx, cy, w, h, p(class_0..3)] per grid cell. Post-processing (score
+threshold, argmax class) happens in rust (`runtime::postprocess`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, matmul_bias_silu
+from .kernels.ref import im2col_ref
+
+# CloudGripper-inspired object classes: cube, strip, gripper, background.
+NUM_CLASSES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One conv + bias + SiLU block (VALID padding)."""
+
+    kh: int
+    kw: int
+    stride: int
+    c_in: int
+    c_out: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of a mini-detector."""
+
+    name: str
+    seed: int
+    input_hw: int  # square input, NHWC with N=1, C=3
+    blocks: tuple[ConvSpec, ...]
+
+    @property
+    def input_shape(self) -> tuple[int, int, int, int]:
+        return (1, self.input_hw, self.input_hw, 3)
+
+    def out_hw(self) -> int:
+        """Spatial size after all backbone blocks (VALID padding)."""
+        h = self.input_hw
+        for b in self.blocks:
+            h = (h - b.kh) // b.stride + 1
+        return h
+
+    @property
+    def num_cells(self) -> int:
+        return self.out_hw() ** 2
+
+    @property
+    def output_shape(self) -> tuple[int, int]:
+        return (self.num_cells, 4 + NUM_CLASSES)
+
+    def flops(self) -> int:
+        """Approximate multiply-add FLOPs for one inference."""
+        total = 0
+        h = self.input_hw
+        for b in self.blocks:
+            oh = (h - b.kh) // b.stride + 1
+            total += 2 * oh * oh * b.c_out * b.kh * b.kw * b.c_in
+            h = oh
+        # 1x1 detection head
+        total += 2 * h * h * (4 + NUM_CLASSES) * self.blocks[-1].c_out
+        return total
+
+
+# Tier-1, edge-optimised ("EfficientDet-Lite0 class"): ~1.3 MFLOP.
+EFFDET_LITE = ModelSpec(
+    name="effdet_lite",
+    seed=11,
+    input_hw=64,
+    blocks=(
+        ConvSpec(3, 3, 2, 3, 8),
+        ConvSpec(3, 3, 2, 8, 16),
+        ConvSpec(3, 3, 2, 16, 24),
+    ),
+)
+
+# Tier-2, balanced ("YOLOv5m class"): ~20x the FLOPs of the edge model,
+# mirroring Table II's order-of-magnitude R_m gap.
+YOLOV5M = ModelSpec(
+    name="yolov5m",
+    seed=22,
+    input_hw=96,
+    blocks=(
+        ConvSpec(3, 3, 2, 3, 16),
+        ConvSpec(3, 3, 2, 16, 32),
+        ConvSpec(3, 3, 1, 32, 48),
+        ConvSpec(3, 3, 2, 48, 64),
+    ),
+)
+
+MODELS: dict[str, ModelSpec] = {m.name: m for m in (EFFDET_LITE, YOLOV5M)}
+
+
+def init_params(spec: ModelSpec) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """Deterministic He-style init; weights become HLO constants at AOT."""
+    params = []
+    key = jax.random.PRNGKey(spec.seed)
+    for blk in spec.blocks:
+        key, kw_, kb_ = jax.random.split(key, 3)
+        fan_in = blk.kh * blk.kw * blk.c_in
+        w = jax.random.normal(
+            kw_, (blk.kh, blk.kw, blk.c_in, blk.c_out), jnp.float32
+        ) * jnp.sqrt(2.0 / fan_in)
+        b = jax.random.normal(kb_, (blk.c_out,), jnp.float32) * 0.01
+        params.append((w, b))
+    # 1x1 detection head (no activation before sigmoid).
+    key, kw_, kb_ = jax.random.split(key, 3)
+    c_in = spec.blocks[-1].c_out
+    w = jax.random.normal(
+        kw_, (1, 1, c_in, 4 + NUM_CLASSES), jnp.float32
+    ) * jnp.sqrt(1.0 / c_in)
+    b = jax.random.normal(kb_, (4 + NUM_CLASSES,), jnp.float32) * 0.01
+    params.append((w, b))
+    return params
+
+
+def conv_block(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    stride: int,
+    *,
+    fuse_silu: bool = True,
+) -> jnp.ndarray:
+    """Conv (VALID) + bias [+ SiLU] as im2col + the L1 Pallas matmul.
+
+    x: (1, H, W, C_in), w: (KH, KW, C_in, C_out) HWIO -> (1, OH, OW, C_out).
+    """
+    _, h, _, _ = x.shape
+    kh, kw_, c_in, c_out = w.shape
+    oh = (h - kh) // stride + 1
+    cols = im2col_ref(x, kh, kw_, stride)  # (OH*OW, KH*KW*C_in)
+    wmat = w.reshape(kh * kw_ * c_in, c_out)
+    if fuse_silu:
+        out = matmul_bias_silu(cols, wmat, b)
+    else:
+        out = matmul(cols, wmat, b, fuse="none")
+    return out.reshape(1, oh, oh, c_out)
+
+
+def forward(spec: ModelSpec, params, image: jnp.ndarray) -> jnp.ndarray:
+    """Full detector forward pass: image (1,H,W,3) -> (cells, 4+C) sigmoid."""
+    x = image
+    for blk, (w, b) in zip(spec.blocks, params[:-1]):
+        x = conv_block(x, w, b, blk.stride, fuse_silu=True)
+    w, b = params[-1]
+    x = conv_block(x, w, b, 1, fuse_silu=False)  # head: linear 1x1
+    x = x.reshape(spec.num_cells, 4 + NUM_CLASSES)
+    return jax.nn.sigmoid(x)
+
+
+def build_infer_fn(spec: ModelSpec):
+    """Close params over as constants; returns fn(image) -> (detections,).
+
+    The 1-tuple return matches the return_tuple=True lowering contract the
+    rust loader unwraps with to_tuple1() (see /opt/xla-example/README.md).
+    """
+    params = init_params(spec)
+
+    def infer(image: jnp.ndarray):
+        return (forward(spec, params, image),)
+
+    return infer
+
+
+def reference_forward(spec: ModelSpec, image: jnp.ndarray) -> jnp.ndarray:
+    """Same network through the pure-jnp conv oracle (no Pallas) — used by
+    pytest to validate the whole L2 graph against lax convolutions."""
+    from .kernels.ref import conv2d_silu_ref
+
+    params = init_params(spec)
+    x = image
+    for blk, (w, b) in zip(spec.blocks, params[:-1]):
+        x = conv2d_silu_ref(x, w, b, blk.stride)
+    w, b = params[-1]
+    import jax.lax as lax
+
+    z = lax.conv_general_dilated(
+        x, w, (1, 1), "VALID", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    ) + b[None, None, None, :]
+    return jax.nn.sigmoid(z.reshape(spec.num_cells, 4 + NUM_CLASSES))

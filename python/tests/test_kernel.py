@@ -1,0 +1,154 @@
+"""L1 kernel correctness: Pallas matmul vs pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; assert_allclose against ref.py per the
+repo's test contract. All pallas_calls run interpret=True (CPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_bias_silu, ref, vmem_bytes
+
+DIMS = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 27, 32, 47, 49, 64, 100, 128])
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return (
+        dict(rtol=2e-2, atol=2e-2)
+        if dtype == jnp.bfloat16
+        else dict(rtol=1e-5, atol=1e-5)
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_matches_ref_shapes(m, k, n):
+    x = _rand(0, (m, k), jnp.float32)
+    w = _rand(1, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w)),
+        np.asarray(ref.matmul_ref(x, w)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS)
+def test_matmul_bias_silu_matches_ref_shapes(m, k, n):
+    x = _rand(2, (m, k), jnp.float32)
+    w = _rand(3, (k, n), jnp.float32)
+    b = _rand(4, (n,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(matmul_bias_silu(x, w, b)),
+        np.asarray(ref.matmul_bias_silu_ref(x, w, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand(5, (32, 16), dtype)
+    w = _rand(6, (16, 8), dtype)
+    got = matmul(x, w)
+    assert got.dtype == dtype
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_dtypes(dtype):
+    x = _rand(7, (16, 32), dtype)
+    w = _rand(8, (32, 8), dtype)
+    b = _rand(9, (8,), dtype)
+    got = matmul_bias_silu(x, w, b)
+    assert got.dtype == dtype
+    want = ref.matmul_bias_silu_ref(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (16, 32, 8), (128, 128, 128)])
+def test_matmul_block_shapes(bm, bn, bk):
+    """Tiling must not change results (accumulator across K steps)."""
+    x = _rand(10, (64, 96), jnp.float32)
+    w = _rand(11, (96, 32), jnp.float32)
+    got = matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_k_accumulation_multi_step():
+    """K larger than bk exercises the revolving-accumulator path."""
+    x = _rand(12, (16, 256), jnp.float32)
+    w = _rand(13, (256, 16), jnp.float32)
+    got = matmul(x, w, bk=32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_non_divisible_dims_clamped():
+    """Odd/prime dims fall back to divisor block sizes, still correct."""
+    x = _rand(14, (47, 27), jnp.float32)  # 47x47 grid cells, 3x3x3 patches
+    w = _rand(15, (27, 16), jnp.float32)
+    got = matmul(x, w)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(x, w)), rtol=1e-5, atol=1e-5
+    )
+
+
+def test_silu_epilogue_only_on_last_k_step():
+    """With multiple K steps the epilogue must apply exactly once."""
+    x = _rand(16, (8, 64), jnp.float32)
+    w = _rand(17, (64, 8), jnp.float32)
+    b = _rand(18, (8,), jnp.float32)
+    got = matmul_bias_silu(x, w, b, bk=16)  # 4 K-steps
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(ref.matmul_bias_silu_ref(x, w, b)),
+        rtol=1e-5,
+        atol=1e-5,
+    )
+
+
+def test_im2col_ref_patch_order():
+    """im2col column order must be (kh, kw, c) to match weight reshape."""
+    x = jnp.arange(2 * 3 * 3 * 2, dtype=jnp.float32).reshape(2, 3, 3, 2)
+    cols = ref.im2col_ref(x, 2, 2, 1)
+    assert cols.shape == (2 * 2 * 2, 2 * 2 * 2)
+    # First output row = patch at (0,0) of image 0, order (kh,kw,c).
+    want = jnp.concatenate([x[0, 0, 0], x[0, 0, 1], x[0, 1, 0], x[0, 1, 1]])
+    np.testing.assert_allclose(np.asarray(cols[0]), np.asarray(want))
+
+
+def test_im2col_stride2():
+    x = jax.random.normal(jax.random.PRNGKey(20), (1, 8, 8, 3), jnp.float32)
+    cols = ref.im2col_ref(x, 3, 3, 2)
+    assert cols.shape == (3 * 3, 27)
+
+
+def test_vmem_budget_default_tiles():
+    """Default 128^3 f32 tiling must stay far under the 16 MiB VMEM budget
+    (DESIGN.md §Perf: <= 512 KiB live per grid step)."""
+    assert vmem_bytes(128, 128, 128) <= 512 * 1024
+
+
+def test_matmul_rejects_mismatched_inner_dims():
+    x = jnp.zeros((4, 5))
+    w = jnp.zeros((6, 4))
+    with pytest.raises(AssertionError):
+        matmul(x, w)

@@ -1,0 +1,83 @@
+"""L2 model tests: graph correctness vs lax oracle, shapes, determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.model import MODELS, NUM_CLASSES
+
+
+@pytest.fixture(scope="module", params=list(MODELS))
+def spec(request):
+    return MODELS[request.param]
+
+
+def _image(spec, seed=42):
+    return jax.random.uniform(jax.random.PRNGKey(seed), spec.input_shape, jnp.float32)
+
+
+def test_forward_matches_lax_reference(spec):
+    """The whole Pallas-backed graph must match plain lax convolutions."""
+    img = _image(spec)
+    got = model.build_infer_fn(spec)(img)[0]
+    want = model.reference_forward(spec, img)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_output_shape_and_range(spec):
+    out = model.build_infer_fn(spec)(_image(spec))[0]
+    assert out.shape == spec.output_shape
+    assert out.shape[1] == 4 + NUM_CLASSES
+    o = np.asarray(out)
+    assert (o >= 0).all() and (o <= 1).all(), "sigmoid output must be in [0,1]"
+
+
+def test_deterministic_weights(spec):
+    """Same seed -> identical params (artifact reproducibility)."""
+    p1 = model.init_params(spec)
+    p2 = model.init_params(spec)
+    for (w1, b1), (w2, b2) in zip(p1, p2):
+        np.testing.assert_array_equal(np.asarray(w1), np.asarray(w2))
+        np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_models_differ():
+    """The two quality tiers must be distinct networks."""
+    e, y = MODELS["effdet_lite"], MODELS["yolov5m"]
+    assert e.input_hw != y.input_hw
+    assert y.flops() > 10 * e.flops(), "tier cost gap must mirror Table II"
+
+
+def test_flops_accounting(spec):
+    """flops() must equal the sum over conv blocks computed independently."""
+    total, h = 0, spec.input_hw
+    for b in spec.blocks:
+        oh = (h - b.kh) // b.stride + 1
+        total += 2 * oh * oh * b.c_out * b.kh * b.kw * b.c_in
+        h = oh
+    total += 2 * h * h * (4 + NUM_CLASSES) * spec.blocks[-1].c_out
+    assert spec.flops() == total
+
+
+def test_out_hw_valid_padding(spec):
+    h = spec.input_hw
+    for b in spec.blocks:
+        h = (h - b.kh) // b.stride + 1
+    assert spec.out_hw() == h
+    assert spec.num_cells == h * h
+
+
+def test_conv_block_single(spec):
+    """One conv block vs the conv oracle in isolation."""
+    from compile.kernels.ref import conv2d_silu_ref
+
+    blk = spec.blocks[0]
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, 16, 16, blk.c_in), jnp.float32)
+    w = jax.random.normal(key, (blk.kh, blk.kw, blk.c_in, blk.c_out), jnp.float32)
+    b = jax.random.normal(key, (blk.c_out,), jnp.float32)
+    got = model.conv_block(x, w, b, blk.stride)
+    want = conv2d_silu_ref(x, w, b, blk.stride)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)

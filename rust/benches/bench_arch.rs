@@ -1,0 +1,26 @@
+//! Fig 4 bench: microservice vs monolithic architecture sweep over N at
+//! λ=4 with mixed-quality traffic.
+
+use la_imr::config::Config;
+use la_imr::report;
+use la_imr::util::bench::bench_once;
+
+fn main() {
+    let cfg = Config::default();
+    let (data, dt) = bench_once("fig4: micro vs mono, N ∈ {1,2,4,6}", || {
+        report::fig4_data(&cfg, 150.0)
+    });
+    println!("  regenerated in {dt:.2}s");
+    println!("  N   micro P99   mono P99   mono/micro");
+    for (n, micro, mono) in &data {
+        println!(
+            "  {n}   {:>8.2}   {:>8.2}   {:>9.2}x",
+            micro.p99,
+            mono.p99,
+            mono.p99 / micro.p99.max(1e-9)
+        );
+    }
+    // The paper's claim: microservice wins, especially at larger N.
+    let last = data.last().unwrap();
+    assert!(last.2.p99 >= last.1.p99, "monolithic unexpectedly won");
+}

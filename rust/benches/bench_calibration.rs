@@ -1,0 +1,22 @@
+//! Fig 2 bench: calibration speed + reproduction of the paper's fit
+//! (α=0.73, β=1.29, γ=1.49 on its own Table IV data).
+
+use la_imr::config::Config;
+use la_imr::latency_model::{fit_anchored, paper_table4_samples};
+use la_imr::report;
+use la_imr::util::bench::{bench, bench_once, black_box};
+
+fn main() {
+    let samples = paper_table4_samples();
+    bench("fit_anchored (golden-section, 12 samples)", 30, || {
+        black_box(fit_anchored(&samples, 0.73, 0.3, 3.0));
+    });
+    let fit = fit_anchored(&samples, 0.73, 0.3, 3.0).unwrap();
+    println!(
+        "  paper-data fit: α={:.2} β={:.3} γ={:.3} R²={:.4} (paper: 0.73/1.29/1.49)",
+        fit.alpha, fit.beta, fit.gamma, fit.r_squared
+    );
+    let cfg = Config::default();
+    let (txt, _) = bench_once("fig2: full calibration report", || report::fig2(&cfg));
+    println!("{txt}");
+}

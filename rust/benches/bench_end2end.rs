@@ -1,0 +1,43 @@
+//! Fig 7/8 bench: the end-to-end head-to-head (LA-IMR vs reactive
+//! baseline) across λ = 1..6 under bounded-Pareto bursts, plus DES
+//! throughput (simulated events per wall-second — the harness must stay
+//! fast enough to sweep the full grid in seconds).
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::report;
+use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::telemetry::{box_stats, Summary};
+use la_imr::util::bench::bench_once;
+
+fn main() {
+    let cfg = Config::default();
+
+    // DES throughput: one 300 s λ=6 LA-IMR run.
+    let scenario = ScenarioConfig::bursty(6.0, 42)
+        .with_duration(300.0, 30.0)
+        .with_replicas(2);
+    let (r, dt) = bench_once("end2end: 300s λ=6 LA-IMR scenario", || {
+        Simulation::new(&cfg, &scenario, Policy::LaImr, Architecture::Microservice).run()
+    });
+    println!(
+        "  {} completions in {dt:.3}s wall → {:.0} simulated requests/s; sim/real ratio {:.0}x",
+        r.completed.len(),
+        r.completed.len() as f64 / dt,
+        300.0 / dt
+    );
+
+    let (data, dt) = bench_once("fig7/8: λ=1..6 × 2 policies × 3 seeds", || {
+        report::head_to_head(&cfg, 300.0, &[101, 102, 103])
+    });
+    println!("  full sweep in {dt:.2}s\n");
+    println!("  λ   LA-IMR P50/P95/P99      baseline P50/P95/P99    IQR(LA)  IQR(BL)");
+    for h in &data {
+        let la = Summary::from(&h.la_all);
+        let bl = Summary::from(&h.bl_all);
+        let (bla, blb) = (box_stats(&h.la_all), box_stats(&h.bl_all));
+        println!(
+            "  {}   {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}      {:6.2}  {:6.2}",
+            h.lambda, la.p50, la.p95, la.p99, bl.p50, bl.p95, bl.p99, bla.iqr, blb.iqr
+        );
+    }
+}

@@ -1,0 +1,27 @@
+//! Table IV bench: regenerate the λ×N latency grid and check its shape
+//! against the paper (idle ≈ L_m, growth with λ, relief with N).
+
+use la_imr::config::Config;
+use la_imr::report;
+use la_imr::util::bench::bench_once;
+
+fn main() {
+    let cfg = Config::default();
+    let (cells, dt) = bench_once("table4: 12-cell grid × 3 seeds", || {
+        report::table4_data(&cfg, report::TABLE4_WINDOW)
+    });
+    println!("  grid regenerated in {dt:.2}s (paper's testbed: ~12 cluster-runs)");
+    let get = |n: u32, lam: f64| cells.iter().find(|c| c.0 == n && c.1 == lam).unwrap().2;
+    println!("  shape checks:");
+    println!("    idle cell (N=4, λ=1) = {:.2}s  (paper 0.73)", get(4, 1.0));
+    println!(
+        "    overload growth N=1: {:.1} → {:.1} → {:.1} → {:.1}",
+        get(1, 1.0), get(1, 2.0), get(1, 3.0), get(1, 4.0)
+    );
+    println!(
+        "    relief at λ=4: N=1 {:.1} → N=2 {:.1} → N=4 {:.1}",
+        get(1, 4.0), get(2, 4.0), get(4, 4.0)
+    );
+    assert!(get(1, 4.0) > get(1, 1.0) && get(1, 4.0) > get(4, 4.0));
+    println!("{}", report::table4(&cfg));
+}

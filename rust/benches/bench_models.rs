@@ -1,0 +1,38 @@
+//! Table II bench: real PJRT inference wall-clock per model + the L1
+//! kernel-dominated cost gap between the quality tiers.
+
+use la_imr::config::QualityClass;
+use la_imr::runtime::{postprocess, Runtime};
+use la_imr::util::bench::{bench, black_box};
+use la_imr::workload::RobotFleet;
+
+fn main() {
+    let rt = match Runtime::load(std::path::Path::new("artifacts")) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("skipping bench_models: {e}");
+            return;
+        }
+    };
+    let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+    println!("Table II — PJRT-CPU inference cost per model");
+    for name in rt.model_names() {
+        let model = rt.model(name).unwrap();
+        let img = fleet.frame(0, 0, model.entry.input_shape[1]);
+        let _ = model.infer(&img).unwrap(); // warm
+        bench(&format!("infer::{name}"), 20, || {
+            black_box(model.infer(&img).unwrap());
+        });
+    }
+    // Post-processing is not the bottleneck.
+    let model = rt.model("yolov5m").unwrap();
+    let img = fleet.frame(0, 0, model.entry.input_shape[1]);
+    let out = model.infer(&img).unwrap();
+    bench("postprocess::yolov5m", 30, || {
+        black_box(postprocess(&out, rt.manifest.num_classes, 0.52));
+    });
+    // Frame synthesis (workload generator cost).
+    bench("workload::frame 96x96", 30, || {
+        black_box(fleet.frame(0, 1, 96));
+    });
+}

@@ -1,0 +1,73 @@
+//! L3 hot-path microbenchmarks — the paper's "microseconds of access
+//! time, millisecond-level responses" claim (§I). Targets (DESIGN.md
+//! §Perf): < 5 µs per routing decision; each telemetry primitive O(1).
+
+use la_imr::config::Config;
+use la_imr::coordinator::state::ReplicaView;
+use la_imr::coordinator::{ControlState, Router};
+use la_imr::latency_model::LatencyModel;
+use la_imr::queueing;
+use la_imr::telemetry::{Ewma, LatencyHistogram, SlidingRate};
+use la_imr::util::bench::{bench, black_box};
+
+fn main() {
+    let cfg = Config::default();
+    let (yolo, _) = cfg.model_by_name("yolov5m").unwrap();
+
+    // Full Algorithm-1 routing decision (table path — production config).
+    let mut router = Router::new(&cfg);
+    let mut state = ControlState::new();
+    for m in 0..cfg.models.len() {
+        for i in 0..cfg.instances.len() {
+            state.update(
+                la_imr::cluster::DeploymentKey { model: m, instance: i },
+                ReplicaView { active: 4, ready: 4, desired: 4, rho: 0.5, queue_depth: 2 },
+            );
+        }
+    }
+    let mut now = 0.0;
+    bench("router::route (Algorithm 1, table lookup)", 50, || {
+        now += 0.01;
+        black_box(router.route(yolo, now, &state));
+    });
+
+    // Ablation: direct closed-form evaluation instead of the table.
+    let mut router2 = Router::new(&cfg);
+    router2.use_table = false;
+    let mut now2 = 0.0;
+    bench("router::route (direct powf evaluation)", 50, || {
+        now2 += 0.01;
+        black_box(router2.route(yolo, now2, &state));
+    });
+
+    // Telemetry primitives.
+    let mut rate = SlidingRate::new(1.0);
+    let mut t = 0.0;
+    bench("telemetry::SlidingRate::on_arrival", 50, || {
+        t += 0.001;
+        black_box(rate.on_arrival(t));
+    });
+    let mut ewma = Ewma::new(0.8);
+    bench("telemetry::Ewma::update", 50, || {
+        black_box(ewma.update(4.2));
+    });
+    let mut hist = LatencyHistogram::for_latency();
+    bench("telemetry::LatencyHistogram::record", 50, || {
+        hist.record(0.73);
+    });
+    bench("telemetry::LatencyHistogram::p99", 50, || {
+        black_box(hist.p99());
+    });
+
+    // Model evaluation primitives.
+    let lm = LatencyModel::from_config(&cfg, yolo, 0);
+    bench("latency_model::g_lambda (Eq. 15)", 50, || {
+        black_box(lm.g_lambda(black_box(3.3), 4));
+    });
+    bench("queueing::erlang_c (c=8)", 50, || {
+        black_box(queueing::erlang_c(black_box(5.5), 8));
+    });
+    bench("latency_model::required_replicas", 50, || {
+        black_box(lm.required_replicas(black_box(4.0), 1.64, 16));
+    });
+}

@@ -1,0 +1,310 @@
+//! Reactive latency-threshold baseline — the paper's §V comparator
+//! ("traditional latency-only autoscaling").
+//!
+//! The honest Kubernetes HPA algorithm on an *observed*-latency custom
+//! metric: desired = ceil(N · observed/target), read through the
+//! Prometheus scrape path (stale by up to one scrape period), upscaling
+//! immediately past the 1.1 tolerance, downscaling only after a
+//! stabilisation window. End-to-end its reaction lag is
+//! scrape (≤15 s) + reconcile (≤5 s) + pod start (1.8 s) — the
+//! "60–120 s" class of delay the paper ascribes to reactive autoscaling
+//! once queue-drain time is included. It only ever sees trouble *after*
+//! queues have already built; that asymmetry versus PM-HPA is the
+//! paper's whole argument.
+
+use super::Autoscaler;
+use crate::cluster::{DeploymentKey, MetricRegistry};
+use crate::config::Config;
+use crate::coordinator::ControlState;
+use crate::SimTime;
+
+/// Conventional observed-latency gauge name (per deployment).
+pub fn observed_p95_metric(key: DeploymentKey) -> String {
+    MetricRegistry::scoped("observed_p95", key.model, key.instance)
+}
+
+struct ManagedDep {
+    key: DeploymentKey,
+    /// Latency target: the HPA ratio rule scales on observed/target.
+    target: f64,
+    n_max: u32,
+    /// Pending downscale recommendation (value, since) — k8s downscale
+    /// stabilisation: only applied after the window elapses.
+    down_pending: Option<(u32, SimTime)>,
+}
+
+/// The reactive comparator.
+pub struct ReactiveBaseline {
+    managed: Vec<ManagedDep>,
+    keys: Vec<DeploymentKey>,
+    /// Upscale tolerance on observed/target (k8s default 1.1).
+    up_tolerance: f64,
+    /// Downscale stabilisation window [s] (k8s default 5 min; we use the
+    /// paper's charitable lower bound).
+    down_window: f64,
+}
+
+impl ReactiveBaseline {
+    pub fn new(cfg: &Config, keys: &[DeploymentKey]) -> Self {
+        let managed = keys
+            .iter()
+            .map(|&key| ManagedDep {
+                key,
+                // Target anchored on the same SLO budget the predictive
+                // controller gets — a fair comparison.
+                target: cfg.slo_budget(key.model),
+                n_max: cfg.instances[key.instance].n_max,
+                down_pending: None,
+            })
+            .collect();
+        ReactiveBaseline {
+            managed,
+            keys: keys.to_vec(),
+            up_tolerance: 1.1,
+            down_window: 120.0,
+        }
+    }
+
+    /// Adjust tolerance / stabilisation (ablation: how much of the
+    /// baseline's tail damage is pure reaction lag?).
+    pub fn with_tuning(mut self, up_tolerance: f64, down_window: f64) -> Self {
+        self.up_tolerance = up_tolerance;
+        self.down_window = down_window;
+        self
+    }
+}
+
+impl Autoscaler for ReactiveBaseline {
+    fn publish(
+        &mut self,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+        _lambda: &[f64],
+    ) {
+        for m in &mut self.managed {
+            let view = state.view(m.key);
+            let n = view.active.max(1);
+            // The baseline reads the *scraped* (lagging) latency.
+            let observed = metrics
+                .scraped(&observed_p95_metric(m.key), now)
+                .map(|(v, _)| v);
+            let Some(p95) = observed else { continue };
+
+            // Kubernetes HPA ratio rule: desired = ceil(n · observed/target),
+            // applied immediately upward (within tolerance), held through a
+            // stabilisation window downward.
+            let ratio = p95 / m.target;
+            let raw = (n as f64 * ratio).ceil().max(1.0) as u32;
+            let mut target = n;
+            if ratio > self.up_tolerance {
+                target = raw.min(m.n_max);
+                m.down_pending = None;
+            } else if ratio < 1.0 / self.up_tolerance && raw < n {
+                // Downscale recommendation: remember the highest
+                // recommendation in the window (k8s keeps the max).
+                let rec = raw.max(1);
+                match m.down_pending {
+                    None => m.down_pending = Some((rec, now)),
+                    Some((prev, since)) => {
+                        let rec = rec.max(prev);
+                        if now - since >= self.down_window {
+                            target = rec;
+                            m.down_pending = None;
+                        } else {
+                            m.down_pending = Some((rec, since));
+                        }
+                    }
+                }
+            } else {
+                m.down_pending = None;
+            }
+
+            let name = MetricRegistry::scoped(
+                crate::cluster::DESIRED_REPLICAS,
+                m.key.model,
+                m.key.instance,
+            );
+            metrics.set(&name, target as f64, now);
+        }
+    }
+
+    fn managed(&self) -> &[DeploymentKey] {
+        &self.keys
+    }
+
+    fn name(&self) -> &'static str {
+        "reactive-baseline"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ReplicaView;
+
+    fn setup() -> (Config, ReactiveBaseline, ControlState, MetricRegistry, DeploymentKey) {
+        let cfg = Config::default();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let key = DeploymentKey { model: m, instance: 0 };
+        let b = ReactiveBaseline::new(&cfg, &[key]);
+        let mut state = ControlState::new();
+        state.update(
+            key,
+            ReplicaView {
+                active: 1,
+                ready: 1,
+                desired: 1,
+                rho: 0.9,
+                queue_depth: 5,
+            },
+        );
+        (cfg, b, state, MetricRegistry::new(), key)
+    }
+
+    fn desired(cfg: &Config, metrics: &MetricRegistry, key: DeploymentKey) -> Option<f64> {
+        let _ = cfg;
+        metrics.latest(&MetricRegistry::scoped(
+            crate::cluster::DESIRED_REPLICAS,
+            key.model,
+            key.instance,
+        ))
+    }
+
+    #[test]
+    fn no_observation_no_action() {
+        let (cfg, mut b, state, mut metrics, key) = setup();
+        b.publish(0.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), None);
+    }
+
+    #[test]
+    fn reacts_only_after_scrape() {
+        let (cfg, mut b, state, mut metrics, key) = setup();
+        // Latency spikes at t=0 but Prometheus hasn't scraped yet.
+        metrics.set(&observed_p95_metric(key), 5.0, 0.0);
+        b.publish(1.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), None, "acted on unscraped data");
+        metrics.scrape(15.0);
+        b.publish(15.0, &state, &mut metrics, &[]);
+        // Ratio rule: ceil(1 x 5.0/1.64) = 4.
+        assert_eq!(desired(&cfg, &metrics, key), Some(4.0));
+    }
+
+    #[test]
+    fn ratio_rule_is_multiplicative() {
+        let (cfg, mut b, mut state, mut metrics, key) = setup();
+        state.update(
+            key,
+            ReplicaView {
+                active: 3,
+                ready: 3,
+                desired: 3,
+                rho: 0.95,
+                queue_depth: 9,
+            },
+        );
+        // Observed at 2x the target: desired doubles.
+        metrics.set(&observed_p95_metric(key), 2.0 * cfg.slo_budget(key.model), 0.0);
+        metrics.scrape(0.0);
+        b.publish(0.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(6.0));
+    }
+
+    #[test]
+    fn within_tolerance_no_action() {
+        let (cfg, mut b, mut state, mut metrics, key) = setup();
+        state.update(
+            key,
+            ReplicaView {
+                active: 3,
+                ready: 3,
+                desired: 3,
+                rho: 0.6,
+                queue_depth: 0,
+            },
+        );
+        // Observed at 1.05x target: inside the 1.1 tolerance band.
+        metrics.set(&observed_p95_metric(key), 1.05 * cfg.slo_budget(key.model), 0.0);
+        metrics.scrape(0.0);
+        b.publish(0.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(3.0));
+    }
+
+    #[test]
+    fn downscale_waits_for_stabilisation_window() {
+        let (cfg, mut b, mut state, mut metrics, key) = setup();
+        state.update(
+            key,
+            ReplicaView {
+                active: 4,
+                ready: 4,
+                desired: 4,
+                rho: 0.1,
+                queue_depth: 0,
+            },
+        );
+        metrics.set(&observed_p95_metric(key), 0.2, 0.0);
+        metrics.scrape(0.0);
+        // Recommendation recorded but held.
+        b.publish(0.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(4.0));
+        metrics.scrape(60.0);
+        b.publish(60.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(4.0));
+        // After the 120 s window the (max) recommendation applies.
+        metrics.scrape(121.0);
+        b.publish(121.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(1.0));
+    }
+
+    #[test]
+    fn recovery_cancels_pending_downscale() {
+        let (cfg, mut b, mut state, mut metrics, key) = setup();
+        state.update(
+            key,
+            ReplicaView {
+                active: 4,
+                ready: 4,
+                desired: 4,
+                rho: 0.1,
+                queue_depth: 0,
+            },
+        );
+        metrics.set(&observed_p95_metric(key), 0.2, 0.0);
+        metrics.scrape(0.0);
+        b.publish(0.0, &state, &mut metrics, &[]);
+        // Load returns mid-window: pending downscale must be dropped.
+        metrics.set(&observed_p95_metric(key), 3.0, 50.0);
+        metrics.scrape(50.0);
+        b.publish(50.0, &state, &mut metrics, &[]);
+        assert!(desired(&cfg, &metrics, key).unwrap() > 4.0);
+        // Low again: the window restarts rather than resuming.
+        metrics.set(&observed_p95_metric(key), 0.2, 60.0);
+        metrics.scrape(60.0);
+        b.publish(60.0, &state, &mut metrics, &[]);
+        b.publish(130.0, &state, &mut metrics, &[]);
+        // 130-60 = 70 < 120: still held at active.
+        assert_eq!(desired(&cfg, &metrics, key), Some(4.0));
+    }
+
+    #[test]
+    fn capped_at_n_max() {
+        let (cfg, mut b, mut state, mut metrics, key) = setup();
+        let n_max = cfg.instances[0].n_max;
+        state.update(
+            key,
+            ReplicaView {
+                active: n_max,
+                ready: n_max,
+                desired: n_max,
+                rho: 1.5,
+                queue_depth: 40,
+            },
+        );
+        metrics.set(&observed_p95_metric(key), 20.0, 0.0);
+        metrics.scrape(0.0);
+        b.publish(0.0, &state, &mut metrics, &[]);
+        assert_eq!(desired(&cfg, &metrics, key), Some(n_max as f64));
+    }
+}

@@ -1,0 +1,43 @@
+//! Autoscaling policies behind one trait:
+//!
+//! * [`PmHpa`] — the paper's Predictive-Metric HPA (§V-A.3): inverts the
+//!   closed-form latency model to the minimal N with g(N, λ_ewma) ≤ τ and
+//!   publishes it as the `desired_replicas` custom metric *before* queues
+//!   build;
+//! * [`ReactiveBaseline`] — "traditional latency-only autoscaling"
+//!   (§V-B's comparator): thresholds on the *scraped* (stale) observed
+//!   latency with a stabilisation window, reproducing the 60–120 s
+//!   reaction lag the paper ascribes to metric-driven HPA.
+
+mod baseline;
+mod pm_hpa;
+
+pub use baseline::ReactiveBaseline;
+pub use pm_hpa::PmHpa;
+
+use crate::cluster::{DeploymentKey, MetricRegistry};
+use crate::coordinator::ControlState;
+use crate::SimTime;
+
+pub use baseline::observed_p95_metric;
+
+/// A policy that periodically publishes `desired_replicas{m,i}` gauges.
+pub trait Autoscaler {
+    /// Inspect state/metrics at `now` and publish desired-replica targets
+    /// into `metrics` (the HPA actuates them on its own cadence).
+    /// `lambda` carries the EWMA-smoothed arrival rate per model — the
+    /// predictive signal PM-HPA inverts; reactive policies ignore it.
+    fn publish(
+        &mut self,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+        lambda: &[f64],
+    );
+
+    /// Deployments this policy manages.
+    fn managed(&self) -> &[DeploymentKey];
+
+    /// Policy name for reports.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,242 @@
+//! Predictive-Metric HPA (§V-A.3 / §IV-D): each managed deployment
+//! computes `desired_replicas = min{ N : g_{m,i}(N, λ^accum) ≤ τ_m }`
+//! from the closed-form model and exports it as a custom metric.
+//!
+//! The scaling *trigger* is the predicted latency budget — not lagging
+//! utilisation — so replicas spin up before queueing delay violates the
+//! SLO and are shed once ρ < ρ_low (with hysteresis so transient dips
+//! don't flap the pool).
+
+use super::Autoscaler;
+use crate::cluster::{DeploymentKey, MetricRegistry};
+use crate::config::Config;
+use crate::coordinator::ControlState;
+use crate::latency_model::LatencyModel;
+use crate::SimTime;
+
+/// One managed deployment's state.
+struct Managed {
+    key: DeploymentKey,
+    model: LatencyModel,
+    tau: f64,
+    n_max: u32,
+    /// Time at which ρ first dropped below ρ_low (hysteresis clock).
+    low_since: Option<SimTime>,
+}
+
+/// The proactive autoscaler.
+pub struct PmHpa {
+    managed: Vec<Managed>,
+    keys: Vec<DeploymentKey>,
+    rho_low: f64,
+    /// How long ρ must stay below ρ_low before scaling in [s].
+    scale_in_delay: f64,
+}
+
+impl PmHpa {
+    /// Manage the given deployments with the paper's constants.
+    pub fn new(cfg: &Config, keys: &[DeploymentKey]) -> Self {
+        let managed = keys
+            .iter()
+            .map(|&key| Managed {
+                key,
+                model: LatencyModel::from_config(cfg, key.model, key.instance),
+                tau: cfg.slo_budget(key.model),
+                n_max: cfg.instances[key.instance].n_max,
+                low_since: None,
+            })
+            .collect();
+        PmHpa {
+            managed,
+            keys: keys.to_vec(),
+            rho_low: cfg.slo.rho_low,
+            scale_in_delay: 30.0,
+        }
+    }
+
+    /// Override the scale-in hysteresis delay (tests / ablations).
+    pub fn with_scale_in_delay(mut self, delay: f64) -> Self {
+        self.scale_in_delay = delay;
+        self
+    }
+}
+
+impl Autoscaler for PmHpa {
+    fn publish(
+        &mut self,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+        lambda: &[f64],
+    ) {
+        for m in &mut self.managed {
+            let lambda = lambda.get(m.key.model).copied().unwrap_or(0.0);
+            let view = state.view(m.key);
+            // Proactive target: minimal N with predicted g ≤ τ. If even
+            // n_max cannot meet τ we still pin the pool at n_max (the
+            // router's φ-offload handles the residual).
+            let mut target = m
+                .model
+                .required_replicas(lambda, m.tau, m.n_max)
+                .unwrap_or(m.n_max);
+
+            // Scale-in hysteresis: only drop below the current active
+            // count after ρ has stayed under ρ_low for scale_in_delay.
+            if target < view.active {
+                if view.rho < self.rho_low {
+                    let since = *m.low_since.get_or_insert(now);
+                    if now - since < self.scale_in_delay {
+                        target = view.active;
+                    }
+                } else {
+                    m.low_since = None;
+                    target = view.active;
+                }
+            } else {
+                m.low_since = None;
+            }
+
+            let name = MetricRegistry::scoped(
+                crate::cluster::DESIRED_REPLICAS,
+                m.key.model,
+                m.key.instance,
+            );
+            metrics.set(&name, target as f64, now);
+        }
+    }
+
+    fn managed(&self) -> &[DeploymentKey] {
+        &self.keys
+    }
+
+    fn name(&self) -> &'static str {
+        "pm-hpa"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ReplicaView;
+
+    fn setup() -> (Config, PmHpa, ControlState, MetricRegistry) {
+        let cfg = Config::default();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let key = DeploymentKey { model: m, instance: 0 };
+        let hpa = PmHpa::new(&cfg, &[key]);
+        let mut state = ControlState::new();
+        state.update(
+            key,
+            ReplicaView {
+                active: 1,
+                ready: 1,
+                desired: 1,
+                rho: 0.5,
+                queue_depth: 0,
+            },
+        );
+        (cfg, hpa, state, MetricRegistry::new())
+    }
+
+    fn metric_name(cfg: &Config) -> String {
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        MetricRegistry::scoped(crate::cluster::DESIRED_REPLICAS, m, 0)
+    }
+
+    /// λ vector with one model's rate set.
+    fn lam(cfg: &Config, model: usize, v: f64) -> Vec<f64> {
+        let mut l = vec![0.0; cfg.models.len()];
+        l[model] = v;
+        l
+    }
+
+    #[test]
+    fn publishes_model_inverted_target() {
+        let (cfg, mut hpa, state, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        hpa.publish(0.0, &state, &mut metrics, &lam(&cfg, m, 4.0));
+        let target = metrics.latest(&metric_name(&cfg)).unwrap();
+        // λ=4 on YOLOv5m-edge: μ≈1.37 ⇒ at least 3 replicas for stability,
+        // more to fit under τ=1.64 s.
+        assert!(target >= 4.0, "target={target}");
+        // Must be the minimal such N.
+        let lm = LatencyModel::from_config(&cfg, m, 0);
+        let tau = cfg.slo_budget(m);
+        let n = target as u32;
+        assert!(lm.g_n(n, 4.0) <= tau);
+        assert!(lm.g_n(n - 1, 4.0) > tau);
+    }
+
+    #[test]
+    fn scales_before_queue_builds() {
+        // The defining property: target responds to λ alone, not to any
+        // observed queue/latency (queue_depth stays 0 here).
+        let (cfg, mut hpa, state, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        hpa.publish(0.0, &state, &mut metrics, &lam(&cfg, m, 1.0));
+        let t1 = metrics.latest(&metric_name(&cfg)).unwrap();
+        hpa.publish(1.0, &state, &mut metrics, &lam(&cfg, m, 6.0));
+        let t6 = metrics.latest(&metric_name(&cfg)).unwrap();
+        assert!(t6 > t1, "t(λ=6)={t6} !> t(λ=1)={t1}");
+    }
+
+    #[test]
+    fn caps_at_n_max() {
+        let (cfg, mut hpa, state, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        hpa.publish(0.0, &state, &mut metrics, &lam(&cfg, m, 500.0));
+        let t = metrics.latest(&metric_name(&cfg)).unwrap();
+        assert_eq!(t as u32, cfg.instances[0].n_max);
+    }
+
+    #[test]
+    fn scale_in_needs_sustained_low_rho() {
+        let (cfg, mut hpa, mut state, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let key = DeploymentKey { model: m, instance: 0 };
+        state.update(
+            key,
+            ReplicaView {
+                active: 4,
+                ready: 4,
+                desired: 4,
+                rho: 0.1, // under ρ_low = 0.3
+                queue_depth: 0,
+            },
+        );
+        let l = lam(&cfg, m, 0.5);
+        // At t=0 the hysteresis clock starts: target held at active.
+        hpa.publish(0.0, &state, &mut metrics, &l);
+        assert_eq!(metrics.latest(&metric_name(&cfg)).unwrap(), 4.0);
+        // Still inside the delay window.
+        hpa.publish(10.0, &state, &mut metrics, &l);
+        assert_eq!(metrics.latest(&metric_name(&cfg)).unwrap(), 4.0);
+        // After 30 s of sustained low ρ, the lower target goes out.
+        hpa.publish(31.0, &state, &mut metrics, &l);
+        assert!(metrics.latest(&metric_name(&cfg)).unwrap() < 4.0);
+    }
+
+    #[test]
+    fn rho_recovery_resets_hysteresis() {
+        let (cfg, mut hpa, mut state, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let key = DeploymentKey { model: m, instance: 0 };
+        let mk = |rho: f64| ReplicaView {
+            active: 4,
+            ready: 4,
+            desired: 4,
+            rho,
+            queue_depth: 0,
+        };
+        let l = lam(&cfg, m, 0.5);
+        state.update(key, mk(0.1));
+        hpa.publish(0.0, &state, &mut metrics, &l);
+        // ρ pops back up mid-window → clock resets.
+        state.update(key, mk(0.6));
+        hpa.publish(20.0, &state, &mut metrics, &l);
+        state.update(key, mk(0.1));
+        hpa.publish(25.0, &state, &mut metrics, &l);
+        hpa.publish(40.0, &state, &mut metrics, &l); // only 15 s since reset
+        assert_eq!(metrics.latest(&metric_name(&cfg)).unwrap(), 4.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Deployment: the replica pool for one (model, instance-class) pair.
+//!
+//! Owns pod lifecycle, exposes ready/desired counts, and implements
+//! scale-out (new Starting pods) and graceful scale-in (drain the
+//! youngest idle pods first — mirroring the ReplicaSet downscale
+//! heuristic).
+
+use super::pod::{Pod, PodPhase};
+use crate::{InstanceId, ModelId, SimTime};
+
+/// Identity of a deployment: ⟨model m, instance class i⟩ (§IV-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeploymentKey {
+    pub model: ModelId,
+    pub instance: InstanceId,
+}
+
+/// Replica pool with Kubernetes-like actuation mechanics.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub key: DeploymentKey,
+    pub pods: Vec<Pod>,
+    pub n_max: u32,
+    startup: f64,
+    drain_grace: f64,
+    next_pod_id: u64,
+    /// Desired count last requested (actuation may lag).
+    pub desired: u32,
+}
+
+impl Deployment {
+    pub fn new(
+        key: DeploymentKey,
+        initial: u32,
+        n_max: u32,
+        startup: f64,
+        drain_grace: f64,
+        now: SimTime,
+    ) -> Self {
+        let mut d = Deployment {
+            key,
+            pods: Vec::new(),
+            n_max,
+            startup,
+            drain_grace,
+            next_pod_id: 0,
+            desired: 0,
+        };
+        // Initial replicas come up ready (the experiment starts warm, as
+        // the paper's runs do).
+        d.desired = initial.min(n_max);
+        for _ in 0..d.desired {
+            let id = d.next_pod_id;
+            d.next_pod_id += 1;
+            let mut p = Pod::new(id, now, 0.0);
+            p.tick(now);
+            d.pods.push(p);
+        }
+        d
+    }
+
+    /// Pods that can serve new requests now.
+    pub fn ready_count(&self, now: SimTime) -> u32 {
+        self.pods.iter().filter(|p| p.can_serve(now)).count() as u32
+    }
+
+    /// Pods that exist and are not draining (Starting + Ready): the replica
+    /// count N the autoscaler reasons about.
+    pub fn active_count(&self) -> u32 {
+        self.pods
+            .iter()
+            .filter(|p| !matches!(p.phase, PodPhase::Draining { .. }))
+            .count() as u32
+    }
+
+    /// Total in-flight requests across ready+draining pods.
+    pub fn in_flight(&self) -> u32 {
+        self.pods.iter().map(|p| p.in_flight).sum()
+    }
+
+    /// Scale to `target` replicas (bounded by n_max / ≥1), §IV-D step (ii):
+    /// "scale out (or in) by the exact difference".
+    /// Returns the signed delta actually actuated.
+    pub fn scale_to(&mut self, target: u32, now: SimTime) -> i64 {
+        let target = target.clamp(1, self.n_max);
+        self.desired = target;
+        let active = self.active_count();
+        let mut delta: i64 = 0;
+        if target > active {
+            for _ in 0..(target - active) {
+                let id = self.next_pod_id;
+                self.next_pod_id += 1;
+                self.pods.push(Pod::new(id, now, self.startup));
+                delta += 1;
+            }
+        } else if target < active {
+            // Drain youngest-first among non-draining pods, idle preferred.
+            let mut to_drain = (active - target) as usize;
+            let mut idx: Vec<usize> = (0..self.pods.len())
+                .filter(|&k| !matches!(self.pods[k].phase, PodPhase::Draining { .. }))
+                .collect();
+            // Idle pods first, then youngest (highest id).
+            idx.sort_by_key(|&k| (self.pods[k].in_flight, std::cmp::Reverse(self.pods[k].id)));
+            for k in idx {
+                if to_drain == 0 {
+                    break;
+                }
+                self.pods[k].drain(now, self.drain_grace);
+                to_drain -= 1;
+                delta -= 1;
+            }
+        }
+        delta
+    }
+
+    /// Progress pod lifecycles; removes completed pods. Returns how many
+    /// pods became Ready during this tick (for pod-start telemetry).
+    pub fn tick(&mut self, now: SimTime) -> u32 {
+        let mut became_ready = 0;
+        for p in &mut self.pods {
+            let was_starting = matches!(p.phase, PodPhase::Starting { .. });
+            let _ = p.tick(now);
+            if was_starting && p.phase == PodPhase::Ready {
+                became_ready += 1;
+            }
+        }
+        self.pods.retain_mut(|p| !p.tick(now));
+        became_ready
+    }
+
+    /// Pick the serving pod with the fewest in-flight requests
+    /// (least-loaded within the pool ≈ the round-robin of Eq. 10 under
+    /// symmetry, but strictly better under transients).
+    pub fn pick_pod(&mut self, now: SimTime) -> Option<&mut Pod> {
+        self.pods
+            .iter_mut()
+            .filter(|p| p.can_serve(now))
+            .min_by_key(|p| p.in_flight)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dep(initial: u32) -> Deployment {
+        Deployment::new(
+            DeploymentKey {
+                model: 0,
+                instance: 0,
+            },
+            initial,
+            8,
+            1.8,
+            30.0,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn initial_pods_ready_immediately() {
+        let d = dep(2);
+        assert_eq!(d.ready_count(0.0), 2);
+        assert_eq!(d.active_count(), 2);
+    }
+
+    #[test]
+    fn scale_out_has_startup_lag() {
+        let mut d = dep(1);
+        assert_eq!(d.scale_to(3, 10.0), 2);
+        assert_eq!(d.active_count(), 3);
+        assert_eq!(d.ready_count(10.0), 1); // 2 still Starting
+        d.tick(11.8);
+        assert_eq!(d.ready_count(11.8), 3); // 1.8 s later
+    }
+
+    #[test]
+    fn scale_in_drains_gracefully() {
+        let mut d = dep(3);
+        d.pods[0].in_flight = 1;
+        assert_eq!(d.scale_to(1, 5.0), -2);
+        // Drained the two idle pods (youngest first); busy pod 0 kept.
+        assert_eq!(d.active_count(), 1);
+        d.tick(5.1);
+        assert_eq!(d.pods.len(), 1);
+        assert_eq!(d.pods[0].id, 0);
+    }
+
+    #[test]
+    fn scale_bounded_by_n_max() {
+        let mut d = dep(1);
+        d.scale_to(100, 0.0);
+        assert_eq!(d.active_count(), 8);
+        assert_eq!(d.desired, 8);
+    }
+
+    #[test]
+    fn never_scales_below_one() {
+        let mut d = dep(2);
+        d.scale_to(0, 0.0);
+        assert_eq!(d.desired, 1);
+        assert_eq!(d.active_count(), 1);
+    }
+
+    #[test]
+    fn pick_pod_least_loaded() {
+        let mut d = dep(3);
+        d.pods[0].in_flight = 5;
+        d.pods[1].in_flight = 1;
+        d.pods[2].in_flight = 3;
+        assert_eq!(d.pick_pod(0.0).unwrap().id, 1);
+    }
+
+    #[test]
+    fn pick_pod_skips_draining_and_starting() {
+        let mut d = dep(2);
+        d.scale_to(3, 0.0); // pod 2 Starting
+        d.pods[0].drain(0.0, 30.0);
+        let picked = d.pick_pod(0.0).unwrap().id;
+        assert_eq!(picked, 1);
+    }
+
+    #[test]
+    fn busy_drained_pod_survives_until_done() {
+        let mut d = dep(2);
+        d.pods[0].in_flight = 1;
+        d.pods[1].in_flight = 1;
+        d.scale_to(1, 0.0);
+        d.tick(1.0);
+        assert_eq!(d.pods.len(), 2); // both busy, drain pending
+        // Find the draining pod and finish its work.
+        for p in &mut d.pods {
+            if matches!(p.phase, PodPhase::Draining { .. }) {
+                p.in_flight = 0;
+            }
+        }
+        d.tick(2.0);
+        assert_eq!(d.pods.len(), 1);
+    }
+
+    #[test]
+    fn scale_delta_is_exact_difference() {
+        let mut d = dep(2);
+        assert_eq!(d.scale_to(5, 0.0), 3);
+        assert_eq!(d.scale_to(5, 0.0), 0);
+        assert_eq!(d.scale_to(4, 0.0), -1);
+    }
+}

@@ -1,0 +1,159 @@
+//! Horizontal-Pod-Autoscaler reconcile loop (§IV-D).
+//!
+//! Every `interval` (paper: 5 s) the controller reads the
+//! `desired_replicas` custom metric for each Deployment — surfaced through
+//! the metric registry as by k8s-prometheus-adapter — and scales by the
+//! exact difference, bounded by per-Deployment caps. The HPA itself is
+//! policy-free: *what* number to publish is the autoscaler's job
+//! (`autoscaler::{PmHpa, ReactiveBaseline}`).
+
+use super::deployment::Deployment;
+use super::metrics::{MetricRegistry, DESIRED_REPLICAS};
+use crate::SimTime;
+
+/// Reconciling controller for a set of deployments.
+#[derive(Debug)]
+pub struct HpaController {
+    interval: f64,
+    last_run: SimTime,
+}
+
+impl HpaController {
+    pub fn new(interval: f64) -> Self {
+        Self {
+            interval,
+            last_run: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn interval(&self) -> f64 {
+        self.interval
+    }
+
+    /// Is a reconcile due at `now`?
+    pub fn due(&self, now: SimTime) -> bool {
+        now - self.last_run >= self.interval
+    }
+
+    /// Run one reconcile pass: for each deployment read the custom metric
+    /// and actuate the difference. Returns (scoped metric name, delta) for
+    /// every deployment that changed.
+    pub fn reconcile(
+        &mut self,
+        deployments: &mut [Deployment],
+        metrics: &MetricRegistry,
+        now: SimTime,
+    ) -> Vec<(String, i64)> {
+        let mut refs: Vec<&mut Deployment> = deployments.iter_mut().collect();
+        self.reconcile_refs(&mut refs, metrics, now)
+    }
+
+    /// Reconcile over a slice of deployment references (for callers whose
+    /// deployments live inside larger runtime structs).
+    pub fn reconcile_refs(
+        &mut self,
+        deployments: &mut [&mut Deployment],
+        metrics: &MetricRegistry,
+        now: SimTime,
+    ) -> Vec<(String, i64)> {
+        self.last_run = now;
+        let mut changes = Vec::new();
+        for d in deployments.iter_mut() {
+            let name = MetricRegistry::scoped(DESIRED_REPLICAS, d.key.model, d.key.instance);
+            // The custom-metrics adapter answers the HPA's query at
+            // reconcile time with the freshest sample it has (the paper's
+            // PM-HPA "responds in milliseconds"); scraped history is the
+            // fallback only.
+            let target = metrics
+                .latest(&name)
+                .or_else(|| metrics.scraped(&name, now).map(|(v, _)| v))
+                // No autoscaler metric → the ReplicaSet still restores the
+                // deployment's own `replicas` field (crashed pods are
+                // replaced even for unmanaged pools).
+                .unwrap_or(d.desired as f64);
+            let t = target.round().max(1.0) as u32;
+            let delta = d.scale_to(t, now);
+            if delta != 0 {
+                changes.push((name, delta));
+            }
+        }
+        changes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::deployment::DeploymentKey;
+
+    fn dep(initial: u32) -> Deployment {
+        Deployment::new(
+            DeploymentKey {
+                model: 0,
+                instance: 0,
+            },
+            initial,
+            8,
+            1.8,
+            30.0,
+            0.0,
+        )
+    }
+
+    #[test]
+    fn reconcile_cadence() {
+        let mut h = HpaController::new(5.0);
+        assert!(h.due(0.0));
+        let mut deps = vec![dep(1)];
+        let m = MetricRegistry::new();
+        h.reconcile(&mut deps, &m, 0.0);
+        assert!(!h.due(4.9));
+        assert!(h.due(5.0));
+    }
+
+    #[test]
+    fn scales_to_custom_metric() {
+        let mut h = HpaController::new(5.0);
+        let mut deps = vec![dep(1)];
+        let mut m = MetricRegistry::new();
+        let name = MetricRegistry::scoped(DESIRED_REPLICAS, 0, 0);
+        m.set(&name, 4.0, 0.0);
+        m.scrape(0.0);
+        let changes = h.reconcile(&mut deps, &m, 0.0);
+        assert_eq!(changes, vec![(name, 3)]);
+        assert_eq!(deps[0].active_count(), 4);
+    }
+
+    #[test]
+    fn no_metric_no_change() {
+        let mut h = HpaController::new(5.0);
+        let mut deps = vec![dep(2)];
+        let m = MetricRegistry::new();
+        assert!(h.reconcile(&mut deps, &m, 0.0).is_empty());
+        assert_eq!(deps[0].active_count(), 2);
+    }
+
+    #[test]
+    fn respects_caps_and_floor() {
+        let mut h = HpaController::new(5.0);
+        let mut deps = vec![dep(2)];
+        let mut m = MetricRegistry::new();
+        let name = MetricRegistry::scoped(DESIRED_REPLICAS, 0, 0);
+        m.set(&name, 100.0, 0.0);
+        h.reconcile(&mut deps, &m, 0.0);
+        assert_eq!(deps[0].active_count(), 8); // n_max
+        m.set(&name, 0.0, 5.0);
+        h.reconcile(&mut deps, &m, 5.0);
+        assert_eq!(deps[0].desired, 1); // floor
+    }
+
+    #[test]
+    fn idempotent_when_converged() {
+        let mut h = HpaController::new(5.0);
+        let mut deps = vec![dep(3)];
+        let mut m = MetricRegistry::new();
+        let name = MetricRegistry::scoped(DESIRED_REPLICAS, 0, 0);
+        m.set(&name, 3.0, 0.0);
+        assert!(h.reconcile(&mut deps, &m, 0.0).is_empty());
+    }
+}

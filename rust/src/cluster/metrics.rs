@@ -1,0 +1,125 @@
+//! Prometheus-like metric registry with scrape semantics.
+//!
+//! Two read paths with *different freshness*, because that asymmetry is
+//! the paper's core argument:
+//! * `set`/`latest` — instant, in-process (what LA-IMR itself uses);
+//! * `scrape`/`scraped` — values sampled only every scrape interval (what
+//!   a reactive CPU/latency autoscaler sees: stale by up to one period).
+
+use crate::SimTime;
+use std::collections::HashMap;
+
+/// The custom metric name PM-HPA exports (§IV-D).
+pub const DESIRED_REPLICAS: &str = "desired_replicas";
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Sample {
+    value: f64,
+    at: SimTime,
+}
+
+/// Named gauge registry with scrape-lagged reads.
+#[derive(Debug, Default)]
+pub struct MetricRegistry {
+    live: HashMap<String, Sample>,
+    scraped: HashMap<String, Sample>,
+    last_scrape: SimTime,
+}
+
+impl MetricRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set a gauge (in-process write — microseconds in the real system).
+    pub fn set(&mut self, name: &str, value: f64, now: SimTime) {
+        self.live
+            .insert(name.to_string(), Sample { value, at: now });
+    }
+
+    /// Increment a counter-style gauge.
+    pub fn add(&mut self, name: &str, delta: f64, now: SimTime) {
+        let e = self.live.entry(name.to_string()).or_default();
+        e.value += delta;
+        e.at = now;
+    }
+
+    /// Instant read (LA-IMR's in-memory path).
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        self.live.get(name).map(|s| s.value)
+    }
+
+    /// Run a scrape: copy live values into the scraped snapshot.
+    pub fn scrape(&mut self, now: SimTime) {
+        self.scraped = self.live.clone();
+        self.last_scrape = now;
+    }
+
+    /// Read through the scrape path — stale by up to one scrape period.
+    /// Returns (value, age_at(now)).
+    pub fn scraped(&self, name: &str, now: SimTime) -> Option<(f64, f64)> {
+        self.scraped
+            .get(name)
+            .map(|s| (s.value, (now - s.at).max(0.0)))
+    }
+
+    pub fn last_scrape(&self) -> SimTime {
+        self.last_scrape
+    }
+
+    /// Conventional metric name for a deployment-scoped gauge.
+    pub fn scoped(name: &str, model: usize, instance: usize) -> String {
+        format!("{name}{{m={model},i={instance}}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_reads_are_instant() {
+        let mut r = MetricRegistry::new();
+        r.set("x", 1.0, 0.0);
+        assert_eq!(r.latest("x"), Some(1.0));
+        r.set("x", 2.0, 0.1);
+        assert_eq!(r.latest("x"), Some(2.0));
+    }
+
+    #[test]
+    fn scraped_reads_are_stale() {
+        let mut r = MetricRegistry::new();
+        r.set("p95", 1.0, 0.0);
+        r.scrape(0.0);
+        r.set("p95", 9.0, 5.0); // spike after the scrape
+        // Reactive controller still sees the old value.
+        let (v, age) = r.scraped("p95", 10.0).unwrap();
+        assert_eq!(v, 1.0);
+        assert!((age - 10.0).abs() < 1e-12);
+        r.scrape(15.0);
+        assert_eq!(r.scraped("p95", 15.0).unwrap().0, 9.0);
+    }
+
+    #[test]
+    fn missing_metric_none() {
+        let r = MetricRegistry::new();
+        assert_eq!(r.latest("nope"), None);
+        assert_eq!(r.scraped("nope", 1.0), None);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut r = MetricRegistry::new();
+        r.add("count", 1.0, 0.0);
+        r.add("count", 2.0, 1.0);
+        assert_eq!(r.latest("count"), Some(3.0));
+    }
+
+    #[test]
+    fn scoped_name_format() {
+        assert_eq!(
+            MetricRegistry::scoped(DESIRED_REPLICAS, 1, 0),
+            "desired_replicas{m=1,i=0}"
+        );
+    }
+}

@@ -1,0 +1,19 @@
+//! Simulated Kubernetes substrate (§IV-D, §V-A.2).
+//!
+//! What the paper ran on a real cluster we model as explicit actuation
+//! mechanics — because LA-IMR's benefit is precisely about *beating the
+//! lags* of this machinery:
+//! * pod startup ≈ 1.8 s (paper's measured ARM64 container start),
+//! * HPA reconciliation every 5 s,
+//! * Prometheus scrape staleness (reactive baselines see old metrics),
+//! * graceful termination: draining pods finish in-flight work first.
+
+mod deployment;
+mod hpa;
+mod metrics;
+mod pod;
+
+pub use deployment::{Deployment, DeploymentKey};
+pub use hpa::HpaController;
+pub use metrics::{MetricRegistry, DESIRED_REPLICAS};
+pub use pod::{Pod, PodPhase};

@@ -1,0 +1,136 @@
+//! Pod lifecycle: Starting → Ready → Draining → (gone).
+//!
+//! A Starting pod consumes quota but serves nothing until `ready_at` —
+//! this is the actuation lag that makes *reactive* autoscaling late and
+//! *proactive* (PM-HPA) scaling valuable.
+
+use crate::SimTime;
+
+/// Lifecycle phase of one replica.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PodPhase {
+    /// Container pulled/starting; serves no traffic until `ready_at`.
+    Starting { ready_at: SimTime },
+    /// Serving.
+    Ready,
+    /// Scale-in requested: finishes in-flight requests, accepts no new
+    /// ones, force-killed at `deadline` (grace period).
+    Draining { deadline: SimTime },
+}
+
+/// One replica of a model Deployment.
+#[derive(Debug, Clone)]
+pub struct Pod {
+    pub id: u64,
+    pub phase: PodPhase,
+    /// Requests currently executing on this pod.
+    pub in_flight: u32,
+    /// When the pod was created (for debugging / mean-start metrics).
+    pub created_at: SimTime,
+}
+
+impl Pod {
+    pub fn new(id: u64, now: SimTime, startup: f64) -> Self {
+        Pod {
+            id,
+            phase: PodPhase::Starting {
+                ready_at: now + startup,
+            },
+            in_flight: 0,
+            created_at: now,
+        }
+    }
+
+    /// Progress lifecycle to `now`. Returns true if the pod should be
+    /// removed (drain complete or grace deadline passed).
+    pub fn tick(&mut self, now: SimTime) -> bool {
+        match self.phase {
+            PodPhase::Starting { ready_at } if now >= ready_at => {
+                self.phase = PodPhase::Ready;
+                false
+            }
+            PodPhase::Draining { deadline } => self.in_flight == 0 || now >= deadline,
+            _ => false,
+        }
+    }
+
+    /// Can this pod accept a new request at `now`?
+    pub fn can_serve(&self, now: SimTime) -> bool {
+        match self.phase {
+            PodPhase::Ready => true,
+            PodPhase::Starting { ready_at } => now >= ready_at,
+            PodPhase::Draining { .. } => false,
+        }
+    }
+
+    /// Begin draining (graceful termination, §IV-D step iii).
+    pub fn drain(&mut self, now: SimTime, grace: f64) {
+        if !matches!(self.phase, PodPhase::Draining { .. }) {
+            self.phase = PodPhase::Draining {
+                deadline: now + grace,
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn startup_delay_blocks_serving() {
+        let p = Pod::new(1, 0.0, 1.8);
+        assert!(!p.can_serve(0.0));
+        assert!(!p.can_serve(1.7));
+        assert!(p.can_serve(1.8));
+    }
+
+    #[test]
+    fn tick_promotes_to_ready() {
+        let mut p = Pod::new(1, 0.0, 1.8);
+        assert!(!p.tick(1.0));
+        assert!(matches!(p.phase, PodPhase::Starting { .. }));
+        assert!(!p.tick(2.0));
+        assert_eq!(p.phase, PodPhase::Ready);
+    }
+
+    #[test]
+    fn draining_rejects_new_work() {
+        let mut p = Pod::new(1, 0.0, 0.0);
+        p.tick(0.0);
+        p.in_flight = 1;
+        p.drain(5.0, 30.0);
+        assert!(!p.can_serve(5.0));
+    }
+
+    #[test]
+    fn drain_completes_when_empty() {
+        let mut p = Pod::new(1, 0.0, 0.0);
+        p.tick(0.0);
+        p.in_flight = 2;
+        p.drain(5.0, 30.0);
+        assert!(!p.tick(6.0)); // still has in-flight work
+        p.in_flight = 0;
+        assert!(p.tick(7.0)); // done gracefully
+    }
+
+    #[test]
+    fn drain_force_kills_at_deadline() {
+        let mut p = Pod::new(1, 0.0, 0.0);
+        p.tick(0.0);
+        p.in_flight = 1;
+        p.drain(5.0, 30.0);
+        assert!(!p.tick(34.9));
+        assert!(p.tick(35.0)); // grace expired
+    }
+
+    #[test]
+    fn drain_idempotent() {
+        let mut p = Pod::new(1, 0.0, 0.0);
+        p.tick(0.0);
+        p.drain(5.0, 30.0);
+        let d1 = p.phase;
+        p.drain(10.0, 30.0); // must not extend the deadline
+        assert_eq!(p.phase, d1);
+    }
+}

@@ -1,0 +1,435 @@
+//! Typed configuration system: model catalogue, instance tiers, SLO policy,
+//! and scenario definitions. Defaults reproduce the paper's §V constants
+//! exactly; everything is overridable from a JSON file (`laimr --config`)
+//! parsed by the in-tree parser (`util::json`).
+
+mod scenario;
+mod serde_json_impl;
+pub use scenario::{ArrivalKind, ScenarioConfig};
+
+/// Quality lanes of the multi-queue scheduler (§IV-A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QualityClass {
+    /// Latency-critical, edge-optimised (EfficientDet-Lite0 class).
+    LowLatency,
+    /// Balanced latency/accuracy (YOLOv5m class).
+    Balanced,
+    /// Accuracy-prioritised, cloud (R-CNN class).
+    Precise,
+}
+
+impl QualityClass {
+    pub const ALL: [QualityClass; 3] = [
+        QualityClass::LowLatency,
+        QualityClass::Balanced,
+        QualityClass::Precise,
+    ];
+
+    /// Dispatch priority: lower = served first.
+    pub fn priority(self) -> usize {
+        match self {
+            QualityClass::LowLatency => 0,
+            QualityClass::Balanced => 1,
+            QualityClass::Precise => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QualityClass::LowLatency => "low-latency",
+            QualityClass::Balanced => "balanced",
+            QualityClass::Precise => "precise",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "low-latency" => Some(QualityClass::LowLatency),
+            "balanced" => Some(QualityClass::Balanced),
+            "precise" => Some(QualityClass::Precise),
+            _ => None,
+        }
+    }
+}
+
+/// Where an instance class lives in the continuum.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    Edge,
+    Cloud,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Edge => "edge",
+            Tier::Cloud => "cloud",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "edge" => Some(Tier::Edge),
+            "cloud" => Some(Tier::Cloud),
+            _ => None,
+        }
+    }
+}
+
+/// One inference model in the catalogue (paper Table II + Table V).
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: String,
+    /// L_m: steady-state single-inference latency on the reference device [s].
+    pub l_ref: f64,
+    /// R_m: per-inference resource demand [CPU-seconds].
+    pub r_cost: f64,
+    /// Steady-state accuracy a_m ∈ [0,1] (mAP@0.5 from Table V).
+    pub accuracy: f64,
+    /// Which quality lane this model backs.
+    pub quality: QualityClass,
+    /// AOT artifact name (key into artifacts/manifest.json), if served
+    /// for real by the PJRT runtime. Simulator-only models may omit it.
+    pub artifact: Option<String>,
+}
+
+/// One instance class (VM flavour) in the continuum (§III-B.3).
+#[derive(Debug, Clone)]
+pub struct InstanceSpec {
+    pub name: String,
+    pub tier: Tier,
+    /// S_{m,i}: hardware speed-up vs the reference device (Table III).
+    pub speedup: f64,
+    /// R_i^max: sustainable compute budget [CPU-seconds per second].
+    pub r_max: f64,
+    /// B_i: exogenous background (co-tenant) load [CPU-seconds per second].
+    pub background: f64,
+    /// One-way network delay from the robots to this instance [s];
+    /// D^net = 2 * one_way (+ jitter, scenario-controlled).
+    pub one_way_delay: f64,
+    /// c_{m,i}: per-replica-hour cost unit (Eq. 23 cost term).
+    pub cost: f64,
+    /// Per-Deployment replica cap N^max.
+    pub n_max: u32,
+}
+
+/// Control-loop constants (§IV, §V-A.4).
+#[derive(Debug, Clone)]
+pub struct SloPolicy {
+    /// Latency-budget multiplier x > 1: τ_m = x · L_m^infer.
+    pub x_multiplier: f64,
+    /// EWMA smoothing weight α for the accumulated arrival rate.
+    pub ewma_alpha: f64,
+    /// Utilisation floor ρ_low below which replicas are scaled in.
+    pub rho_low: f64,
+    /// γ: super-linearity exponent of the utilisation latency law.
+    pub gamma: f64,
+    /// Δ: prediction-table refresh period [s] (§IV-B step ii).
+    pub table_refresh: f64,
+    /// Sliding-window width for SLIDINGRATE [s] (Algorithm 1 uses 1 s).
+    pub rate_window: f64,
+    /// β: cost–latency trade-off in the capacity planner (Eq. 23).
+    pub beta_cost: f64,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        // Paper §V-A.4: x = 2.25, α = 0.8, γ = 0.90 (control), β = 2.5.
+        Self {
+            x_multiplier: 2.25,
+            ewma_alpha: 0.8,
+            rho_low: 0.3,
+            gamma: 0.90,
+            table_refresh: 1.0,
+            rate_window: 1.0,
+            beta_cost: 2.5,
+        }
+    }
+}
+
+/// Kubernetes-mechanics constants (§IV-D, §V-A.2).
+#[derive(Debug, Clone)]
+pub struct ClusterPolicy {
+    /// HPA reconcile period [s] (paper: every 5 s).
+    pub hpa_interval: f64,
+    /// Prometheus scrape period [s] — staleness seen by reactive baselines.
+    pub scrape_interval: f64,
+    /// Container startup time [s] (paper: 1.8 s average on ARM64).
+    pub pod_startup: f64,
+    /// Grace period for draining pods [s].
+    pub drain_grace: f64,
+}
+
+impl Default for ClusterPolicy {
+    fn default() -> Self {
+        Self {
+            hpa_interval: 5.0,
+            scrape_interval: 15.0,
+            pod_startup: 1.8,
+            drain_grace: 30.0,
+        }
+    }
+}
+
+/// Root configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub models: Vec<ModelProfile>,
+    pub instances: Vec<InstanceSpec>,
+    pub slo: SloPolicy,
+    pub cluster: ClusterPolicy,
+}
+
+impl Default for Config {
+    /// The paper's testbed: RPi4-class edge (3 CPU cores per replica
+    /// slot, 32-Pi rack) + Ericsson cloud (19 cores, 36 ms RTT), serving
+    /// EfficientDet-Lite0 / YOLOv5m / an R-CNN-class precision model.
+    fn default() -> Self {
+        Config {
+            models: vec![
+                ModelProfile {
+                    name: "effdet_lite".into(),
+                    l_ref: 0.09, // Table II
+                    r_cost: 0.10,
+                    accuracy: 0.25, // Table V mAP@0.5
+                    quality: QualityClass::LowLatency,
+                    artifact: Some("effdet_lite".into()),
+                },
+                ModelProfile {
+                    name: "yolov5m".into(),
+                    l_ref: 0.73, // Table II
+                    r_cost: 1.00,
+                    accuracy: 0.641,
+                    quality: QualityClass::Balanced,
+                    artifact: Some("yolov5m".into()),
+                },
+                ModelProfile {
+                    name: "faster_rcnn".into(),
+                    // R-CNN-class cloud model: multi-hundred-ms on strong HW
+                    // (§II-D); reference-device latency scaled accordingly.
+                    l_ref: 2.50,
+                    r_cost: 3.50,
+                    accuracy: 0.75,
+                    quality: QualityClass::Precise,
+                    artifact: None,
+                },
+            ],
+            instances: vec![
+                InstanceSpec {
+                    name: "edge-rpi4".into(),
+                    tier: Tier::Edge,
+                    speedup: 1.0, // the reference device itself
+                    r_max: 3.0,   // 3 CPU cores per replica slot (Table IV setup)
+                    background: 0.15,
+                    one_way_delay: 0.002, // on-campus 1 Gbit/s LAN
+                    cost: 1.0,
+                    n_max: 8,
+                },
+                InstanceSpec {
+                    name: "cloud-ericsson".into(),
+                    tier: Tier::Cloud,
+                    speedup: 4.0, // server cores vs RPi4 (Table III CPU..GPU span)
+                    r_max: 19.0,  // 19 dedicated cores (§V-A.2)
+                    background: 0.5,
+                    one_way_delay: 0.018, // 36 ms RTT (§V-A.2)
+                    cost: 2.5,
+                    n_max: 16,
+                },
+            ],
+            slo: SloPolicy::default(),
+            cluster: ClusterPolicy::default(),
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON override file, or defaults when `path` is `None`.
+    pub fn load(path: Option<&std::path::Path>) -> anyhow::Result<Self> {
+        match path {
+            None => Ok(Self::default()),
+            Some(p) => {
+                let text = std::fs::read_to_string(p)?;
+                let cfg = Self::from_json_str(&text)?;
+                cfg.validate()?;
+                Ok(cfg)
+            }
+        }
+    }
+
+    /// Structural validation: positive rates, unique names, lanes covered.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.models.is_empty(), "no models configured");
+        anyhow::ensure!(!self.instances.is_empty(), "no instances configured");
+        for m in &self.models {
+            anyhow::ensure!(m.l_ref > 0.0, "model {}: l_ref must be > 0", m.name);
+            anyhow::ensure!(m.r_cost > 0.0, "model {}: r_cost must be > 0", m.name);
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&m.accuracy),
+                "model {}: accuracy out of [0,1]",
+                m.name
+            );
+        }
+        for i in &self.instances {
+            anyhow::ensure!(i.speedup > 0.0, "instance {}: speedup must be > 0", i.name);
+            anyhow::ensure!(i.r_max > 0.0, "instance {}: r_max must be > 0", i.name);
+            anyhow::ensure!(
+                i.background >= 0.0 && i.background < i.r_max,
+                "instance {}: background must be in [0, r_max)",
+                i.name
+            );
+            anyhow::ensure!(i.n_max >= 1, "instance {}: n_max must be >= 1", i.name);
+        }
+        anyhow::ensure!(
+            self.slo.x_multiplier > 1.0,
+            "SLO multiplier x must be > 1 (paper §IV-B)"
+        );
+        anyhow::ensure!(
+            (0.0..1.0).contains(&self.slo.ewma_alpha),
+            "EWMA alpha must be in [0,1)"
+        );
+        let mut names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        anyhow::ensure!(names.len() == self.models.len(), "duplicate model names");
+        Ok(())
+    }
+
+    pub fn model_by_name(&self, name: &str) -> Option<(usize, &ModelProfile)> {
+        self.models
+            .iter()
+            .enumerate()
+            .find(|(_, m)| m.name == name)
+    }
+
+    /// Model backing a quality lane (first match).
+    pub fn model_for_quality(&self, q: QualityClass) -> Option<(usize, &ModelProfile)> {
+        self.models
+            .iter()
+            .enumerate()
+            .find(|(_, m)| m.quality == q)
+    }
+
+    /// Edge instances (routing candidates before offload).
+    pub fn edge_instances(&self) -> impl Iterator<Item = (usize, &InstanceSpec)> {
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.tier == Tier::Edge)
+    }
+
+    pub fn cloud_instances(&self) -> impl Iterator<Item = (usize, &InstanceSpec)> {
+        self.instances
+            .iter()
+            .enumerate()
+            .filter(|(_, i)| i.tier == Tier::Cloud)
+    }
+
+    /// Per-model SLO budget τ_m = x · L_m (§IV-B step i).
+    pub fn slo_budget(&self, model: usize) -> f64 {
+        self.slo.x_multiplier * self.models[model].l_ref
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        Config::default().validate().unwrap();
+    }
+
+    #[test]
+    fn default_matches_paper_constants() {
+        let c = Config::default();
+        let (_, yolo) = c.model_by_name("yolov5m").unwrap();
+        assert_eq!(yolo.l_ref, 0.73);
+        assert_eq!(yolo.r_cost, 1.00);
+        let (_, eff) = c.model_by_name("effdet_lite").unwrap();
+        assert_eq!(eff.l_ref, 0.09);
+        assert_eq!(eff.r_cost, 0.10);
+        assert_eq!(c.slo.x_multiplier, 2.25);
+        assert_eq!(c.slo.ewma_alpha, 0.8);
+        assert_eq!(c.cluster.hpa_interval, 5.0);
+        assert_eq!(c.cluster.pod_startup, 1.8);
+        // §V-A.4: τ for YOLOv5m ≈ 2.25 × 0.73 ≈ 1.64 s on the reference
+        // device (paper rounds L_m^infer to 0.8 s end-to-end → τ=1.8 s).
+        let (yi, _) = c.model_by_name("yolov5m").unwrap();
+        let tau = c.slo_budget(yi);
+        assert!((tau - 1.6425).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = Config::default();
+        let text = c.to_json_string();
+        let back = Config::from_json_str(&text).unwrap();
+        assert_eq!(back.models.len(), c.models.len());
+        assert_eq!(back.instances.len(), c.instances.len());
+        assert_eq!(back.models[1].l_ref, c.models[1].l_ref);
+        assert_eq!(back.instances[1].r_max, c.instances[1].r_max);
+        assert_eq!(back.slo.gamma, c.slo.gamma);
+        back.validate().unwrap();
+    }
+
+    #[test]
+    fn partial_json_overrides_defaults() {
+        let c = Config::from_json_str(r#"{"slo": {"gamma": 1.49}}"#).unwrap();
+        assert_eq!(c.slo.gamma, 1.49);
+        assert_eq!(c.slo.x_multiplier, 2.25); // untouched default
+        assert_eq!(c.models.len(), 3); // default catalogue kept
+    }
+
+    #[test]
+    fn rejects_bad_accuracy() {
+        let mut c = Config::default();
+        c.models[0].accuracy = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_background_over_capacity() {
+        let mut c = Config::default();
+        c.instances[0].background = c.instances[0].r_max + 1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn quality_lane_lookup() {
+        let c = Config::default();
+        assert_eq!(
+            c.model_for_quality(QualityClass::Balanced).unwrap().1.name,
+            "yolov5m"
+        );
+        assert_eq!(
+            c.model_for_quality(QualityClass::LowLatency)
+                .unwrap()
+                .1
+                .name,
+            "effdet_lite"
+        );
+    }
+
+    #[test]
+    fn tier_filters() {
+        let c = Config::default();
+        assert_eq!(c.edge_instances().count(), 1);
+        assert_eq!(c.cloud_instances().count(), 1);
+    }
+
+    #[test]
+    fn priority_ordering() {
+        assert!(QualityClass::LowLatency.priority() < QualityClass::Balanced.priority());
+        assert!(QualityClass::Balanced.priority() < QualityClass::Precise.priority());
+    }
+
+    #[test]
+    fn name_roundtrips() {
+        for q in QualityClass::ALL {
+            assert_eq!(QualityClass::from_name(q.name()), Some(q));
+        }
+        assert_eq!(Tier::from_name("edge"), Some(Tier::Edge));
+        assert_eq!(Tier::from_name("cloud"), Some(Tier::Cloud));
+        assert_eq!(Tier::from_name("fog"), None);
+    }
+}

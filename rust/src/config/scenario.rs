@@ -1,0 +1,220 @@
+//! Scenario definitions: what workload to run, for how long, which seed —
+//! the knobs the benchmark harness sweeps to regenerate each paper
+//! table/figure.
+
+/// Arrival-process families supported by the workload generator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalKind {
+    /// Homogeneous Poisson with rate λ [req/s].
+    Poisson { lambda: f64 },
+    /// Bounded-Pareto burst trains (paper §V-D): bursts of size
+    /// BP(alpha, lo, hi) arrive as Poisson(burst_rate); requests within a
+    /// burst are spaced `intra_gap` seconds apart.
+    BoundedParetoBursts {
+        /// Mean burst-train arrival rate [bursts/s].
+        burst_rate: f64,
+        /// Pareto shape (lower = heavier tail).
+        alpha: f64,
+        /// Burst size bounds [requests].
+        lo: f64,
+        hi: f64,
+        /// Intra-burst request spacing [s].
+        intra_gap: f64,
+    },
+    /// Deterministic rate (robots emitting frames on a fixed period).
+    Periodic { rate: f64 },
+    /// Step profile: (start_time, rate) breakpoints, Poisson within a step.
+    Steps { steps: Vec<(f64, f64)> },
+}
+
+/// One simulation scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    pub name: String,
+    pub arrivals: ArrivalKind,
+    /// Simulated duration [s].
+    pub duration: f64,
+    /// Warm-up period excluded from statistics [s].
+    pub warmup: f64,
+    pub seed: u64,
+    /// Share of traffic per quality lane (LowLatency, Balanced, Precise);
+    /// normalised internally.
+    pub quality_mix: [f64; 3],
+    /// Initial replica count per (model on its home tier).
+    pub initial_replicas: u32,
+    /// Fault injection: mean time between pod crashes per *pool* [s]
+    /// (exponential). None = no faults. A crashed pod vanishes with its
+    /// in-flight work (the requests are re-queued at the front door);
+    /// the autoscaler must detect the capacity gap and re-provision.
+    pub pod_mtbf: Option<f64>,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        Self {
+            name: "default".into(),
+            arrivals: ArrivalKind::Poisson { lambda: 4.0 },
+            duration: 300.0,
+            warmup: 30.0,
+            seed: 42,
+            // Paper's experiments drive the YOLOv5m (Balanced) service.
+            quality_mix: [0.0, 1.0, 0.0],
+            initial_replicas: 1,
+            pod_mtbf: None,
+        }
+    }
+}
+
+impl ScenarioConfig {
+    /// Poisson scenario at rate λ — the sweep axis of Figs 3/7/8, Table VI.
+    pub fn poisson(lambda: f64, seed: u64) -> Self {
+        Self {
+            name: format!("poisson-{lambda}"),
+            arrivals: ArrivalKind::Poisson { lambda },
+            ..Self::default()
+        }
+        .with_seed(seed)
+    }
+
+    /// Bursty scenario matching the paper's bounded-Pareto emulation with
+    /// a target mean rate of `lambda` req/s.
+    pub fn bursty(lambda: f64, seed: u64) -> Self {
+        // Mean burst size for BP(alpha=1.5, 1, 20) ≈ 2.54; pick burst_rate
+        // so burst_rate * E[size] = lambda.
+        let alpha = 1.5;
+        let (lo, hi) = (1.0, 20.0);
+        let mean_size = bounded_pareto_mean(alpha, lo, hi);
+        Self {
+            name: format!("bursty-{lambda}"),
+            arrivals: ArrivalKind::BoundedParetoBursts {
+                burst_rate: lambda / mean_size,
+                alpha,
+                lo,
+                hi,
+                intra_gap: 0.05,
+            },
+            ..Self::default()
+        }
+        .with_seed(seed)
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_duration(mut self, duration: f64, warmup: f64) -> Self {
+        self.duration = duration;
+        self.warmup = warmup;
+        self
+    }
+
+    pub fn with_replicas(mut self, n: u32) -> Self {
+        self.initial_replicas = n;
+        self
+    }
+
+    /// Enable pod-crash fault injection (mean time between crashes per
+    /// pool, exponential).
+    pub fn with_faults(mut self, mtbf: f64) -> Self {
+        self.pod_mtbf = Some(mtbf);
+        self
+    }
+
+    /// Normalised quality mix.
+    pub fn mix(&self) -> [f64; 3] {
+        let s: f64 = self.quality_mix.iter().sum();
+        if s <= 0.0 {
+            return [0.0, 1.0, 0.0];
+        }
+        [
+            self.quality_mix[0] / s,
+            self.quality_mix[1] / s,
+            self.quality_mix[2] / s,
+        ]
+    }
+
+    /// Mean offered arrival rate [req/s] — used to parameterise the
+    /// analytic model during planning.
+    pub fn mean_rate(&self) -> f64 {
+        match &self.arrivals {
+            ArrivalKind::Poisson { lambda } => *lambda,
+            ArrivalKind::Periodic { rate } => *rate,
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                ..
+            } => burst_rate * bounded_pareto_mean(*alpha, *lo, *hi),
+            ArrivalKind::Steps { steps } => {
+                if steps.is_empty() {
+                    return 0.0;
+                }
+                // Time-weighted mean over the step profile within duration.
+                let mut total = 0.0;
+                for (idx, (t, r)) in steps.iter().enumerate() {
+                    let end = steps.get(idx + 1).map(|s| s.0).unwrap_or(self.duration);
+                    total += r * (end - t).max(0.0);
+                }
+                total / self.duration
+            }
+        }
+    }
+}
+
+/// Mean of a bounded Pareto(alpha, lo, hi) (alpha != 1).
+pub fn bounded_pareto_mean(alpha: f64, lo: f64, hi: f64) -> f64 {
+    if (alpha - 1.0).abs() < 1e-12 {
+        // E[X] = ln(hi/lo) * lo*hi/(hi-lo) for alpha = 1.
+        return (hi / lo).ln() * lo * hi / (hi - lo);
+    }
+    let la = lo.powf(alpha);
+    (la / (1.0 - (lo / hi).powf(alpha)))
+        * (alpha / (alpha - 1.0))
+        * (lo.powf(1.0 - alpha) - hi.powf(1.0 - alpha))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bp_mean_matches_sampling() {
+        let (alpha, lo, hi) = (1.5, 1.0, 20.0);
+        let analytic = bounded_pareto_mean(alpha, lo, hi);
+        let mut r = Rng::new(11);
+        let n = 400_000;
+        let emp: f64 = (0..n).map(|_| r.bounded_pareto(alpha, lo, hi)).sum::<f64>() / n as f64;
+        assert!(
+            (analytic - emp).abs() / emp < 0.02,
+            "analytic={analytic} empirical={emp}"
+        );
+    }
+
+    #[test]
+    fn bursty_mean_rate_close_to_target() {
+        let s = ScenarioConfig::bursty(4.0, 1);
+        assert!((s.mean_rate() - 4.0).abs() < 0.2, "rate={}", s.mean_rate());
+    }
+
+    #[test]
+    fn mix_normalises() {
+        let mut s = ScenarioConfig::default();
+        s.quality_mix = [2.0, 2.0, 0.0];
+        assert_eq!(s.mix(), [0.5, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn steps_mean_rate() {
+        let s = ScenarioConfig {
+            arrivals: ArrivalKind::Steps {
+                steps: vec![(0.0, 2.0), (150.0, 6.0)],
+            },
+            duration: 300.0,
+            ..ScenarioConfig::default()
+        };
+        assert!((s.mean_rate() - 4.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,232 @@
+//! JSON (de)serialisation for the config types via `util::json` — partial
+//! override semantics: a config file may specify any subset of fields; the
+//! rest keep their paper defaults.
+
+use super::{ClusterPolicy, Config, InstanceSpec, ModelProfile, QualityClass, SloPolicy, Tier};
+use crate::util::json::{self, Value};
+use std::collections::BTreeMap;
+
+fn num(v: &Value, key: &str, default: f64) -> anyhow::Result<f64> {
+    match v.get(key) {
+        None => Ok(default),
+        Some(x) => x
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("{key}: expected a number")),
+    }
+}
+
+fn req_num(v: &Value, key: &str) -> anyhow::Result<f64> {
+    v.get(key)
+        .and_then(|x| x.as_f64())
+        .ok_or_else(|| anyhow::anyhow!("missing numeric field '{key}'"))
+}
+
+fn req_str(v: &Value, key: &str) -> anyhow::Result<String> {
+    v.get(key)
+        .and_then(|x| x.as_str())
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("missing string field '{key}'"))
+}
+
+impl ModelProfile {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let quality = req_str(v, "quality")?;
+        Ok(ModelProfile {
+            name: req_str(v, "name")?,
+            l_ref: req_num(v, "l_ref")?,
+            r_cost: req_num(v, "r_cost")?,
+            accuracy: req_num(v, "accuracy")?,
+            quality: QualityClass::from_name(&quality)
+                .ok_or_else(|| anyhow::anyhow!("unknown quality '{quality}'"))?,
+            artifact: v
+                .get("artifact")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("l_ref".into(), Value::Num(self.l_ref));
+        o.insert("r_cost".into(), Value::Num(self.r_cost));
+        o.insert("accuracy".into(), Value::Num(self.accuracy));
+        o.insert("quality".into(), Value::Str(self.quality.name().into()));
+        if let Some(a) = &self.artifact {
+            o.insert("artifact".into(), Value::Str(a.clone()));
+        }
+        Value::Obj(o)
+    }
+}
+
+impl InstanceSpec {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let tier = req_str(v, "tier")?;
+        Ok(InstanceSpec {
+            name: req_str(v, "name")?,
+            tier: Tier::from_name(&tier)
+                .ok_or_else(|| anyhow::anyhow!("unknown tier '{tier}'"))?,
+            speedup: req_num(v, "speedup")?,
+            r_max: req_num(v, "r_max")?,
+            background: num(v, "background", 0.0)?,
+            one_way_delay: num(v, "one_way_delay", 0.0)?,
+            cost: num(v, "cost", 1.0)?,
+            n_max: num(v, "n_max", 8.0)? as u32,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("tier".into(), Value::Str(self.tier.name().into()));
+        o.insert("speedup".into(), Value::Num(self.speedup));
+        o.insert("r_max".into(), Value::Num(self.r_max));
+        o.insert("background".into(), Value::Num(self.background));
+        o.insert("one_way_delay".into(), Value::Num(self.one_way_delay));
+        o.insert("cost".into(), Value::Num(self.cost));
+        o.insert("n_max".into(), Value::Num(self.n_max as f64));
+        Value::Obj(o)
+    }
+}
+
+impl SloPolicy {
+    fn from_json(v: &Value, base: SloPolicy) -> anyhow::Result<Self> {
+        Ok(SloPolicy {
+            x_multiplier: num(v, "x_multiplier", base.x_multiplier)?,
+            ewma_alpha: num(v, "ewma_alpha", base.ewma_alpha)?,
+            rho_low: num(v, "rho_low", base.rho_low)?,
+            gamma: num(v, "gamma", base.gamma)?,
+            table_refresh: num(v, "table_refresh", base.table_refresh)?,
+            rate_window: num(v, "rate_window", base.rate_window)?,
+            beta_cost: num(v, "beta_cost", base.beta_cost)?,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("x_multiplier".into(), Value::Num(self.x_multiplier));
+        o.insert("ewma_alpha".into(), Value::Num(self.ewma_alpha));
+        o.insert("rho_low".into(), Value::Num(self.rho_low));
+        o.insert("gamma".into(), Value::Num(self.gamma));
+        o.insert("table_refresh".into(), Value::Num(self.table_refresh));
+        o.insert("rate_window".into(), Value::Num(self.rate_window));
+        o.insert("beta_cost".into(), Value::Num(self.beta_cost));
+        Value::Obj(o)
+    }
+}
+
+impl ClusterPolicy {
+    fn from_json(v: &Value, base: ClusterPolicy) -> anyhow::Result<Self> {
+        Ok(ClusterPolicy {
+            hpa_interval: num(v, "hpa_interval", base.hpa_interval)?,
+            scrape_interval: num(v, "scrape_interval", base.scrape_interval)?,
+            pod_startup: num(v, "pod_startup", base.pod_startup)?,
+            drain_grace: num(v, "drain_grace", base.drain_grace)?,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("hpa_interval".into(), Value::Num(self.hpa_interval));
+        o.insert("scrape_interval".into(), Value::Num(self.scrape_interval));
+        o.insert("pod_startup".into(), Value::Num(self.pod_startup));
+        o.insert("drain_grace".into(), Value::Num(self.drain_grace));
+        Value::Obj(o)
+    }
+}
+
+impl Config {
+    /// Parse a config (full or partial-override) from JSON text.
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base = Config::default();
+        let models = match v.get("models") {
+            None => base.models,
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("models: expected an array"))?
+                .iter()
+                .map(ModelProfile::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        let instances = match v.get("instances") {
+            None => base.instances,
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("instances: expected an array"))?
+                .iter()
+                .map(InstanceSpec::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        let slo = match v.get("slo") {
+            None => base.slo,
+            Some(s) => SloPolicy::from_json(s, SloPolicy::default())?,
+        };
+        let cluster = match v.get("cluster") {
+            None => base.cluster,
+            Some(c) => ClusterPolicy::from_json(c, ClusterPolicy::default())?,
+        };
+        Ok(Config {
+            models,
+            instances,
+            slo,
+            cluster,
+        })
+    }
+
+    /// Serialise to pretty JSON.
+    pub fn to_json_string(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "models".into(),
+            Value::Arr(self.models.iter().map(|m| m.to_json()).collect()),
+        );
+        o.insert(
+            "instances".into(),
+            Value::Arr(self.instances.iter().map(|i| i.to_json()).collect()),
+        );
+        o.insert("slo".into(), self.slo.to_json());
+        o.insert("cluster".into(), self.cluster.to_json());
+        json::to_string(&Value::Obj(o))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_json_roundtrip() {
+        let m = Config::default().models[1].clone();
+        let back = ModelProfile::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.name, m.name);
+        assert_eq!(back.l_ref, m.l_ref);
+        assert_eq!(back.quality, m.quality);
+        assert_eq!(back.artifact, m.artifact);
+    }
+
+    #[test]
+    fn instance_json_roundtrip() {
+        let i = Config::default().instances[1].clone();
+        let back = InstanceSpec::from_json(&i.to_json()).unwrap();
+        assert_eq!(back.name, i.name);
+        assert_eq!(back.tier, i.tier);
+        assert_eq!(back.n_max, i.n_max);
+    }
+
+    #[test]
+    fn missing_required_field_errors() {
+        assert!(ModelProfile::from_json(&json::parse(r#"{"name": "x"}"#).unwrap()).is_err());
+        assert!(
+            InstanceSpec::from_json(&json::parse(r#"{"name": "x", "tier": "fog"}"#).unwrap())
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn cluster_partial_override() {
+        let c = Config::from_json_str(r#"{"cluster": {"pod_startup": 5.0}}"#).unwrap();
+        assert_eq!(c.cluster.pod_startup, 5.0);
+        assert_eq!(c.cluster.hpa_interval, 5.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! The LA-IMR control layer (§IV) — the paper's system contribution.
+//!
+//! * [`queues`] — quality-differentiated multi-queue scheduler (§IV-A);
+//! * [`router`] — event-driven, SLO-aware router implementing Algorithm 1
+//!   (per-request offload on instantaneous breach, EWMA-driven scale-out /
+//!   fractional bulk offload, feasible-set + argmin replica selection);
+//! * [`offload`] — upstream-tier selection and the φ-fraction splitter;
+//! * [`state`] — shared in-memory control state snapshotting replica pools.
+//!
+//! Everything here is plain single-threaded state: the DES drives it
+//! directly, and the tokio serving path wraps it in a mutex — routing
+//! decisions are microsecond-scale, so one lock is never contended at
+//! robot request rates.
+
+pub mod offload;
+pub mod queues;
+pub mod router;
+pub mod state;
+
+pub use queues::{MultiQueue, QueuedRequest};
+pub use router::{Decision, RouteReason, Router};
+pub use state::{ControlState, ReplicaView};

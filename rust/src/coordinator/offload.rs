@@ -1,0 +1,203 @@
+//! Edge→cloud offloading: upstream-tier selection and the φ-fraction
+//! splitter (Algorithm 1 lines 10–12 and 20–22).
+
+use crate::cluster::DeploymentKey;
+use crate::config::{Config, Tier};
+use crate::coordinator::state::ControlState;
+use crate::latency_model::LatencyModel;
+
+/// Pick the upstream target for a request of model `m` currently homed on
+/// `from`: the instance (excluding `from.instance`) with the smallest
+/// predicted g given its current replica count — "nearest fast/cloud
+/// tier". Prefers feasible (finite-g) targets; falls back to the cloud
+/// tier with most headroom when every pool is saturated.
+///
+/// `models` is the router's flat model-major grid: index = m·|I| + i.
+pub fn pick_upstream(
+    cfg: &Config,
+    models: &[LatencyModel],
+    state: &ControlState,
+    from: DeploymentKey,
+    lambda: f64,
+) -> Option<DeploymentKey> {
+    let n_instances = cfg.instances.len();
+    let mut best: Option<(f64, DeploymentKey)> = None;
+    let mut fallback: Option<(f64, DeploymentKey)> = None;
+    for (i, spec) in cfg.instances.iter().enumerate() {
+        if i == from.instance {
+            continue;
+        }
+        let key = DeploymentKey {
+            model: from.model,
+            instance: i,
+        };
+        let Some(model) = models.get(from.model * n_instances + i) else {
+            continue;
+        };
+        let view = state.view(key);
+        let g = model.g_lambda(lambda, view.active.max(1));
+        if g.is_finite() {
+            if best.map(|(b, _)| g < b).unwrap_or(true) {
+                best = Some((g, key));
+            }
+        } else if spec.tier == Tier::Cloud {
+            // Saturated everywhere: prefer the cloud pool with most μ·N
+            // headroom (least negative margin).
+            let headroom = view.active as f64 * model.mu() - lambda;
+            if fallback.map(|(h, _)| headroom > h).unwrap_or(true) {
+                fallback = Some((headroom, key));
+            }
+        }
+    }
+    best.or(fallback).map(|(_, k)| k)
+}
+
+/// Deterministic φ-fraction splitter (Algorithm 1 line 21-22): offload
+/// exactly the fraction φ of a stream using error diffusion — no RNG on
+/// the hot path, and the realised fraction tracks φ within 1/n after n
+/// requests (tested below).
+#[derive(Debug, Clone, Default)]
+pub struct FractionSplitter {
+    acc: f64,
+}
+
+impl FractionSplitter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Decide for one request whether it belongs to the offloaded share,
+    /// given the current fraction φ ∈ [0, 1].
+    #[inline]
+    pub fn should_offload(&mut self, phi: f64) -> bool {
+        let phi = phi.clamp(0.0, 1.0);
+        self.acc += phi;
+        if self.acc >= 1.0 {
+            self.acc -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.acc = 0.0;
+    }
+}
+
+/// φ = min(1, (ĝ − τ)/ĝ) (Algorithm 1 line 21): the excess share of
+/// predicted latency over the SLO budget.
+#[inline]
+pub fn offload_fraction(g_pred: f64, tau: f64) -> f64 {
+    if !g_pred.is_finite() {
+        return 1.0; // unstable pool: deflect everything
+    }
+    if g_pred <= tau || g_pred <= 0.0 {
+        return 0.0;
+    }
+    ((g_pred - tau) / g_pred).min(1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ReplicaView;
+
+    fn setup() -> (Config, Vec<LatencyModel>, ControlState) {
+        let cfg = Config::default();
+        let mut models = Vec::new();
+        let mut state = ControlState::new();
+        for m in 0..cfg.models.len() {
+            for i in 0..cfg.instances.len() {
+                let key = DeploymentKey { model: m, instance: i };
+                models.push(LatencyModel::from_config(&cfg, m, i));
+                state.update(
+                    key,
+                    ReplicaView {
+                        active: 2,
+                        ready: 2,
+                        desired: 2,
+                        rho: 0.2,
+                        queue_depth: 0,
+                    },
+                );
+            }
+        }
+        (cfg, models, state)
+    }
+
+    #[test]
+    fn upstream_is_cloud_for_edge_yolo() {
+        let (cfg, models, state) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let from = DeploymentKey { model: m, instance: 0 };
+        let up = pick_upstream(&cfg, &models, &state, from, 3.0).unwrap();
+        assert_eq!(up.instance, 1); // the cloud tier
+        assert_eq!(up.model, m);
+    }
+
+    #[test]
+    fn upstream_excludes_origin() {
+        let (cfg, models, state) = setup();
+        let from = DeploymentKey { model: 1, instance: 1 };
+        let up = pick_upstream(&cfg, &models, &state, from, 1.0).unwrap();
+        assert_ne!(up.instance, 1);
+    }
+
+    #[test]
+    fn saturated_falls_back_to_cloud_headroom() {
+        let (cfg, models, mut state) = setup();
+        // Saturate every pool: huge λ.
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        for i in 0..cfg.instances.len() {
+            state.update(
+                DeploymentKey { model: m, instance: i },
+                ReplicaView {
+                    active: 1,
+                    ready: 1,
+                    desired: 1,
+                    rho: 5.0,
+                    queue_depth: 50,
+                },
+            );
+        }
+        let from = DeploymentKey { model: m, instance: 0 };
+        let up = pick_upstream(&cfg, &models, &state, from, 100.0);
+        assert_eq!(up.unwrap().instance, 1); // still lands on cloud
+    }
+
+    #[test]
+    fn fraction_splitter_tracks_phi() {
+        let mut s = FractionSplitter::new();
+        let phi = 0.3;
+        let n = 10_000;
+        let off = (0..n).filter(|_| s.should_offload(phi)).count();
+        let realised = off as f64 / n as f64;
+        assert!((realised - phi).abs() < 1e-3, "realised={realised}");
+    }
+
+    #[test]
+    fn fraction_splitter_extremes() {
+        let mut s = FractionSplitter::new();
+        assert!(!(0..100).any(|_| s.should_offload(0.0)));
+        s.reset();
+        assert!((0..100).all(|_| s.should_offload(1.0)));
+    }
+
+    #[test]
+    fn fraction_splitter_no_long_runs() {
+        // Error diffusion interleaves: at φ=0.5, alternates strictly.
+        let mut s = FractionSplitter::new();
+        let seq: Vec<bool> = (0..10).map(|_| s.should_offload(0.5)).collect();
+        assert_eq!(seq, vec![false, true, false, true, false, true, false, true, false, true]);
+    }
+
+    #[test]
+    fn offload_fraction_formula() {
+        assert_eq!(offload_fraction(1.0, 2.0), 0.0); // within budget
+        assert!((offload_fraction(4.0, 2.0) - 0.5).abs() < 1e-12);
+        assert_eq!(offload_fraction(f64::INFINITY, 2.0), 1.0);
+        // φ never exceeds 1.
+        assert_eq!(offload_fraction(1e12, 1e-3), ((1e12 - 1e-3) / 1e12f64).min(1.0));
+    }
+}

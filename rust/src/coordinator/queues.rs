@@ -1,0 +1,167 @@
+//! Quality-differentiated multi-queue scheduler (§IV-A, Fig 1).
+//!
+//! Traffic is partitioned into three lanes — Low-Latency, Balanced,
+//! Precise — each backed by its own run-time queue. Dispatch is strict
+//! priority (Low-Latency first), FIFO within a lane; per-lane depths are
+//! the early-warning signal the router monitors.
+
+use crate::config::QualityClass;
+use crate::SimTime;
+use std::collections::VecDeque;
+
+/// One queued inference request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub quality: QualityClass,
+    /// Arrival time at the queue (for waiting-time accounting).
+    pub enqueued_at: SimTime,
+}
+
+/// Three priority lanes, one per quality class.
+#[derive(Debug, Clone, Default)]
+pub struct MultiQueue {
+    lanes: [VecDeque<QueuedRequest>; 3],
+}
+
+impl MultiQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue into the lane matching the request's quality class.
+    pub fn push(&mut self, req: QueuedRequest) {
+        self.lanes[req.quality.priority()].push_back(req);
+    }
+
+    /// Dispatch the next request: highest-priority non-empty lane, FIFO
+    /// within the lane.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.lanes.iter_mut().find_map(|l| l.pop_front())
+    }
+
+    /// Total waiting requests across lanes.
+    pub fn len(&self) -> usize {
+        self.lanes.iter().map(|l| l.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lanes.iter().all(|l| l.is_empty())
+    }
+
+    /// Depth of one lane.
+    pub fn lane_depth(&self, q: QualityClass) -> usize {
+        self.lanes[q.priority()].len()
+    }
+
+    /// Oldest enqueue time across lanes (head-of-line age signal).
+    pub fn oldest(&self) -> Option<SimTime> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.front().map(|r| r.enqueued_at))
+            .fold(None, |acc, t| {
+                Some(match acc {
+                    None => t,
+                    Some(a) => a.min(t),
+                })
+            })
+    }
+
+    /// Drain up to `n` requests from the *lowest*-priority tail — used by
+    /// bulk offloading: deflect the traffic that can best tolerate the
+    /// upstream RTT.
+    pub fn drain_low_priority(&mut self, n: usize) -> Vec<QueuedRequest> {
+        let mut out = Vec::with_capacity(n);
+        for lane in self.lanes.iter_mut().rev() {
+            while out.len() < n {
+                match lane.pop_back() {
+                    Some(r) => out.push(r),
+                    None => break,
+                }
+            }
+            if out.len() >= n {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, q: QualityClass, t: SimTime) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            quality: q,
+            enqueued_at: t,
+        }
+    }
+
+    #[test]
+    fn strict_priority_dispatch() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::Precise, 0.0));
+        mq.push(req(2, QualityClass::Balanced, 0.1));
+        mq.push(req(3, QualityClass::LowLatency, 0.2));
+        assert_eq!(mq.pop().unwrap().id, 3); // LowLatency first
+        assert_eq!(mq.pop().unwrap().id, 2);
+        assert_eq!(mq.pop().unwrap().id, 1);
+        assert!(mq.pop().is_none());
+    }
+
+    #[test]
+    fn fifo_within_lane() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::Balanced, 0.0));
+        mq.push(req(2, QualityClass::Balanced, 0.1));
+        assert_eq!(mq.pop().unwrap().id, 1);
+        assert_eq!(mq.pop().unwrap().id, 2);
+    }
+
+    #[test]
+    fn depths_and_len() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::LowLatency, 0.0));
+        mq.push(req(2, QualityClass::Balanced, 0.0));
+        mq.push(req(3, QualityClass::Balanced, 0.0));
+        assert_eq!(mq.len(), 3);
+        assert_eq!(mq.lane_depth(QualityClass::Balanced), 2);
+        assert_eq!(mq.lane_depth(QualityClass::Precise), 0);
+        assert!(!mq.is_empty());
+    }
+
+    #[test]
+    fn oldest_across_lanes() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::Balanced, 5.0));
+        mq.push(req(2, QualityClass::LowLatency, 7.0));
+        assert_eq!(mq.oldest(), Some(5.0));
+    }
+
+    #[test]
+    fn drain_low_priority_takes_tail_of_lowest_lane() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::LowLatency, 0.0));
+        mq.push(req(2, QualityClass::Balanced, 0.0));
+        mq.push(req(3, QualityClass::Balanced, 0.1));
+        mq.push(req(4, QualityClass::Precise, 0.0));
+        let drained = mq.drain_low_priority(2);
+        let ids: Vec<u64> = drained.iter().map(|r| r.id).collect();
+        // Precise tail first, then Balanced tail.
+        assert_eq!(ids, vec![4, 3]);
+        assert_eq!(mq.len(), 2);
+        // LowLatency lane untouched.
+        assert_eq!(mq.lane_depth(QualityClass::LowLatency), 1);
+    }
+
+    #[test]
+    fn drain_more_than_available() {
+        let mut mq = MultiQueue::new();
+        mq.push(req(1, QualityClass::Balanced, 0.0));
+        let drained = mq.drain_low_priority(5);
+        assert_eq!(drained.len(), 1);
+        assert!(mq.is_empty());
+    }
+}

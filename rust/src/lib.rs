@@ -1,0 +1,43 @@
+//! # LA-IMR — Latency-Aware, Predictive In-Memory Routing & Proactive Autoscaling
+//!
+//! Production-quality reproduction of *LA-IMR* (Seo, Nguyen, Elmroth, 2025):
+//! an SLO-aware control layer for hybrid cloud-edge inference that couples a
+//! closed-form latency model (processing + network + M/M/c queueing) with an
+//! event-driven multi-queue router, selective edge→cloud offloading, and a
+//! proactive custom-metric autoscaler (PM-HPA).
+//!
+//! Architecture (three layers, Python never on the request path):
+//! * **L3 (this crate)** — coordinator: router (Algorithm 1), quality lanes,
+//!   telemetry, autoscalers, simulated Kubernetes cluster, discrete-event
+//!   simulator, capacity planner, PJRT runtime, CLI.
+//! * **L2 (python/compile/model.py)** — two mini-detector JAX graphs,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! * **L1 (python/compile/kernels/)** — Pallas tiled-matmul kernel with a
+//!   fused bias+SiLU epilogue; all model FLOPs flow through it.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a module + bench target.
+
+pub mod autoscaler;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod latency_model;
+pub mod planner;
+pub mod queueing;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod telemetry;
+pub mod util;
+pub mod workload;
+
+/// Simulation / wall time in seconds since scenario start.
+pub type SimTime = f64;
+
+/// Identifier for a model (index into the model catalogue).
+pub type ModelId = usize;
+
+/// Identifier for an instance class / tier (index into the instance list).
+pub type InstanceId = usize;

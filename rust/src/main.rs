@@ -1,0 +1,283 @@
+//! `laimr` — the LA-IMR leader binary.
+//!
+//! Subcommands:
+//!   serve      — serving loop: robots → router → real PJRT inference
+//!   simulate   — one DES scenario, printing the latency summary
+//!   calibrate  — fit (α, β, γ) from simulated measurements (Fig 2)
+//!   plan       — capacity planning (Eq. 23) for a traffic mix
+//!   repro      — regenerate a paper table/figure (or `all`)
+
+use la_imr::config::{Config, QualityClass, ScenarioConfig};
+use la_imr::planner::{plan_capacity, TaskClass};
+use la_imr::report;
+use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::util::cli::Args;
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+laimr — LA-IMR: latency-aware predictive in-memory routing & proactive autoscaling
+
+USAGE: laimr [--config cfg.json] [--artifacts DIR] <command> [flags]
+
+COMMANDS:
+  serve      --robots N --fps F --duration S     serve real PJRT inference
+  simulate   --lambda L --policy P --bursty B    run one DES scenario
+             --duration S --replicas N --seed K  (P: la-imr|baseline|static)
+             [--mtbf S]                          pod-crash fault injection
+  calibrate                                      fit α,β,γ (Fig 2)
+  plan       --lambda L [--slo S]                capacity planning (Eq. 23)
+  repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|all>
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let cfg = Config::load(args.get("config").map(Path::new))?;
+    let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
+
+    let Some(cmd) = args.positional().first().map(|s| s.as_str()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    match cmd {
+        "serve" => serve(
+            &cfg,
+            &artifacts,
+            args.get_usize("robots", 5).map_err(anyhow::Error::msg)?,
+            args.get_f64("fps", 0.5).map_err(anyhow::Error::msg)?,
+            args.get_f64("duration", 20.0).map_err(anyhow::Error::msg)?,
+        ),
+        "simulate" => {
+            let lambda = args.get_f64("lambda", 4.0).map_err(anyhow::Error::msg)?;
+            let policy = match args.get_str("policy", "la-imr") {
+                "la-imr" => Policy::LaImr,
+                "baseline" => Policy::Baseline,
+                "static" => Policy::Static,
+                other => anyhow::bail!("unknown policy {other}"),
+            };
+            let bursty = args.get_bool("bursty", true).map_err(anyhow::Error::msg)?;
+            let duration = args.get_f64("duration", 300.0).map_err(anyhow::Error::msg)?;
+            let replicas = args.get_u32("replicas", 2).map_err(anyhow::Error::msg)?;
+            let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+            let mtbf = args.get_f64("mtbf", 0.0).map_err(anyhow::Error::msg)?;
+            let mut scenario = if bursty {
+                ScenarioConfig::bursty(lambda, seed)
+            } else {
+                ScenarioConfig::poisson(lambda, seed)
+            }
+            .with_duration(duration, (duration / 10.0).min(30.0))
+            .with_replicas(replicas);
+            if mtbf > 0.0 {
+                scenario = scenario.with_faults(mtbf);
+            }
+            let r = Simulation::new(&cfg, &scenario, policy, Architecture::Microservice).run();
+            let s = r.summary();
+            println!("scenario   : {} ({})", r.scenario_name, r.policy_name);
+            println!(
+                "requests   : {} completed / {} generated ({:.1}% done)",
+                s.count,
+                r.generated,
+                100.0 * r.completion_rate()
+            );
+            println!(
+                "latency    : mean {:.3}s  P50 {:.3}s  P95 {:.3}s  P99 {:.3}s  max {:.3}s",
+                s.mean, s.p50, s.p95, s.p99, s.max
+            );
+            println!(
+                "scaling    : {} out / {} in, peak {} replicas (mean {:.2})",
+                r.scale_outs, r.scale_ins, r.peak_replicas, r.mean_replicas
+            );
+            println!("offloaded  : {:.1}%", 100.0 * r.offload_share());
+            if r.crashes > 0 {
+                println!("faults     : {} pod crashes injected", r.crashes);
+            }
+            Ok(())
+        }
+        "calibrate" => {
+            println!("{}", report::fig2(&cfg));
+            Ok(())
+        }
+        "plan" => {
+            let lambda = args.get_f64("lambda", 4.0).map_err(anyhow::Error::msg)?;
+            let (m, _) = cfg.model_by_name("yolov5m").expect("yolov5m in catalogue");
+            let tau = match args.get("slo") {
+                Some(v) => v.parse::<f64>().map_err(|_| anyhow::anyhow!("--slo: bad number"))?,
+                None => cfg.slo_budget(m),
+            };
+            let classes = vec![TaskClass {
+                name: "balanced".into(),
+                quality: QualityClass::Balanced,
+                lambda,
+                slo: Some(tau),
+                min_accuracy: 0.5,
+            }];
+            match plan_capacity(&cfg, &classes, cfg.slo.beta_cost) {
+                None => println!("no feasible plan for λ={lambda} τ={tau:.2}s"),
+                Some(plan) => {
+                    println!(
+                        "capacity plan for λ={lambda} req/s, τ={tau:.2}s, β={}",
+                        cfg.slo.beta_cost
+                    );
+                    for (mi, row) in plan.replicas.iter().enumerate() {
+                        for (ii, &n) in row.iter().enumerate() {
+                            if n > 0 {
+                                println!(
+                                    "  {} on {} : N={}",
+                                    cfg.models[mi].name, cfg.instances[ii].name, n
+                                );
+                            }
+                        }
+                    }
+                    println!(
+                        "  worst latency {:.3}s, cost {:.1}, objective {:.2}",
+                        plan.worst_latency, plan.cost, plan.objective
+                    );
+                }
+            }
+            Ok(())
+        }
+        "repro" => {
+            let id = args
+                .positional()
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("all");
+            let art = Some(artifacts.as_path());
+            let print_one = |id: &str| -> anyhow::Result<()> {
+                match id {
+                    "table2" => println!("{}", report::table2(&cfg, art)),
+                    "table3" => println!("{}", report::table3(&cfg)),
+                    "table4" => println!("{}", report::table4(&cfg)),
+                    "fig2" => println!("{}", report::fig2(&cfg)),
+                    "fig3" => println!("{}", report::fig3(&cfg)),
+                    "fig4" => println!("{}", report::fig4(&cfg)),
+                    "fig7" => println!("{}", report::fig7(&cfg)),
+                    "fig8" => println!("{}", report::fig8(&cfg)),
+                    "table6" => println!("{}", report::table6(&cfg)),
+                    other => anyhow::bail!("unknown experiment id {other}"),
+                }
+                Ok(())
+            };
+            if id == "all" {
+                for id in [
+                    "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
+                    "table6",
+                ] {
+                    print_one(id)?;
+                    println!();
+                }
+            } else {
+                print_one(id)?;
+            }
+            Ok(())
+        }
+        other => {
+            print!("{USAGE}");
+            anyhow::bail!("unknown command {other}")
+        }
+    }
+}
+
+/// Real serving loop. PJRT executables are not `Send` (the client holds
+/// `Rc`s), so the leader runs a single-threaded frame scheduler: each
+/// robot has a next-emission deadline; the loop sleeps to the earliest
+/// one, routes the frame, and executes the chosen model inline. Python is
+/// nowhere on this path.
+fn serve(
+    cfg: &Config,
+    artifacts: &Path,
+    robots: usize,
+    fps: f64,
+    duration: f64,
+) -> anyhow::Result<()> {
+    use la_imr::coordinator::{ControlState, Router};
+    use la_imr::runtime::{postprocess, Runtime};
+    use la_imr::telemetry::LatencyHistogram;
+    use la_imr::workload::RobotFleet;
+
+    let rt = Runtime::load(artifacts)?;
+    println!(
+        "PJRT platform: {}; models: {:?}",
+        rt.platform(),
+        rt.model_names()
+    );
+    let fleet = RobotFleet::uniform(robots, fps, QualityClass::Balanced);
+    let mut router = Router::new(cfg);
+    let state = ControlState::new();
+    let mut hist = LatencyHistogram::for_latency();
+    let t0 = std::time::Instant::now();
+
+    // Per-robot next emission time, staggered to avoid phase alignment.
+    let period = 1.0 / fps.max(1e-3);
+    let mut next_at: Vec<f64> = (0..robots)
+        .map(|k| period * k as f64 / robots.max(1) as f64)
+        .collect();
+    let mut frame_idx = vec![0u64; robots];
+    let mut served = 0usize;
+
+    loop {
+        let (robot, &at) = match next_at
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        {
+            Some(x) => x,
+            None => break,
+        };
+        if at >= duration {
+            break;
+        }
+        let now = t0.elapsed().as_secs_f64();
+        if at > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(at - now));
+        }
+        next_at[robot] += period;
+
+        let quality = fleet.robots[robot].quality;
+        let (model_id, _) = cfg.model_for_quality(quality).expect("lane");
+        let now = t0.elapsed().as_secs_f64();
+        let decision = router.route(model_id, now, &state);
+        // Resolve the artifact actually served at the target; fall back to
+        // the request's own model when the target has no compiled artifact.
+        let art_name = cfg.models[decision.target.model]
+            .artifact
+            .clone()
+            .or_else(|| cfg.models[model_id].artifact.clone());
+        if let Some(compiled) = art_name.as_deref().and_then(|a| rt.model(a)) {
+            let hw = compiled.entry.input_shape[1];
+            let img = fleet.frame(robot, frame_idx[robot], hw);
+            let t_start = std::time::Instant::now();
+            if let Ok(out) = compiled.infer(&img) {
+                let dets = postprocess(&out, rt.manifest.num_classes, 0.6);
+                let lat = t_start.elapsed().as_secs_f64();
+                hist.record(lat);
+                served += 1;
+                if served % 10 == 1 {
+                    println!(
+                        "robot{robot:02} frame{:04}: {} detections, {:.1} ms ({})",
+                        frame_idx[robot],
+                        dets.len(),
+                        lat * 1e3,
+                        if decision.offloaded { "offloaded" } else { "local" }
+                    );
+                }
+            }
+        }
+        frame_idx[robot] += 1;
+    }
+    println!(
+        "served {served} frames: mean {:.1} ms  P95 {:.1} ms  P99 {:.1} ms  (throughput {:.1} req/s)",
+        hist.mean() * 1e3,
+        hist.p95() * 1e3,
+        hist.p99() * 1e3,
+        served as f64 / duration
+    );
+    Ok(())
+}

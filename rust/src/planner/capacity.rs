@@ -1,0 +1,258 @@
+//! Capacity planning & routing with fixed traffic (Eq. 23–26):
+//!     min_{N, x}  max_t L_t^{(N)}  +  β · Σ_{m,i} c_{m,i} · N_{m,i}
+//! s.t. one-assignment, capacity, SLO, stability, N ∈ Z≥1.
+//!
+//! Bounded exact search: for each candidate routing (from the Eq. 18
+//! enumerator's candidate sets) the optimal N per used pool decomposes —
+//! g(N) is monotone decreasing in N, so the cost-optimal N for a pool is
+//! the smallest stable N meeting the SLO, and the latency/cost frontier is
+//! swept by growing N while the marginal max-latency gain beats β·c.
+
+use super::routing::{Placement, TaskClass};
+use crate::config::Config;
+use crate::latency_model::LatencyModel;
+
+/// Result of capacity planning.
+#[derive(Debug, Clone)]
+pub struct CapacityPlan {
+    /// replicas[m][i] chosen.
+    pub replicas: Vec<Vec<u32>>,
+    pub placements: Vec<Placement>,
+    /// max_t latency at the optimum.
+    pub worst_latency: f64,
+    /// β·Σ c·N at the optimum.
+    pub cost: f64,
+    /// Objective value (latency + cost).
+    pub objective: f64,
+}
+
+/// Solve Eq. 23 for the given task classes.
+///
+/// `beta` is the cost–latency trade-off (paper: β = 2.5).
+pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<CapacityPlan> {
+    if classes.is_empty() {
+        return Some(CapacityPlan {
+            replicas: vec![vec![0; cfg.instances.len()]; cfg.models.len()],
+            placements: Vec::new(),
+            worst_latency: 0.0,
+            cost: 0.0,
+            objective: 0.0,
+        });
+    }
+
+    // Candidate pools per class: accuracy-feasible (m, i).
+    let mut candidates: Vec<Vec<(usize, usize)>> = Vec::new();
+    for class in classes {
+        let mut cands = Vec::new();
+        for (m, model) in cfg.models.iter().enumerate() {
+            if model.accuracy + 1e-12 < class.min_accuracy {
+                continue;
+            }
+            for i in 0..cfg.instances.len() {
+                cands.push((m, i));
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        candidates.push(cands);
+    }
+
+    let mut best: Option<CapacityPlan> = None;
+    let mut idx = vec![0usize; classes.len()];
+    'outer: loop {
+        // Aggregate λ per pool under this routing.
+        let mut lambda_mi = vec![vec![0.0; cfg.instances.len()]; cfg.models.len()];
+        for (c, &k) in idx.iter().enumerate() {
+            let (m, i) = candidates[c][k];
+            lambda_mi[m][i] += classes[c].lambda;
+        }
+
+        // Per-pool: sweep N from the minimal stable+SLO count upward while
+        // the objective improves (g monotone ⇒ the sweep is the frontier).
+        let mut replicas = vec![vec![0u32; cfg.instances.len()]; cfg.models.len()];
+        let mut feasible = true;
+        let mut cost = 0.0;
+        'pools: for m in 0..cfg.models.len() {
+            for i in 0..cfg.instances.len() {
+                let lam = lambda_mi[m][i];
+                if lam <= 0.0 {
+                    continue;
+                }
+                let lm = LatencyModel::from_config(cfg, m, i);
+                let n_max = cfg.instances[i].n_max;
+                // Tightest SLO among classes routed here.
+                let tau = idx
+                    .iter()
+                    .enumerate()
+                    .filter(|(c, &k)| candidates[*c][k] == (m, i))
+                    .filter_map(|(c, _)| classes[c].slo)
+                    .fold(f64::INFINITY, f64::min);
+                // Minimal N: stable + SLO.
+                let mut n_opt = None;
+                for n in 1..=n_max {
+                    let g = lm.g_n(n, lam);
+                    if g.is_finite() && g <= tau {
+                        n_opt = Some(n);
+                        break;
+                    }
+                }
+                let Some(mut n) = n_opt else {
+                    feasible = false;
+                    break 'pools;
+                };
+                // Grow N while the latency drop beats the marginal cost.
+                while n < n_max {
+                    let gain = lm.g_n(n, lam) - lm.g_n(n + 1, lam);
+                    if gain > beta * cfg.instances[i].cost {
+                        n += 1;
+                    } else {
+                        break;
+                    }
+                }
+                replicas[m][i] = n;
+                cost += beta * cfg.instances[i].cost * n as f64;
+            }
+        }
+
+        if feasible {
+            // Capacity check (Eq. 20 analogue at the instance level).
+            for i in 0..cfg.instances.len() {
+                let demand: f64 = (0..cfg.models.len())
+                    .map(|m| lambda_mi[m][i] * cfg.models[m].r_cost)
+                    .sum();
+                if demand > cfg.instances[i].r_max + 1e-9 {
+                    feasible = false;
+                }
+            }
+        }
+
+        if feasible {
+            let mut worst = 0.0f64;
+            let mut placements = Vec::new();
+            for (c, &k) in idx.iter().enumerate() {
+                let (m, i) = candidates[c][k];
+                let lm = LatencyModel::from_config(cfg, m, i);
+                let g = lm.g_n(replicas[m][i], lambda_mi[m][i]);
+                worst = worst.max(g);
+                placements.push(Placement {
+                    class: c,
+                    model: m,
+                    instance: i,
+                    latency: g,
+                });
+            }
+            let objective = worst + cost;
+            if best
+                .as_ref()
+                .map(|b| objective < b.objective)
+                .unwrap_or(true)
+            {
+                best = Some(CapacityPlan {
+                    replicas,
+                    placements,
+                    worst_latency: worst,
+                    cost,
+                    objective,
+                });
+            }
+        }
+
+        // Odometer.
+        let mut pos = 0;
+        loop {
+            if pos == classes.len() {
+                break 'outer;
+            }
+            idx[pos] += 1;
+            if idx[pos] < candidates[pos].len() {
+                break;
+            }
+            idx[pos] = 0;
+            pos += 1;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::QualityClass;
+
+    fn class(lambda: f64, slo: f64, acc: f64) -> TaskClass {
+        TaskClass {
+            name: "c".into(),
+            quality: QualityClass::Balanced,
+            lambda,
+            slo: Some(slo),
+            min_accuracy: acc,
+        }
+    }
+
+    #[test]
+    fn plans_minimal_stable_pool() {
+        let cfg = Config::default();
+        let plan = plan_capacity(&cfg, &[class(2.0, 1.8, 0.5)], 2.5).unwrap();
+        // The chosen pool must be stable at λ=2 and meet the SLO.
+        assert!(plan.worst_latency <= 1.8);
+        assert_eq!(plan.placements.len(), 1);
+        let p = plan.placements[0];
+        assert!(cfg.models[p.model].accuracy >= 0.5);
+        let lm = LatencyModel::from_config(&cfg, p.model, p.instance);
+        let n = plan.replicas[p.model][p.instance];
+        assert!(n >= 1 && lm.is_stable(2.0, n), "unstable plan n={n}");
+    }
+
+    #[test]
+    fn replicas_grow_with_load() {
+        // The planner may absorb moderate load on a fast pool without new
+        // replicas; compare far-apart rates so growth is forced.
+        let cfg = Config::default();
+        let lo = plan_capacity(&cfg, &[class(1.0, 1.8, 0.5)], 2.5).unwrap();
+        let hi = plan_capacity(&cfg, &[class(14.0, 1.8, 0.5)], 2.5).unwrap();
+        let sum = |p: &CapacityPlan| p.replicas.iter().flatten().sum::<u32>();
+        assert!(sum(&hi) > sum(&lo), "hi={} lo={}", sum(&hi), sum(&lo));
+    }
+
+    #[test]
+    fn higher_beta_buys_fewer_replicas() {
+        let cfg = Config::default();
+        let cheap = plan_capacity(&cfg, &[class(3.0, 3.0, 0.5)], 0.01).unwrap();
+        let pricey = plan_capacity(&cfg, &[class(3.0, 3.0, 0.5)], 50.0).unwrap();
+        let sum = |p: &CapacityPlan| p.replicas.iter().flatten().sum::<u32>();
+        assert!(
+            sum(&cheap) >= sum(&pricey),
+            "cheap={} pricey={}",
+            sum(&cheap),
+            sum(&pricey)
+        );
+        // With near-free replicas the worst latency must be at least as good.
+        assert!(cheap.worst_latency <= pricey.worst_latency + 1e-9);
+    }
+
+    #[test]
+    fn impossible_slo_returns_none() {
+        let cfg = Config::default();
+        assert!(plan_capacity(&cfg, &[class(50.0, 0.05, 0.5)], 2.5).is_none());
+    }
+
+    #[test]
+    fn empty_classes_zero_plan() {
+        let cfg = Config::default();
+        let plan = plan_capacity(&cfg, &[], 2.5).unwrap();
+        assert_eq!(plan.objective, 0.0);
+    }
+
+    #[test]
+    fn stability_constraint_eq25_holds() {
+        let cfg = Config::default();
+        let plan = plan_capacity(&cfg, &[class(4.0, 2.5, 0.5)], 2.5).unwrap();
+        for p in &plan.placements {
+            let lm = LatencyModel::from_config(&cfg, p.model, p.instance);
+            let n = plan.replicas[p.model][p.instance];
+            // λ < N·μ (Eq. 25).
+            assert!(lm.is_stable(4.0 * 0.999, n));
+        }
+    }
+}

@@ -1,0 +1,19 @@
+//! Optimisation stages of §III-H:
+//!
+//! * [`route_tasks`] — workload routing with fixed replica layout
+//!   (Eq. 18–22): assign task classes to (model, instance) minimising the
+//!   worst task latency under capacity, SLO, and stability constraints.
+//! * [`plan_capacity`] — capacity planning & routing with fixed traffic
+//!   (Eq. 23–26): jointly size replica pools and choose routing,
+//!   minimising max-latency + β·Σ cost·N.
+//!
+//! The search space is small in the paper's deployments (N ≤ 16, |I| ≤ 4,
+//! |M| ≤ 3), so bounded enumeration with Erlang-C feasibility pruning is
+//! exact — the closed-form g(N) is the pruning bound (§III-G: marginal
+//! benefit flattens once ρ ≲ 0.3).
+
+mod capacity;
+mod routing;
+
+pub use capacity::{plan_capacity, CapacityPlan};
+pub use routing::{route_tasks, RoutingProblem, TaskClass};

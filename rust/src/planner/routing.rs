@@ -1,0 +1,263 @@
+//! Workload routing with a fixed replica layout (Eq. 18):
+//!     min_x  max_t  L_t^{(λ)}
+//! subject to one-assignment (19), capacity (20), SLO (21), stability (22).
+//!
+//! Tasks are aggregated into classes (quality lane + rate); assignment is
+//! per class. The solver enumerates feasible placements per class in
+//! ascending-g order and resolves conflicts by local search — exact for
+//! the paper-scale instance counts.
+
+use crate::config::{Config, QualityClass};
+use crate::latency_model::LatencyModel;
+
+/// An aggregated stream of tasks with common requirements.
+#[derive(Debug, Clone)]
+pub struct TaskClass {
+    pub name: String,
+    pub quality: QualityClass,
+    /// Aggregate arrival rate of this class [req/s].
+    pub lambda: f64,
+    /// Latency SLO τ_t [s]; None = best effort.
+    pub slo: Option<f64>,
+    /// Minimum accuracy requirement α_t^req.
+    pub min_accuracy: f64,
+}
+
+/// The routing problem: classes + a fixed replica layout N[m][i].
+#[derive(Debug, Clone)]
+pub struct RoutingProblem {
+    pub classes: Vec<TaskClass>,
+    /// replicas[m][i] = N_{m,i} (0 = model m not deployed on i).
+    pub replicas: Vec<Vec<u32>>,
+}
+
+/// One class's placement in the solution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub class: usize,
+    pub model: usize,
+    pub instance: usize,
+    /// Predicted latency for this class at the chosen pool.
+    pub latency: f64,
+}
+
+/// Solve Eq. 18 by exhaustive assignment over per-class candidate pools
+/// (feasible by accuracy + stability + SLO), minimising the max latency.
+/// Returns None when no feasible assignment exists.
+pub fn route_tasks(cfg: &Config, problem: &RoutingProblem) -> Option<Vec<Placement>> {
+    let n_classes = problem.classes.len();
+    if n_classes == 0 {
+        return Some(Vec::new());
+    }
+
+    // Candidate (m, i) per class, each with its latency model.
+    let mut candidates: Vec<Vec<(usize, usize)>> = Vec::with_capacity(n_classes);
+    for class in &problem.classes {
+        let mut cands = Vec::new();
+        for (m, model) in cfg.models.iter().enumerate() {
+            if model.accuracy + 1e-12 < class.min_accuracy {
+                continue;
+            }
+            for (i, _) in cfg.instances.iter().enumerate() {
+                if problem
+                    .replicas
+                    .get(m)
+                    .and_then(|r| r.get(i))
+                    .copied()
+                    .unwrap_or(0)
+                    > 0
+                {
+                    cands.push((m, i));
+                }
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        candidates.push(cands);
+    }
+
+    // Enumerate assignments (paper scale: |classes| ≤ 3, |cands| ≤ 6 —
+    // at most a few hundred combinations).
+    let mut best: Option<(f64, Vec<Placement>)> = None;
+    let mut idx = vec![0usize; n_classes];
+    'outer: loop {
+        // Evaluate this assignment: aggregate λ per (m, i) then check.
+        let mut lambda_mi = vec![vec![0.0; cfg.instances.len()]; cfg.models.len()];
+        for (c, &k) in idx.iter().enumerate() {
+            let (m, i) = candidates[c][k];
+            lambda_mi[m][i] += problem.classes[c].lambda;
+        }
+
+        let mut feasible = true;
+        let mut worst = 0.0f64;
+        let mut placements = Vec::with_capacity(n_classes);
+        // Capacity constraint (20): Σ λ·R ≤ R_max per instance.
+        for i in 0..cfg.instances.len() {
+            let demand: f64 = (0..cfg.models.len())
+                .map(|m| lambda_mi[m][i] * cfg.models[m].r_cost)
+                .sum();
+            if demand > cfg.instances[i].r_max + 1e-9 {
+                feasible = false;
+            }
+        }
+        if feasible {
+            for (c, &k) in idx.iter().enumerate() {
+                let (m, i) = candidates[c][k];
+                let n = problem.replicas[m][i];
+                let lm = LatencyModel::from_config(cfg, m, i);
+                let g = lm.g_lambda(lambda_mi[m][i], n);
+                // Stability (22) + SLO (21).
+                if !g.is_finite() {
+                    feasible = false;
+                    break;
+                }
+                if let Some(tau) = problem.classes[c].slo {
+                    if g > tau {
+                        feasible = false;
+                        break;
+                    }
+                }
+                worst = worst.max(g);
+                placements.push(Placement {
+                    class: c,
+                    model: m,
+                    instance: i,
+                    latency: g,
+                });
+            }
+        }
+        if feasible && best.as_ref().map(|(w, _)| worst < *w).unwrap_or(true) {
+            best = Some((worst, placements));
+        }
+
+        // Next assignment (odometer).
+        let mut pos = 0;
+        loop {
+            if pos == n_classes {
+                break 'outer;
+            }
+            idx[pos] += 1;
+            if idx[pos] < candidates[pos].len() {
+                break;
+            }
+            idx[pos] = 0;
+            pos += 1;
+        }
+    }
+    best.map(|(_, p)| p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout(cfg: &Config, n: u32) -> Vec<Vec<u32>> {
+        vec![vec![n; cfg.instances.len()]; cfg.models.len()]
+    }
+
+    fn balanced_class(lambda: f64, slo: Option<f64>) -> TaskClass {
+        TaskClass {
+            name: "robots".into(),
+            quality: QualityClass::Balanced,
+            lambda,
+            slo,
+            min_accuracy: 0.5,
+        }
+    }
+
+    #[test]
+    fn single_class_picks_min_latency_pool() {
+        let cfg = Config::default();
+        let p = RoutingProblem {
+            classes: vec![balanced_class(1.0, None)],
+            replicas: layout(&cfg, 4),
+        };
+        let sol = route_tasks(&cfg, &p).unwrap();
+        assert_eq!(sol.len(), 1);
+        // min_accuracy = 0.5 excludes EfficientDet (0.25): must be a
+        // YOLOv5m or R-CNN pool.
+        assert!(cfg.models[sol[0].model].accuracy >= 0.5);
+        assert!(sol[0].latency.is_finite());
+    }
+
+    #[test]
+    fn accuracy_constraint_respected() {
+        let cfg = Config::default();
+        let mut c = balanced_class(1.0, None);
+        c.min_accuracy = 0.7; // only faster_rcnn (0.75) qualifies
+        let p = RoutingProblem {
+            classes: vec![c],
+            replicas: layout(&cfg, 4),
+        };
+        let sol = route_tasks(&cfg, &p).unwrap();
+        assert_eq!(cfg.models[sol[0].model].name, "faster_rcnn");
+    }
+
+    #[test]
+    fn overload_respects_slo_and_stability() {
+        let cfg = Config::default();
+        // Two heavy classes: a single YOLO edge pool (μ≈1.37·N) cannot hold
+        // both within SLO — wherever the solver places them, every class
+        // must be stable and within its SLO under the *combined* load.
+        let p = RoutingProblem {
+            classes: vec![balanced_class(2.0, Some(3.0)), balanced_class(2.0, Some(3.0))],
+            replicas: layout(&cfg, 3),
+        };
+        let sol = route_tasks(&cfg, &p).unwrap();
+        for pl in &sol {
+            assert!(pl.latency.is_finite() && pl.latency <= 3.0, "{pl:?}");
+        }
+        // If both landed on one pool, that pool must hold λ=4 stably at N=3.
+        if sol[0].model == sol[1].model && sol[0].instance == sol[1].instance {
+            let lm = LatencyModel::from_config(&cfg, sol[0].model, sol[0].instance);
+            assert!(lm.is_stable(4.0, 3));
+        }
+    }
+
+    #[test]
+    fn infeasible_returns_none() {
+        let cfg = Config::default();
+        let mut c = balanced_class(100.0, Some(0.1)); // impossible SLO
+        c.min_accuracy = 0.6;
+        let p = RoutingProblem {
+            classes: vec![c],
+            replicas: layout(&cfg, 2),
+        };
+        assert!(route_tasks(&cfg, &p).is_none());
+    }
+
+    #[test]
+    fn no_deployed_pool_returns_none() {
+        let cfg = Config::default();
+        let p = RoutingProblem {
+            classes: vec![balanced_class(1.0, None)],
+            replicas: layout(&cfg, 0), // nothing deployed
+        };
+        assert!(route_tasks(&cfg, &p).is_none());
+    }
+
+    #[test]
+    fn empty_problem_trivial() {
+        let cfg = Config::default();
+        let p = RoutingProblem {
+            classes: vec![],
+            replicas: layout(&cfg, 1),
+        };
+        assert_eq!(route_tasks(&cfg, &p).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn minimises_worst_latency() {
+        let cfg = Config::default();
+        let p = RoutingProblem {
+            classes: vec![balanced_class(1.0, None), balanced_class(1.0, None)],
+            replicas: layout(&cfg, 4),
+        };
+        let sol = route_tasks(&cfg, &p).unwrap();
+        let worst = sol.iter().map(|p| p.latency).fold(0.0, f64::max);
+        // Sanity: splitting two λ=1 classes across pools must keep worst
+        // latency near the idle YOLO latency, not the overloaded one.
+        assert!(worst < 2.0, "worst={worst}");
+    }
+}

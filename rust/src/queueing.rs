@@ -1,0 +1,204 @@
+//! M/M/c queueing theory (§III-D): Erlang-C probability of waiting and the
+//! expected queueing delay for a multi-replica service pool.
+//!
+//! The Erlang-C formula (Eq. 11) is evaluated with the numerically-stable
+//! Erlang-B recurrence B(a, c) = a·B(a,c−1) / (c + a·B(a,c−1)) and the
+//! identity C = B / (1 − ρ(1 − B)) — no factorials, no overflow, exact for
+//! hundreds of servers.
+
+/// Offered load a = λ/μ in Erlangs.
+#[inline]
+pub fn offered_load(lambda: f64, mu: f64) -> f64 {
+    lambda / mu
+}
+
+/// Traffic intensity ρ = λ / (c·μ) (Eq. after 10).
+#[inline]
+pub fn traffic_intensity(lambda: f64, mu: f64, c: u32) -> f64 {
+    lambda / (c as f64 * mu)
+}
+
+/// Erlang-B blocking probability via the stable recurrence.
+pub fn erlang_b(a: f64, c: u32) -> f64 {
+    debug_assert!(a >= 0.0);
+    let mut b = 1.0;
+    for k in 1..=c {
+        b = a * b / (k as f64 + a * b);
+    }
+    b
+}
+
+/// Erlang-C probability that an arriving task must wait (Eq. 11).
+///
+/// `a` = offered load λ/μ, `c` = servers. Requires ρ = a/c < 1 for a
+/// meaningful steady state; returns 1.0 when ρ >= 1 (every arrival waits —
+/// the saturated-system limit).
+pub fn erlang_c(a: f64, c: u32) -> f64 {
+    if c == 0 {
+        return 1.0;
+    }
+    let rho = a / c as f64;
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    let b = erlang_b(a, c);
+    b / (1.0 - rho * (1.0 - b))
+}
+
+/// Expected M/M/c queueing (waiting) delay W_q (Eq. 12):
+/// W_q = C(a, c) / (c·μ − λ). Returns `f64::INFINITY` when unstable.
+pub fn mmc_wait(lambda: f64, mu: f64, c: u32) -> f64 {
+    if lambda <= 0.0 {
+        return 0.0;
+    }
+    if c == 0 || mu <= 0.0 {
+        return f64::INFINITY;
+    }
+    let capacity = c as f64 * mu;
+    if lambda >= capacity {
+        return f64::INFINITY;
+    }
+    erlang_c(lambda / mu, c) / (capacity - lambda)
+}
+
+/// Is the pool stable (ρ < 1)? (Stability constraint Eq. 22 / 25.)
+#[inline]
+pub fn is_stable(lambda: f64, mu: f64, c: u32) -> bool {
+    c > 0 && mu > 0.0 && lambda < c as f64 * mu
+}
+
+/// Smallest replica count c such that the pool is stable AND the expected
+/// wait is ≤ `max_wait`. Returns `None` if no c ≤ `c_max` qualifies.
+pub fn min_servers_for_wait(lambda: f64, mu: f64, max_wait: f64, c_max: u32) -> Option<u32> {
+    for c in 1..=c_max {
+        if is_stable(lambda, mu, c) && mmc_wait(lambda, mu, c) <= max_wait {
+            return Some(c);
+        }
+    }
+    None
+}
+
+/// Instance utilisation U_i (Eq. 6): (Σ λ_m'·R_m' + B_i) / R_i^max.
+#[inline]
+pub fn utilization(demand: f64, background: f64, r_max: f64) -> f64 {
+    debug_assert!(r_max > 0.0);
+    (demand + background) / r_max
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Direct (factorial) Erlang-C for cross-checking small cases.
+    fn erlang_c_direct(a: f64, c: u32) -> f64 {
+        let rho = a / c as f64;
+        if rho >= 1.0 {
+            return 1.0;
+        }
+        let mut fact = 1.0;
+        let mut sum = 0.0;
+        for k in 0..c {
+            if k > 0 {
+                fact *= k as f64;
+            }
+            sum += a.powi(k as i32) / fact;
+        }
+        let cfact = fact * c as f64;
+        let top = a.powi(c as i32) / (cfact * (1.0 - rho));
+        top / (sum + top)
+    }
+
+    #[test]
+    fn erlang_c_matches_direct_formula() {
+        for &(a, c) in &[(0.5, 1), (1.5, 2), (3.0, 4), (7.5, 10), (0.9, 1)] {
+            let stable = erlang_c(a, c);
+            let direct = erlang_c_direct(a, c);
+            assert!(
+                (stable - direct).abs() < 1e-12,
+                "a={a} c={c}: {stable} vs {direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_server_reduces_to_mm1() {
+        // M/M/1: P(wait) = ρ; W_q = ρ / (μ − λ).
+        let (lambda, mu) = (0.6, 1.0);
+        assert!((erlang_c(lambda / mu, 1) - 0.6).abs() < 1e-12);
+        let wq = mmc_wait(lambda, mu, 1);
+        assert!((wq - 0.6 / 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unstable_pool_infinite_wait() {
+        assert_eq!(mmc_wait(2.0, 1.0, 1), f64::INFINITY);
+        assert_eq!(mmc_wait(2.0, 1.0, 2), f64::INFINITY); // boundary ρ=1
+        assert!(!is_stable(2.0, 1.0, 2));
+        assert!(is_stable(1.9, 1.0, 2));
+    }
+
+    #[test]
+    fn wait_decreases_with_servers() {
+        let (lambda, mu) = (3.0, 1.37); // YOLOv5m-ish: μ = S/L = 1/0.73
+        let mut prev = f64::INFINITY;
+        for c in 3..10 {
+            let w = mmc_wait(lambda, mu, c);
+            assert!(w < prev, "c={c}: {w} !< {prev}");
+            prev = w;
+        }
+    }
+
+    #[test]
+    fn marginal_benefit_flattens_at_low_rho() {
+        // §III-G: gains are largest near instability, flat once ρ ≲ 0.3.
+        let (lambda, mu) = (4.0, 1.0);
+        let near = mmc_wait(lambda, mu, 5) - mmc_wait(lambda, mu, 6);
+        let far = mmc_wait(lambda, mu, 14) - mmc_wait(lambda, mu, 15);
+        assert!(near > 100.0 * far, "near={near} far={far}");
+    }
+
+    #[test]
+    fn erlang_c_probability_bounds() {
+        for c in 1..20u32 {
+            for k in 1..10 {
+                let a = c as f64 * k as f64 / 10.0 * 0.99;
+                let p = erlang_c(a, c);
+                assert!((0.0..=1.0).contains(&p), "a={a} c={c} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_pool_no_overflow() {
+        // Factorial form would overflow long before c = 500.
+        let p = erlang_c(400.0, 500);
+        assert!(p.is_finite() && (0.0..=1.0).contains(&p));
+    }
+
+    #[test]
+    fn min_servers_matches_stability() {
+        let (lambda, mu) = (4.0, 1.37);
+        let c = min_servers_for_wait(lambda, mu, 0.5, 32).unwrap();
+        assert!(is_stable(lambda, mu, c));
+        assert!(mmc_wait(lambda, mu, c) <= 0.5);
+        if c > 1 {
+            assert!(!(is_stable(lambda, mu, c - 1) && mmc_wait(lambda, mu, c - 1) <= 0.5));
+        }
+    }
+
+    #[test]
+    fn min_servers_none_when_capped() {
+        assert_eq!(min_servers_for_wait(100.0, 1.0, 0.01, 4), None);
+    }
+
+    #[test]
+    fn utilization_eq6() {
+        // Eq. 6 with λR = 2.0, B = 0.5, R_max = 3.0.
+        assert!((utilization(2.0, 0.5, 3.0) - (2.5 / 3.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_arrivals_zero_wait() {
+        assert_eq!(mmc_wait(0.0, 1.0, 1), 0.0);
+    }
+}

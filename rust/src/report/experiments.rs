@@ -1,0 +1,523 @@
+//! The experiment implementations behind `laimr repro`.
+
+use crate::config::{Config, ScenarioConfig};
+use crate::latency_model::{fit_anchored, paper_table4_samples, CalibrationSample};
+use crate::sim::{Architecture, Policy, Simulation};
+use crate::telemetry::{box_stats, Summary};
+
+use super::render_table;
+
+/// Shorter-than-paper durations keep `repro all` under a minute while the
+/// percentile estimates stay tight; benches/EXPERIMENTS.md use the same.
+pub const RUN_DURATION: f64 = 300.0;
+pub const RUN_WARMUP: f64 = 30.0;
+/// Seeds per (λ, policy) cell for mean ± SD (Table VI shape).
+pub const TRIALS: &[u64] = &[101, 102, 103, 104, 105];
+
+/// One simulated latency series for (λ, policy, N0, arch, seed).
+pub fn run_cell(
+    cfg: &Config,
+    lambda: f64,
+    policy: Policy,
+    arch: Architecture,
+    initial_replicas: u32,
+    bursty: bool,
+    seed: u64,
+    duration: f64,
+    warmup: f64,
+) -> crate::sim::SimResult {
+    let scenario = if bursty {
+        ScenarioConfig::bursty(lambda, seed)
+    } else {
+        ScenarioConfig::poisson(lambda, seed)
+    }
+    .with_duration(duration, warmup)
+    .with_replicas(initial_replicas);
+    Simulation::new(cfg, &scenario, policy, arch).run()
+}
+
+// ---------------------------------------------------------------- table 2
+
+/// Table II: model profiles. `measured` adds live PJRT wall-clock when the
+/// artifacts are available (None → config values only).
+pub fn table2(cfg: &Config, artifacts: Option<&std::path::Path>) -> String {
+    let mut rows = Vec::new();
+    let runtime = artifacts.and_then(|p| crate::runtime::Runtime::load(p).ok());
+    for m in &cfg.models {
+        let measured = runtime
+            .as_ref()
+            .and_then(|rt| {
+                let model = rt.model(m.artifact.as_deref()?)?;
+                let hw = model.entry.input_shape[1];
+                let fleet = crate::workload::RobotFleet::uniform(
+                    1,
+                    1.0,
+                    crate::config::QualityClass::Balanced,
+                );
+                let img = fleet.frame(0, 0, hw);
+                // Warm-up then median of 5.
+                let _ = model.infer(&img).ok()?;
+                let mut ts: Vec<f64> =
+                    (0..5).filter_map(|_| model.time_one(&img).ok()).collect();
+                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ts.get(ts.len() / 2).copied()
+            })
+            .map(|t| format!("{:.4}", t))
+            .unwrap_or_else(|| "-".into());
+        rows.push(vec![
+            m.name.clone(),
+            format!("{:.2}", m.l_ref),
+            format!("{:.2}", m.r_cost),
+            format!("{:.0}%", m.accuracy * 100.0),
+            measured,
+        ]);
+    }
+    format!(
+        "Table II — model profiles (reference device)\n{}",
+        render_table(
+            &["model", "L_m [s]", "R_m [CPU-s]", "mAP@0.5", "PJRT-CPU [s]"],
+            &rows
+        )
+    )
+}
+
+// ---------------------------------------------------------------- table 3
+
+/// Table III: typical hardware speed-up catalogue.
+pub fn table3(cfg: &Config) -> String {
+    let mut rows = vec![
+        vec!["CPU (reference class)".into(), "1".into()],
+        vec!["GPU class".into(), "2-20".into()],
+        vec!["TPU class".into(), "30-100+".into()],
+    ];
+    rows.push(vec!["--- configured instances ---".into(), String::new()]);
+    for i in &cfg.instances {
+        rows.push(vec![i.name.clone(), format!("{:.1}", i.speedup)]);
+    }
+    format!(
+        "Table III — hardware speed-up S_m,i\n{}",
+        render_table(&["hardware", "S_m,i"], &rows)
+    )
+}
+
+// ---------------------------------------------------------------- table 4
+
+/// Table IV data: mean ± SD per-inference latency of YOLOv5m at
+/// λ ∈ {1..4} × N ∈ {1,2,4}.
+///
+/// The paper's grid comes from λ robots emitting frames on a fixed period
+/// for a short measurement window (~30 s per cell — the only setting
+/// reproducing both the exact 0.73 s idle cells and the bounded overload
+/// means; see EXPERIMENTS.md): periodic arrivals, static layout.
+pub fn table4_data(cfg: &Config, duration: f64) -> Vec<(u32, f64, f64, f64)> {
+    let mut cells = Vec::new();
+    for &n in &[1u32, 2, 4] {
+        for lam in 1..=4 {
+            let mut means = Vec::new();
+            for &seed in &TRIALS[..3] {
+                let scenario = ScenarioConfig {
+                    name: format!("table4-l{lam}-n{n}"),
+                    arrivals: crate::config::ArrivalKind::Periodic { rate: lam as f64 },
+                    duration,
+                    warmup: 0.0,
+                    seed,
+                    quality_mix: [0.0, 1.0, 0.0],
+                    initial_replicas: n,
+                    pod_mtbf: None,
+                };
+                let r =
+                    Simulation::new(cfg, &scenario, Policy::Static, Architecture::Microservice)
+                        .run();
+                means.push(r.summary().mean);
+            }
+            let s = Summary::from(&means);
+            cells.push((n, lam as f64, s.mean, s.std));
+        }
+    }
+    cells
+}
+
+/// Per-cell measurement window for Table IV [s].
+pub const TABLE4_WINDOW: f64 = 30.0;
+
+pub fn table4(cfg: &Config) -> String {
+    let cells = table4_data(cfg, TABLE4_WINDOW);
+    let paper: [[f64; 4]; 3] = [
+        [0.73, 4.97, 7.71, 10.46],
+        [0.73, 1.26, 3.76, 5.12],
+        [0.73, 0.90, 1.12, 1.77],
+    ];
+    let ns = [1u32, 2, 4];
+    let mut rows = Vec::new();
+    for (k, &n) in ns.iter().enumerate() {
+        let mut row = vec![format!("N={n}")];
+        for lam in 1..=4u32 {
+            let cell = cells
+                .iter()
+                .find(|c| c.0 == n && c.1 == lam as f64)
+                .expect("cell");
+            row.push(format!("{:.2}±{:.2}", cell.2, cell.3));
+        }
+        rows.push(row);
+        let mut prow = vec![format!("  (paper)")];
+        for lam in 0..4 {
+            prow.push(format!("{:.2}", paper[k][lam]));
+        }
+        rows.push(prow);
+    }
+    format!(
+        "Table IV — YOLOv5m mean latency [s], λ x N grid (ours vs paper)\n{}",
+        render_table(&["", "λ=1", "λ=2", "λ=3", "λ=4"], &rows)
+    )
+}
+
+// ------------------------------------------------------------------ fig 2
+
+/// Fig 2: calibrate the affine power law on simulated Table IV samples and
+/// compare with the paper's (0.73, 1.29, 1.49) fit of its own data.
+pub fn fig2(cfg: &Config) -> String {
+    // Fit on the paper's own published grid first (exact reproduction —
+    // α anchored at the measured idle latency, as the paper does)...
+    let paper_fit = fit_anchored(&paper_table4_samples(), 0.73, 0.3, 3.0).unwrap();
+    // ...then on our simulator's measurements (should land nearby).
+    let cells = table4_data(cfg, TABLE4_WINDOW);
+    let ours: Vec<CalibrationSample> = cells
+        .iter()
+        .map(|&(n, lam, mean, _)| CalibrationSample {
+            lambda_per_replica: lam / n as f64,
+            latency: mean,
+        })
+        .collect();
+    // Anchor at our own measured idle latency (the λ̃ = 0.25 cells).
+    let idle = cells
+        .iter()
+        .filter(|c| c.1 == 1.0)
+        .map(|c| c.2)
+        .fold(f64::INFINITY, f64::min);
+    let our_fit = fit_anchored(&ours, idle, 0.3, 3.0).unwrap();
+    let rows = vec![
+        vec![
+            "paper Table IV data".into(),
+            format!("{:.2}", paper_fit.alpha),
+            format!("{:.2}", paper_fit.beta),
+            format!("{:.2}", paper_fit.gamma),
+            format!("{:.4}", paper_fit.r_squared),
+        ],
+        vec![
+            "our simulator".into(),
+            format!("{:.2}", our_fit.alpha),
+            format!("{:.2}", our_fit.beta),
+            format!("{:.2}", our_fit.gamma),
+            format!("{:.4}", our_fit.r_squared),
+        ],
+        vec![
+            "paper-reported fit".into(),
+            "0.73".into(),
+            "1.29".into(),
+            "1.49".into(),
+            "-".into(),
+        ],
+    ];
+    let mut out = format!(
+        "Fig 2 — affine power-law calibration L = α + β·λ̃^γ\n{}",
+        render_table(&["fit on", "α", "β", "γ", "R²"], &rows)
+    );
+    out.push_str("\n  predicted vs measured at N=4 (our fit):\n");
+    for lam in 1..=4 {
+        let measured = cells
+            .iter()
+            .find(|c| c.0 == 4 && c.1 == lam as f64)
+            .unwrap()
+            .2;
+        let predicted = our_fit.predict(lam as f64 / 4.0);
+        out.push_str(&format!(
+            "    λ={lam}: measured {measured:.2} s, predicted {predicted:.2} s\n"
+        ));
+    }
+    out
+}
+
+// ------------------------------------------------------------------ fig 3
+
+/// Fig 3: avg / P95 / P99 vs λ = 1..6 at fixed N = 4.
+pub fn fig3_data(cfg: &Config, duration: f64) -> Vec<(f64, Summary)> {
+    (1..=6)
+        .map(|lam| {
+            let r = run_cell(
+                cfg,
+                lam as f64,
+                Policy::Static,
+                Architecture::Microservice,
+                4,
+                false,
+                TRIALS[0],
+                duration,
+                RUN_WARMUP.min(duration / 10.0),
+            );
+            (lam as f64, r.summary())
+        })
+        .collect()
+}
+
+pub fn fig3(cfg: &Config) -> String {
+    let data = fig3_data(cfg, RUN_DURATION);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|(lam, s)| {
+            vec![
+                format!("{lam:.0}"),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.p95),
+                format!("{:.2}", s.p99),
+            ]
+        })
+        .collect();
+    format!(
+        "Fig 3 — latency vs λ at N=4 (super-linear tail growth)\n{}",
+        render_table(&["λ", "avg [s]", "P95 [s]", "P99 [s]"], &rows)
+    )
+}
+
+// ------------------------------------------------------------------ fig 4
+
+/// Fig 4: microservice vs monolithic, avg/P95/P99, N ∈ {1, 2, 4, 6}, λ=4,
+/// mixed-quality traffic.
+pub fn fig4_data(
+    cfg: &Config,
+    duration: f64,
+) -> Vec<(u32, Summary, Summary)> {
+    [1u32, 2, 4, 6]
+        .iter()
+        .map(|&n| {
+            let mut scenario = ScenarioConfig::poisson(4.0, TRIALS[0])
+                .with_duration(duration, RUN_WARMUP.min(duration / 10.0))
+                .with_replicas(n);
+            scenario.quality_mix = [0.3, 0.5, 0.2];
+            let micro = Simulation::new(cfg, &scenario, Policy::Static, Architecture::Microservice)
+                .run()
+                .summary();
+            let mono = Simulation::new(cfg, &scenario, Policy::Static, Architecture::Monolithic)
+                .run()
+                .summary();
+            (n, micro, mono)
+        })
+        .collect()
+}
+
+pub fn fig4(cfg: &Config) -> String {
+    let data = fig4_data(cfg, RUN_DURATION);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|(n, micro, mono)| {
+            vec![
+                format!("{n}"),
+                format!("{:.2}/{:.2}/{:.2}", micro.mean, micro.p95, micro.p99),
+                format!("{:.2}/{:.2}/{:.2}", mono.mean, mono.p95, mono.p99),
+            ]
+        })
+        .collect();
+    format!(
+        "Fig 4 — microservice vs monolithic at λ=4 (avg/P95/P99 [s])\n{}",
+        render_table(&["N", "microservice", "monolithic"], &rows)
+    )
+}
+
+// --------------------------------------------------- fig 7 / fig 8 / tbl 6
+
+/// The paper's headline experiment: LA-IMR vs reactive baseline across
+/// λ = 1..6 under bursty arrivals, multi-seed. Returns per λ:
+/// (λ, LA-IMR P95 summary-over-seeds, baseline P95, LA-IMR P99, baseline P99).
+pub struct HeadToHead {
+    pub lambda: f64,
+    pub la_p95: Summary,
+    pub bl_p95: Summary,
+    pub la_p99: Summary,
+    pub bl_p99: Summary,
+    /// Pooled latencies (all seeds) for box plots.
+    pub la_all: Vec<f64>,
+    pub bl_all: Vec<f64>,
+}
+
+pub fn head_to_head(cfg: &Config, duration: f64, trials: &[u64]) -> Vec<HeadToHead> {
+    (1..=6)
+        .map(|lam| {
+            let (mut lp95, mut bp95, mut lp99, mut bp99) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            let (mut la_all, mut bl_all) = (Vec::new(), Vec::new());
+            for &seed in trials {
+                let la = run_cell(
+                    cfg,
+                    lam as f64,
+                    Policy::LaImr,
+                    Architecture::Microservice,
+                    2,
+                    true,
+                    seed,
+                    duration,
+                    RUN_WARMUP.min(duration / 10.0),
+                );
+                let bl = run_cell(
+                    cfg,
+                    lam as f64,
+                    Policy::Baseline,
+                    Architecture::Microservice,
+                    2,
+                    true,
+                    seed,
+                    duration,
+                    RUN_WARMUP.min(duration / 10.0),
+                );
+                let (ls, bs) = (la.summary(), bl.summary());
+                lp95.push(ls.p95);
+                bp95.push(bs.p95);
+                lp99.push(ls.p99);
+                bp99.push(bs.p99);
+                la_all.extend(la.latencies());
+                bl_all.extend(bl.latencies());
+            }
+            HeadToHead {
+                lambda: lam as f64,
+                la_p95: Summary::from(&lp95),
+                bl_p95: Summary::from(&bp95),
+                la_p99: Summary::from(&lp99),
+                bl_p99: Summary::from(&bp99),
+                la_all,
+                bl_all,
+            }
+        })
+        .collect()
+}
+
+/// Table VI: P95/P99 mean±SD across λ, LA-IMR vs baseline.
+pub fn table6(cfg: &Config) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, TRIALS);
+    let mut rows = Vec::new();
+    for h in &data {
+        let imp = 100.0 * (1.0 - h.la_p99.mean / h.bl_p99.mean.max(1e-9));
+        rows.push(vec![
+            format!("{:.0}", h.lambda),
+            format!("{:.3}±{:.3}", h.la_p95.mean, h.la_p95.std),
+            format!("{:.3}±{:.3}", h.bl_p95.mean, h.bl_p95.std),
+            format!("{:.3}±{:.3}", h.la_p99.mean, h.la_p99.std),
+            format!("{:.3}±{:.3}", h.bl_p99.mean, h.bl_p99.std),
+            format!("{imp:+.1}%"),
+        ]);
+    }
+    format!(
+        "Table VI — P95/P99 across λ (bursty arrivals, {} seeds)\n{}",
+        TRIALS.len(),
+        render_table(
+            &["λ", "LA-IMR P95", "Base P95", "LA-IMR P99", "Base P99", "P99 gain"],
+            &rows
+        )
+    )
+}
+
+/// Fig 7: latency distribution summaries per λ for both policies.
+pub fn fig7(cfg: &Config) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3]);
+    let mut rows = Vec::new();
+    for h in &data {
+        let la = Summary::from(&h.la_all);
+        let bl = Summary::from(&h.bl_all);
+        rows.push(vec![
+            format!("{:.0}", h.lambda),
+            format!("{:.2}/{:.2}/{:.2}", la.p50, la.p95, la.p99),
+            format!("{:.2}/{:.2}/{:.2}", bl.p50, bl.p95, bl.p99),
+        ]);
+    }
+    format!(
+        "Fig 7 — latency distributions (P50/P95/P99 [s]) per λ\n{}",
+        render_table(&["λ", "LA-IMR", "baseline"], &rows)
+    )
+}
+
+/// Fig 8: P99 box plots; the paper highlights IQR −27 % and max outlier
+/// −41 % for LA-IMR.
+pub fn fig8(cfg: &Config) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3]);
+    // Pool across λ (as the paper's box figure aggregates the runs).
+    let (mut la_iqr, mut bl_iqr, mut la_max, mut bl_max) = (0.0, 0.0, 0.0f64, 0.0f64);
+    let mut rows = Vec::new();
+    for h in &data {
+        let la = box_stats(&h.la_all);
+        let bl = box_stats(&h.bl_all);
+        la_iqr += la.iqr;
+        bl_iqr += bl.iqr;
+        la_max = la_max.max(la.max_outlier);
+        bl_max = bl_max.max(bl.max_outlier);
+        rows.push(vec![
+            format!("{:.0}", h.lambda),
+            format!("{:.2}", la.median),
+            format!("{:.2}", la.iqr),
+            format!("{:.2}", la.max_outlier),
+            format!("{:.2}", bl.median),
+            format!("{:.2}", bl.iqr),
+            format!("{:.2}", bl.max_outlier),
+        ]);
+    }
+    let iqr_red = 100.0 * (1.0 - la_iqr / bl_iqr.max(1e-9));
+    let max_red = 100.0 * (1.0 - la_max / bl_max.max(1e-9));
+    format!(
+        "Fig 8 — P99 box statistics per λ\n{}\n  Σ IQR reduction: {iqr_red:.0}% (paper: 27%)   max-outlier reduction: {max_red:.0}% (paper: 41%)\n",
+        render_table(
+            &["λ", "LA med", "LA IQR", "LA max", "BL med", "BL IQR", "BL max"],
+            &rows
+        )
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn table3_lists_instances() {
+        let t = table3(&cfg());
+        assert!(t.contains("edge-rpi4"));
+        assert!(t.contains("cloud-ericsson"));
+        assert!(t.contains("TPU"));
+    }
+
+    #[test]
+    fn table2_without_artifacts() {
+        let t = table2(&cfg(), None);
+        assert!(t.contains("yolov5m"));
+        assert!(t.contains("0.73"));
+        assert!(t.contains("effdet_lite"));
+    }
+
+    #[test]
+    fn table4_shape_holds_quick() {
+        // Short run: the grid's qualitative shape — latency grows with λ,
+        // shrinks with N.
+        let cells = table4_data(&cfg(), TABLE4_WINDOW);
+        assert_eq!(cells.len(), 12);
+        let get = |n: u32, lam: f64| cells.iter().find(|c| c.0 == n && c.1 == lam).unwrap().2;
+        assert!(get(1, 4.0) > get(1, 1.0), "λ growth violated");
+        assert!(get(1, 3.0) > get(4, 3.0), "N relief violated");
+        // Idle cell ≈ L_m.
+        assert!((get(4, 1.0) - 0.73).abs() < 0.5, "idle={}", get(4, 1.0));
+    }
+
+    #[test]
+    fn fig3_tails_ordered() {
+        let data = fig3_data(&cfg(), 60.0);
+        for (_, s) in &data {
+            assert!(s.mean <= s.p95 + 1e-9 && s.p95 <= s.p99 + 1e-9);
+        }
+        // Latency at λ=6 worse than at λ=1.
+        assert!(data[5].1.p99 > data[0].1.p99);
+    }
+
+    #[test]
+    fn render_smoke() {
+        // Quick-render the cheap reports end to end.
+        assert!(!table3(&cfg()).is_empty());
+        assert!(!table2(&cfg(), None).is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! Reproduction harness: one function per paper table/figure, each
+//! returning structured rows AND a paper-formatted text block. The CLI
+//! (`laimr repro <id>`) and the criterion benches both call these.
+//!
+//! Experiment index (DESIGN.md §5):
+//!   table2 — model profiles (measured via PJRT when artifacts exist)
+//!   table3 — hardware speed-up catalogue
+//!   table4 — latency grid λ×N for YOLOv5m
+//!   fig2   — affine power-law fit vs measurement
+//!   fig3   — avg/P95/P99 vs λ at N=4
+//!   fig4   — microservice vs monolithic vs N at λ=4
+//!   fig7/8 + table6 — LA-IMR vs baseline across λ = 1..6
+
+mod experiments;
+pub use experiments::*;
+
+/// Render a simple aligned text table.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (k, cell) in row.iter().enumerate() {
+            if k < widths.len() {
+                widths[k] = widths[k].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    let head: Vec<String> = headers.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&head, &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let s = render_table(
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["10".into(), "200".into()]],
+        );
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains('a') && lines[0].contains("bb"));
+        assert!(lines[3].contains("10") && lines[3].contains("200"));
+    }
+}

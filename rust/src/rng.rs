@@ -1,0 +1,161 @@
+//! Seeded, dependency-free PRNG + the distributions the simulator needs.
+//!
+//! SplitMix64 core (Steele et al., "Fast splittable pseudorandom number
+//! generators") — tiny, fast, and reproducible across platforms, which is
+//! what the benchmark harness needs: every table in EXPERIMENTS.md is
+//! regenerated from fixed seeds.
+
+/// SplitMix64 PRNG. Deterministic, `Copy`-cheap, passes BigCrush for the
+/// bit-mixing used here.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1) with 53-bit precision.
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Exponential with rate `lambda` (mean 1/lambda). Used for Poisson
+    /// inter-arrivals and exponential service components (M/M/c realism).
+    #[inline]
+    pub fn exp(&mut self, lambda: f64) -> f64 {
+        debug_assert!(lambda > 0.0);
+        // 1 - uniform() is in (0, 1], so ln() is finite.
+        -(1.0 - self.uniform()).ln() / lambda
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = 1.0 - self.uniform(); // (0, 1]
+        let u2 = self.uniform();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal with given log-space mu/sigma. Used for service-time noise
+    /// calibrated to Table IV's reported standard errors.
+    pub fn lognormal(&mut self, mu: f64, sigma: f64) -> f64 {
+        (mu + sigma * self.normal()).exp()
+    }
+
+    /// Bounded Pareto on [lo, hi] with shape `alpha` — the burst-size law
+    /// the paper uses to emulate load bursts (§V-D "bounded-Pareto process").
+    pub fn bounded_pareto(&mut self, alpha: f64, lo: f64, hi: f64) -> f64 {
+        debug_assert!(alpha > 0.0 && lo > 0.0 && hi > lo);
+        let u = self.uniform();
+        let la = lo.powf(alpha);
+        let ha = hi.powf(alpha);
+        // Inverse CDF of the bounded Pareto.
+        (-(u * ha - u * la - ha) / (ha * la)).powf(-1.0 / alpha)
+    }
+
+    /// Split off an independent stream (for per-component RNGs).
+    pub fn split(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = Rng::new(1);
+        for _ in 0..10_000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close() {
+        let mut r = Rng::new(7);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exp(4.0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(9);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn bounded_pareto_within_bounds() {
+        let mut r = Rng::new(3);
+        for _ in 0..10_000 {
+            let x = r.bounded_pareto(1.5, 1.0, 50.0);
+            assert!((1.0..=50.0).contains(&x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn bounded_pareto_heavy_tail_orders() {
+        // Lower alpha => heavier tail => larger mean.
+        let mean = |alpha: f64, seed: u64| {
+            let mut r = Rng::new(seed);
+            (0..50_000)
+                .map(|_| r.bounded_pareto(alpha, 1.0, 100.0))
+                .sum::<f64>()
+                / 50_000.0
+        };
+        assert!(mean(0.8, 5) > mean(2.5, 5));
+    }
+
+    #[test]
+    fn split_streams_diverge() {
+        let mut a = Rng::new(42);
+        let mut b = a.split();
+        let xs: Vec<u64> = (0..10).map(|_| a.next_u64()).collect();
+        let ys: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime (shapes, FLOPs, HLO paths). Parsed with the in-tree JSON
+//! parser (`util::json`).
+
+use crate::util::json::{self, Value};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One model's artifact metadata (written by aot.py).
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    /// HLO text file name, relative to the artifacts dir.
+    pub hlo: String,
+    /// NHWC input shape, e.g. [1, 96, 96, 3].
+    pub input_shape: Vec<usize>,
+    /// Output shape (cells, 4 + num_classes).
+    pub output_shape: Vec<usize>,
+    /// Analytic FLOPs per inference.
+    pub flops: u64,
+    /// HLO opcode histogram (L2 fusion sanity report).
+    pub hlo_ops: BTreeMap<String, u64>,
+    /// First 32 output values for the deterministic ramp input — the
+    /// python↔rust numeric contract (see aot.py).
+    pub golden_prefix: Vec<f64>,
+}
+
+impl ModelEntry {
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = |key: &str| -> Result<Vec<usize>> {
+            v.get(key)
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow::anyhow!("missing array '{key}'"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("{key}: non-integer dim"))
+                })
+                .collect()
+        };
+        let golden_prefix = v
+            .get("golden_prefix")
+            .and_then(|x| x.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+            .unwrap_or_default();
+        let hlo_ops = v
+            .get("hlo_ops")
+            .and_then(|x| x.as_obj())
+            .map(|o| {
+                o.iter()
+                    .filter_map(|(k, c)| c.as_u64().map(|n| (k.clone(), n)))
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(ModelEntry {
+            hlo: v
+                .get("hlo")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow::anyhow!("missing 'hlo'"))?
+                .to_string(),
+            input_shape: shape("input_shape")?,
+            output_shape: shape("output_shape")?,
+            flops: v
+                .get("flops")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| anyhow::anyhow!("missing 'flops'"))?,
+            hlo_ops,
+            golden_prefix,
+        })
+    }
+}
+
+/// artifacts/manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub num_classes: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn from_json_str(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let num_classes = v
+            .get("num_classes")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing 'num_classes'"))?;
+        let mut models = BTreeMap::new();
+        let obj = v
+            .get("models")
+            .and_then(|x| x.as_obj())
+            .ok_or_else(|| anyhow::anyhow!("missing 'models'"))?;
+        for (name, entry) in obj {
+            models.insert(name.clone(), ModelEntry::from_json(entry)?);
+        }
+        let m = Manifest {
+            num_classes,
+            models,
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.models.is_empty(), "manifest has no models");
+        for (name, e) in &self.models {
+            anyhow::ensure!(
+                e.input_shape.len() == 4,
+                "{name}: input must be NHWC rank-4"
+            );
+            anyhow::ensure!(e.output_shape.len() == 2, "{name}: output must be rank-2");
+            anyhow::ensure!(
+                e.output_shape[1] == 4 + self.num_classes,
+                "{name}: output width {} != 4+{}",
+                e.output_shape[1],
+                self.num_classes
+            );
+            anyhow::ensure!(e.flops > 0, "{name}: flops must be positive");
+        }
+        Ok(())
+    }
+
+    /// Image side length for a model (square inputs).
+    pub fn input_hw(&self, name: &str) -> Option<usize> {
+        self.models.get(name).map(|e| e.input_shape[1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        Manifest::from_json_str(
+            r#"{
+              "num_classes": 4,
+              "models": {
+                "effdet_lite": {
+                  "hlo": "effdet_lite.hlo.txt",
+                  "input_shape": [1, 64, 64, 3],
+                  "output_shape": [49, 8],
+                  "flops": 1290000,
+                  "hlo_ops": {"dot": 4, "add": 10}
+                }
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let m = sample();
+        assert_eq!(m.input_hw("effdet_lite"), Some(64));
+        assert_eq!(m.models["effdet_lite"].flops, 1_290_000);
+        assert_eq!(m.models["effdet_lite"].hlo_ops["dot"], 4);
+    }
+
+    #[test]
+    fn rejects_bad_output_width() {
+        let r = Manifest::from_json_str(
+            r#"{"num_classes": 4, "models": {"m": {
+                "hlo": "m.hlo.txt", "input_shape": [1, 8, 8, 3],
+                "output_shape": [4, 7], "flops": 10}}}"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_non_nhwc_input() {
+        let r = Manifest::from_json_str(
+            r#"{"num_classes": 4, "models": {"m": {
+                "hlo": "m.hlo.txt", "input_shape": [8, 8, 3],
+                "output_shape": [4, 8], "flops": 10}}}"#,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn missing_model_none() {
+        assert_eq!(sample().input_hw("nope"), None);
+    }
+
+    #[test]
+    fn real_artifact_manifest_parses_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.models.contains_key("yolov5m"));
+            assert!(m.models.contains_key("effdet_lite"));
+            assert!(m.models["yolov5m"].flops > 10 * m.models["effdet_lite"].flops);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `make artifacts`) and executes them on the request path —
+//! Python is never involved at serving time.
+//!
+//! Wiring (from /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Text is the interchange format
+//! because jax ≥ 0.5 emits 64-bit instruction ids that xla_extension
+//! 0.5.1 protos reject; the text parser reassigns ids.
+
+mod manifest;
+mod postprocess;
+
+pub use manifest::{Manifest, ModelEntry};
+pub use postprocess::{postprocess, Detection};
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A loaded, compiled model executable.
+pub struct CompiledModel {
+    pub name: String,
+    pub entry: ModelEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl CompiledModel {
+    /// Run one inference: flat NHWC f32 image → flat (cells × (4+C)) f32.
+    pub fn infer(&self, image: &[f32]) -> Result<Vec<f32>> {
+        let shape = &self.entry.input_shape;
+        anyhow::ensure!(
+            image.len() == shape.iter().product::<usize>(),
+            "image length {} != input shape {:?}",
+            image.len(),
+            shape
+        );
+        let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+        let input = xla::Literal::vec1(image).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        // Models are lowered with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Wall-clock one inference [s] (Table II measurement path).
+    pub fn time_one(&self, image: &[f32]) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let _ = self.infer(image)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// The deterministic ramp input the AOT pipeline computed its golden
+    /// output on (aot.py): (k mod 97) / 97 over the flattened image.
+    pub fn golden_input(&self) -> Vec<f32> {
+        let n: usize = self.entry.input_shape.iter().product();
+        (0..n).map(|k| (k % 97) as f32 / 97.0).collect()
+    }
+
+    /// Validate this executable against the python-side golden output —
+    /// the numeric contract of the AOT bridge. Returns the max abs error.
+    pub fn golden_check(&self) -> Result<f64> {
+        anyhow::ensure!(
+            !self.entry.golden_prefix.is_empty(),
+            "{}: manifest has no golden output (re-run `make artifacts`)",
+            self.name
+        );
+        let out = self.infer(&self.golden_input())?;
+        let mut max_err = 0.0f64;
+        for (got, want) in out.iter().zip(&self.entry.golden_prefix) {
+            max_err = max_err.max((*got as f64 - want).abs());
+        }
+        anyhow::ensure!(
+            max_err < 1e-4,
+            "{}: golden mismatch (max abs err {max_err:.2e}) — artifact corrupt?",
+            self.name
+        );
+        Ok(max_err)
+    }
+}
+
+/// The model runtime: a PJRT CPU client + all compiled artifacts.
+pub struct Runtime {
+    pub manifest: Manifest,
+    models: HashMap<String, CompiledModel>,
+    platform: String,
+}
+
+impl Runtime {
+    /// Load every model in `artifacts/manifest.json` and compile it on the
+    /// PJRT CPU client.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("run `make artifacts` first")?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT: {e}"))?;
+        let platform = client
+            .platform_name();
+        let mut models = HashMap::new();
+        for (name, entry) in &manifest.models {
+            let path = artifacts_dir.join(&entry.hlo);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )
+            .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            models.insert(
+                name.clone(),
+                CompiledModel {
+                    name: name.clone(),
+                    entry: entry.clone(),
+                    exe,
+                },
+            );
+        }
+        Ok(Runtime {
+            manifest,
+            models,
+            platform,
+        })
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    pub fn model(&self, name: &str) -> Option<&CompiledModel> {
+        self.models.get(name)
+    }
+
+    pub fn model_names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.models.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+}

@@ -1,0 +1,77 @@
+//! Detection post-processing: flat model output → thresholded detections
+//! (the robot receives "the coordinates of the object", §V-A.1).
+
+/// One detected object.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Detection {
+    /// Grid cell index the detection came from.
+    pub cell: usize,
+    /// Box parameters in [0, 1] (cx, cy, w, h — sigmoid-activated).
+    pub bbox: [f32; 4],
+    /// Winning class index.
+    pub class: usize,
+    /// Winning class score in [0, 1].
+    pub score: f32,
+}
+
+/// Threshold + per-cell argmax over the model's (cells × (4+C)) output.
+/// Detections are returned sorted by descending score.
+pub fn postprocess(output: &[f32], num_classes: usize, threshold: f32) -> Vec<Detection> {
+    let width = 4 + num_classes;
+    if width == 4 || output.is_empty() {
+        return Vec::new();
+    }
+    let cells = output.len() / width;
+    let mut dets = Vec::new();
+    for cell in 0..cells {
+        let row = &output[cell * width..(cell + 1) * width];
+        let (class, &score) = row[4..]
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .expect("num_classes > 0");
+        if score >= threshold {
+            dets.push(Detection {
+                cell,
+                bbox: [row[0], row[1], row[2], row[3]],
+                class,
+                score,
+            });
+        }
+    }
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    dets
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thresholds_and_sorts() {
+        // 3 cells, 2 classes, width 6.
+        let out = vec![
+            0.1, 0.2, 0.3, 0.4, 0.9, 0.1, // cell 0: class 0 @ 0.9
+            0.5, 0.5, 0.5, 0.5, 0.2, 0.3, // cell 1: class 1 @ 0.3 (below)
+            0.0, 0.0, 0.1, 0.1, 0.4, 0.95, // cell 2: class 1 @ 0.95
+        ];
+        let dets = postprocess(&out, 2, 0.5);
+        assert_eq!(dets.len(), 2);
+        assert_eq!(dets[0].cell, 2);
+        assert_eq!(dets[0].class, 1);
+        assert_eq!(dets[1].cell, 0);
+        assert_eq!(dets[1].class, 0);
+        assert_eq!(dets[1].bbox, [0.1, 0.2, 0.3, 0.4]);
+    }
+
+    #[test]
+    fn empty_when_all_below_threshold() {
+        let out = vec![0.1; 8]; // 1 cell, 4 classes
+        assert!(postprocess(&out, 4, 0.5).is_empty());
+    }
+
+    #[test]
+    fn zero_classes_safe() {
+        assert!(postprocess(&[0.1, 0.2, 0.3, 0.4], 0, 0.5).is_empty());
+    }
+}

@@ -1,0 +1,771 @@
+//! The simulation engine: wires workload → policy (LA-IMR router /
+//! baseline / static) → deployments (simulated Kubernetes) → service-time
+//! sampling from the calibrated latency law → completion statistics.
+//!
+//! Service-time model: a dispatched request takes
+//!   (L_m / S_i) · [1 + (B_i/R_max)^γ] · LogNormal(−σ²/2, σ)
+//! — the idle-utilisation processing term of Eq. 8 (α_i): co-tenant
+//! background inflates service, while *load-dependent* latency growth
+//! emerges from queueing in the DES itself (pods serve one request at a
+//! time), exactly as in the paper's testbed where Table IV's idle cells
+//! measure 0.73 s ± 0.004 — pure service time — and the loaded cells'
+//! inflation is backlog. Eq. 5's U^γ term remains the *router's
+//! prediction* of that emergent behaviour (§III-C), which is the paper's
+//! own relationship between model and system. Network RTT is added per
+//! request with 10 % jitter.
+
+use crate::autoscaler::{Autoscaler, PmHpa, ReactiveBaseline};
+use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
+use crate::config::{Config, QualityClass, ScenarioConfig};
+use crate::coordinator::state::ReplicaView;
+use crate::coordinator::{ControlState, MultiQueue, QueuedRequest, Router};
+use crate::latency_model::LatencyModel;
+use crate::rng::Rng;
+use crate::sim::events::{Event, EventQueue};
+use crate::sim::result::{CompletedRequest, SimResult};
+use crate::telemetry::{LatencyHistogram, SlidingRate};
+use crate::workload::ArrivalGenerator;
+use crate::SimTime;
+use std::collections::HashMap;
+
+/// Control policy under test.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Full LA-IMR: Algorithm 1 routing + offload + PM-HPA scaling.
+    LaImr,
+    /// Reactive latency-threshold autoscaling, no offload (§V comparator).
+    Baseline,
+    /// Fixed replica layout, home routing only (Table IV / Fig 3 / Fig 4).
+    Static,
+}
+
+impl Policy {
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::LaImr => "la-imr",
+            Policy::Baseline => "baseline",
+            Policy::Static => "static",
+        }
+    }
+}
+
+/// Service architecture (Fig 4 comparison).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Architecture {
+    /// One deployment per (model, instance) — LA-IMR's shape.
+    Microservice,
+    /// All models share one pool per instance; context switching between
+    /// co-resident models inflates service time (§IV-A: "context switching
+    /// among different models imposes a higher burden").
+    Monolithic,
+}
+
+/// Lognormal service-noise σ (log-space). Calibrated so the idle-load
+/// latency spread matches Table IV's small standard errors.
+const SERVICE_SIGMA: f64 = 0.05;
+/// Per-model context-switch penalty in a monolithic pod (Fig 4).
+const MONO_CTX_PENALTY: f64 = 0.25;
+
+struct DepRuntime {
+    dep: Deployment,
+    queue: MultiQueue,
+    /// Measured arrival rate into this pool (drives the contention term).
+    rate: SlidingRate,
+    /// Latency model for service sampling.
+    model: LatencyModel,
+    /// Rolling observed-latency histogram (exported as observed_p95).
+    window_hist: LatencyHistogram,
+    /// Distinct models currently in flight (monolithic context switching).
+    inflight_models: HashMap<usize, u32>,
+}
+
+/// One configured simulation run.
+pub struct Simulation {
+    cfg: Config,
+    scenario: ScenarioConfig,
+    policy: Policy,
+    arch: Architecture,
+    router: Router,
+    autoscaler: Option<Box<dyn Autoscaler>>,
+    hpa: HpaController,
+    deps: Vec<DepRuntime>,
+    index: HashMap<DeploymentKey, usize>,
+    metrics: MetricRegistry,
+    state: ControlState,
+    events: EventQueue,
+    rng: Rng,
+    // per-request bookkeeping
+    req_quality: HashMap<u64, (SimTime, QualityClass)>,
+    /// (pool, pod) → (request id, dispatch token) executing there.
+    in_service: HashMap<(usize, u64), Vec<(u64, u64)>>,
+    /// Live dispatch tokens; a ServiceComplete whose token is absent is
+    /// stale (its pod crashed mid-service) and is swallowed.
+    live_tokens: std::collections::HashSet<u64>,
+    dispatch_seq: u64,
+    completed: Vec<CompletedRequest>,
+    generated: usize,
+    scale_outs: u64,
+    scale_ins: u64,
+    // time-weighted replica accounting on the dominant model's home pool
+    watched: DeploymentKey,
+    last_replica_change: SimTime,
+    replica_area: f64,
+    peak_replicas: u32,
+    /// Disable autoscaling entirely (Static policy).
+    frozen_layout: bool,
+    /// Pod crashes injected so far (fault-injection accounting).
+    crashes: u64,
+}
+
+impl Simulation {
+    /// Build a run. `initial_replicas` applies to each model's home pool;
+    /// other pools start at 1 (cloud pools warm with 2 for offload headroom
+    /// under LA-IMR, matching the paper's always-available upstream).
+    pub fn new(
+        cfg: &Config,
+        scenario: &ScenarioConfig,
+        policy: Policy,
+        arch: Architecture,
+    ) -> Self {
+        let router = Router::new(cfg);
+        let mut deps = Vec::new();
+        let mut index = HashMap::new();
+
+        for m in 0..cfg.models.len() {
+            for i in 0..cfg.instances.len() {
+                let key = DeploymentKey { model: m, instance: i };
+                let home = router.home(m);
+                let initial = if key == home {
+                    scenario.initial_replicas
+                } else if policy == Policy::LaImr {
+                    2 // warm upstream pool
+                } else {
+                    1
+                };
+                let dep = Deployment::new(
+                    key,
+                    initial,
+                    cfg.instances[i].n_max,
+                    cfg.cluster.pod_startup,
+                    cfg.cluster.drain_grace,
+                    0.0,
+                );
+                index.insert(key, deps.len());
+                deps.push(DepRuntime {
+                    dep,
+                    queue: MultiQueue::new(),
+                    rate: SlidingRate::new(5.0), // smoother window for contention
+                    model: LatencyModel::from_config(cfg, m, i),
+                    window_hist: LatencyHistogram::for_latency(),
+                    inflight_models: HashMap::new(),
+                });
+            }
+        }
+
+        // Autoscaler per policy, managing every home pool.
+        let homes: Vec<DeploymentKey> =
+            (0..cfg.models.len()).map(|m| router.home(m)).collect();
+        let autoscaler: Option<Box<dyn Autoscaler>> = match policy {
+            Policy::LaImr => Some(Box::new(PmHpa::new(cfg, &homes))),
+            Policy::Baseline => Some(Box::new(ReactiveBaseline::new(cfg, &homes))),
+            Policy::Static => None,
+        };
+
+        // Dominant model for replica accounting = largest quality share.
+        let mix = scenario.mix();
+        let dominant_q = match mix
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(k, _)| k)
+            .unwrap_or(1)
+        {
+            0 => QualityClass::LowLatency,
+            1 => QualityClass::Balanced,
+            _ => QualityClass::Precise,
+        };
+        let watched_model = cfg
+            .model_for_quality(dominant_q)
+            .map(|(k, _)| k)
+            .unwrap_or(0);
+        let watched = router.home(watched_model);
+
+        Simulation {
+            cfg: cfg.clone(),
+            scenario: scenario.clone(),
+            policy,
+            arch,
+            router,
+            autoscaler,
+            hpa: HpaController::new(cfg.cluster.hpa_interval),
+            deps,
+            index,
+            metrics: MetricRegistry::new(),
+            state: ControlState::new(),
+            events: EventQueue::new(),
+            rng: Rng::new(scenario.seed ^ 0xD15EA5E),
+            req_quality: HashMap::new(),
+            in_service: HashMap::new(),
+            live_tokens: std::collections::HashSet::new(),
+            dispatch_seq: 0,
+            completed: Vec::new(),
+            generated: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            watched,
+            last_replica_change: 0.0,
+            replica_area: 0.0,
+            peak_replicas: scenario.initial_replicas,
+            frozen_layout: policy == Policy::Static,
+            crashes: 0,
+        }
+    }
+
+
+    /// In monolithic mode, every model of an instance shares one pool —
+    /// map any key to the instance's canonical pool (model 0's slot).
+    fn pool_of(&self, key: DeploymentKey) -> usize {
+        match self.arch {
+            Architecture::Microservice => self.index[&key],
+            Architecture::Monolithic => self.index[&DeploymentKey {
+                model: 0,
+                instance: key.instance,
+            }],
+        }
+    }
+
+    /// Refresh the router-visible control state from cluster truth.
+    fn refresh_state(&mut self, now: SimTime) {
+        for d in &mut self.deps {
+            let lambda = d.rate.rate(now);
+            let n = d.dep.active_count().max(1);
+            let rho = d.model.rho(lambda, n);
+            self.state.update(
+                d.dep.key,
+                ReplicaView {
+                    active: d.dep.active_count(),
+                    ready: d.dep.ready_count(now),
+                    desired: d.dep.desired,
+                    rho,
+                    queue_depth: d.queue.len(),
+                },
+            );
+        }
+    }
+
+    /// Run to completion and produce the result.
+    pub fn run(mut self) -> SimResult {
+        let arrivals = ArrivalGenerator::generate(&self.scenario);
+        self.generated = arrivals.len();
+        for (k, a) in arrivals.arrivals().iter().enumerate() {
+            self.events.push(
+                a.at,
+                Event::Arrival {
+                    id: k as u64,
+                    quality: a.quality,
+                },
+            );
+        }
+        // Control-plane cadences.
+        let mut t = 0.0;
+        while t < self.scenario.duration {
+            self.events.push(t, Event::ControlTick);
+            t += 1.0;
+        }
+        let mut t = 0.0;
+        while t < self.scenario.duration {
+            self.events.push(t, Event::HpaTick);
+            t += self.cfg.cluster.hpa_interval;
+        }
+        let mut t = 0.0;
+        while t < self.scenario.duration {
+            self.events.push(t, Event::ScrapeTick);
+            t += self.cfg.cluster.scrape_interval;
+        }
+        // Fault injection: first crash per pool at Exp(1/MTBF).
+        if let Some(mtbf) = self.scenario.pod_mtbf {
+            for dep in 0..self.deps.len() {
+                let at = self.rng.exp(1.0 / mtbf);
+                if at < self.scenario.duration {
+                    self.events.push(at, Event::PodCrash { dep });
+                }
+            }
+        }
+
+        // Drain horizon: let in-flight work finish for a grace period.
+        let horizon = self.scenario.duration + 60.0;
+        while let Some(ev) = self.events.pop() {
+            if ev.at > horizon {
+                break;
+            }
+            self.handle(ev.at, ev.event);
+        }
+
+        // Final replica accounting.
+        self.account_replicas(horizon.min(self.scenario.duration));
+
+        let unfinished = self.req_quality.len();
+        let mean_replicas = if self.scenario.duration > 0.0 {
+            self.replica_area / self.scenario.duration
+        } else {
+            0.0
+        };
+        SimResult {
+            scenario_name: self.scenario.name.clone(),
+            policy_name: self.policy.name().into(),
+            completed: std::mem::take(&mut self.completed),
+            generated: self.generated,
+            unfinished,
+            scale_outs: self.scale_outs,
+            scale_ins: self.scale_ins,
+            peak_replicas: self.peak_replicas,
+            mean_replicas,
+            crashes: self.crashes,
+        }
+    }
+
+    fn account_replicas(&mut self, now: SimTime) {
+        let idx = self.index[&self.watched];
+        let n = self.deps[idx].dep.active_count();
+        let dt = (now - self.last_replica_change).max(0.0);
+        self.replica_area += n as f64 * dt;
+        self.last_replica_change = now;
+        self.peak_replicas = self.peak_replicas.max(n);
+    }
+
+    fn handle(&mut self, now: SimTime, ev: Event) {
+        match ev {
+            Event::Arrival { id, quality } => self.on_arrival(now, id, quality),
+            Event::ServiceComplete {
+                dep,
+                pod_id,
+                req_id,
+                token,
+                arrived,
+                rtt,
+                quality,
+                offloaded,
+            } => {
+                self.on_complete(now, dep, pod_id, req_id, token, arrived, rtt, quality, offloaded)
+            }
+            Event::ControlTick => self.on_control_tick(now),
+            Event::HpaTick => self.on_hpa_tick(now),
+            Event::ScrapeTick => {
+                // Export the last window's observed P95 per pool, then run
+                // the scrape (so scraped values are one period stale).
+                for d in &mut self.deps {
+                    if d.window_hist.count() > 0 {
+                        let p95 = d.window_hist.p95();
+                        let name = crate::autoscaler::observed_p95_metric(d.dep.key);
+                        self.metrics.set(&name, p95, now);
+                    }
+                    d.window_hist.reset();
+                }
+                self.metrics.scrape(now);
+            }
+            Event::PodTick { dep } => {
+                self.account_replicas(now);
+                self.deps[dep].dep.tick(now);
+                self.try_dispatch(now, dep);
+            }
+            Event::PodCrash { dep } => self.on_crash(now, dep),
+        }
+    }
+
+    /// Fault injection: kill one pod of the pool; its in-flight requests
+    /// re-enter the pool queue (stale completions are tombstoned). The
+    /// autoscaler sees active < desired at the next reconcile and
+    /// re-provisions — recovery lag = reconcile (≤5 s) + startup (1.8 s).
+    fn on_crash(&mut self, now: SimTime, dep: usize) {
+        // Schedule the next crash of this pool first (renewal process).
+        if let Some(mtbf) = self.scenario.pod_mtbf {
+            let at = now + self.rng.exp(1.0 / mtbf);
+            if at < self.scenario.duration {
+                self.events.push(at, Event::PodCrash { dep });
+            }
+        }
+        let victims: Vec<u64> = self.deps[dep]
+            .dep
+            .pods
+            .iter()
+            .filter(|p| p.can_serve(now) || p.in_flight > 0)
+            .map(|p| p.id)
+            .collect();
+        if victims.is_empty() {
+            return;
+        }
+        let vid = victims[self.rng.below(victims.len())];
+        // Re-queue the victim's in-flight work; invalidate its tokens so
+        // the already-scheduled completions are swallowed.
+        let reqs = self.in_service.remove(&(dep, vid)).unwrap_or_default();
+        let requeue: Vec<(u64, QualityClass)> = reqs
+            .iter()
+            .filter_map(|&(rid, token)| {
+                self.live_tokens.remove(&token);
+                self.req_quality.get(&rid).map(|&(_, q)| (rid, q))
+            })
+            .collect();
+        for &(_, quality) in &requeue {
+            if let Some((req_model, _)) = self.cfg.model_for_quality(quality) {
+                if let Some(c) = self.deps[dep].inflight_models.get_mut(&req_model) {
+                    *c = c.saturating_sub(1);
+                }
+            }
+        }
+        let d = &mut self.deps[dep];
+        for (rid, quality) in requeue {
+            d.queue.push(QueuedRequest {
+                id: rid,
+                quality,
+                enqueued_at: now,
+            });
+        }
+        d.dep.pods.retain(|p| p.id != vid);
+        self.crashes += 1;
+        self.account_replicas(now);
+        self.try_dispatch(now, dep);
+    }
+
+    fn on_arrival(&mut self, now: SimTime, id: u64, quality: QualityClass) {
+        let Some((model, _)) = self.cfg.model_for_quality(quality) else {
+            return;
+        };
+        self.req_quality.insert(id, (now, quality));
+
+        let target = match self.policy {
+            Policy::LaImr => {
+                self.refresh_state(now);
+                let decision = self.router.route(model, now, &self.state);
+                // Publish desired-replica updates (router authority:
+                // only ever raises the already-published target).
+                for &(key, want) in &decision.desired_updates {
+                    let name = MetricRegistry::scoped(
+                        crate::cluster::DESIRED_REPLICAS,
+                        key.model,
+                        key.instance,
+                    );
+                    let cur = self.metrics.latest(&name).unwrap_or(0.0);
+                    let v = if want as f64 > cur || want < cur as u32 {
+                        want as f64
+                    } else {
+                        cur
+                    };
+                    self.metrics.set(&name, v, now);
+                }
+                decision.target
+            }
+            Policy::Baseline | Policy::Static => self.router.home(model),
+        };
+
+        let pool = self.pool_of(target);
+        let d = &mut self.deps[pool];
+        d.rate.on_arrival(now);
+        d.queue.push(QueuedRequest {
+            id,
+            quality,
+            enqueued_at: now,
+        });
+        self.try_dispatch(now, pool);
+    }
+
+    /// Dispatch queued requests onto idle ready pods (one request per pod
+    /// at a time — the M/M/c service discipline).
+    fn try_dispatch(&mut self, now: SimTime, pool: usize) {
+        loop {
+            let d = &mut self.deps[pool];
+            if d.queue.is_empty() {
+                return;
+            }
+            // Find an idle, serving pod.
+            let Some(pod) = d
+                .dep
+                .pods
+                .iter_mut()
+                .filter(|p| p.can_serve(now) && p.in_flight == 0)
+                .min_by_key(|p| p.id)
+            else {
+                return;
+            };
+            let req = d.queue.pop().expect("non-empty");
+            pod.in_flight += 1;
+            let pod_id = pod.id;
+
+            // Model of the request (for monolithic context accounting).
+            let (req_model, _) = self
+                .cfg
+                .model_for_quality(req.quality)
+                .expect("model for quality");
+            *d.inflight_models.entry(req_model).or_insert(0) += 1;
+
+            let key = d.dep.key;
+            // Use the *request's* model for cost, on this pool's instance.
+            let model = if req_model == key.model {
+                d.model.clone()
+            } else {
+                LatencyModel::from_config(&self.cfg, req_model, key.instance)
+            };
+            // Service time: idle-utilisation term α_i of Eq. 8 — base
+            // latency inflated by co-tenant background only. Load-driven
+            // inflation emerges from the queue (see module docs).
+            let bg = (model.background / model.r_max).powf(model.gamma);
+            let mut svc = model.base_latency() * (1.0 + bg);
+            // Lognormal measurement noise (mean-one).
+            svc *= self
+                .rng
+                .lognormal(-SERVICE_SIGMA * SERVICE_SIGMA / 2.0, SERVICE_SIGMA);
+            // ... monolithic context-switch penalty (Fig 4).
+            if self.arch == Architecture::Monolithic {
+                let distinct = d.inflight_models.values().filter(|&&c| c > 0).count();
+                if distinct > 1 {
+                    svc *= 1.0 + MONO_CTX_PENALTY * (distinct - 1) as f64;
+                }
+            }
+
+            // Network RTT with 10 % jitter, added at completion.
+            let rtt = model.rtt * (0.9 + 0.2 * self.rng.uniform());
+
+            let (arrived, quality) = self.req_quality[&req.id];
+            let home = self.router.home(req_model);
+            let token = self.dispatch_seq;
+            self.dispatch_seq += 1;
+            self.live_tokens.insert(token);
+            self.in_service
+                .entry((pool, pod_id))
+                .or_default()
+                .push((req.id, token));
+            self.events.push(
+                now + svc,
+                Event::ServiceComplete {
+                    dep: pool,
+                    pod_id,
+                    req_id: req.id,
+                    token,
+                    arrived,
+                    rtt,
+                    quality,
+                    offloaded: self.pool_of(home) != pool,
+                },
+            );
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn on_complete(
+        &mut self,
+        now: SimTime,
+        pool: usize,
+        pod_id: u64,
+        req_id: u64,
+        token: u64,
+        arrived: SimTime,
+        rtt: f64,
+        quality: QualityClass,
+        offloaded: bool,
+    ) {
+        if !self.live_tokens.remove(&token) {
+            // Stale completion: the serving pod crashed mid-service and
+            // the request was re-queued. Nothing to record.
+            return;
+        }
+        if let Some(list) = self.in_service.get_mut(&(pool, pod_id)) {
+            list.retain(|&(_, t)| t != token);
+        }
+        let d = &mut self.deps[pool];
+        if let Some(pod) = d.dep.pods.iter_mut().find(|p| p.id == pod_id) {
+            pod.in_flight = pod.in_flight.saturating_sub(1);
+        }
+        let (req_model, _) = self.cfg.model_for_quality(quality).expect("model");
+        if let Some(c) = d.inflight_models.get_mut(&req_model) {
+            *c = c.saturating_sub(1);
+        }
+        let finished = now + rtt;
+        let latency = finished - arrived;
+        d.window_hist.record(latency);
+        self.req_quality.remove(&req_id);
+        if arrived >= self.scenario.warmup {
+            self.completed.push(CompletedRequest {
+                id: req_id,
+                arrived,
+                finished,
+                quality,
+                offloaded,
+            });
+        }
+        // Pod freed → dispatch next waiting request; also progress drains.
+        self.account_replicas(now);
+        self.deps[pool].dep.tick(now);
+        self.try_dispatch(now, pool);
+    }
+
+    fn on_control_tick(&mut self, now: SimTime) {
+        self.refresh_state(now);
+        if let Some(scaler) = self.autoscaler.as_mut() {
+            // PM-HPA consumes the router's EWMA rates (the predictive
+            // signal); the baseline ignores λ and reads scraped latency.
+            let lambda: Vec<f64> = (0..self.cfg.models.len())
+                .map(|m| self.router.ewma_rate(m))
+                .collect();
+            scaler.publish(now, &self.state, &mut self.metrics, &lambda);
+        }
+        // Progress pod lifecycles every control tick.
+        for k in 0..self.deps.len() {
+            self.account_replicas(now);
+            self.deps[k].dep.tick(now);
+            self.try_dispatch(now, k);
+        }
+    }
+
+    fn on_hpa_tick(&mut self, now: SimTime) {
+        if self.frozen_layout || !self.hpa.due(now) {
+            return;
+        }
+        self.account_replicas(now);
+        let mut deployments: Vec<&mut Deployment> =
+            self.deps.iter_mut().map(|d| &mut d.dep).collect();
+        let changes = self
+            .hpa
+            .reconcile_refs(&mut deployments, &self.metrics, now);
+        for (_, delta) in changes {
+            if delta > 0 {
+                self.scale_outs += delta as u64;
+            } else {
+                self.scale_ins += (-delta) as u64;
+            }
+        }
+        // Schedule pod-ready ticks after startup lag so newly started
+        // replicas begin draining queues the moment they come up.
+        for k in 0..self.deps.len() {
+            self.events.push(
+                now + self.cfg.cluster.pod_startup + 1e-6,
+                Event::PodTick { dep: k },
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    fn quick(lambda: f64, policy: Policy, n0: u32, seed: u64) -> SimResult {
+        let scenario = ScenarioConfig::poisson(lambda, seed)
+            .with_duration(120.0, 10.0)
+            .with_replicas(n0);
+        Simulation::new(&cfg(), &scenario, policy, Architecture::Microservice).run()
+    }
+
+    #[test]
+    fn light_load_latency_near_base() {
+        let r = quick(1.0, Policy::Static, 2, 1);
+        let s = r.summary();
+        assert!(s.count > 50, "count={}", s.count);
+        // YOLOv5m base ≈ 0.73 s (+contention, +noise): mean well under τ.
+        assert!(s.mean > 0.5 && s.mean < 1.6, "mean={}", s.mean);
+    }
+
+    #[test]
+    fn static_overload_explodes() {
+        // Table IV cell (λ=2, N=1): far beyond one replica's μ≈1.37.
+        let r = quick(2.0, Policy::Static, 1, 2);
+        let s = r.summary();
+        assert!(
+            s.mean > 3.0 || r.completion_rate() < 0.9,
+            "mean={} completion={}",
+            s.mean,
+            r.completion_rate()
+        );
+    }
+
+    #[test]
+    fn static_more_replicas_lower_latency() {
+        let r1 = quick(3.0, Policy::Static, 2, 3);
+        let r2 = quick(3.0, Policy::Static, 6, 3);
+        assert!(
+            r2.summary().mean < r1.summary().mean,
+            "n=6 {} !< n=2 {}",
+            r2.summary().mean,
+            r1.summary().mean
+        );
+    }
+
+    #[test]
+    fn laimr_beats_baseline_p99_under_burst() {
+        let scen = |seed| {
+            ScenarioConfig::bursty(4.0, seed)
+                .with_duration(240.0, 20.0)
+                .with_replicas(2)
+        };
+        // Average over a few seeds to avoid flakiness.
+        let (mut la_sum, mut bl_sum) = (0.0, 0.0);
+        for seed in [11, 12, 13] {
+            let la = Simulation::new(&cfg(), &scen(seed), Policy::LaImr, Architecture::Microservice)
+                .run();
+            let bl = Simulation::new(
+                &cfg(),
+                &scen(seed),
+                Policy::Baseline,
+                Architecture::Microservice,
+            )
+            .run();
+            la_sum += la.summary().p99;
+            bl_sum += bl.summary().p99;
+        }
+        assert!(
+            la_sum < bl_sum,
+            "LA-IMR mean-P99 {} !< baseline {}",
+            la_sum / 3.0,
+            bl_sum / 3.0
+        );
+    }
+
+    #[test]
+    fn laimr_scales_and_offloads() {
+        let scenario = ScenarioConfig::bursty(5.0, 7)
+            .with_duration(180.0, 10.0)
+            .with_replicas(1);
+        let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert!(r.scale_outs > 0, "no scale-outs");
+        assert!(r.offload_share() > 0.0, "never offloaded");
+        assert!(r.peak_replicas > 1);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = quick(3.0, Policy::LaImr, 2, 42);
+        let b = quick(3.0, Policy::LaImr, 2, 42);
+        assert_eq!(a.summary().count, b.summary().count);
+        assert_eq!(a.summary().p99, b.summary().p99);
+    }
+
+    #[test]
+    fn monolithic_slower_than_microservice() {
+        // Fig 4: mixed traffic across models, shared monolithic pool pays
+        // the context-switch penalty.
+        let mut scenario = ScenarioConfig::poisson(4.0, 5)
+            .with_duration(150.0, 10.0)
+            .with_replicas(4);
+        scenario.quality_mix = [0.3, 0.5, 0.2];
+        let micro = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Microservice)
+            .run();
+        let mono = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Monolithic)
+            .run();
+        assert!(
+            mono.summary().p95 > micro.summary().p95,
+            "mono p95 {} !> micro p95 {}",
+            mono.summary().p95,
+            micro.summary().p95
+        );
+    }
+
+    #[test]
+    fn completion_rate_high_when_stable() {
+        let r = quick(2.0, Policy::LaImr, 4, 9);
+        assert!(r.completion_rate() > 0.95, "rate={}", r.completion_rate());
+    }
+}

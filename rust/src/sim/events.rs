@@ -1,0 +1,144 @@
+//! Event queue: a binary min-heap of timed events with stable FIFO
+//! ordering for ties (sequence numbers), the standard DES core.
+
+use crate::config::QualityClass;
+use crate::SimTime;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Everything that can happen in the simulation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A request arrives at the front door (router / static dispatcher).
+    Arrival { id: u64, quality: QualityClass },
+    /// A request finishes service on (deployment, pod).
+    ServiceComplete {
+        dep: usize,
+        pod_id: u64,
+        req_id: u64,
+        /// Dispatch token: stale completions (pod crashed mid-service)
+        /// are swallowed when the token is no longer live.
+        token: u64,
+        /// Request arrival time (for end-to-end latency accounting).
+        arrived: SimTime,
+        /// Network RTT to add on top of completion.
+        rtt: f64,
+        quality: QualityClass,
+        offloaded: bool,
+    },
+    /// HPA reconcile tick (every 5 s).
+    HpaTick,
+    /// Prometheus scrape tick.
+    ScrapeTick,
+    /// Autoscaler publish + state refresh tick (every 1 s).
+    ControlTick,
+    /// A pod may have become Ready — progress lifecycles and dispatch.
+    PodTick { dep: usize },
+    /// Fault injection: a random ready pod of this pool crashes, losing
+    /// its in-flight request (which re-enters the front door).
+    PodCrash { dep: usize },
+}
+
+/// An event scheduled at a time, ordered for a min-heap.
+#[derive(Debug, Clone)]
+pub struct TimedEvent {
+    pub at: SimTime,
+    pub seq: u64,
+    pub event: Event,
+}
+
+impl PartialEq for TimedEvent {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for TimedEvent {}
+
+impl Ord for TimedEvent {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for TimedEvent {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Min-heap event queue with insertion-order tie-breaking.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<TimedEvent>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: SimTime, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(TimedEvent { at, seq, event });
+    }
+
+    pub fn pop(&mut self) -> Option<TimedEvent> {
+        self.heap.pop()
+    }
+
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|e| e.at)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(3.0, Event::HpaTick);
+        q.push(1.0, Event::ScrapeTick);
+        q.push(2.0, Event::ControlTick);
+        assert_eq!(q.pop().unwrap().at, 1.0);
+        assert_eq!(q.pop().unwrap().at, 2.0);
+        assert_eq!(q.pop().unwrap().at, 3.0);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_broken_by_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(1.0, Event::HpaTick);
+        q.push(1.0, Event::ScrapeTick);
+        q.push(1.0, Event::ControlTick);
+        assert_eq!(q.pop().unwrap().event, Event::HpaTick);
+        assert_eq!(q.pop().unwrap().event, Event::ScrapeTick);
+        assert_eq!(q.pop().unwrap().event, Event::ControlTick);
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(5.0, Event::HpaTick);
+        q.push(2.0, Event::HpaTick);
+        assert_eq!(q.peek_time(), Some(2.0));
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -1,0 +1,14 @@
+//! Discrete-event simulator for the edge-cloud continuum.
+//!
+//! Drives the *same* coordinator, autoscaler, and cluster code as the
+//! real-time serving path, but on a virtual clock — so every paper table
+//! regenerates in seconds instead of cluster-hours, with identical control
+//! logic under test (DESIGN.md §6 "one coordinator, two clocks").
+
+mod engine;
+mod events;
+mod result;
+
+pub use engine::{Architecture, Policy, Simulation};
+pub use events::{Event, EventQueue, TimedEvent};
+pub use result::{CompletedRequest, SimResult};

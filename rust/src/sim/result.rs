@@ -1,0 +1,137 @@
+//! Simulation results and per-series summaries.
+
+use crate::config::QualityClass;
+use crate::telemetry::{box_stats, BoxStats, Summary};
+use crate::SimTime;
+
+/// One finished request.
+#[derive(Debug, Clone, Copy)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub arrived: SimTime,
+    pub finished: SimTime,
+    pub quality: QualityClass,
+    /// Served away from its home pool.
+    pub offloaded: bool,
+}
+
+impl CompletedRequest {
+    pub fn latency(&self) -> f64 {
+        self.finished - self.arrived
+    }
+}
+
+/// Aggregated outcome of one simulation run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub scenario_name: String,
+    pub policy_name: String,
+    /// Completions after warm-up.
+    pub completed: Vec<CompletedRequest>,
+    /// Requests generated (incl. warm-up).
+    pub generated: usize,
+    /// Requests still in queues / in flight at the horizon.
+    pub unfinished: usize,
+    /// Scale-out actuations observed.
+    pub scale_outs: u64,
+    /// Scale-in actuations observed.
+    pub scale_ins: u64,
+    /// Max replicas reached on the home pool of the dominant model.
+    pub peak_replicas: u32,
+    /// Mean replicas (time-weighted) on that pool — cost proxy.
+    pub mean_replicas: f64,
+    /// Pod crashes injected (fault-injection scenarios).
+    pub crashes: u64,
+}
+
+impl SimResult {
+    /// All post-warm-up latencies.
+    pub fn latencies(&self) -> Vec<f64> {
+        self.completed.iter().map(|c| c.latency()).collect()
+    }
+
+    /// Latency summary over all completions.
+    pub fn summary(&self) -> Summary {
+        Summary::from(&self.latencies())
+    }
+
+    /// Box-plot statistics (Fig 8).
+    pub fn box_stats(&self) -> BoxStats {
+        box_stats(&self.latencies())
+    }
+
+    /// Share of requests deflected off their home pool.
+    pub fn offload_share(&self) -> f64 {
+        if self.completed.is_empty() {
+            return 0.0;
+        }
+        self.completed.iter().filter(|c| c.offloaded).count() as f64
+            / self.completed.len() as f64
+    }
+
+    /// Fraction of generated requests that completed in time.
+    pub fn completion_rate(&self) -> f64 {
+        if self.generated == 0 {
+            return 1.0;
+        }
+        1.0 - self.unfinished as f64 / self.generated as f64
+    }
+
+    /// Summary restricted to one quality lane.
+    pub fn summary_for(&self, q: QualityClass) -> Summary {
+        let xs: Vec<f64> = self
+            .completed
+            .iter()
+            .filter(|c| c.quality == q)
+            .map(|c| c.latency())
+            .collect();
+        Summary::from(&xs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(latencies: &[f64]) -> SimResult {
+        SimResult {
+            scenario_name: "t".into(),
+            policy_name: "t".into(),
+            completed: latencies
+                .iter()
+                .enumerate()
+                .map(|(k, &l)| CompletedRequest {
+                    id: k as u64,
+                    arrived: 0.0,
+                    finished: l,
+                    quality: QualityClass::Balanced,
+                    offloaded: k % 2 == 0,
+                })
+                .collect(),
+            generated: latencies.len() + 2,
+            unfinished: 2,
+            scale_outs: 1,
+            scale_ins: 0,
+            peak_replicas: 3,
+            mean_replicas: 2.0,
+            crashes: 0,
+        }
+    }
+
+    #[test]
+    fn summary_and_shares() {
+        let r = mk(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.summary().count, 4);
+        assert!((r.offload_share() - 0.5).abs() < 1e-12);
+        assert!((r.completion_rate() - (1.0 - 2.0 / 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_quality_summary() {
+        let mut r = mk(&[1.0, 2.0]);
+        r.completed[0].quality = QualityClass::LowLatency;
+        assert_eq!(r.summary_for(QualityClass::LowLatency).count, 1);
+        assert_eq!(r.summary_for(QualityClass::Balanced).count, 1);
+        assert_eq!(r.summary_for(QualityClass::Precise).count, 0);
+    }
+}

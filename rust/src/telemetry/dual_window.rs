@@ -1,0 +1,141 @@
+//! Dual-window arrival-rate estimator — the paper's §VI future-work item
+//! ("combining fast- and slow-window arrival-rate estimators to catch
+//! sudden spikes without destabilising steady traffic"), implemented as a
+//! drop-in extension of `SlidingRate`.
+//!
+//! The *fast* window (default 1 s) reacts to spikes within a second; the
+//! *slow* window (default 10 s) tracks sustained demand. The controller
+//! reads:
+//!   * [`DualWindowRate::spike`]   — max(fast, slow): never underestimates
+//!     an onset, so offload triggers fire on the first burst second;
+//!   * [`DualWindowRate::steady`]  — the slow rate: a scale-in signal that
+//!     ignores momentary lulls inside bursty traffic;
+//!   * [`DualWindowRate::burstiness`] — fast/slow ratio, a cheap online
+//!     burst detector (≫1 during a burst onset, ≪1 in the trailing lull).
+
+use super::sliding::SlidingRate;
+use crate::SimTime;
+
+/// Fast + slow sliding windows over the same arrival stream.
+#[derive(Debug, Clone)]
+pub struct DualWindowRate {
+    fast: SlidingRate,
+    slow: SlidingRate,
+}
+
+impl DualWindowRate {
+    pub fn new(fast_window: f64, slow_window: f64) -> Self {
+        assert!(
+            fast_window < slow_window,
+            "fast window must be shorter than slow"
+        );
+        Self {
+            fast: SlidingRate::new(fast_window),
+            slow: SlidingRate::new(slow_window),
+        }
+    }
+
+    /// Paper-suggested defaults: 1 s fast (Algorithm 1's window), 10 s slow.
+    pub fn with_defaults() -> Self {
+        Self::new(1.0, 10.0)
+    }
+
+    /// Record an arrival in both windows; returns (fast, slow) rates.
+    pub fn on_arrival(&mut self, now: SimTime) -> (f64, f64) {
+        (self.fast.on_arrival(now), self.slow.on_arrival(now))
+    }
+
+    /// Spike-sensitive rate: max of the two estimators.
+    pub fn spike(&mut self, now: SimTime) -> f64 {
+        self.fast.rate(now).max(self.slow.rate(now))
+    }
+
+    /// Stability-oriented rate: the slow window only.
+    pub fn steady(&mut self, now: SimTime) -> f64 {
+        self.slow.rate(now)
+    }
+
+    /// fast/slow ratio (1.0 when both are empty).
+    pub fn burstiness(&mut self, now: SimTime) -> f64 {
+        let slow = self.slow.rate(now);
+        if slow <= 0.0 {
+            return 1.0;
+        }
+        self.fast.rate(now) / slow
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_stream_agree() {
+        let mut d = DualWindowRate::new(1.0, 10.0);
+        // 4 req/s for 20 s: both windows converge to 4.
+        for k in 0..80 {
+            d.on_arrival(k as f64 * 0.25);
+        }
+        let now = 19.95;
+        assert!((d.fast.rate(now) - 4.0).abs() <= 1.0);
+        assert!((d.steady(now) - 4.0).abs() <= 0.5);
+        assert!((d.burstiness(now) - 1.0).abs() < 0.3);
+    }
+
+    #[test]
+    fn spike_detected_by_fast_window() {
+        let mut d = DualWindowRate::new(1.0, 10.0);
+        // Quiet 1 req/s for 10 s, then a 20-request burst in 0.5 s.
+        for k in 0..10 {
+            d.on_arrival(k as f64);
+        }
+        for k in 0..20 {
+            d.on_arrival(10.0 + k as f64 * 0.025);
+        }
+        let now = 10.5;
+        // Fast window sees the burst at full strength...
+        assert!(d.fast.rate(now) >= 20.0, "fast={}", d.fast.rate(now));
+        // ...the slow window dilutes it...
+        assert!(d.steady(now) < 4.0, "slow={}", d.steady(now));
+        // ...so spike() ≫ steady() and burstiness flags the onset.
+        assert!(d.spike(now) > 5.0 * d.steady(now));
+        assert!(d.burstiness(now) > 5.0);
+    }
+
+    #[test]
+    fn lull_inside_bursty_traffic_does_not_collapse_steady() {
+        let mut d = DualWindowRate::new(1.0, 10.0);
+        // Bursts of 8 every 2 s for 10 s → mean 4 req/s.
+        for burst in 0..5 {
+            let t0 = burst as f64 * 2.0;
+            for k in 0..8 {
+                d.on_arrival(t0 + k as f64 * 0.05);
+            }
+        }
+        // 1.5 s into the last inter-burst gap: fast window is empty,
+        // but the slow estimate still carries the sustained demand.
+        let now = 9.9;
+        assert_eq!(d.fast.rate(now), 0.0);
+        assert!(d.steady(now) >= 3.0, "steady={}", d.steady(now));
+        // A scale-in decision on steady() would (correctly) not fire a
+        // drastic downscale, while fast() alone would suggest idle.
+    }
+
+    #[test]
+    fn spike_never_below_either_window() {
+        let mut d = DualWindowRate::with_defaults();
+        for k in 0..40 {
+            d.on_arrival(k as f64 * 0.1);
+        }
+        let now = 3.95;
+        let s = d.spike(now);
+        assert!(s >= d.fast.rate(now));
+        assert!(s >= d.steady(now));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_inverted_windows() {
+        DualWindowRate::new(5.0, 1.0);
+    }
+}

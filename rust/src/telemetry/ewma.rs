@@ -1,0 +1,96 @@
+//! EWMA accumulator for the sustained arrival rate λ_m^accum
+//! (Algorithm 1, line 15: λ_accum ← α·λ_accum + (1−α)·λ).
+//!
+//! The EWMA drives *replica scaling and bulk offload* decisions — slow,
+//! stable control — while the raw sliding rate drives per-request
+//! mitigation (fast control). Separating the two is what lets LA-IMR react
+//! instantly without oscillating (§IV-C).
+
+/// Exponentially-weighted moving average.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` is the *retention* weight of the previous value, exactly as
+    /// in Algorithm 1 (paper uses α = 0.8).
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..1.0).contains(&alpha), "alpha must be in [0,1)");
+        Self { alpha, value: None }
+    }
+
+    /// Fold in an observation; returns the new smoothed value.
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x, // seed with the first observation
+            Some(prev) => self.alpha * prev + (1.0 - self.alpha) * x,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn value(&self) -> f64 {
+        self.value.unwrap_or(0.0)
+    }
+
+    pub fn is_seeded(&self) -> bool {
+        self.value.is_some()
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_with_first_observation() {
+        let mut e = Ewma::new(0.8);
+        assert_eq!(e.update(5.0), 5.0);
+    }
+
+    #[test]
+    fn converges_to_constant_input() {
+        let mut e = Ewma::new(0.8);
+        for _ in 0..200 {
+            e.update(3.0);
+        }
+        assert!((e.value() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smooths_spikes() {
+        let mut e = Ewma::new(0.8);
+        e.update(1.0);
+        let after_spike = e.update(100.0);
+        // One spike moves the estimate by (1-α)·Δ only.
+        assert!((after_spike - (0.8 * 1.0 + 0.2 * 100.0)).abs() < 1e-9);
+        assert!(after_spike < 25.0);
+    }
+
+    #[test]
+    fn alpha_zero_tracks_input_exactly() {
+        let mut e = Ewma::new(0.0);
+        e.update(1.0);
+        assert_eq!(e.update(42.0), 42.0);
+    }
+
+    #[test]
+    fn monotone_between_prev_and_obs() {
+        let mut e = Ewma::new(0.8);
+        e.update(2.0);
+        let v = e.update(10.0);
+        assert!(v > 2.0 && v < 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_alpha_one() {
+        Ewma::new(1.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Log-bucketed streaming latency histogram: O(1) record, O(buckets)
+//! quantile, bounded error set by the bucket growth factor.
+//!
+//! Used on the serving hot path where storing every sample is not
+//! acceptable; the offline report path (`telemetry::stats`) uses exact
+//! percentiles instead.
+
+/// Streaming histogram over (lo, hi] with geometrically-growing buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    lo: f64,
+    /// log(growth) — bucket b covers lo·g^b .. lo·g^(b+1).
+    log_growth: f64,
+    counts: Vec<u64>,
+    underflow: u64,
+    total: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl LatencyHistogram {
+    /// `lo`: smallest resolvable latency; `hi`: largest before clamping;
+    /// `growth`: per-bucket factor (1.01 ⇒ ≤0.5 % quantile error).
+    pub fn new(lo: f64, hi: f64, growth: f64) -> Self {
+        assert!(lo > 0.0 && hi > lo && growth > 1.0);
+        let n = ((hi / lo).ln() / growth.ln()).ceil() as usize + 1;
+        Self {
+            lo,
+            log_growth: growth.ln(),
+            counts: vec![0; n],
+            underflow: 0,
+            total: 0,
+            sum: 0.0,
+            max: 0.0,
+        }
+    }
+
+    /// Defaults tuned for inference latencies: 1 ms .. 120 s, 1 % buckets.
+    pub fn for_latency() -> Self {
+        Self::new(1e-3, 120.0, 1.01)
+    }
+
+    #[inline]
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+        if x < self.lo {
+            self.underflow += 1;
+            return;
+        }
+        let b = ((x / self.lo).ln() / self.log_growth) as usize;
+        let b = b.min(self.counts.len() - 1);
+        self.counts[b] += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// q-quantile (q in [0,1]), upper bucket edge — conservative for SLOs.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target {
+            return self.lo;
+        }
+        for (b, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.lo * ((b + 1) as f64 * self.log_growth).exp();
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn reset(&mut self) {
+        self.counts.iter_mut().for_each(|c| *c = 0);
+        self.underflow = 0;
+        self.total = 0;
+        self.sum = 0.0;
+        self.max = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_error_bounded_by_growth() {
+        let mut h = LatencyHistogram::new(1e-3, 100.0, 1.01);
+        // Uniform grid 0.1 .. 10 s.
+        let n = 10_000;
+        for k in 0..n {
+            h.record(0.1 + 9.9 * k as f64 / n as f64);
+        }
+        let exact_p99 = 0.1 + 9.9 * 0.99;
+        let got = h.quantile(0.99);
+        assert!(
+            (got - exact_p99).abs() / exact_p99 < 0.02,
+            "got={got} want≈{exact_p99}"
+        );
+    }
+
+    #[test]
+    fn mean_and_count() {
+        let mut h = LatencyHistogram::for_latency();
+        for x in [1.0, 2.0, 3.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 3);
+        assert!((h.mean() - 2.0).abs() < 1e-12);
+        assert_eq!(h.max(), 3.0);
+    }
+
+    #[test]
+    fn underflow_counted() {
+        let mut h = LatencyHistogram::new(0.01, 10.0, 1.05);
+        h.record(0.001);
+        h.record(5.0);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.25) <= 0.011);
+    }
+
+    #[test]
+    fn overflow_clamps_to_last_bucket() {
+        let mut h = LatencyHistogram::new(0.01, 1.0, 1.05);
+        h.record(50.0);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(1.0) >= 1.0);
+    }
+
+    #[test]
+    fn empty_quantile_zero() {
+        let h = LatencyHistogram::for_latency();
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn monotone_quantiles() {
+        let mut h = LatencyHistogram::for_latency();
+        let mut r = crate::rng::Rng::new(5);
+        for _ in 0..5000 {
+            h.record(r.lognormal(0.0, 1.0));
+        }
+        assert!(h.p50() <= h.p95());
+        assert!(h.p95() <= h.p99());
+        assert!(h.p99() <= h.max() * 1.01 + 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut h = LatencyHistogram::for_latency();
+        h.record(1.0);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0.0);
+    }
+}

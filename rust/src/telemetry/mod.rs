@@ -1,0 +1,19 @@
+//! In-memory telemetry — the "IMR" in LA-IMR.
+//!
+//! All routing state (sliding-window arrival rate, EWMA-smoothed rate,
+//! latency histograms, queue depths) is kept in process memory and updated
+//! on every request, so a routing decision costs microseconds, not a
+//! round-trip to an external cache (paper §I: "no external cache (e.g.,
+//! Redis) is involved").
+
+mod dual_window;
+mod ewma;
+mod histogram;
+mod sliding;
+mod stats;
+
+pub use dual_window::DualWindowRate;
+pub use ewma::Ewma;
+pub use histogram::LatencyHistogram;
+pub use sliding::SlidingRate;
+pub use stats::{box_stats, mean, percentile, std_dev, BoxStats, Summary};

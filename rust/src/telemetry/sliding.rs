@@ -1,0 +1,118 @@
+//! 1-second sliding-window arrival-rate estimator — Algorithm 1's
+//! `SLIDINGRATE`: a deque of arrival timestamps; arrivals older than the
+//! window are popped from the front, and the rate is the deque length.
+
+use crate::SimTime;
+use std::collections::VecDeque;
+
+/// Sliding-window rate estimator (Algorithm 1, lines 1–6).
+///
+/// Amortised O(1) per event; worst-case pop chain is bounded by the number
+/// of arrivals inside one window.
+#[derive(Debug, Clone)]
+pub struct SlidingRate {
+    window: f64,
+    arrivals: VecDeque<SimTime>,
+}
+
+impl SlidingRate {
+    pub fn new(window: f64) -> Self {
+        assert!(window > 0.0, "window must be positive");
+        Self {
+            window,
+            arrivals: VecDeque::with_capacity(64),
+        }
+    }
+
+    /// Record an arrival and return the instantaneous rate λ_m [req/s].
+    pub fn on_arrival(&mut self, now: SimTime) -> f64 {
+        self.evict(now);
+        self.arrivals.push_back(now);
+        self.rate_unchecked()
+    }
+
+    /// Current rate without recording an arrival (evicts stale entries).
+    pub fn rate(&mut self, now: SimTime) -> f64 {
+        self.evict(now);
+        self.rate_unchecked()
+    }
+
+    fn rate_unchecked(&self) -> f64 {
+        self.arrivals.len() as f64 / self.window
+    }
+
+    fn evict(&mut self, now: SimTime) {
+        while let Some(&front) = self.arrivals.front() {
+            if now - front > self.window {
+                self.arrivals.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_within_window() {
+        let mut s = SlidingRate::new(1.0);
+        assert_eq!(s.on_arrival(0.0), 1.0);
+        assert_eq!(s.on_arrival(0.5), 2.0);
+        assert_eq!(s.on_arrival(0.9), 3.0);
+    }
+
+    #[test]
+    fn evicts_old_arrivals() {
+        let mut s = SlidingRate::new(1.0);
+        s.on_arrival(0.0);
+        s.on_arrival(0.8);
+        // t=1.6: the 0.0 arrival is >1 s old, 0.8 is not.
+        assert_eq!(s.on_arrival(1.6), 2.0);
+        // t=3.0: everything but this arrival is stale.
+        assert_eq!(s.on_arrival(3.0), 1.0);
+    }
+
+    #[test]
+    fn boundary_exactly_window_old_is_kept() {
+        // Algorithm 1 pops while (now - front) > 1, so == 1 s stays.
+        let mut s = SlidingRate::new(1.0);
+        s.on_arrival(0.0);
+        assert_eq!(s.rate(1.0), 1.0);
+        assert_eq!(s.rate(1.0001), 0.0);
+    }
+
+    #[test]
+    fn rate_scales_with_window() {
+        let mut s = SlidingRate::new(2.0);
+        s.on_arrival(0.0);
+        s.on_arrival(0.1);
+        s.on_arrival(0.2);
+        s.on_arrival(0.3);
+        // 4 arrivals in a 2 s window = 2 req/s.
+        assert_eq!(s.rate(0.3), 2.0);
+    }
+
+    #[test]
+    fn steady_stream_estimates_true_rate() {
+        let mut s = SlidingRate::new(1.0);
+        let mut last = 0.0;
+        // 10 req/s for 5 s.
+        for k in 0..50 {
+            let t = k as f64 * 0.1;
+            last = s.on_arrival(t);
+            let _ = t;
+        }
+        assert!((last - 10.0).abs() <= 1.0, "rate={last}");
+    }
+}

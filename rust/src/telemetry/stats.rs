@@ -1,0 +1,213 @@
+//! Exact offline statistics for the report path: percentiles (linear
+//! interpolation, matching numpy's default), box-plot stats (Fig 8), and
+//! mean/σ summaries (Table VI).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator); 0 for n < 2.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Exact percentile with linear interpolation (numpy 'linear' method).
+/// `p` in [0, 100]. Input need not be sorted.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, p)
+}
+
+/// Percentile over already-sorted data (ascending).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = (p.clamp(0.0, 100.0) / 100.0) * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Summary statistics for one latency series (one Table VI cell pair).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn from(xs: &[f64]) -> Self {
+        if xs.is_empty() {
+            return Summary {
+                count: 0,
+                mean: 0.0,
+                std: 0.0,
+                p50: 0.0,
+                p95: 0.0,
+                p99: 0.0,
+                max: 0.0,
+            };
+        }
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Summary {
+            count: v.len(),
+            mean: mean(&v),
+            std: std_dev(&v),
+            p50: percentile_sorted(&v, 50.0),
+            p95: percentile_sorted(&v, 95.0),
+            p99: percentile_sorted(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Box-plot statistics (Fig 8): quartiles, IQR, Tukey whiskers, outliers.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoxStats {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub iqr: f64,
+    /// Whiskers at the most extreme points within 1.5·IQR of the box.
+    pub whisker_lo: f64,
+    pub whisker_hi: f64,
+    pub outliers: Vec<f64>,
+    pub max_outlier: f64,
+}
+
+/// Tukey box stats over a latency series.
+pub fn box_stats(xs: &[f64]) -> BoxStats {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q1 = percentile_sorted(&v, 25.0);
+    let median = percentile_sorted(&v, 50.0);
+    let q3 = percentile_sorted(&v, 75.0);
+    let iqr = q3 - q1;
+    let lo_fence = q1 - 1.5 * iqr;
+    let hi_fence = q3 + 1.5 * iqr;
+    let whisker_lo = v
+        .iter()
+        .copied()
+        .find(|&x| x >= lo_fence)
+        .unwrap_or(q1);
+    let whisker_hi = v
+        .iter()
+        .rev()
+        .copied()
+        .find(|&x| x <= hi_fence)
+        .unwrap_or(q3);
+    let outliers: Vec<f64> = v
+        .iter()
+        .copied()
+        .filter(|&x| x < lo_fence || x > hi_fence)
+        .collect();
+    let max_outlier = outliers.iter().copied().fold(f64::NAN, f64::max);
+    let max_outlier = if max_outlier.is_nan() {
+        whisker_hi
+    } else {
+        max_outlier
+    };
+    BoxStats {
+        q1,
+        median,
+        q3,
+        iqr,
+        whisker_lo,
+        whisker_hi,
+        outliers,
+        max_outlier,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        // Sample std of this classic series is ~2.138.
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn percentile_interpolates_like_numpy() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_consistency() {
+        let xs: Vec<f64> = (1..=100).map(|k| k as f64).collect();
+        let s = Summary::from(&xs);
+        assert_eq!(s.count, 100);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.p99 - 99.01).abs() < 1e-9);
+        assert_eq!(s.max, 100.0);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99);
+    }
+
+    #[test]
+    fn box_stats_no_outliers() {
+        let xs: Vec<f64> = (1..=9).map(|k| k as f64).collect();
+        let b = box_stats(&xs);
+        assert!((b.median - 5.0).abs() < 1e-12);
+        assert!(b.outliers.is_empty());
+        assert_eq!(b.whisker_lo, 1.0);
+        assert_eq!(b.whisker_hi, 9.0);
+        assert_eq!(b.max_outlier, 9.0);
+    }
+
+    #[test]
+    fn box_stats_detects_outlier() {
+        let mut xs: Vec<f64> = (1..=20).map(|k| k as f64 * 0.1).collect();
+        xs.push(50.0); // extreme spike
+        let b = box_stats(&xs);
+        assert_eq!(b.outliers, vec![50.0]);
+        assert_eq!(b.max_outlier, 50.0);
+        assert!(b.whisker_hi < 50.0);
+    }
+
+    #[test]
+    fn empty_inputs_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let s = Summary::from(&[]);
+        assert_eq!(s.count, 0);
+    }
+}

@@ -1,0 +1,133 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with mean / P50 / P99 per-op reporting, plus a
+//! `black_box` to defeat constant folding. Used by every `cargo bench`
+//! target under rust/benches/.
+
+use std::hint::black_box as std_black_box;
+use std::time::Instant;
+
+/// Opaque value barrier (re-export for benches).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+}
+
+impl Measurement {
+    pub fn report(&self) {
+        println!(
+            "{:<44} {:>10} iters   mean {:>12}   p50 {:>12}   p99 {:>12}   min {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            fmt_ns(self.min_ns),
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: auto-chooses batch size so each sample is ≥ ~1 ms,
+/// collects ≥ `samples` samples, reports per-op statistics.
+pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> Measurement {
+    // Warm-up + batch size calibration.
+    let mut batch = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        if dt >= 1e-3 || batch >= 1 << 24 {
+            break;
+        }
+        batch = (batch * 4).min(1 << 24);
+    }
+
+    let samples = samples.max(5);
+    let mut per_op: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        per_op.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    per_op.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = per_op.iter().sum::<f64>() / per_op.len() as f64;
+    let idx = |q: f64| ((per_op.len() - 1) as f64 * q).round() as usize;
+    let m = Measurement {
+        name: name.to_string(),
+        iters: batch * samples as u64,
+        mean_ns: mean,
+        p50_ns: per_op[idx(0.5)],
+        p99_ns: per_op[idx(0.99)],
+        min_ns: per_op[0],
+    };
+    m.report();
+    m
+}
+
+/// Time a single (possibly slow) run — for end-to-end scenario benches
+/// where one run is seconds of virtual workload.
+pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{name:<44} 1 run    {dt:.3} s");
+    (out, dt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_cheap_op() {
+        let mut x = 0u64;
+        let m = bench("noop-add", 5, || {
+            x = black_box(x.wrapping_add(1));
+        });
+        assert!(m.mean_ns > 0.0);
+        assert!(m.p50_ns <= m.p99_ns + 1e-9);
+        assert!(m.min_ns <= m.mean_ns);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn bench_once_returns_value() {
+        let (v, dt) = bench_once("const", || 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("µs"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser: `--flag value`, `--flag=value`, boolean
+//! switches, positionals, and generated usage text.
+
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    // `--` terminator: rest positional.
+                    positional.extend(it.by_ref());
+                    break;
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    flags.insert(name.to_string(), v);
+                } else {
+                    // Boolean switch.
+                    flags.insert(name.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    pub fn from_env() -> Result<Self, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        self.get_u64(name, default as u64).map(|v| v as usize)
+    }
+
+    pub fn get_u32(&self, name: &str, default: u32) -> Result<u32, String> {
+        self.get_u64(name, default as u64).map(|v| v as u32)
+    }
+
+    pub fn get_bool(&self, name: &str, default: bool) -> Result<bool, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(format!("--{name}: expected true/false, got '{v}'")),
+        }
+    }
+
+    pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flag_value_forms() {
+        let a = parse(&["--lambda", "4.5", "--policy=la-imr", "--bursty"]);
+        assert_eq!(a.get_f64("lambda", 0.0).unwrap(), 4.5);
+        assert_eq!(a.get_str("policy", ""), "la-imr");
+        assert!(a.get_bool("bursty", false).unwrap());
+    }
+
+    #[test]
+    fn positionals_and_subcommand() {
+        let a = parse(&["repro", "table4", "--seed", "7"]);
+        assert_eq!(a.positional(), &["repro", "table4"]);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.get_f64("lambda", 4.0).unwrap(), 4.0);
+        assert_eq!(a.get_str("policy", "la-imr"), "la-imr");
+        assert!(!a.get_bool("bursty", false).unwrap());
+    }
+
+    #[test]
+    fn bad_number_errors() {
+        let a = parse(&["--lambda", "abc"]);
+        assert!(a.get_f64("lambda", 0.0).is_err());
+    }
+
+    #[test]
+    fn boolean_switch_before_flag() {
+        let a = parse(&["--verbose", "--n", "3"]);
+        assert!(a.get_bool("verbose", false).unwrap());
+        assert_eq!(a.get_u64("n", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse(&["--x", "1", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["--not-a-flag"]);
+    }
+}

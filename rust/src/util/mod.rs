@@ -1,0 +1,9 @@
+//! In-tree utility substrates. The build environment is fully offline
+//! (only the `xla` crate's vendored tree is available), so the pieces a
+//! serving framework would normally pull from crates.io are implemented
+//! here: a JSON parser/serializer (config + artifact manifest), a CLI
+//! argument parser, and a micro-benchmark harness used by `cargo bench`.
+
+pub mod bench;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,252 @@
+//! Arrival-process generators for every `ArrivalKind` in the scenario
+//! config: Poisson, bounded-Pareto burst trains (paper §V-D), periodic,
+//! and step profiles.
+
+use crate::config::{ArrivalKind, QualityClass, ScenarioConfig};
+use crate::rng::Rng;
+use crate::SimTime;
+
+/// One generated request arrival.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Arrival {
+    pub at: SimTime,
+    pub quality: QualityClass,
+}
+
+/// Pre-materialised arrival stream for a scenario (sorted by time).
+///
+/// Materialising up front keeps the DES hot loop allocation-free and makes
+/// paired comparisons (LA-IMR vs baseline on *identical* arrivals) exact —
+/// the variance-reduction trick behind Table VI.
+#[derive(Debug)]
+pub struct ArrivalGenerator {
+    arrivals: Vec<Arrival>,
+}
+
+impl ArrivalGenerator {
+    /// Generate the full stream for `scenario`.
+    pub fn generate(scenario: &ScenarioConfig) -> Self {
+        let mut rng = Rng::new(scenario.seed);
+        let mut times: Vec<SimTime> = Vec::new();
+        match &scenario.arrivals {
+            ArrivalKind::Poisson { lambda } => {
+                let mut t = 0.0;
+                if *lambda > 0.0 {
+                    loop {
+                        t += rng.exp(*lambda);
+                        if t >= scenario.duration {
+                            break;
+                        }
+                        times.push(t);
+                    }
+                }
+            }
+            ArrivalKind::Periodic { rate } => {
+                if *rate > 0.0 {
+                    let period = 1.0 / rate;
+                    let mut t = period;
+                    while t < scenario.duration {
+                        times.push(t);
+                        t += period;
+                    }
+                }
+            }
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                intra_gap,
+            } => {
+                let mut t = 0.0;
+                if *burst_rate > 0.0 {
+                    loop {
+                        t += rng.exp(*burst_rate);
+                        if t >= scenario.duration {
+                            break;
+                        }
+                        let size = rng.bounded_pareto(*alpha, *lo, *hi).round() as usize;
+                        for k in 0..size.max(1) {
+                            let at = t + k as f64 * intra_gap;
+                            if at < scenario.duration {
+                                times.push(at);
+                            }
+                        }
+                    }
+                }
+            }
+            ArrivalKind::Steps { steps } => {
+                for (idx, &(start, rate)) in steps.iter().enumerate() {
+                    let end = steps
+                        .get(idx + 1)
+                        .map(|s| s.0)
+                        .unwrap_or(scenario.duration)
+                        .min(scenario.duration);
+                    if rate <= 0.0 {
+                        continue;
+                    }
+                    let mut t = start;
+                    loop {
+                        t += rng.exp(rate);
+                        if t >= end {
+                            break;
+                        }
+                        times.push(t);
+                    }
+                }
+            }
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        // Assign quality classes by the scenario mix, deterministically
+        // from the same seed stream.
+        let mix = scenario.mix();
+        let arrivals = times
+            .into_iter()
+            .map(|at| {
+                let u = rng.uniform();
+                let quality = if u < mix[0] {
+                    QualityClass::LowLatency
+                } else if u < mix[0] + mix[1] {
+                    QualityClass::Balanced
+                } else {
+                    QualityClass::Precise
+                };
+                Arrival { at, quality }
+            })
+            .collect();
+        ArrivalGenerator { arrivals }
+    }
+
+    pub fn arrivals(&self) -> &[Arrival] {
+        &self.arrivals
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Empirical mean rate of the generated stream [req/s].
+    pub fn empirical_rate(&self, duration: f64) -> f64 {
+        if duration <= 0.0 {
+            return 0.0;
+        }
+        self.arrivals.len() as f64 / duration
+    }
+
+    /// Peak 1-second-window rate — burstiness diagnostic.
+    pub fn peak_rate(&self) -> f64 {
+        let mut peak = 0usize;
+        let mut lo = 0usize;
+        for hi in 0..self.arrivals.len() {
+            while self.arrivals[hi].at - self.arrivals[lo].at > 1.0 {
+                lo += 1;
+            }
+            peak = peak.max(hi - lo + 1);
+        }
+        peak as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let s = ScenarioConfig::poisson(4.0, 7).with_duration(500.0, 0.0);
+        let g = ArrivalGenerator::generate(&s);
+        let rate = g.empirical_rate(500.0);
+        assert!((rate - 4.0).abs() < 0.3, "rate={rate}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let s = ScenarioConfig::poisson(3.0, 9);
+        let a = ArrivalGenerator::generate(&s);
+        let b = ArrivalGenerator::generate(&s);
+        assert_eq!(a.arrivals(), b.arrivals());
+        let c = ArrivalGenerator::generate(&ScenarioConfig::poisson(3.0, 10));
+        assert_ne!(a.arrivals(), c.arrivals());
+    }
+
+    #[test]
+    fn sorted_and_within_duration() {
+        let s = ScenarioConfig::bursty(4.0, 3).with_duration(120.0, 0.0);
+        let g = ArrivalGenerator::generate(&s);
+        let arr = g.arrivals();
+        assert!(arr.windows(2).all(|w| w[0].at <= w[1].at));
+        assert!(arr.iter().all(|a| a.at < 120.0));
+    }
+
+    #[test]
+    fn bursty_is_burstier_than_poisson() {
+        let sp = ScenarioConfig::poisson(4.0, 5).with_duration(300.0, 0.0);
+        let sb = ScenarioConfig::bursty(4.0, 5).with_duration(300.0, 0.0);
+        let p = ArrivalGenerator::generate(&sp);
+        let b = ArrivalGenerator::generate(&sb);
+        assert!(
+            b.peak_rate() > p.peak_rate(),
+            "bursty peak {} !> poisson peak {}",
+            b.peak_rate(),
+            p.peak_rate()
+        );
+    }
+
+    #[test]
+    fn quality_mix_respected() {
+        let mut s = ScenarioConfig::poisson(10.0, 21).with_duration(300.0, 0.0);
+        s.quality_mix = [0.5, 0.5, 0.0];
+        let g = ArrivalGenerator::generate(&s);
+        let n = g.len() as f64;
+        let low = g
+            .arrivals()
+            .iter()
+            .filter(|a| a.quality == QualityClass::LowLatency)
+            .count() as f64;
+        assert!((low / n - 0.5).abs() < 0.05, "low share={}", low / n);
+        assert!(g
+            .arrivals()
+            .iter()
+            .all(|a| a.quality != QualityClass::Precise));
+    }
+
+    #[test]
+    fn periodic_exact_count() {
+        let s = ScenarioConfig {
+            arrivals: ArrivalKind::Periodic { rate: 2.0 },
+            duration: 10.0,
+            ..ScenarioConfig::default()
+        };
+        let g = ArrivalGenerator::generate(&s);
+        // t = 0.5, 1.0, ..., 9.5 → 19 arrivals.
+        assert_eq!(g.len(), 19);
+    }
+
+    #[test]
+    fn steps_change_rate() {
+        let s = ScenarioConfig {
+            arrivals: ArrivalKind::Steps {
+                steps: vec![(0.0, 1.0), (100.0, 8.0)],
+            },
+            duration: 200.0,
+            warmup: 0.0,
+            ..ScenarioConfig::default()
+        };
+        let g = ArrivalGenerator::generate(&s);
+        let first: usize = g.arrivals().iter().filter(|a| a.at < 100.0).count();
+        let second = g.len() - first;
+        assert!(second > 4 * first, "first={first} second={second}");
+    }
+
+    #[test]
+    fn zero_rate_empty() {
+        let s = ScenarioConfig::poisson(0.0, 1);
+        assert!(ArrivalGenerator::generate(&s).is_empty());
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload generation: arrival processes and the robot-fleet client
+//! model standing in for the CloudGripper testbed (see DESIGN.md §3 —
+//! the router never inspects pixels, so the arrival process + payload
+//! shape are the faithful substitution).
+
+mod arrivals;
+mod robots;
+
+pub use arrivals::{Arrival, ArrivalGenerator};
+pub use robots::{Robot, RobotFleet};

@@ -1,0 +1,99 @@
+//! Robot fleet client model — the CloudGripper stand-in (§V-A.1).
+//!
+//! Each robot is a camera-bearing manipulation cell that emits frames at
+//! a configurable rate and waits for detection results. The serving
+//! examples drive the real PJRT runtime with these synthetic frames; the
+//! DES only needs the arrival times.
+
+use crate::config::QualityClass;
+use crate::rng::Rng;
+
+/// One CloudGripper-style work cell.
+#[derive(Debug, Clone)]
+pub struct Robot {
+    pub id: usize,
+    /// Frames per second this robot emits (≤ 30 per the testbed cameras).
+    pub fps: f64,
+    /// Quality lane its requests ride in.
+    pub quality: QualityClass,
+}
+
+/// A fleet of robots with synthetic frame generation.
+#[derive(Debug, Clone)]
+pub struct RobotFleet {
+    pub robots: Vec<Robot>,
+}
+
+impl RobotFleet {
+    /// `n` identical robots, each at `fps`, all on one lane — the paper's
+    /// experiment shape ("the number of robots issuing requests" is the
+    /// swept variable, all served by YOLOv5m).
+    pub fn uniform(n: usize, fps: f64, quality: QualityClass) -> Self {
+        RobotFleet {
+            robots: (0..n).map(|id| Robot { id, fps, quality }).collect(),
+        }
+    }
+
+    /// Aggregate request rate [req/s].
+    pub fn aggregate_rate(&self) -> f64 {
+        self.robots.iter().map(|r| r.fps).sum()
+    }
+
+    /// Synthesise one camera frame as a flat NHWC f32 tensor in [0,1]:
+    /// a textured background + a bright square "object" whose position is
+    /// derived from (robot id, frame index) — deterministic, non-trivial
+    /// input for the real detector models.
+    pub fn frame(&self, robot: usize, frame_idx: u64, hw: usize) -> Vec<f32> {
+        let mut rng = Rng::new((robot as u64) << 32 | frame_idx);
+        let c = 3usize;
+        let mut img = vec![0.0f32; hw * hw * c];
+        // Textured background.
+        for px in img.iter_mut() {
+            *px = 0.2 + 0.1 * rng.uniform() as f32;
+        }
+        // Object: bright square, position jitters per frame.
+        let size = hw / 6;
+        let ox = rng.below(hw - size);
+        let oy = rng.below(hw - size);
+        for y in oy..oy + size {
+            for x in ox..ox + size {
+                let base = (y * hw + x) * c;
+                img[base] = 0.9;
+                img[base + 1] = 0.7;
+                img[base + 2] = 0.3;
+            }
+        }
+        img
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_fleet_rate() {
+        let f = RobotFleet::uniform(5, 1.2, QualityClass::Balanced);
+        assert_eq!(f.robots.len(), 5);
+        assert!((f.aggregate_rate() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frame_shape_and_range() {
+        let f = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+        let img = f.frame(0, 0, 64);
+        assert_eq!(img.len(), 64 * 64 * 3);
+        assert!(img.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // Contains both background and object intensities.
+        assert!(img.iter().any(|&v| v > 0.8));
+        assert!(img.iter().any(|&v| v < 0.4));
+    }
+
+    #[test]
+    fn frames_deterministic_but_varying() {
+        let f = RobotFleet::uniform(2, 1.0, QualityClass::Balanced);
+        assert_eq!(f.frame(0, 0, 32), f.frame(0, 0, 32));
+        assert_ne!(f.frame(0, 0, 32), f.frame(0, 1, 32));
+        assert_ne!(f.frame(0, 0, 32), f.frame(1, 0, 32));
+    }
+}

@@ -1,0 +1,268 @@
+//! Integration over the control loop: router + autoscaler + simulated
+//! Kubernetes + DES, exercising the paper's claimed behaviours end to end.
+
+use la_imr::config::{ArrivalKind, Config, ScenarioConfig};
+use la_imr::sim::{Architecture, Policy, Simulation};
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+/// A burst arrives at t=60 into a quiet system. PM-HPA must have scaled
+/// *before* the P99 damage a reactive system takes.
+#[test]
+fn proactive_scaling_beats_reactive_on_step_load() {
+    let step = |seed| ScenarioConfig {
+        name: "step".into(),
+        arrivals: ArrivalKind::Steps {
+            steps: vec![(0.0, 1.0), (60.0, 5.0)],
+        },
+        duration: 240.0,
+        warmup: 50.0,
+        seed,
+        quality_mix: [0.0, 1.0, 0.0],
+        initial_replicas: 1,
+        pod_mtbf: None,
+    };
+    let (mut la, mut bl) = (0.0, 0.0);
+    for seed in [3, 4, 5] {
+        la += Simulation::new(&cfg(), &step(seed), Policy::LaImr, Architecture::Microservice)
+            .run()
+            .summary()
+            .p99;
+        bl += Simulation::new(
+            &cfg(),
+            &step(seed),
+            Policy::Baseline,
+            Architecture::Microservice,
+        )
+        .run()
+        .summary()
+        .p99;
+    }
+    assert!(la < bl, "LA-IMR P99 {la:.2} !< baseline {bl:.2}");
+}
+
+/// Under sustained overload beyond the edge cap, LA-IMR must offload a
+/// meaningful share instead of letting queues diverge.
+#[test]
+fn offload_engages_beyond_edge_capacity() {
+    let scenario = ScenarioConfig::poisson(12.0, 9)
+        .with_duration(120.0, 10.0)
+        .with_replicas(2);
+    let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    assert!(
+        r.offload_share() > 0.2,
+        "offload share {:.2} too small for λ=12 on an 8-cap edge",
+        r.offload_share()
+    );
+    // And the system still completes nearly everything.
+    assert!(r.completion_rate() > 0.9, "rate={}", r.completion_rate());
+}
+
+/// LA-IMR must scale back down after a burst passes (cost control).
+#[test]
+fn scales_in_after_burst_passes() {
+    let scenario = ScenarioConfig {
+        name: "spike-then-quiet".into(),
+        arrivals: ArrivalKind::Steps {
+            steps: vec![(0.0, 6.0), (60.0, 0.5)],
+        },
+        duration: 400.0,
+        warmup: 0.0,
+        seed: 17,
+        quality_mix: [0.0, 1.0, 0.0],
+        initial_replicas: 1,
+        pod_mtbf: None,
+    };
+    let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    assert!(r.scale_outs > 0, "never scaled out during the spike");
+    assert!(r.scale_ins > 0, "never scaled in during the quiet period");
+    // Mean replicas must sit well under the peak (paper: avoids chronic
+    // over-provisioning).
+    assert!(
+        r.mean_replicas < r.peak_replicas as f64 * 0.8,
+        "mean {} vs peak {}",
+        r.mean_replicas,
+        r.peak_replicas
+    );
+}
+
+/// The static policy must respect its frozen layout (no scaling at all).
+#[test]
+fn static_layout_never_scales() {
+    let scenario = ScenarioConfig::bursty(5.0, 21)
+        .with_duration(120.0, 10.0)
+        .with_replicas(3);
+    let r = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Microservice).run();
+    assert_eq!(r.scale_outs, 0);
+    assert_eq!(r.scale_ins, 0);
+    assert_eq!(r.peak_replicas, 3);
+}
+
+/// Cold-start protection: while a 1-replica pool scales up to absorb
+/// λ=4, LA-IMR shields the transition by offloading — so even the
+/// *earliest* requests stay within the SLO envelope, and the steady
+/// state serves mostly locally.
+#[test]
+fn cold_start_protected_by_offload() {
+    let c = cfg();
+    let (m, _) = c.model_by_name("yolov5m").unwrap();
+    let tau = c.slo_budget(m);
+    let scenario = ScenarioConfig::poisson(4.0, 31)
+        .with_duration(180.0, 0.0)
+        .with_replicas(1);
+    let r = Simulation::new(&c, &scenario, Policy::LaImr, Architecture::Microservice).run();
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let early: Vec<f64> = r
+        .completed
+        .iter()
+        .filter(|c| c.arrived < 10.0)
+        .map(|c| c.latency())
+        .collect();
+    let late: Vec<f64> = r
+        .completed
+        .iter()
+        .filter(|c| c.arrived > 60.0)
+        .map(|c| c.latency())
+        .collect();
+    assert!(!early.is_empty() && !late.is_empty());
+    // The transition is protected (offload), not suffered (queueing):
+    assert!(
+        mean(&early) <= tau,
+        "cold-start requests breached τ: {:.2} > {tau:.2}",
+        mean(&early)
+    );
+    // ...and the converged system also sits inside the envelope.
+    assert!(
+        mean(&late) <= tau,
+        "steady state breached τ: {:.2} > {tau:.2}",
+        mean(&late)
+    );
+    // Offloading actually happened during the transition.
+    let early_offloads = r
+        .completed
+        .iter()
+        .filter(|c| c.arrived < 10.0 && c.offloaded)
+        .count();
+    assert!(early_offloads > 0, "no cold-start offloads observed");
+}
+
+/// Fig 4's claim end to end: with mixed traffic, microservice beats
+/// monolithic on tail latency at equal replica budget.
+#[test]
+fn microservice_beats_monolithic_mixed_load() {
+    let mut scenario = ScenarioConfig::poisson(4.0, 40)
+        .with_duration(150.0, 15.0)
+        .with_replicas(4);
+    scenario.quality_mix = [0.3, 0.5, 0.2];
+    let micro = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Microservice)
+        .run()
+        .summary();
+    let mono = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Monolithic)
+        .run()
+        .summary();
+    assert!(
+        mono.p99 >= micro.p99,
+        "mono P99 {:.2} < micro P99 {:.2}",
+        mono.p99,
+        micro.p99
+    );
+}
+
+/// Identical seeds ⇒ identical results across the whole stack (the
+/// reproducibility contract every EXPERIMENTS.md number relies on).
+#[test]
+fn full_stack_determinism() {
+    let scenario = ScenarioConfig::bursty(4.0, 77)
+        .with_duration(120.0, 10.0)
+        .with_replicas(2);
+    let a = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    let b = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    assert_eq!(a.completed.len(), b.completed.len());
+    let (sa, sb) = (a.summary(), b.summary());
+    assert_eq!(sa.p99, sb.p99);
+    assert_eq!(sa.mean, sb.mean);
+    assert_eq!(a.scale_outs, b.scale_outs);
+}
+
+/// SLO attainment: under the paper's design load (λ ≤ 3 on a warm pool),
+/// LA-IMR keeps P95 within the τ = x·L envelope.
+#[test]
+fn slo_holds_at_design_load() {
+    let c = cfg();
+    let (m, _) = c.model_by_name("yolov5m").unwrap();
+    let tau = c.slo_budget(m);
+    let scenario = ScenarioConfig::poisson(2.0, 55)
+        .with_duration(200.0, 20.0)
+        .with_replicas(3);
+    let r = Simulation::new(&c, &scenario, Policy::LaImr, Architecture::Microservice).run();
+    let s = r.summary();
+    assert!(
+        s.p95 <= tau * 1.2,
+        "P95 {:.2}s escaped the τ={tau:.2}s envelope",
+        s.p95
+    );
+}
+
+/// Fault injection (§I: LA-IMR "adapts within milliseconds to traffic
+/// bursts or faults"): pods crash at MTBF=40 s per pool; no request may
+/// be lost (crashed work re-queues), and the system must still complete
+/// nearly everything with bounded tails.
+#[test]
+fn pod_crashes_do_not_lose_requests() {
+    let scenario = ScenarioConfig::poisson(3.0, 61)
+        .with_duration(240.0, 0.0)
+        .with_replicas(3)
+        .with_faults(40.0);
+    let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    assert!(r.crashes > 0, "fault injection never fired");
+    // Conservation: nothing vanishes even across crashes.
+    assert_eq!(
+        r.completed.len() + r.unfinished,
+        r.generated,
+        "requests lost across {} crashes",
+        r.crashes
+    );
+    assert!(
+        r.completion_rate() > 0.9,
+        "completion {:.3} with {} crashes",
+        r.completion_rate(),
+        r.crashes
+    );
+}
+
+/// Under faults, LA-IMR's recovery (re-provision + offload during the
+/// gap) keeps P99 close to the fault-free run.
+#[test]
+fn crash_recovery_bounds_tail_damage() {
+    let base = ScenarioConfig::poisson(3.0, 62)
+        .with_duration(240.0, 20.0)
+        .with_replicas(4);
+    let faulty = base.clone().with_faults(60.0);
+    let clean = Simulation::new(&cfg(), &base, Policy::LaImr, Architecture::Microservice).run();
+    let crashed =
+        Simulation::new(&cfg(), &faulty, Policy::LaImr, Architecture::Microservice).run();
+    assert!(crashed.crashes > 0);
+    // Tails take damage, but bounded — not a meltdown (< 4x clean P99).
+    assert!(
+        crashed.summary().p99 < clean.summary().p99 * 4.0 + 2.0,
+        "crash P99 {:.2} vs clean {:.2}",
+        crashed.summary().p99,
+        clean.summary().p99
+    );
+}
+
+/// Determinism must hold under fault injection too.
+#[test]
+fn fault_injection_is_deterministic() {
+    let scenario = ScenarioConfig::bursty(3.0, 63)
+        .with_duration(120.0, 10.0)
+        .with_replicas(3)
+        .with_faults(30.0);
+    let a = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    let b = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.completed.len(), b.completed.len());
+    assert_eq!(a.summary().p99, b.summary().p99);
+}

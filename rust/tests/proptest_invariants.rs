@@ -1,0 +1,290 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! state). proptest is unavailable offline, so this is a seeded-random
+//! property harness over the crate's own deterministic RNG: each property
+//! runs against hundreds of generated cases, and failures print the
+//! offending seed/case for replay.
+
+use la_imr::cluster::{Deployment, DeploymentKey};
+use la_imr::config::{Config, QualityClass, ScenarioConfig};
+use la_imr::coordinator::state::ReplicaView;
+use la_imr::coordinator::{ControlState, MultiQueue, QueuedRequest, Router};
+use la_imr::latency_model::LatencyModel;
+use la_imr::queueing;
+use la_imr::rng::Rng;
+use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::telemetry::{Ewma, SlidingRate};
+
+/// Run `prop` over `cases` generated inputs; panic with the case index.
+fn for_all<F: FnMut(&mut Rng, usize)>(seed: u64, cases: usize, mut prop: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(seed.wrapping_add(case as u64 * 0x9E37));
+        prop(&mut rng, case);
+    }
+}
+
+#[test]
+fn prop_router_decision_always_valid() {
+    // For any replica/rho/λ state, the router returns a target that
+    // exists, desired updates within [1, n_max], and φ-splitting never
+    // panics.
+    let cfg = Config::default();
+    for_all(0xA11CE, 300, |rng, case| {
+        let mut router = Router::new(&cfg);
+        let model = rng.below(cfg.models.len());
+        let mut state = ControlState::new();
+        for m in 0..cfg.models.len() {
+            for i in 0..cfg.instances.len() {
+                let n_max = cfg.instances[i].n_max;
+                let active = 1 + rng.below(n_max as usize) as u32;
+                state.update(
+                    DeploymentKey { model: m, instance: i },
+                    ReplicaView {
+                        active,
+                        ready: rng.below(active as usize + 1) as u32,
+                        desired: active,
+                        rho: rng.range(0.0, 2.0),
+                        queue_depth: rng.below(50),
+                    },
+                );
+            }
+        }
+        let mut now = 0.0;
+        for _ in 0..rng.below(20) + 1 {
+            now += rng.exp(4.0);
+            let d = router.route(model, now, &state);
+            assert!(d.target.model < cfg.models.len(), "case {case}");
+            assert!(d.target.instance < cfg.instances.len(), "case {case}");
+            for &(key, want) in &d.desired_updates {
+                assert!(want >= 1, "case {case}: desired < 1");
+                assert!(
+                    want <= cfg.instances[key.instance].n_max,
+                    "case {case}: desired beyond cap"
+                );
+            }
+            assert!(
+                d.predicted >= 0.0 || !d.predicted.is_finite(),
+                "case {case}: negative prediction"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_multiqueue_conserves_and_orders() {
+    // Push/pop any interleaving: nothing lost, nothing duplicated, and a
+    // popped request is never lower-priority than one left waiting that
+    // was already present.
+    for_all(0xBEEF, 200, |rng, case| {
+        let mut q = MultiQueue::new();
+        let mut pushed = 0u64;
+        let mut popped = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..rng.below(60) + 10 {
+            if rng.uniform() < 0.6 {
+                let quality = QualityClass::ALL[rng.below(3)];
+                t += 0.01;
+                q.push(QueuedRequest {
+                    id: pushed,
+                    quality,
+                    enqueued_at: t,
+                });
+                pushed += 1;
+            } else if let Some(r) = q.pop() {
+                // Priority invariant: no strictly-higher-priority request
+                // remains queued after this pop.
+                for better in QualityClass::ALL {
+                    if better.priority() < r.quality.priority() {
+                        assert_eq!(
+                            q.lane_depth(better),
+                            0,
+                            "case {case}: popped {:?} past waiting {:?}",
+                            r.quality,
+                            better
+                        );
+                    }
+                }
+                popped.push(r.id);
+            }
+        }
+        while let Some(r) = q.pop() {
+            popped.push(r.id);
+        }
+        popped.sort_unstable();
+        popped.dedup();
+        assert_eq!(popped.len() as u64, pushed, "case {case}: lost/dup requests");
+    });
+}
+
+#[test]
+fn prop_deployment_scaling_state_machine() {
+    // Arbitrary scale_to/tick interleavings keep the pod set consistent:
+    // active ≤ n_max, desired within [1, n_max], draining pods never serve.
+    for_all(0xD00D, 200, |rng, case| {
+        let n_max = 1 + rng.below(12) as u32;
+        let mut dep = Deployment::new(
+            DeploymentKey { model: 0, instance: 0 },
+            1 + rng.below(n_max as usize) as u32,
+            n_max,
+            1.8,
+            30.0,
+            0.0,
+        );
+        let mut now = 0.0;
+        for _ in 0..40 {
+            now += rng.exp(0.5);
+            match rng.below(3) {
+                0 => {
+                    dep.scale_to(rng.below(2 * n_max as usize) as u32, now);
+                }
+                1 => {
+                    dep.tick(now);
+                }
+                _ => {
+                    if let Some(pod) = dep.pick_pod(now) {
+                        pod.in_flight += 1;
+                    }
+                    // Complete someone's work.
+                    if let Some(p) = dep.pods.iter_mut().find(|p| p.in_flight > 0) {
+                        p.in_flight -= 1;
+                    }
+                }
+            }
+            assert!(dep.active_count() <= n_max, "case {case}: over cap");
+            assert!(
+                (1..=n_max).contains(&dep.desired),
+                "case {case}: desired={} out of range",
+                dep.desired
+            );
+            for p in &dep.pods {
+                if matches!(p.phase, la_imr::cluster::PodPhase::Draining { .. }) {
+                    assert!(!p.can_serve(now), "case {case}: draining pod serving");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sliding_rate_matches_brute_force() {
+    for_all(0x51DE, 150, |rng, case| {
+        let mut s = SlidingRate::new(1.0);
+        let mut times: Vec<f64> = Vec::new();
+        let mut t = 0.0;
+        for _ in 0..rng.below(200) + 5 {
+            let rate = rng.range(0.5, 20.0);
+            t += rng.exp(rate);
+            let got = s.on_arrival(t);
+            times.push(t);
+            let brute = times.iter().filter(|&&x| t - x <= 1.0).count() as f64;
+            assert_eq!(got, brute, "case {case} at t={t}");
+        }
+    });
+}
+
+#[test]
+fn prop_ewma_bounded_by_input_range() {
+    for_all(0xE3A, 150, |rng, _| {
+        let alpha = rng.range(0.0, 0.99);
+        let mut e = Ewma::new(alpha);
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for _ in 0..100 {
+            let x = rng.range(-50.0, 50.0);
+            lo = lo.min(x);
+            hi = hi.max(x);
+            let v = e.update(x);
+            assert!(v >= lo - 1e-9 && v <= hi + 1e-9, "EWMA escaped input hull");
+        }
+    });
+}
+
+#[test]
+fn prop_erlang_c_monotonic_in_load_and_servers() {
+    for_all(0xE71A, 200, |rng, _| {
+        let mu = rng.range(0.2, 5.0);
+        let c = 1 + rng.below(20) as u32;
+        let hi = (c as f64 * mu) * 0.95;
+        let lam = rng.range(0.01, hi);
+        let w = queueing::mmc_wait(lam, mu, c);
+        assert!(w.is_finite() && w >= 0.0);
+        // More load → longer wait; more servers → shorter wait.
+        let w_more_load = queueing::mmc_wait((lam * 1.05).min(c as f64 * mu * 0.99), mu, c);
+        assert!(w_more_load >= w - 1e-12);
+        let w_more_servers = queueing::mmc_wait(lam, mu, c + 1);
+        assert!(w_more_servers <= w + 1e-12);
+    });
+}
+
+#[test]
+fn prop_latency_model_sane_over_parameter_space() {
+    // g is nonnegative, monotone in λ, decreasing in N, and
+    // required_replicas is minimal-feasible for random parameterisations.
+    for_all(0x6A3A, 200, |rng, case| {
+        let m = LatencyModel {
+            l_ref: rng.range(0.05, 3.0),
+            speedup: rng.range(0.5, 30.0),
+            r_cost: rng.range(0.05, 4.0),
+            r_max: rng.range(1.0, 32.0),
+            background: rng.range(0.0, 0.9),
+            gamma: rng.range(0.3, 2.5),
+            rtt: rng.range(0.0, 0.1),
+        };
+        let n = 1 + rng.below(8) as u32;
+        let lam_max = n as f64 * m.mu();
+        let lam = rng.range(0.0, lam_max * 0.95);
+        let g = m.g_lambda(lam, n);
+        assert!(g.is_finite() && g >= 0.0, "case {case}: g={g}");
+        let g2 = m.g_lambda((lam * 1.1).min(lam_max * 0.99), n);
+        assert!(g2 >= g - 1e-9, "case {case}: not monotone in λ");
+        let g3 = m.g_lambda(lam, n + 1);
+        assert!(g3 <= g + 1e-9, "case {case}: more replicas hurt");
+        let tau = g * rng.range(1.0, 3.0);
+        if let Some(req) = m.required_replicas(lam, tau, 32) {
+            assert!(m.g_n(req, lam) <= tau, "case {case}: infeasible N");
+            if req > 1 {
+                assert!(m.g_n(req - 1, lam) > tau, "case {case}: N not minimal");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_simulation_conserves_requests() {
+    // completed + unfinished == generated for arbitrary small scenarios,
+    // under every policy.
+    let cfg = Config::default();
+    for_all(0x51AB, 12, |rng, case| {
+        let lambda = rng.range(0.5, 5.0);
+        let policy = [Policy::LaImr, Policy::Baseline, Policy::Static][rng.below(3)];
+        let scenario = ScenarioConfig::poisson(lambda, rng.next_u64())
+            .with_duration(60.0, 0.0)
+            .with_replicas(1 + rng.below(4) as u32);
+        let r = Simulation::new(&cfg, &scenario, policy, Architecture::Microservice).run();
+        // Completions recorded post-warmup (warmup 0 here) + still queued.
+        assert_eq!(
+            r.completed.len() + r.unfinished,
+            r.generated,
+            "case {case}: requests leaked ({} + {} != {})",
+            r.completed.len(),
+            r.unfinished,
+            r.generated
+        );
+        // Latencies are physical.
+        assert!(r.completed.iter().all(|c| c.latency() > 0.0));
+    });
+}
+
+#[test]
+fn prop_fraction_splitter_error_bounded() {
+    use la_imr::coordinator::offload::FractionSplitter;
+    for_all(0xF3AC, 300, |rng, case| {
+        let phi = rng.uniform();
+        let mut s = FractionSplitter::new();
+        let n = 500 + rng.below(1500);
+        let off = (0..n).filter(|_| s.should_offload(phi)).count();
+        let realised = off as f64 / n as f64;
+        assert!(
+            (realised - phi).abs() <= 1.0 / n as f64 + 1e-9,
+            "case {case}: φ={phi} realised={realised}"
+        );
+    });
+}

@@ -1,0 +1,127 @@
+//! Integration: the python-AOT → rust-PJRT bridge, end to end.
+//!
+//! Requires `make artifacts` (skipped gracefully otherwise, so `cargo
+//! test` stays green on a fresh checkout).
+
+use la_imr::config::QualityClass;
+use la_imr::runtime::{postprocess, Runtime};
+use la_imr::workload::RobotFleet;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("artifacts present but unloadable"))
+}
+
+#[test]
+fn loads_and_compiles_all_artifacts() {
+    let Some(rt) = runtime() else { return };
+    assert_eq!(rt.model_names(), vec!["effdet_lite", "yolov5m"]);
+    assert_eq!(rt.manifest.num_classes, 4);
+}
+
+#[test]
+fn inference_output_shape_and_range() {
+    let Some(rt) = runtime() else { return };
+    let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+    for name in rt.model_names() {
+        let model = rt.model(name).unwrap();
+        let hw = model.entry.input_shape[1];
+        let out = model.infer(&fleet.frame(0, 0, hw)).unwrap();
+        let want: usize = model.entry.output_shape.iter().product();
+        assert_eq!(out.len(), want, "{name}: wrong output length");
+        // Sigmoid head → all outputs in [0, 1].
+        assert!(
+            out.iter().all(|&v| (0.0..=1.0).contains(&v)),
+            "{name}: output escaped [0,1]"
+        );
+    }
+}
+
+#[test]
+fn golden_outputs_match_python() {
+    // THE AOT contract: the compiled artifact must reproduce the jax-side
+    // output bit-near-exactly on the shared ramp input. This is the test
+    // that catches elided-constant / parameter-wiring corruption.
+    let Some(rt) = runtime() else { return };
+    for name in rt.model_names() {
+        let err = rt.model(name).unwrap().golden_check().unwrap();
+        assert!(err < 1e-4, "{name}: golden err {err}");
+    }
+}
+
+#[test]
+fn inference_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("effdet_lite").unwrap();
+    let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+    let img = fleet.frame(0, 7, model.entry.input_shape[1]);
+    let a = model.infer(&img).unwrap();
+    let b = model.infer(&img).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn different_frames_different_outputs() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("yolov5m").unwrap();
+    let fleet = RobotFleet::uniform(2, 1.0, QualityClass::Balanced);
+    let hw = model.entry.input_shape[1];
+    let a = model.infer(&fleet.frame(0, 0, hw)).unwrap();
+    let b = model.infer(&fleet.frame(1, 3, hw)).unwrap();
+    assert_ne!(a, b, "detector ignores its input");
+}
+
+#[test]
+fn wrong_input_length_rejected() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("effdet_lite").unwrap();
+    assert!(model.infer(&[0.0f32; 16]).is_err());
+}
+
+#[test]
+fn postprocess_on_real_output() {
+    let Some(rt) = runtime() else { return };
+    let model = rt.model("yolov5m").unwrap();
+    let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+    let out = model
+        .infer(&fleet.frame(0, 0, model.entry.input_shape[1]))
+        .unwrap();
+    // Threshold 0 keeps every cell: detections sorted by score.
+    let dets = postprocess(&out, rt.manifest.num_classes, 0.0);
+    assert_eq!(dets.len(), model.entry.output_shape[0]);
+    assert!(dets.windows(2).all(|w| w[0].score >= w[1].score));
+    // Tight threshold keeps fewer.
+    let tight = postprocess(&out, rt.manifest.num_classes, 0.9);
+    assert!(tight.len() <= dets.len());
+}
+
+#[test]
+fn cost_gap_visible_in_wallclock() {
+    // Table II's premise: the balanced model is meaningfully costlier
+    // than the edge model on the same hardware.
+    let Some(rt) = runtime() else { return };
+    let fleet = RobotFleet::uniform(1, 1.0, QualityClass::Balanced);
+    let time_of = |name: &str| {
+        let m = rt.model(name).unwrap();
+        let img = fleet.frame(0, 0, m.entry.input_shape[1]);
+        let _ = m.infer(&img).unwrap(); // warm
+        let mut ts: Vec<f64> = (0..7).map(|_| m.time_one(&img).unwrap()).collect();
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[ts.len() / 2]
+    };
+    let eff = time_of("effdet_lite");
+    let yolo = time_of("yolov5m");
+    assert!(
+        yolo > 2.0 * eff,
+        "cost gap collapsed: yolo={yolo:.5}s eff={eff:.5}s"
+    );
+}
