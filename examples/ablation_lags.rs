@@ -9,20 +9,23 @@
 //! Run: `cargo run --release --example ablation_lags`
 
 use la_imr::config::{Config, ScenarioConfig};
-use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::sim::{Cell, Policy, Runner};
 
-fn p99(cfg: &Config, policy: Policy, seed: u64) -> f64 {
-    let scenario = ScenarioConfig::bursty(4.0, seed)
-        .with_duration(300.0, 30.0)
-        .with_replicas(2);
-    Simulation::new(cfg, &scenario, policy, Architecture::Microservice)
-        .run()
-        .summary()
-        .p99
-}
-
+/// Mean P99 over 3 seeds, sharded across the runner.
 fn mean3(cfg: &Config, policy: Policy) -> f64 {
-    [101, 102, 103].iter().map(|&s| p99(cfg, policy, s)).sum::<f64>() / 3.0
+    let cells: Vec<Cell> = [101u64, 102, 103]
+        .iter()
+        .map(|&seed| {
+            Cell::new(
+                ScenarioConfig::bursty(4.0, seed)
+                    .with_duration(300.0, 30.0)
+                    .with_replicas(2),
+                policy,
+            )
+        })
+        .collect();
+    let results = Runner::new().run(cfg, &cells);
+    results.iter().map(|r| r.summary().p99).sum::<f64>() / cells.len() as f64
 }
 
 fn main() {

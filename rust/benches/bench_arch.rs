@@ -3,12 +3,14 @@
 
 use la_imr::config::Config;
 use la_imr::report;
+use la_imr::sim::Runner;
 use la_imr::util::bench::bench_once;
 
 fn main() {
     let cfg = Config::default();
+    let runner = Runner::new();
     let (data, dt) = bench_once("fig4: micro vs mono, N ∈ {1,2,4,6}", || {
-        report::fig4_data(&cfg, 150.0)
+        report::fig4_data(&cfg, 150.0, &runner)
     });
     println!("  regenerated in {dt:.2}s");
     println!("  N   micro P99   mono P99   mono/micro");

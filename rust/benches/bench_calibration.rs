@@ -4,6 +4,7 @@
 use la_imr::config::Config;
 use la_imr::latency_model::{fit_anchored, paper_table4_samples};
 use la_imr::report;
+use la_imr::sim::Runner;
 use la_imr::util::bench::{bench, bench_once, black_box};
 
 fn main() {
@@ -17,6 +18,9 @@ fn main() {
         fit.alpha, fit.beta, fit.gamma, fit.r_squared
     );
     let cfg = Config::default();
-    let (txt, _) = bench_once("fig2: full calibration report", || report::fig2(&cfg));
+    let runner = Runner::new();
+    let (txt, _) = bench_once("fig2: full calibration report", || {
+        report::fig2(&cfg, &runner)
+    });
     println!("{txt}");
 }

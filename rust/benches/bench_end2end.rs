@@ -1,11 +1,11 @@
 //! Fig 7/8 bench: the end-to-end head-to-head (LA-IMR vs reactive
-//! baseline) across λ = 1..6 under bounded-Pareto bursts, plus DES
-//! throughput (simulated events per wall-second — the harness must stay
-//! fast enough to sweep the full grid in seconds).
+//! baseline vs hedged) across λ = 1..6 under bounded-Pareto bursts, plus
+//! DES throughput (simulated events per wall-second — the harness must
+//! stay fast enough to sweep the full grid in seconds).
 
 use la_imr::config::{Config, ScenarioConfig};
 use la_imr::report;
-use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::sim::{Architecture, Policy, Runner, Simulation};
 use la_imr::telemetry::{box_stats, Summary};
 use la_imr::util::bench::bench_once;
 
@@ -26,18 +26,31 @@ fn main() {
         300.0 / dt
     );
 
-    let (data, dt) = bench_once("fig7/8: λ=1..6 × 2 policies × 3 seeds", || {
-        report::head_to_head(&cfg, 300.0, &[101, 102, 103])
+    let runner = Runner::new();
+    let (data, dt) = bench_once("fig7/8: λ=1..6 × 3 policies × 3 seeds", || {
+        report::head_to_head(&cfg, 300.0, &[101, 102, 103], &runner)
     });
-    println!("  full sweep in {dt:.2}s\n");
-    println!("  λ   LA-IMR P50/P95/P99      baseline P50/P95/P99    IQR(LA)  IQR(BL)");
+    println!("  full sweep in {dt:.2}s on {} workers\n", runner.threads());
+    println!("  λ   LA-IMR P50/P95/P99      baseline P50/P95/P99    hedged P50/P95/P99     IQR(LA)  IQR(BL)");
     for h in &data {
         let la = Summary::from(&h.la_all);
         let bl = Summary::from(&h.bl_all);
+        let hd = Summary::from(&h.hd_all);
         let (bla, blb) = (box_stats(&h.la_all), box_stats(&h.bl_all));
         println!(
-            "  {}   {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}      {:6.2}  {:6.2}",
-            h.lambda, la.p50, la.p95, la.p99, bl.p50, bl.p95, bl.p99, bla.iqr, blb.iqr
+            "  {}   {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}     {:6.2}  {:6.2}",
+            h.lambda,
+            la.p50,
+            la.p95,
+            la.p99,
+            bl.p50,
+            bl.p95,
+            bl.p99,
+            hd.p50,
+            hd.p95,
+            hd.p99,
+            bla.iqr,
+            blb.iqr
         );
     }
 }

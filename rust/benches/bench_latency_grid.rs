@@ -3,12 +3,14 @@
 
 use la_imr::config::Config;
 use la_imr::report;
+use la_imr::sim::Runner;
 use la_imr::util::bench::bench_once;
 
 fn main() {
     let cfg = Config::default();
+    let runner = Runner::new();
     let (cells, dt) = bench_once("table4: 12-cell grid × 3 seeds", || {
-        report::table4_data(&cfg, report::TABLE4_WINDOW)
+        report::table4_data(&cfg, report::TABLE4_WINDOW, &runner)
     });
     println!("  grid regenerated in {dt:.2}s (paper's testbed: ~12 cluster-runs)");
     let get = |n: u32, lam: f64| cells.iter().find(|c| c.0 == n && c.1 == lam).unwrap().2;
@@ -23,5 +25,5 @@ fn main() {
         get(1, 4.0), get(2, 4.0), get(4, 4.0)
     );
     assert!(get(1, 4.0) > get(1, 1.0) && get(1, 4.0) > get(4, 4.0));
-    println!("{}", report::table4(&cfg));
+    println!("{}", report::table4(&cfg, &runner));
 }

@@ -1,0 +1,69 @@
+//! Sharded-runner bench: the same experiment grid, serial vs parallel.
+//!
+//! Two claims under test (ISSUE 1 acceptance):
+//! * wall-clock: the parallel sweep must be measurably faster than the
+//!   serial one on multi-core hosts;
+//! * determinism: both schedules must produce bit-identical statistics
+//!   (per-cell seeding, no shared RNG).
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::sim::{Cell, Policy, Runner};
+use la_imr::util::bench::bench_once;
+
+fn grid() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for lam in 1..=6 {
+        for seed in [101u64, 102, 103] {
+            for policy in [Policy::LaImr, Policy::Baseline, Policy::Hedged] {
+                cells.push(Cell::new(
+                    ScenarioConfig::bursty(lam as f64, seed)
+                        .with_duration(120.0, 10.0)
+                        .with_replicas(2),
+                    policy,
+                ));
+            }
+        }
+    }
+    cells
+}
+
+fn main() {
+    let cfg = Config::default();
+    let cells = grid();
+    println!(
+        "runner grid: {} cells (λ=1..6 × 3 seeds × 3 policies, 120 s each)",
+        cells.len()
+    );
+
+    let (serial, t_serial) = bench_once("runner: serial (1 worker)", || {
+        Runner::serial().run(&cfg, &cells)
+    });
+    let parallel_runner = Runner::new();
+    let (parallel, t_parallel) = bench_once("runner: parallel (auto workers)", || {
+        parallel_runner.run(&cfg, &cells)
+    });
+
+    // Determinism: identical latency series cell by cell.
+    for (k, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_eq!(
+            a.latencies(),
+            b.latencies(),
+            "cell {k} diverged between serial and parallel runs"
+        );
+        assert_eq!(a.scale_outs, b.scale_outs, "cell {k} scaling diverged");
+    }
+    println!("  determinism: serial == parallel across all {} cells ✓", cells.len());
+
+    let speedup = t_serial / t_parallel.max(1e-9);
+    println!(
+        "  wall-clock: serial {t_serial:.2}s vs parallel {t_parallel:.2}s on {} workers → {speedup:.2}x",
+        parallel_runner.threads()
+    );
+    if parallel_runner.threads() > 1 {
+        assert!(
+            speedup > 1.2,
+            "parallel sweep not measurably faster ({speedup:.2}x on {} workers)",
+            parallel_runner.threads()
+        );
+    }
+}

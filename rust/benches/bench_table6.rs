@@ -1,20 +1,25 @@
 //! Table VI bench: the headline P95/P99 mean±SD comparison across
-//! λ = 1..6 (5 seeds per cell), printing paper-format rows and the
-//! P99-gain trend that must grow with load.
+//! λ = 1..6 (5 seeds per cell, LA-IMR vs baseline vs hedged), printing
+//! paper-format rows and the P99-gain trend that must grow with load.
 
 use la_imr::config::Config;
 use la_imr::report;
+use la_imr::sim::Runner;
 use la_imr::util::bench::bench_once;
 
 fn main() {
     let cfg = Config::default();
-    let (txt, dt) = bench_once("table6: λ=1..6 × 2 policies × 5 seeds", || {
-        report::table6(&cfg)
+    let runner = Runner::new();
+    let (txt, dt) = bench_once("table6: λ=1..6 × 3 policies × 5 seeds", || {
+        report::table6(&cfg, &runner)
     });
-    println!("  regenerated in {dt:.2}s  (paper's testbed: ~60 cluster-runs)\n");
+    println!(
+        "  regenerated in {dt:.2}s on {} workers  (paper's testbed: ~60 cluster-runs)\n",
+        runner.threads()
+    );
     println!("{txt}");
     // Shape assertions: LA-IMR never loses on P99; σ shrinks at λ=6.
-    let data = report::head_to_head(&cfg, 300.0, &[101, 102, 103, 104, 105]);
+    let data = report::head_to_head(&cfg, 300.0, &[101, 102, 103, 104, 105], &runner);
     for h in &data {
         assert!(
             h.la_p99.mean <= h.bl_p99.mean * 1.05,

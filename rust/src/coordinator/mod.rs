@@ -18,5 +18,5 @@ pub mod router;
 pub mod state;
 
 pub use queues::{MultiQueue, QueuedRequest};
-pub use router::{Decision, RouteReason, Router};
+pub use router::{home_map, Decision, RouteReason, Router};
 pub use state::{ControlState, ReplicaView};

@@ -64,6 +64,32 @@ struct ModelTelemetry {
     splitter: FractionSplitter,
 }
 
+/// Home deployment per model: the cheapest instance hosts each model by
+/// default (paper: the model's own tier — edge for EfficientDet/YOLO),
+/// except Precise-class models, which home on the cloud tier. Shared by
+/// the router and every control policy that routes home-first.
+pub fn home_map(cfg: &Config) -> Vec<DeploymentKey> {
+    (0..cfg.models.len())
+        .map(|m| {
+            // Cheapest instance hosts the model by default...
+            let i = cfg
+                .instances
+                .iter()
+                .enumerate()
+                .min_by(|(_, a), (_, b)| a.cost.partial_cmp(&b.cost).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            // Precision-class models home on the cloud tier.
+            let i = if cfg.models[m].quality == crate::config::QualityClass::Precise {
+                cfg.cloud_instances().next().map(|(k, _)| k).unwrap_or(i)
+            } else {
+                i
+            };
+            DeploymentKey { model: m, instance: i }
+        })
+        .collect()
+}
+
 /// The LA-IMR router.
 pub struct Router {
     cfg: Config,
@@ -105,25 +131,7 @@ impl Router {
         }
         // Home pool: cheapest instance (paper: the model's own tier —
         // edge for EfficientDet/YOLO, cloud for the precision model).
-        let home = (0..cfg.models.len())
-            .map(|m| {
-                // Cheapest instance hosts the model by default...
-                let i = cfg
-                    .instances
-                    .iter()
-                    .enumerate()
-                    .min_by(|(_, a), (_, b)| a.cost.partial_cmp(&b.cost).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap_or(0);
-                // Precision-class models home on the cloud tier.
-                let i = if cfg.models[m].quality == crate::config::QualityClass::Precise {
-                    cfg.cloud_instances().next().map(|(k, _)| k).unwrap_or(i)
-                } else {
-                    i
-                };
-                DeploymentKey { model: m, instance: i }
-            })
-            .collect();
+        let home = home_map(cfg);
         let telemetry = (0..cfg.models.len())
             .map(|_| ModelTelemetry {
                 rate: SlidingRate::new(cfg.slo.rate_window),

@@ -10,7 +10,7 @@
 use la_imr::config::{Config, QualityClass, ScenarioConfig};
 use la_imr::planner::{plan_capacity, TaskClass};
 use la_imr::report;
-use la_imr::sim::{Architecture, Policy, Simulation};
+use la_imr::sim::{Architecture, Policy, Runner, Simulation};
 use la_imr::util::cli::Args;
 use std::path::{Path, PathBuf};
 
@@ -22,11 +22,13 @@ USAGE: laimr [--config cfg.json] [--artifacts DIR] <command> [flags]
 COMMANDS:
   serve      --robots N --fps F --duration S     serve real PJRT inference
   simulate   --lambda L --policy P --bursty B    run one DES scenario
-             --duration S --replicas N --seed K  (P: la-imr|baseline|static)
+             --duration S --replicas N --seed K  (P: la-imr|baseline|static|hedged)
              [--mtbf S]                          pod-crash fault injection
-  calibrate                                      fit α,β,γ (Fig 2)
+  calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
   repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|all>
+             [--threads T]                       sweep worker count
+                                                 (default: all cores; 1 = serial)
 ";
 
 fn main() {
@@ -46,6 +48,12 @@ fn run() -> anyhow::Result<()> {
         return Ok(());
     };
 
+    // Sweep worker count for runner-backed commands (0 = auto).
+    let runner = match args.get_u64("threads", 0).map_err(anyhow::Error::msg)? {
+        0 => Runner::new(),
+        n => Runner::with_threads(n as usize),
+    };
+
     match cmd {
         "serve" => serve(
             &cfg,
@@ -56,11 +64,12 @@ fn run() -> anyhow::Result<()> {
         ),
         "simulate" => {
             let lambda = args.get_f64("lambda", 4.0).map_err(anyhow::Error::msg)?;
-            let policy = match args.get_str("policy", "la-imr") {
-                "la-imr" => Policy::LaImr,
-                "baseline" => Policy::Baseline,
-                "static" => Policy::Static,
-                other => anyhow::bail!("unknown policy {other}"),
+            let policy = match Policy::from_name(args.get_str("policy", "la-imr")) {
+                Some(p) => p,
+                None => anyhow::bail!(
+                    "unknown policy {} (expected la-imr|baseline|static|hedged)",
+                    args.get_str("policy", "la-imr")
+                ),
             };
             let bursty = args.get_bool("bursty", true).map_err(anyhow::Error::msg)?;
             let duration = args.get_f64("duration", 300.0).map_err(anyhow::Error::msg)?;
@@ -101,7 +110,7 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "calibrate" => {
-            println!("{}", report::fig2(&cfg));
+            println!("{}", report::fig2(&cfg, &runner));
             Ok(())
         }
         "plan" => {
@@ -154,13 +163,13 @@ fn run() -> anyhow::Result<()> {
                 match id {
                     "table2" => println!("{}", report::table2(&cfg, art)),
                     "table3" => println!("{}", report::table3(&cfg)),
-                    "table4" => println!("{}", report::table4(&cfg)),
-                    "fig2" => println!("{}", report::fig2(&cfg)),
-                    "fig3" => println!("{}", report::fig3(&cfg)),
-                    "fig4" => println!("{}", report::fig4(&cfg)),
-                    "fig7" => println!("{}", report::fig7(&cfg)),
-                    "fig8" => println!("{}", report::fig8(&cfg)),
-                    "table6" => println!("{}", report::table6(&cfg)),
+                    "table4" => println!("{}", report::table4(&cfg, &runner)),
+                    "fig2" => println!("{}", report::fig2(&cfg, &runner)),
+                    "fig3" => println!("{}", report::fig3(&cfg, &runner)),
+                    "fig4" => println!("{}", report::fig4(&cfg, &runner)),
+                    "fig7" => println!("{}", report::fig7(&cfg, &runner)),
+                    "fig8" => println!("{}", report::fig8(&cfg, &runner)),
+                    "table6" => println!("{}", report::table6(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())

@@ -201,4 +201,53 @@ mod tests {
     fn zero_arrivals_zero_wait() {
         assert_eq!(mmc_wait(0.0, 1.0, 1), 0.0);
     }
+
+    #[test]
+    fn mm1_hand_computed_values() {
+        // M/M/1 closed forms: P(wait) = ρ, W_q = ρ/(μ−λ), checked against
+        // hand-computed numbers (not the direct-formula oracle above).
+        //
+        // λ=0.5, μ=1: ρ=0.5, W_q = 0.5/0.5 = 1.0 s.
+        assert!((erlang_c(0.5, 1) - 0.5).abs() < 1e-12);
+        assert!((mmc_wait(0.5, 1.0, 1) - 1.0).abs() < 1e-12);
+        // λ=0.9, μ=1: ρ=0.9, W_q = 0.9/0.1 = 9.0 s (near-saturation blowup).
+        assert!((erlang_c(0.9, 1) - 0.9).abs() < 1e-12);
+        assert!((mmc_wait(0.9, 1.0, 1) - 9.0).abs() < 1e-9);
+        // λ=1, μ=2: ρ=0.5, W_q = 0.5/(2−1) = 0.5 s — μ scaling matters.
+        assert!((mmc_wait(1.0, 2.0, 1) - 0.5).abs() < 1e-12);
+        // YOLOv5m on the reference edge: μ = 1/0.73, λ=1 ⇒ ρ=0.73,
+        // W_q = ρ/(μ−λ) = 0.73/(1/0.73 − 1) = 0.73²/(1−0.73) ≈ 1.97366 s.
+        let mu = 1.0 / 0.73;
+        let expect = 0.73 * 0.73 / (1.0 - 0.73);
+        assert!((mmc_wait(1.0, mu, 1) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mm2_hand_computed_value() {
+        // M/M/2 with λ=1, μ=1: a=1, ρ=0.5.
+        // Erlang-C: [a²/(2!(1−ρ))] / [Σ_{k=0}^{1} a^k/k! + a²/(2!(1−ρ))]
+        //         = 1 / (1 + 1 + 1) = 1/3; W_q = (1/3)/(2−1) = 1/3 s.
+        assert!((erlang_c(1.0, 2) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((mmc_wait(1.0, 1.0, 2) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn erlang_b_hand_computed_values() {
+        // B(a, 1) = a/(1+a); B(a, 2) = aB₁/(2+aB₁).
+        assert!((erlang_b(1.0, 1) - 0.5).abs() < 1e-12);
+        assert!((erlang_b(2.0, 1) - 2.0 / 3.0).abs() < 1e-12);
+        // a=2, c=2: B₁ = 2/3 → B₂ = (2·2/3)/(2 + 2·2/3) = (4/3)/(10/3) = 0.4.
+        assert!((erlang_b(2.0, 2) - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn boundary_rho_one_saturates() {
+        // Exactly ρ = 1 is already unstable: every arrival waits forever.
+        assert_eq!(erlang_c(1.0, 1), 1.0);
+        assert_eq!(erlang_c(4.0, 4), 1.0);
+        assert_eq!(mmc_wait(1.0, 1.0, 1), f64::INFINITY);
+        // Zero servers: nothing can ever be served.
+        assert_eq!(erlang_c(0.5, 0), 1.0);
+        assert_eq!(mmc_wait(0.5, 1.0, 0), f64::INFINITY);
+    }
 }

@@ -1,8 +1,13 @@
 //! The experiment implementations behind `laimr repro`.
+//!
+//! Every sweep builds a flat list of [`Cell`]s and hands it to the
+//! sharded [`Runner`] — multi-core by default, bit-identical to a serial
+//! run (per-cell seeding; see `sim::runner`). Pass `--threads N` to the
+//! CLI (or set `LAIMR_THREADS`) to pin the worker count.
 
-use crate::config::{Config, ScenarioConfig};
+use crate::config::{ArrivalKind, Config, ScenarioConfig};
 use crate::latency_model::{fit_anchored, paper_table4_samples, CalibrationSample};
-use crate::sim::{Architecture, Policy, Simulation};
+use crate::sim::{Architecture, Cell, Policy, Runner};
 use crate::telemetry::{box_stats, Summary};
 
 use super::render_table;
@@ -14,27 +19,9 @@ pub const RUN_WARMUP: f64 = 30.0;
 /// Seeds per (λ, policy) cell for mean ± SD (Table VI shape).
 pub const TRIALS: &[u64] = &[101, 102, 103, 104, 105];
 
-/// One simulated latency series for (λ, policy, N0, arch, seed).
-pub fn run_cell(
-    cfg: &Config,
-    lambda: f64,
-    policy: Policy,
-    arch: Architecture,
-    initial_replicas: u32,
-    bursty: bool,
-    seed: u64,
-    duration: f64,
-    warmup: f64,
-) -> crate::sim::SimResult {
-    let scenario = if bursty {
-        ScenarioConfig::bursty(lambda, seed)
-    } else {
-        ScenarioConfig::poisson(lambda, seed)
-    }
-    .with_duration(duration, warmup)
-    .with_replicas(initial_replicas);
-    Simulation::new(cfg, &scenario, policy, arch).run()
-}
+/// The Table VI / Fig 7 policy columns: LA-IMR vs the reactive baseline
+/// vs the SafeTail-style hedged comparator.
+pub const SWEEP_POLICIES: [Policy; 3] = [Policy::LaImr, Policy::Baseline, Policy::Hedged];
 
 // ---------------------------------------------------------------- table 2
 
@@ -103,45 +90,61 @@ pub fn table3(cfg: &Config) -> String {
 // ---------------------------------------------------------------- table 4
 
 /// Table IV data: mean ± SD per-inference latency of YOLOv5m at
-/// λ ∈ {1..4} × N ∈ {1,2,4}.
+/// λ ∈ {1..4} × N ∈ {1,2,4}, 3 seeds per cell, sharded across the runner.
 ///
 /// The paper's grid comes from λ robots emitting frames on a fixed period
 /// for a short measurement window (~30 s per cell — the only setting
 /// reproducing both the exact 0.73 s idle cells and the bounded overload
 /// means; see EXPERIMENTS.md): periodic arrivals, static layout.
-pub fn table4_data(cfg: &Config, duration: f64) -> Vec<(u32, f64, f64, f64)> {
+pub fn table4_data(cfg: &Config, duration: f64, runner: &Runner) -> Vec<(u32, f64, f64, f64)> {
+    const NS: [u32; 3] = [1, 2, 4];
+    let seeds = &TRIALS[..3];
     let mut cells = Vec::new();
-    for &n in &[1u32, 2, 4] {
-        for lam in 1..=4 {
-            let mut means = Vec::new();
-            for &seed in &TRIALS[..3] {
-                let scenario = ScenarioConfig {
-                    name: format!("table4-l{lam}-n{n}"),
-                    arrivals: crate::config::ArrivalKind::Periodic { rate: lam as f64 },
-                    duration,
-                    warmup: 0.0,
-                    seed,
-                    quality_mix: [0.0, 1.0, 0.0],
-                    initial_replicas: n,
-                    pod_mtbf: None,
-                };
-                let r =
-                    Simulation::new(cfg, &scenario, Policy::Static, Architecture::Microservice)
-                        .run();
-                means.push(r.summary().mean);
+    for &n in &NS {
+        for lam in 1..=4u32 {
+            for &seed in seeds {
+                cells.push(Cell::new(
+                    ScenarioConfig {
+                        name: format!("table4-l{lam}-n{n}"),
+                        arrivals: ArrivalKind::Periodic { rate: lam as f64 },
+                        duration,
+                        warmup: 0.0,
+                        seed,
+                        quality_mix: [0.0, 1.0, 0.0],
+                        initial_replicas: n,
+                        pod_mtbf: None,
+                    },
+                    Policy::Static,
+                ));
             }
-            let s = Summary::from(&means);
-            cells.push((n, lam as f64, s.mean, s.std));
         }
     }
-    cells
+    let results = runner.run(cfg, &cells);
+
+    let mut out = Vec::new();
+    let mut k = 0;
+    for &n in &NS {
+        for lam in 1..=4u32 {
+            let means: Vec<f64> = seeds
+                .iter()
+                .map(|_| {
+                    let m = results[k].summary().mean;
+                    k += 1;
+                    m
+                })
+                .collect();
+            let s = Summary::from(&means);
+            out.push((n, lam as f64, s.mean, s.std));
+        }
+    }
+    out
 }
 
 /// Per-cell measurement window for Table IV [s].
 pub const TABLE4_WINDOW: f64 = 30.0;
 
-pub fn table4(cfg: &Config) -> String {
-    let cells = table4_data(cfg, TABLE4_WINDOW);
+pub fn table4(cfg: &Config, runner: &Runner) -> String {
+    let cells = table4_data(cfg, TABLE4_WINDOW, runner);
     let paper: [[f64; 4]; 3] = [
         [0.73, 4.97, 7.71, 10.46],
         [0.73, 1.26, 3.76, 5.12],
@@ -159,7 +162,7 @@ pub fn table4(cfg: &Config) -> String {
             row.push(format!("{:.2}±{:.2}", cell.2, cell.3));
         }
         rows.push(row);
-        let mut prow = vec![format!("  (paper)")];
+        let mut prow = vec!["  (paper)".to_string()];
         for lam in 0..4 {
             prow.push(format!("{:.2}", paper[k][lam]));
         }
@@ -175,12 +178,12 @@ pub fn table4(cfg: &Config) -> String {
 
 /// Fig 2: calibrate the affine power law on simulated Table IV samples and
 /// compare with the paper's (0.73, 1.29, 1.49) fit of its own data.
-pub fn fig2(cfg: &Config) -> String {
+pub fn fig2(cfg: &Config, runner: &Runner) -> String {
     // Fit on the paper's own published grid first (exact reproduction —
     // α anchored at the measured idle latency, as the paper does)...
     let paper_fit = fit_anchored(&paper_table4_samples(), 0.73, 0.3, 3.0).unwrap();
     // ...then on our simulator's measurements (should land nearby).
-    let cells = table4_data(cfg, TABLE4_WINDOW);
+    let cells = table4_data(cfg, TABLE4_WINDOW, runner);
     let ours: Vec<CalibrationSample> = cells
         .iter()
         .map(|&(n, lam, mean, _)| CalibrationSample {
@@ -240,27 +243,27 @@ pub fn fig2(cfg: &Config) -> String {
 // ------------------------------------------------------------------ fig 3
 
 /// Fig 3: avg / P95 / P99 vs λ = 1..6 at fixed N = 4.
-pub fn fig3_data(cfg: &Config, duration: f64) -> Vec<(f64, Summary)> {
-    (1..=6)
+pub fn fig3_data(cfg: &Config, duration: f64, runner: &Runner) -> Vec<(f64, Summary)> {
+    let cells: Vec<Cell> = (1..=6)
         .map(|lam| {
-            let r = run_cell(
-                cfg,
-                lam as f64,
+            Cell::new(
+                ScenarioConfig::poisson(lam as f64, TRIALS[0])
+                    .with_duration(duration, RUN_WARMUP.min(duration / 10.0))
+                    .with_replicas(4),
                 Policy::Static,
-                Architecture::Microservice,
-                4,
-                false,
-                TRIALS[0],
-                duration,
-                RUN_WARMUP.min(duration / 10.0),
-            );
-            (lam as f64, r.summary())
+            )
         })
+        .collect();
+    runner
+        .run(cfg, &cells)
+        .iter()
+        .enumerate()
+        .map(|(k, r)| ((k + 1) as f64, r.summary()))
         .collect()
 }
 
-pub fn fig3(cfg: &Config) -> String {
-    let data = fig3_data(cfg, RUN_DURATION);
+pub fn fig3(cfg: &Config, runner: &Runner) -> String {
+    let data = fig3_data(cfg, RUN_DURATION, runner);
     let rows: Vec<Vec<String>> = data
         .iter()
         .map(|(lam, s)| {
@@ -282,30 +285,26 @@ pub fn fig3(cfg: &Config) -> String {
 
 /// Fig 4: microservice vs monolithic, avg/P95/P99, N ∈ {1, 2, 4, 6}, λ=4,
 /// mixed-quality traffic.
-pub fn fig4_data(
-    cfg: &Config,
-    duration: f64,
-) -> Vec<(u32, Summary, Summary)> {
-    [1u32, 2, 4, 6]
-        .iter()
-        .map(|&n| {
-            let mut scenario = ScenarioConfig::poisson(4.0, TRIALS[0])
-                .with_duration(duration, RUN_WARMUP.min(duration / 10.0))
-                .with_replicas(n);
-            scenario.quality_mix = [0.3, 0.5, 0.2];
-            let micro = Simulation::new(cfg, &scenario, Policy::Static, Architecture::Microservice)
-                .run()
-                .summary();
-            let mono = Simulation::new(cfg, &scenario, Policy::Static, Architecture::Monolithic)
-                .run()
-                .summary();
-            (n, micro, mono)
-        })
+pub fn fig4_data(cfg: &Config, duration: f64, runner: &Runner) -> Vec<(u32, Summary, Summary)> {
+    const NS: [u32; 4] = [1, 2, 4, 6];
+    let mut cells = Vec::new();
+    for &n in &NS {
+        let mut scenario = ScenarioConfig::poisson(4.0, TRIALS[0])
+            .with_duration(duration, RUN_WARMUP.min(duration / 10.0))
+            .with_replicas(n);
+        scenario.quality_mix = [0.3, 0.5, 0.2];
+        cells.push(Cell::new(scenario.clone(), Policy::Static));
+        cells.push(Cell::new(scenario, Policy::Static).with_arch(Architecture::Monolithic));
+    }
+    let results = runner.run(cfg, &cells);
+    NS.iter()
+        .enumerate()
+        .map(|(k, &n)| (n, results[2 * k].summary(), results[2 * k + 1].summary()))
         .collect()
 }
 
-pub fn fig4(cfg: &Config) -> String {
-    let data = fig4_data(cfg, RUN_DURATION);
+pub fn fig4(cfg: &Config, runner: &Runner) -> String {
+    let data = fig4_data(cfg, RUN_DURATION, runner);
     let rows: Vec<Vec<String>> = data
         .iter()
         .map(|(n, micro, mono)| {
@@ -324,73 +323,87 @@ pub fn fig4(cfg: &Config) -> String {
 
 // --------------------------------------------------- fig 7 / fig 8 / tbl 6
 
-/// The paper's headline experiment: LA-IMR vs reactive baseline across
-/// λ = 1..6 under bursty arrivals, multi-seed. Returns per λ:
-/// (λ, LA-IMR P95 summary-over-seeds, baseline P95, LA-IMR P99, baseline P99).
+/// The paper's headline experiment plus the hedged comparator: LA-IMR vs
+/// reactive baseline vs SafeTail-style hedging across λ = 1..6 under
+/// bursty arrivals, multi-seed, all cells sharded across the runner.
 pub struct HeadToHead {
     pub lambda: f64,
     pub la_p95: Summary,
     pub bl_p95: Summary,
+    pub hd_p95: Summary,
     pub la_p99: Summary,
     pub bl_p99: Summary,
+    pub hd_p99: Summary,
     /// Pooled latencies (all seeds) for box plots.
     pub la_all: Vec<f64>,
     pub bl_all: Vec<f64>,
+    pub hd_all: Vec<f64>,
 }
 
-pub fn head_to_head(cfg: &Config, duration: f64, trials: &[u64]) -> Vec<HeadToHead> {
+pub fn head_to_head(
+    cfg: &Config,
+    duration: f64,
+    trials: &[u64],
+    runner: &Runner,
+) -> Vec<HeadToHead> {
+    let warmup = RUN_WARMUP.min(duration / 10.0);
+    let n_pol = SWEEP_POLICIES.len();
+    // The aggregation below assigns la_/bl_/hd_ fields positionally;
+    // keep it honest if SWEEP_POLICIES is ever reordered or extended.
+    assert_eq!(
+        SWEEP_POLICIES,
+        [Policy::LaImr, Policy::Baseline, Policy::Hedged],
+        "head_to_head field mapping is coupled to SWEEP_POLICIES order"
+    );
+    let mut cells = Vec::new();
+    for lam in 1..=6 {
+        for &seed in trials {
+            for policy in SWEEP_POLICIES {
+                cells.push(Cell::new(
+                    ScenarioConfig::bursty(lam as f64, seed)
+                        .with_duration(duration, warmup)
+                        .with_replicas(2),
+                    policy,
+                ));
+            }
+        }
+    }
+    let results = runner.run(cfg, &cells);
+
     (1..=6)
         .map(|lam| {
-            let (mut lp95, mut bp95, mut lp99, mut bp99) =
-                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-            let (mut la_all, mut bl_all) = (Vec::new(), Vec::new());
-            for &seed in trials {
-                let la = run_cell(
-                    cfg,
-                    lam as f64,
-                    Policy::LaImr,
-                    Architecture::Microservice,
-                    2,
-                    true,
-                    seed,
-                    duration,
-                    RUN_WARMUP.min(duration / 10.0),
-                );
-                let bl = run_cell(
-                    cfg,
-                    lam as f64,
-                    Policy::Baseline,
-                    Architecture::Microservice,
-                    2,
-                    true,
-                    seed,
-                    duration,
-                    RUN_WARMUP.min(duration / 10.0),
-                );
-                let (ls, bs) = (la.summary(), bl.summary());
-                lp95.push(ls.p95);
-                bp95.push(bs.p95);
-                lp99.push(ls.p99);
-                bp99.push(bs.p99);
-                la_all.extend(la.latencies());
-                bl_all.extend(bl.latencies());
+            let li = lam - 1;
+            let mut p95s = vec![Vec::new(); n_pol];
+            let mut p99s = vec![Vec::new(); n_pol];
+            let mut alls = vec![Vec::new(); n_pol];
+            for si in 0..trials.len() {
+                for (pi, v95) in p95s.iter_mut().enumerate() {
+                    let r = &results[(li * trials.len() + si) * n_pol + pi];
+                    let s = r.summary();
+                    v95.push(s.p95);
+                    p99s[pi].push(s.p99);
+                    alls[pi].extend(r.latencies());
+                }
             }
             HeadToHead {
                 lambda: lam as f64,
-                la_p95: Summary::from(&lp95),
-                bl_p95: Summary::from(&bp95),
-                la_p99: Summary::from(&lp99),
-                bl_p99: Summary::from(&bp99),
-                la_all,
-                bl_all,
+                la_p95: Summary::from(&p95s[0]),
+                bl_p95: Summary::from(&p95s[1]),
+                hd_p95: Summary::from(&p95s[2]),
+                la_p99: Summary::from(&p99s[0]),
+                bl_p99: Summary::from(&p99s[1]),
+                hd_p99: Summary::from(&p99s[2]),
+                la_all: std::mem::take(&mut alls[0]),
+                bl_all: std::mem::take(&mut alls[1]),
+                hd_all: std::mem::take(&mut alls[2]),
             }
         })
         .collect()
 }
 
-/// Table VI: P95/P99 mean±SD across λ, LA-IMR vs baseline.
-pub fn table6(cfg: &Config) -> String {
-    let data = head_to_head(cfg, RUN_DURATION, TRIALS);
+/// Table VI: P95/P99 mean±SD across λ — LA-IMR vs baseline vs hedged.
+pub fn table6(cfg: &Config, runner: &Runner) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, TRIALS, runner);
     let mut rows = Vec::new();
     for h in &data {
         let imp = 100.0 * (1.0 - h.la_p99.mean / h.bl_p99.mean.max(1e-9));
@@ -398,44 +411,57 @@ pub fn table6(cfg: &Config) -> String {
             format!("{:.0}", h.lambda),
             format!("{:.3}±{:.3}", h.la_p95.mean, h.la_p95.std),
             format!("{:.3}±{:.3}", h.bl_p95.mean, h.bl_p95.std),
+            format!("{:.3}±{:.3}", h.hd_p95.mean, h.hd_p95.std),
             format!("{:.3}±{:.3}", h.la_p99.mean, h.la_p99.std),
             format!("{:.3}±{:.3}", h.bl_p99.mean, h.bl_p99.std),
+            format!("{:.3}±{:.3}", h.hd_p99.mean, h.hd_p99.std),
             format!("{imp:+.1}%"),
         ]);
     }
     format!(
-        "Table VI — P95/P99 across λ (bursty arrivals, {} seeds)\n{}",
+        "Table VI — P95/P99 across λ (bursty arrivals, {} seeds; hedged = SafeTail-style comparator)\n{}",
         TRIALS.len(),
         render_table(
-            &["λ", "LA-IMR P95", "Base P95", "LA-IMR P99", "Base P99", "P99 gain"],
+            &[
+                "λ",
+                "LA-IMR P95",
+                "Base P95",
+                "Hedged P95",
+                "LA-IMR P99",
+                "Base P99",
+                "Hedged P99",
+                "P99 gain",
+            ],
             &rows
         )
     )
 }
 
-/// Fig 7: latency distribution summaries per λ for both policies.
-pub fn fig7(cfg: &Config) -> String {
-    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3]);
+/// Fig 7: latency distribution summaries per λ for all three policies.
+pub fn fig7(cfg: &Config, runner: &Runner) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3], runner);
     let mut rows = Vec::new();
     for h in &data {
         let la = Summary::from(&h.la_all);
         let bl = Summary::from(&h.bl_all);
+        let hd = Summary::from(&h.hd_all);
         rows.push(vec![
             format!("{:.0}", h.lambda),
             format!("{:.2}/{:.2}/{:.2}", la.p50, la.p95, la.p99),
             format!("{:.2}/{:.2}/{:.2}", bl.p50, bl.p95, bl.p99),
+            format!("{:.2}/{:.2}/{:.2}", hd.p50, hd.p95, hd.p99),
         ]);
     }
     format!(
         "Fig 7 — latency distributions (P50/P95/P99 [s]) per λ\n{}",
-        render_table(&["λ", "LA-IMR", "baseline"], &rows)
+        render_table(&["λ", "LA-IMR", "baseline", "hedged"], &rows)
     )
 }
 
 /// Fig 8: P99 box plots; the paper highlights IQR −27 % and max outlier
 /// −41 % for LA-IMR.
-pub fn fig8(cfg: &Config) -> String {
-    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3]);
+pub fn fig8(cfg: &Config, runner: &Runner) -> String {
+    let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3], runner);
     // Pool across λ (as the paper's box figure aggregates the runs).
     let (mut la_iqr, mut bl_iqr, mut la_max, mut bl_max) = (0.0, 0.0, 0.0f64, 0.0f64);
     let mut rows = Vec::new();
@@ -495,7 +521,7 @@ mod tests {
     fn table4_shape_holds_quick() {
         // Short run: the grid's qualitative shape — latency grows with λ,
         // shrinks with N.
-        let cells = table4_data(&cfg(), TABLE4_WINDOW);
+        let cells = table4_data(&cfg(), TABLE4_WINDOW, &Runner::new());
         assert_eq!(cells.len(), 12);
         let get = |n: u32, lam: f64| cells.iter().find(|c| c.0 == n && c.1 == lam).unwrap().2;
         assert!(get(1, 4.0) > get(1, 1.0), "λ growth violated");
@@ -506,12 +532,24 @@ mod tests {
 
     #[test]
     fn fig3_tails_ordered() {
-        let data = fig3_data(&cfg(), 60.0);
+        let data = fig3_data(&cfg(), 60.0, &Runner::new());
         for (_, s) in &data {
             assert!(s.mean <= s.p95 + 1e-9 && s.p95 <= s.p99 + 1e-9);
         }
         // Latency at λ=6 worse than at λ=1.
         assert!(data[5].1.p99 > data[0].1.p99);
+    }
+
+    #[test]
+    fn head_to_head_includes_hedged_column() {
+        // One λ-sized slice of the sweep, short duration, 2 seeds.
+        let data = head_to_head(&cfg(), 60.0, &TRIALS[..2], &Runner::new());
+        assert_eq!(data.len(), 6);
+        for h in &data {
+            assert_eq!(h.la_p99.count, 2);
+            assert_eq!(h.hd_p99.count, 2);
+            assert!(!h.hd_all.is_empty(), "hedged latencies missing");
+        }
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Composable scenario components: the pieces of a run that used to be
+//! welded into the engine's `run()` — control-plane cadences and fault
+//! injection — factored out so new failure/arrival shapes can be added
+//! without touching the event loop.
+//!
+//! The arrival stream itself is the third component and already lives in
+//! [`crate::workload::ArrivalGenerator`]; the engine simply composes all
+//! three into its event queue.
+
+use crate::config::{Config, ScenarioConfig};
+use crate::rng::Rng;
+use crate::sim::events::{Event, EventQueue};
+use crate::SimTime;
+
+/// The periodic control-plane event trains: autoscaler publish (1 s),
+/// HPA reconcile, Prometheus scrape. Seeding order matters for same-time
+/// ties (control before HPA before scrape, as the real cadences race).
+#[derive(Debug, Clone, Copy)]
+pub struct CadencePlan {
+    /// Autoscaler publish + state refresh period [s].
+    pub control: f64,
+    /// HPA reconcile period [s].
+    pub hpa: f64,
+    /// Prometheus scrape period [s].
+    pub scrape: f64,
+}
+
+impl CadencePlan {
+    pub fn from_config(cfg: &Config) -> Self {
+        CadencePlan {
+            control: 1.0,
+            hpa: cfg.cluster.hpa_interval,
+            scrape: cfg.cluster.scrape_interval,
+        }
+    }
+
+    /// Push every periodic tick inside `[0, duration)` onto the queue.
+    pub fn seed(&self, events: &mut EventQueue, duration: f64) {
+        let mut t = 0.0;
+        while t < duration {
+            events.push(t, Event::ControlTick);
+            t += self.control;
+        }
+        let mut t = 0.0;
+        while t < duration {
+            events.push(t, Event::HpaTick);
+            t += self.hpa;
+        }
+        let mut t = 0.0;
+        while t < duration {
+            events.push(t, Event::ScrapeTick);
+            t += self.scrape;
+        }
+    }
+}
+
+/// A fault process: when do pods of pool `dep` crash? Implementations
+/// draw from the engine's RNG so runs stay deterministic per seed.
+pub trait FaultInjector {
+    /// First crash time for pool `dep`, sampled at t = 0 (None = never).
+    fn first_crash(&self, dep: usize, rng: &mut Rng) -> Option<SimTime>;
+
+    /// Next crash of pool `dep` after one fired at `now` (renewal).
+    fn next_crash(&self, dep: usize, now: SimTime, rng: &mut Rng) -> Option<SimTime>;
+}
+
+/// No faults at all — the default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoFaults;
+
+impl FaultInjector for NoFaults {
+    fn first_crash(&self, _dep: usize, _rng: &mut Rng) -> Option<SimTime> {
+        None
+    }
+
+    fn next_crash(&self, _dep: usize, _now: SimTime, _rng: &mut Rng) -> Option<SimTime> {
+        None
+    }
+}
+
+/// Exponential pod crashes: per-pool renewal process with the given mean
+/// time between failures (the seed's `pod_mtbf` semantics).
+#[derive(Debug, Clone, Copy)]
+pub struct ExpPodCrashes {
+    pub mtbf: f64,
+}
+
+impl FaultInjector for ExpPodCrashes {
+    fn first_crash(&self, _dep: usize, rng: &mut Rng) -> Option<SimTime> {
+        Some(rng.exp(1.0 / self.mtbf))
+    }
+
+    fn next_crash(&self, _dep: usize, now: SimTime, rng: &mut Rng) -> Option<SimTime> {
+        Some(now + rng.exp(1.0 / self.mtbf))
+    }
+}
+
+/// The fault component a scenario asks for.
+pub fn fault_injector_for(scenario: &ScenarioConfig) -> Box<dyn FaultInjector> {
+    match scenario.pod_mtbf {
+        Some(mtbf) => Box::new(ExpPodCrashes { mtbf }),
+        None => Box::new(NoFaults),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cadence_seeds_expected_counts() {
+        let cfg = Config::default();
+        let plan = CadencePlan::from_config(&cfg);
+        let mut events = EventQueue::new();
+        plan.seed(&mut events, 30.0);
+        let (mut control, mut hpa, mut scrape) = (0, 0, 0);
+        while let Some(ev) = events.pop() {
+            match ev.event {
+                Event::ControlTick => control += 1,
+                Event::HpaTick => hpa += 1,
+                Event::ScrapeTick => scrape += 1,
+                _ => {}
+            }
+        }
+        assert_eq!(control, 30); // every 1 s in [0, 30)
+        assert_eq!(hpa, 6); // every 5 s
+        assert_eq!(scrape, 2); // every 15 s
+    }
+
+    #[test]
+    fn cadence_tie_order_control_first() {
+        let cfg = Config::default();
+        let mut events = EventQueue::new();
+        CadencePlan::from_config(&cfg).seed(&mut events, 1.0);
+        // All three trains start at t = 0; insertion order breaks the tie.
+        assert_eq!(events.pop().unwrap().event, Event::ControlTick);
+        assert_eq!(events.pop().unwrap().event, Event::HpaTick);
+        assert_eq!(events.pop().unwrap().event, Event::ScrapeTick);
+    }
+
+    #[test]
+    fn no_faults_never_fires() {
+        let mut rng = Rng::new(1);
+        assert_eq!(NoFaults.first_crash(0, &mut rng), None);
+        assert_eq!(NoFaults.next_crash(0, 10.0, &mut rng), None);
+    }
+
+    #[test]
+    fn exp_crashes_renew_forward_in_time() {
+        let inj = ExpPodCrashes { mtbf: 40.0 };
+        let mut rng = Rng::new(7);
+        let first = inj.first_crash(0, &mut rng).unwrap();
+        assert!(first > 0.0);
+        let next = inj.next_crash(0, first, &mut rng).unwrap();
+        assert!(next > first);
+        // Mean of the renewal gap ≈ MTBF.
+        let n = 20_000;
+        let mean: f64 = (0..n)
+            .map(|_| inj.first_crash(0, &mut rng).unwrap())
+            .sum::<f64>()
+            / n as f64;
+        assert!((mean - 40.0).abs() < 1.5, "mean={mean}");
+    }
+
+    #[test]
+    fn injector_for_scenario_matches_mtbf() {
+        let mut rng = Rng::new(3);
+        let quiet = ScenarioConfig::poisson(1.0, 1);
+        assert!(fault_injector_for(&quiet).first_crash(0, &mut rng).is_none());
+        let faulty = ScenarioConfig::poisson(1.0, 1).with_faults(25.0);
+        assert!(fault_injector_for(&faulty)
+            .first_crash(0, &mut rng)
+            .is_some());
+    }
+}

@@ -1,6 +1,13 @@
-//! The simulation engine: wires workload → policy (LA-IMR router /
-//! baseline / static) → deployments (simulated Kubernetes) → service-time
-//! sampling from the calibrated latency law → completion statistics.
+//! The simulation engine: wires workload → control policy (pluggable —
+//! see [`crate::sim::policy`]) → deployments (simulated Kubernetes) →
+//! service-time sampling from the calibrated latency law → completion
+//! statistics.
+//!
+//! The engine is policy-free: admission/routing, offload, replica
+//! warm-up, and the scaling signal are all delegated to the installed
+//! [`ControlPolicy`]; the event loop never branches on which policy is
+//! running. Fault injection and the control-plane cadences are composed
+//! from [`crate::sim::components`].
 //!
 //! Service-time model: a dispatched request takes
 //!   (L_m / S_i) · [1 + (B_i/R_max)^γ] · LogNormal(−σ²/2, σ)
@@ -13,41 +20,26 @@
 //! prediction* of that emergent behaviour (§III-C), which is the paper's
 //! own relationship between model and system. Network RTT is added per
 //! request with 10 % jitter.
+//!
+//! Redundant dispatch: a policy may return a hedge target; the request is
+//! then enqueued at two pools and the first completion wins. The losing
+//! copy only frees its pod when done (no cross-server cancellation).
 
-use crate::autoscaler::{Autoscaler, PmHpa, ReactiveBaseline};
+use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
 use crate::config::{Config, QualityClass, ScenarioConfig};
 use crate::coordinator::state::ReplicaView;
-use crate::coordinator::{ControlState, MultiQueue, QueuedRequest, Router};
+use crate::coordinator::{home_map, ControlState, MultiQueue, QueuedRequest};
 use crate::latency_model::LatencyModel;
 use crate::rng::Rng;
+use crate::sim::components::{fault_injector_for, CadencePlan, FaultInjector};
 use crate::sim::events::{Event, EventQueue};
+use crate::sim::policy::{ControlPolicy, Policy};
 use crate::sim::result::{CompletedRequest, SimResult};
 use crate::telemetry::{LatencyHistogram, SlidingRate};
 use crate::workload::ArrivalGenerator;
 use crate::SimTime;
 use std::collections::HashMap;
-
-/// Control policy under test.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Policy {
-    /// Full LA-IMR: Algorithm 1 routing + offload + PM-HPA scaling.
-    LaImr,
-    /// Reactive latency-threshold autoscaling, no offload (§V comparator).
-    Baseline,
-    /// Fixed replica layout, home routing only (Table IV / Fig 3 / Fig 4).
-    Static,
-}
-
-impl Policy {
-    pub fn name(self) -> &'static str {
-        match self {
-            Policy::LaImr => "la-imr",
-            Policy::Baseline => "baseline",
-            Policy::Static => "static",
-        }
-    }
-}
 
 /// Service architecture (Fig 4 comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -83,11 +75,13 @@ struct DepRuntime {
 pub struct Simulation {
     cfg: Config,
     scenario: ScenarioConfig,
-    policy: Policy,
     arch: Architecture,
-    router: Router,
+    policy: Box<dyn ControlPolicy>,
+    /// Home pool per model (policy-independent catalogue geometry).
+    homes: Vec<DeploymentKey>,
     autoscaler: Option<Box<dyn Autoscaler>>,
     hpa: HpaController,
+    faults: Box<dyn FaultInjector>,
     deps: Vec<DepRuntime>,
     index: HashMap<DeploymentKey, usize>,
     metrics: MetricRegistry,
@@ -95,9 +89,14 @@ pub struct Simulation {
     events: EventQueue,
     rng: Rng,
     // per-request bookkeeping
+    /// Outstanding requests: present until the first completion wins (or
+    /// the horizon passes). Doubles as the hedged-duplicate tombstone.
     req_quality: HashMap<u64, (SimTime, QualityClass)>,
-    /// (pool, pod) → (request id, dispatch token) executing there.
-    in_service: HashMap<(usize, u64), Vec<(u64, u64)>>,
+    /// (pool, pod) → (request id, dispatch token, quality) executing
+    /// there. Quality is carried so crash cleanup can return the
+    /// `inflight_models` slot even when the request itself is already
+    /// finished (a hedged loser whose winner completed first).
+    in_service: HashMap<(usize, u64), Vec<(u64, u64, QualityClass)>>,
     /// Live dispatch tokens; a ServiceComplete whose token is absent is
     /// stale (its pod crashed mid-service) and is swallowed.
     live_tokens: std::collections::HashSet<u64>,
@@ -111,37 +110,46 @@ pub struct Simulation {
     last_replica_change: SimTime,
     replica_area: f64,
     peak_replicas: u32,
-    /// Disable autoscaling entirely (Static policy).
-    frozen_layout: bool,
+    /// Cached `policy.scaling_enabled()` (false = frozen layout).
+    scaling_enabled: bool,
+    /// Cached `policy.needs_state()` — home-only policies skip the
+    /// per-arrival control-state rebuild (DES hot path).
+    policy_needs_state: bool,
     /// Pod crashes injected so far (fault-injection accounting).
     crashes: u64,
 }
 
 impl Simulation {
-    /// Build a run. `initial_replicas` applies to each model's home pool;
-    /// other pools start at 1 (cloud pools warm with 2 for offload headroom
-    /// under LA-IMR, matching the paper's always-available upstream).
+    /// Build a run for a named catalogue policy. `initial_replicas`
+    /// applies to each model's home pool; other pools start at whatever
+    /// the policy warms them to (cloud pools warm with 2 for offload /
+    /// hedge headroom under LA-IMR and Hedged, matching the paper's
+    /// always-available upstream).
     pub fn new(
         cfg: &Config,
         scenario: &ScenarioConfig,
         policy: Policy,
         arch: Architecture,
     ) -> Self {
-        let router = Router::new(cfg);
+        Self::with_policy(cfg, scenario, policy.build(cfg), arch)
+    }
+
+    /// Build a run for any [`ControlPolicy`] implementation — the
+    /// extension point for comparators beyond the built-in catalogue.
+    pub fn with_policy(
+        cfg: &Config,
+        scenario: &ScenarioConfig,
+        policy: Box<dyn ControlPolicy>,
+        arch: Architecture,
+    ) -> Self {
+        let homes = home_map(cfg);
         let mut deps = Vec::new();
         let mut index = HashMap::new();
 
         for m in 0..cfg.models.len() {
             for i in 0..cfg.instances.len() {
                 let key = DeploymentKey { model: m, instance: i };
-                let home = router.home(m);
-                let initial = if key == home {
-                    scenario.initial_replicas
-                } else if policy == Policy::LaImr {
-                    2 // warm upstream pool
-                } else {
-                    1
-                };
+                let initial = policy.initial_replicas(key, homes[m], scenario);
                 let dep = Deployment::new(
                     key,
                     initial,
@@ -162,14 +170,8 @@ impl Simulation {
             }
         }
 
-        // Autoscaler per policy, managing every home pool.
-        let homes: Vec<DeploymentKey> =
-            (0..cfg.models.len()).map(|m| router.home(m)).collect();
-        let autoscaler: Option<Box<dyn Autoscaler>> = match policy {
-            Policy::LaImr => Some(Box::new(PmHpa::new(cfg, &homes))),
-            Policy::Baseline => Some(Box::new(ReactiveBaseline::new(cfg, &homes))),
-            Policy::Static => None,
-        };
+        // The policy's autoscaler manages every home pool.
+        let autoscaler = policy.autoscaler(cfg, &homes);
 
         // Dominant model for replica accounting = largest quality share.
         let mix = scenario.mix();
@@ -188,16 +190,19 @@ impl Simulation {
             .model_for_quality(dominant_q)
             .map(|(k, _)| k)
             .unwrap_or(0);
-        let watched = router.home(watched_model);
+        let watched = homes[watched_model];
+        let scaling_enabled = policy.scaling_enabled();
+        let policy_needs_state = policy.needs_state();
 
         Simulation {
             cfg: cfg.clone(),
             scenario: scenario.clone(),
-            policy,
             arch,
-            router,
+            policy,
+            homes,
             autoscaler,
             hpa: HpaController::new(cfg.cluster.hpa_interval),
+            faults: fault_injector_for(scenario),
             deps,
             index,
             metrics: MetricRegistry::new(),
@@ -216,11 +221,11 @@ impl Simulation {
             last_replica_change: 0.0,
             replica_area: 0.0,
             peak_replicas: scenario.initial_replicas,
-            frozen_layout: policy == Policy::Static,
+            scaling_enabled,
+            policy_needs_state,
             crashes: 0,
         }
     }
-
 
     /// In monolithic mode, every model of an instance shares one pool —
     /// map any key to the instance's canonical pool (model 0's slot).
@@ -255,6 +260,8 @@ impl Simulation {
 
     /// Run to completion and produce the result.
     pub fn run(mut self) -> SimResult {
+        // Compose the scenario: arrival stream + control-plane cadences +
+        // fault process, all into one event queue.
         let arrivals = ArrivalGenerator::generate(&self.scenario);
         self.generated = arrivals.len();
         for (k, a) in arrivals.arrivals().iter().enumerate() {
@@ -266,26 +273,9 @@ impl Simulation {
                 },
             );
         }
-        // Control-plane cadences.
-        let mut t = 0.0;
-        while t < self.scenario.duration {
-            self.events.push(t, Event::ControlTick);
-            t += 1.0;
-        }
-        let mut t = 0.0;
-        while t < self.scenario.duration {
-            self.events.push(t, Event::HpaTick);
-            t += self.cfg.cluster.hpa_interval;
-        }
-        let mut t = 0.0;
-        while t < self.scenario.duration {
-            self.events.push(t, Event::ScrapeTick);
-            t += self.cfg.cluster.scrape_interval;
-        }
-        // Fault injection: first crash per pool at Exp(1/MTBF).
-        if let Some(mtbf) = self.scenario.pod_mtbf {
-            for dep in 0..self.deps.len() {
-                let at = self.rng.exp(1.0 / mtbf);
+        CadencePlan::from_config(&self.cfg).seed(&mut self.events, self.scenario.duration);
+        for dep in 0..self.deps.len() {
+            if let Some(at) = self.faults.first_crash(dep, &mut self.rng) {
                 if at < self.scenario.duration {
                     self.events.push(at, Event::PodCrash { dep });
                 }
@@ -378,8 +368,7 @@ impl Simulation {
     /// re-provisions — recovery lag = reconcile (≤5 s) + startup (1.8 s).
     fn on_crash(&mut self, now: SimTime, dep: usize) {
         // Schedule the next crash of this pool first (renewal process).
-        if let Some(mtbf) = self.scenario.pod_mtbf {
-            let at = now + self.rng.exp(1.0 / mtbf);
+        if let Some(at) = self.faults.next_crash(dep, now, &mut self.rng) {
             if at < self.scenario.duration {
                 self.events.push(at, Event::PodCrash { dep });
             }
@@ -395,23 +384,27 @@ impl Simulation {
             return;
         }
         let vid = victims[self.rng.below(victims.len())];
-        // Re-queue the victim's in-flight work; invalidate its tokens so
-        // the already-scheduled completions are swallowed.
+        // Invalidate the victim's tokens so the already-scheduled
+        // completions are swallowed, and return every executing request's
+        // inflight_models slot — including hedged losers whose winner
+        // already finished (those are gone from req_quality but were
+        // still genuinely occupying this pod).
         let reqs = self.in_service.remove(&(dep, vid)).unwrap_or_default();
-        let requeue: Vec<(u64, QualityClass)> = reqs
-            .iter()
-            .filter_map(|&(rid, token)| {
-                self.live_tokens.remove(&token);
-                self.req_quality.get(&rid).map(|&(_, q)| (rid, q))
-            })
-            .collect();
-        for &(_, quality) in &requeue {
+        for &(_, token, quality) in &reqs {
+            self.live_tokens.remove(&token);
             if let Some((req_model, _)) = self.cfg.model_for_quality(quality) {
                 if let Some(c) = self.deps[dep].inflight_models.get_mut(&req_model) {
                     *c = c.saturating_sub(1);
                 }
             }
         }
+        // Re-queue only the requests still outstanding; requests whose
+        // hedge sibling already finished stay finished.
+        let requeue: Vec<(u64, QualityClass)> = reqs
+            .iter()
+            .filter(|&&(rid, _, _)| self.req_quality.contains_key(&rid))
+            .map(|&(rid, _, quality)| (rid, quality))
+            .collect();
         let d = &mut self.deps[dep];
         for (rid, quality) in requeue {
             d.queue.push(QueuedRequest {
@@ -432,32 +425,33 @@ impl Simulation {
         };
         self.req_quality.insert(id, (now, quality));
 
-        let target = match self.policy {
-            Policy::LaImr => {
-                self.refresh_state(now);
-                let decision = self.router.route(model, now, &self.state);
-                // Publish desired-replica updates (router authority:
-                // only ever raises the already-published target).
-                for &(key, want) in &decision.desired_updates {
-                    let name = MetricRegistry::scoped(
-                        crate::cluster::DESIRED_REPLICAS,
-                        key.model,
-                        key.instance,
-                    );
-                    let cur = self.metrics.latest(&name).unwrap_or(0.0);
-                    let v = if want as f64 > cur || want < cur as u32 {
-                        want as f64
-                    } else {
-                        cur
-                    };
-                    self.metrics.set(&name, v, now);
-                }
-                decision.target
-            }
-            Policy::Baseline | Policy::Static => self.router.home(model),
-        };
+        // The policy decides where this request (and an optional hedged
+        // duplicate) executes, reading the refreshed control state.
+        // Home-only policies never look at it — skip the rebuild.
+        if self.policy_needs_state {
+            self.refresh_state(now);
+        }
+        let dispatch = self.policy.admit(model, now, &self.state, &mut self.metrics);
 
-        let pool = self.pool_of(target);
+        let pool = self.pool_of(dispatch.target);
+        // A hedge collapsing onto the primary pool (e.g. monolithic
+        // mapping) is no hedge at all.
+        let hedge_pool = dispatch
+            .hedge
+            .map(|key| self.pool_of(key))
+            .filter(|&p| p != pool);
+
+        self.enqueue(now, pool, id, quality);
+        if let Some(hp) = hedge_pool {
+            self.enqueue(now, hp, id, quality);
+        }
+        self.try_dispatch(now, pool);
+        if let Some(hp) = hedge_pool {
+            self.try_dispatch(now, hp);
+        }
+    }
+
+    fn enqueue(&mut self, now: SimTime, pool: usize, id: u64, quality: QualityClass) {
         let d = &mut self.deps[pool];
         d.rate.on_arrival(now);
         d.queue.push(QueuedRequest {
@@ -465,7 +459,6 @@ impl Simulation {
             quality,
             enqueued_at: now,
         });
-        self.try_dispatch(now, pool);
     }
 
     /// Dispatch queued requests onto idle ready pods (one request per pod
@@ -487,6 +480,12 @@ impl Simulation {
                 return;
             };
             let req = d.queue.pop().expect("non-empty");
+            // A hedged sibling may already have completed this request
+            // while our copy sat queued — drop the stale entry without
+            // occupying the pod.
+            let Some(&(arrived, quality)) = self.req_quality.get(&req.id) else {
+                continue;
+            };
             pod.in_flight += 1;
             let pod_id = pod.id;
 
@@ -524,15 +523,14 @@ impl Simulation {
             // Network RTT with 10 % jitter, added at completion.
             let rtt = model.rtt * (0.9 + 0.2 * self.rng.uniform());
 
-            let (arrived, quality) = self.req_quality[&req.id];
-            let home = self.router.home(req_model);
+            let home = self.homes[req_model];
             let token = self.dispatch_seq;
             self.dispatch_seq += 1;
             self.live_tokens.insert(token);
             self.in_service
                 .entry((pool, pod_id))
                 .or_default()
-                .push((req.id, token));
+                .push((req.id, token, quality));
             self.events.push(
                 now + svc,
                 Event::ServiceComplete {
@@ -568,7 +566,7 @@ impl Simulation {
             return;
         }
         if let Some(list) = self.in_service.get_mut(&(pool, pod_id)) {
-            list.retain(|&(_, t)| t != token);
+            list.retain(|&(_, t, _)| t != token);
         }
         let d = &mut self.deps[pool];
         if let Some(pod) = d.dep.pods.iter_mut().find(|p| p.id == pod_id) {
@@ -578,18 +576,21 @@ impl Simulation {
         if let Some(c) = d.inflight_models.get_mut(&req_model) {
             *c = c.saturating_sub(1);
         }
-        let finished = now + rtt;
-        let latency = finished - arrived;
-        d.window_hist.record(latency);
-        self.req_quality.remove(&req_id);
-        if arrived >= self.scenario.warmup {
-            self.completed.push(CompletedRequest {
-                id: req_id,
-                arrived,
-                finished,
-                quality,
-                offloaded,
-            });
+        // First completion wins: a hedged sibling finishing later only
+        // frees its pod (the request was already recorded).
+        if self.req_quality.remove(&req_id).is_some() {
+            let finished = now + rtt;
+            let latency = finished - arrived;
+            d.window_hist.record(latency);
+            if arrived >= self.scenario.warmup {
+                self.completed.push(CompletedRequest {
+                    id: req_id,
+                    arrived,
+                    finished,
+                    quality,
+                    offloaded,
+                });
+            }
         }
         // Pod freed → dispatch next waiting request; also progress drains.
         self.account_replicas(now);
@@ -600,11 +601,9 @@ impl Simulation {
     fn on_control_tick(&mut self, now: SimTime) {
         self.refresh_state(now);
         if let Some(scaler) = self.autoscaler.as_mut() {
-            // PM-HPA consumes the router's EWMA rates (the predictive
-            // signal); the baseline ignores λ and reads scraped latency.
-            let lambda: Vec<f64> = (0..self.cfg.models.len())
-                .map(|m| self.router.ewma_rate(m))
-                .collect();
+            // The policy exports its λ signal (PM-HPA's predictive input;
+            // reactive policies publish zeros and read scraped latency).
+            let lambda = self.policy.lambda_signal(self.cfg.models.len());
             scaler.publish(now, &self.state, &mut self.metrics, &lambda);
         }
         // Progress pod lifecycles every control tick.
@@ -616,7 +615,7 @@ impl Simulation {
     }
 
     fn on_hpa_tick(&mut self, now: SimTime) {
-        if self.frozen_layout || !self.hpa.due(now) {
+        if !self.scaling_enabled || !self.hpa.due(now) {
             return;
         }
         self.account_replicas(now);
@@ -767,5 +766,44 @@ mod tests {
     fn completion_rate_high_when_stable() {
         let r = quick(2.0, Policy::LaImr, 4, 9);
         assert!(r.completion_rate() > 0.95, "rate={}", r.completion_rate());
+    }
+
+    #[test]
+    fn hedged_records_each_request_once() {
+        // Redundant dispatch must never double-count: every completed id
+        // is unique, and conservation still holds.
+        let scenario = ScenarioConfig::bursty(4.0, 19)
+            .with_duration(120.0, 0.0)
+            .with_replicas(1);
+        let r = Simulation::new(&cfg(), &scenario, Policy::Hedged, Architecture::Microservice)
+            .run();
+        let mut ids: Vec<u64> = r.completed.iter().map(|c| c.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "duplicate completions recorded");
+        assert_eq!(r.completed.len() + r.unfinished, r.generated);
+        assert!(r.completion_rate() > 0.9, "rate={}", r.completion_rate());
+    }
+
+    #[test]
+    fn hedged_tames_overload_tail_vs_static() {
+        // One overloaded home replica: the hedge path (warm cloud pool)
+        // must rescue the tail that a static layout suffers in full.
+        let scen = ScenarioConfig::bursty(3.0, 23)
+            .with_duration(180.0, 10.0)
+            .with_replicas(1);
+        let hd = Simulation::new(&cfg(), &scen, Policy::Hedged, Architecture::Microservice)
+            .run();
+        let st = Simulation::new(&cfg(), &scen, Policy::Static, Architecture::Microservice)
+            .run();
+        assert!(
+            hd.summary().p99 < st.summary().p99,
+            "hedged P99 {} !< static P99 {}",
+            hd.summary().p99,
+            st.summary().p99
+        );
+        // Some winners must actually come from the hedge (off-home) pool.
+        assert!(hd.offload_share() > 0.0, "no hedge ever won");
     }
 }

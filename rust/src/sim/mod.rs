@@ -4,11 +4,26 @@
 //! real-time serving path, but on a virtual clock — so every paper table
 //! regenerates in seconds instead of cluster-hours, with identical control
 //! logic under test (DESIGN.md §6 "one coordinator, two clocks").
+//!
+//! Layout:
+//! * [`policy`] — the pluggable [`ControlPolicy`] trait and the four
+//!   shipped impls (la-imr, baseline, static, hedged);
+//! * [`components`] — composable scenario pieces (cadences, faults);
+//! * [`engine`] — the policy-free event loop;
+//! * [`runner`] — the sharded multi-seed experiment runner.
 
+pub mod components;
 mod engine;
 mod events;
+pub mod policy;
 mod result;
+pub mod runner;
 
-pub use engine::{Architecture, Policy, Simulation};
+pub use components::{fault_injector_for, CadencePlan, ExpPodCrashes, FaultInjector, NoFaults};
+pub use engine::{Architecture, Simulation};
 pub use events::{Event, EventQueue, TimedEvent};
+pub use policy::{
+    BaselinePolicy, ControlPolicy, Dispatch, HedgedPolicy, LaImrPolicy, Policy, StaticPolicy,
+};
 pub use result::{CompletedRequest, SimResult};
+pub use runner::{Cell, Runner};

@@ -1,0 +1,547 @@
+//! Pluggable control-plane policies.
+//!
+//! The simulation engine is policy-free: everything that distinguishes
+//! LA-IMR from its comparators — admission/routing, offload, replica
+//! warm-up, and the scaling signal — lives behind the [`ControlPolicy`]
+//! trait. Adding a comparator (e.g. the SafeTail-style hedged dispatcher
+//! below, arXiv 2408.17171) means writing one impl; the event loop is
+//! never touched.
+//!
+//! Shipped policies:
+//! * [`LaImrPolicy`] — full Algorithm 1: predictive routing, selective
+//!   offload, PM-HPA proactive scaling (§IV);
+//! * [`BaselinePolicy`] — home routing + reactive latency-threshold
+//!   autoscaling (§V comparator);
+//! * [`StaticPolicy`] — frozen replica layout, home routing only
+//!   (Table IV / Fig 3 / Fig 4);
+//! * [`HedgedPolicy`] — SafeTail-style redundant dispatch: route home,
+//!   and when the predicted latency breaches τ, launch a duplicate on the
+//!   best alternative pool; the first completion wins. Scaling stays
+//!   reactive, so the comparison isolates redundancy vs prediction.
+
+use crate::autoscaler::{Autoscaler, PmHpa, ReactiveBaseline};
+use crate::cluster::{DeploymentKey, MetricRegistry, DESIRED_REPLICAS};
+use crate::config::{Config, ScenarioConfig};
+use crate::coordinator::{home_map, ControlState, Router};
+use crate::latency_model::LatencyModel;
+use crate::telemetry::SlidingRate;
+use crate::{ModelId, SimTime};
+
+/// Where one admitted request executes. `hedge` is an optional redundant
+/// copy (first completion wins; the loser only occupies its pod).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Dispatch {
+    pub target: DeploymentKey,
+    pub hedge: Option<DeploymentKey>,
+}
+
+impl Dispatch {
+    /// A plain single-target dispatch.
+    pub fn to(target: DeploymentKey) -> Self {
+        Dispatch {
+            target,
+            hedge: None,
+        }
+    }
+}
+
+/// The control-plane policy under test: every hook the engine consults.
+///
+/// The engine owns the mechanics (queues, pods, HPA reconciles, fault
+/// recovery); the policy owns the decisions. No engine code branches on
+/// which policy is installed.
+pub trait ControlPolicy {
+    /// Short policy name used in reports (`SimResult::policy_name`).
+    fn name(&self) -> &'static str;
+
+    /// Initial replica count for pool `key` whose model homes on `home`.
+    /// Policies that deflect upstream warm their upstream pools here.
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32;
+
+    /// The autoscaler publishing `desired_replicas` for the home pools,
+    /// or `None` for a fixed layout.
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>>;
+
+    /// Whether the HPA reconcile loop may actuate at all (a frozen layout
+    /// also suppresses crash re-provisioning, as in the paper's static
+    /// baseline).
+    fn scaling_enabled(&self) -> bool {
+        true
+    }
+
+    /// Whether `admit` reads the shared control state. Home-only policies
+    /// return false so the engine skips the per-arrival state rebuild —
+    /// the DES hot path for the Table IV / Fig 3 / Fig 4 static sweeps.
+    fn needs_state(&self) -> bool {
+        true
+    }
+
+    /// Admission + routing for one arrival of `model` at `now`. The
+    /// policy may publish metrics (e.g. desired-replica updates) as a
+    /// side effect — that is the LA-IMR router's authority channel.
+    fn admit(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+    ) -> Dispatch;
+
+    /// Per-model arrival-rate signal handed to the autoscaler on each
+    /// control tick. Predictive policies export their EWMA estimate;
+    /// reactive policies ignore it, so the default (zeros) suffices.
+    fn lambda_signal(&self, n_models: usize) -> Vec<f64> {
+        vec![0.0; n_models]
+    }
+}
+
+/// Named policy catalogue — the CLI/report-facing handle. The only
+/// per-policy `match` in the crate lives here, in the factory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Full LA-IMR: Algorithm 1 routing + offload + PM-HPA scaling.
+    LaImr,
+    /// Reactive latency-threshold autoscaling, no offload (§V comparator).
+    Baseline,
+    /// Fixed replica layout, home routing only (Table IV / Fig 3 / Fig 4).
+    Static,
+    /// SafeTail-style hedged/redundant dispatch + reactive scaling.
+    Hedged,
+}
+
+impl Policy {
+    pub const ALL: [Policy; 4] = [
+        Policy::LaImr,
+        Policy::Baseline,
+        Policy::Static,
+        Policy::Hedged,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Policy::LaImr => "la-imr",
+            Policy::Baseline => "baseline",
+            Policy::Static => "static",
+            Policy::Hedged => "hedged",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Policy> {
+        match s {
+            "la-imr" => Some(Policy::LaImr),
+            "baseline" => Some(Policy::Baseline),
+            "static" => Some(Policy::Static),
+            "hedged" => Some(Policy::Hedged),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the policy implementation for a configuration.
+    pub fn build(self, cfg: &Config) -> Box<dyn ControlPolicy> {
+        match self {
+            Policy::LaImr => Box::new(LaImrPolicy::new(cfg)),
+            Policy::Baseline => Box::new(BaselinePolicy::new(cfg)),
+            Policy::Static => Box::new(StaticPolicy::new(cfg)),
+            Policy::Hedged => Box::new(HedgedPolicy::new(cfg)),
+        }
+    }
+}
+
+// ------------------------------------------------------------- la-imr
+
+/// Full LA-IMR (§IV): the Algorithm-1 router decides target + offload and
+/// publishes desired-replica updates; PM-HPA scales proactively from the
+/// router's EWMA rate.
+pub struct LaImrPolicy {
+    router: Router,
+}
+
+impl LaImrPolicy {
+    pub fn new(cfg: &Config) -> Self {
+        LaImrPolicy {
+            router: Router::new(cfg),
+        }
+    }
+}
+
+impl ControlPolicy for LaImrPolicy {
+    fn name(&self) -> &'static str {
+        "la-imr"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            // Warm upstream pool, matching the paper's always-available
+            // cloud tier (offload headroom from t=0).
+            2
+        }
+    }
+
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        Some(Box::new(PmHpa::new(cfg, homes)))
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+    ) -> Dispatch {
+        let decision = self.router.route(model, now, state);
+        // Publish desired-replica updates (router authority: only ever
+        // raises the already-published target, but honours scale-ins).
+        for &(key, want) in &decision.desired_updates {
+            let name = MetricRegistry::scoped(DESIRED_REPLICAS, key.model, key.instance);
+            let cur = metrics.latest(&name).unwrap_or(0.0);
+            let v = if want as f64 > cur || want < cur as u32 {
+                want as f64
+            } else {
+                cur
+            };
+            metrics.set(&name, v, now);
+        }
+        Dispatch::to(decision.target)
+    }
+
+    fn lambda_signal(&self, n_models: usize) -> Vec<f64> {
+        // PM-HPA consumes the router's EWMA rates — the predictive signal.
+        (0..n_models).map(|m| self.router.ewma_rate(m)).collect()
+    }
+}
+
+// ----------------------------------------------------------- baseline
+
+/// Reactive comparator (§V): every request served at home; scaling reacts
+/// to the scraped (stale) observed latency.
+pub struct BaselinePolicy {
+    homes: Vec<DeploymentKey>,
+}
+
+impl BaselinePolicy {
+    pub fn new(cfg: &Config) -> Self {
+        BaselinePolicy {
+            homes: home_map(cfg),
+        }
+    }
+}
+
+impl ControlPolicy for BaselinePolicy {
+    fn name(&self) -> &'static str {
+        "baseline"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            1
+        }
+    }
+
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        Some(Box::new(ReactiveBaseline::new(cfg, homes)))
+    }
+
+    fn needs_state(&self) -> bool {
+        false
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        _now: SimTime,
+        _state: &ControlState,
+        _metrics: &mut MetricRegistry,
+    ) -> Dispatch {
+        Dispatch::to(self.homes[model])
+    }
+}
+
+// ------------------------------------------------------------- static
+
+/// Fixed layout: home routing, no autoscaler, no actuation at all.
+pub struct StaticPolicy {
+    homes: Vec<DeploymentKey>,
+}
+
+impl StaticPolicy {
+    pub fn new(cfg: &Config) -> Self {
+        StaticPolicy {
+            homes: home_map(cfg),
+        }
+    }
+}
+
+impl ControlPolicy for StaticPolicy {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            1
+        }
+    }
+
+    fn autoscaler(&self, _cfg: &Config, _homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        None
+    }
+
+    fn scaling_enabled(&self) -> bool {
+        false
+    }
+
+    fn needs_state(&self) -> bool {
+        false
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        _now: SimTime,
+        _state: &ControlState,
+        _metrics: &mut MetricRegistry,
+    ) -> Dispatch {
+        Dispatch::to(self.homes[model])
+    }
+}
+
+// ------------------------------------------------------------- hedged
+
+/// SafeTail-style redundancy comparator (arXiv 2408.17171): requests run
+/// at home, but when the closed-form prediction says the home pool will
+/// breach τ (or home has no ready pod), a duplicate is dispatched to the
+/// alternative pool with the smallest predicted latency. The first copy
+/// to finish defines the request's latency; the loser merely burns its
+/// pod until done (no cross-server cancellation, as in hedged-request
+/// systems without kill signals). Scaling is the same reactive loop the
+/// baseline uses, so Table VI isolates redundancy vs prediction.
+pub struct HedgedPolicy {
+    homes: Vec<DeploymentKey>,
+    /// Closed-form model per (m, i) — flat, model-major.
+    grid: Vec<LatencyModel>,
+    /// τ_m = x·L_m per model.
+    taus: Vec<f64>,
+    /// Per-model sliding arrival rate (same window as the LA-IMR router).
+    rates: Vec<SlidingRate>,
+    n_instances: usize,
+}
+
+impl HedgedPolicy {
+    pub fn new(cfg: &Config) -> Self {
+        let n_instances = cfg.instances.len();
+        let mut grid = Vec::with_capacity(cfg.models.len() * n_instances);
+        for m in 0..cfg.models.len() {
+            for i in 0..n_instances {
+                grid.push(LatencyModel::from_config(cfg, m, i));
+            }
+        }
+        HedgedPolicy {
+            homes: home_map(cfg),
+            grid,
+            taus: (0..cfg.models.len()).map(|m| cfg.slo_budget(m)).collect(),
+            rates: (0..cfg.models.len())
+                .map(|_| SlidingRate::new(cfg.slo.rate_window))
+                .collect(),
+            n_instances,
+        }
+    }
+
+    fn model_at(&self, model: ModelId, instance: usize) -> &LatencyModel {
+        &self.grid[model * self.n_instances + instance]
+    }
+}
+
+impl ControlPolicy for HedgedPolicy {
+    fn name(&self) -> &'static str {
+        "hedged"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            // Hedges land upstream; keep that pool warm like LA-IMR's.
+            2
+        }
+    }
+
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        Some(Box::new(ReactiveBaseline::new(cfg, homes)))
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        state: &ControlState,
+        _metrics: &mut MetricRegistry,
+    ) -> Dispatch {
+        let home = self.homes[model];
+        let lambda = self.rates[model].on_arrival(now);
+        let tau = self.taus[model];
+        let hview = state.view(home);
+        let g_home = self
+            .model_at(model, home.instance)
+            .g_lambda(lambda, hview.active.max(1));
+
+        let mut hedge = None;
+        if g_home > tau || hview.ready == 0 {
+            // Duplicate onto the warm alternative with minimal predicted
+            // g; an unstable (infinite-g) pool ranks last but still beats
+            // not hedging at all when everything is saturated.
+            let mut best: Option<(f64, DeploymentKey)> = None;
+            for i in 0..self.n_instances {
+                if i == home.instance {
+                    continue;
+                }
+                let key = DeploymentKey { model, instance: i };
+                let view = state.view(key);
+                if view.ready == 0 {
+                    continue;
+                }
+                let g = self.model_at(model, i).g_lambda(lambda, view.active.max(1));
+                let rank = if g.is_finite() { g } else { f64::MAX };
+                if best.map(|(b, _)| rank < b).unwrap_or(true) {
+                    best = Some((rank, key));
+                }
+            }
+            hedge = best.map(|(_, key)| key);
+        }
+        Dispatch { target: home, hedge }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReplicaView;
+
+    fn warm_state(cfg: &Config, active: u32, rho: f64) -> ControlState {
+        let mut s = ControlState::new();
+        for m in 0..cfg.models.len() {
+            for i in 0..cfg.instances.len() {
+                s.update(
+                    DeploymentKey { model: m, instance: i },
+                    ReplicaView {
+                        active,
+                        ready: active,
+                        desired: active,
+                        rho,
+                        queue_depth: 0,
+                    },
+                );
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for p in Policy::ALL {
+            assert_eq!(Policy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(Policy::from_name("nope"), None);
+    }
+
+    #[test]
+    fn factory_builds_matching_impl() {
+        let cfg = Config::default();
+        for p in Policy::ALL {
+            assert_eq!(p.build(&cfg).name(), p.name());
+        }
+    }
+
+    #[test]
+    fn static_policy_is_frozen_home_router() {
+        let cfg = Config::default();
+        let mut p = StaticPolicy::new(&cfg);
+        assert!(!p.scaling_enabled());
+        assert!(p.autoscaler(&cfg, &home_map(&cfg)).is_none());
+        let state = warm_state(&cfg, 2, 0.5);
+        let mut metrics = MetricRegistry::new();
+        let d = p.admit(1, 0.0, &state, &mut metrics);
+        assert_eq!(d.target, home_map(&cfg)[1]);
+        assert_eq!(d.hedge, None);
+    }
+
+    #[test]
+    fn hedged_quiet_load_no_hedge() {
+        let cfg = Config::default();
+        let mut p = HedgedPolicy::new(&cfg);
+        let state = warm_state(&cfg, 4, 0.2);
+        let mut metrics = MetricRegistry::new();
+        // One isolated request: λ̂ tiny, prediction well under τ.
+        let d = p.admit(1, 0.0, &state, &mut metrics);
+        assert_eq!(d.target, home_map(&cfg)[1]);
+        assert_eq!(d.hedge, None);
+    }
+
+    #[test]
+    fn hedged_burst_launches_duplicate() {
+        let cfg = Config::default();
+        let mut p = HedgedPolicy::new(&cfg);
+        let state = warm_state(&cfg, 1, 0.9);
+        let mut metrics = MetricRegistry::new();
+        // 12 requests in 0.6 s on one replica: predicted breach.
+        let mut last = None;
+        for k in 0..12 {
+            last = Some(p.admit(1, k as f64 * 0.05, &state, &mut metrics));
+        }
+        let last = last.unwrap();
+        let hedge = last.hedge.expect("burst must hedge");
+        assert_ne!(hedge.instance, last.target.instance);
+        assert_eq!(hedge.model, last.target.model);
+    }
+
+    #[test]
+    fn warmup_counts_follow_policy() {
+        let cfg = Config::default();
+        let scenario = ScenarioConfig::poisson(4.0, 1).with_replicas(3);
+        let homes = home_map(&cfg);
+        let home = homes[1];
+        let away = DeploymentKey {
+            model: home.model,
+            instance: (home.instance + 1) % cfg.instances.len(),
+        };
+        for p in Policy::ALL {
+            let built = p.build(&cfg);
+            assert_eq!(built.initial_replicas(home, home, &scenario), 3, "{:?}", p);
+            let away_n = built.initial_replicas(away, home, &scenario);
+            match p {
+                Policy::LaImr | Policy::Hedged => assert_eq!(away_n, 2, "{:?}", p),
+                Policy::Baseline | Policy::Static => assert_eq!(away_n, 1, "{:?}", p),
+            }
+        }
+    }
+}

@@ -1,0 +1,180 @@
+//! Sharded experiment runner: fans (scenario, policy, architecture)
+//! cells across `std::thread::scope` workers.
+//!
+//! Determinism contract: every cell derives its entire random state from
+//! `scenario.seed` alone (arrival stream: `Rng::new(seed)`; engine noise:
+//! `Rng::new(seed ^ 0xD15EA5E)`). No RNG is ever shared across threads —
+//! each worker builds its cell's `Simulation` locally — so the parallel
+//! schedule cannot perturb a single sample and results are bit-identical
+//! to a serial sweep (see `tests/runner_determinism.rs`).
+
+use crate::config::{Config, ScenarioConfig};
+use crate::sim::{Architecture, Policy, SimResult, Simulation};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One experiment cell: everything needed to reproduce one `SimResult`.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub scenario: ScenarioConfig,
+    pub policy: Policy,
+    pub arch: Architecture,
+}
+
+impl Cell {
+    pub fn new(scenario: ScenarioConfig, policy: Policy) -> Self {
+        Cell {
+            scenario,
+            policy,
+            arch: Architecture::Microservice,
+        }
+    }
+
+    pub fn with_arch(mut self, arch: Architecture) -> Self {
+        self.arch = arch;
+        self
+    }
+
+    /// Run this cell to completion (independent of any runner).
+    pub fn run(&self, cfg: &Config) -> SimResult {
+        Simulation::new(cfg, &self.scenario, self.policy, self.arch).run()
+    }
+}
+
+/// Work-stealing-ish sharded runner: workers pop cells off a shared
+/// atomic cursor and write results back into order-preserving slots.
+#[derive(Debug, Clone, Copy)]
+pub struct Runner {
+    threads: usize,
+}
+
+impl Default for Runner {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Runner {
+    /// Auto-sized: `LAIMR_THREADS` env override, else all available cores.
+    pub fn new() -> Self {
+        if let Ok(v) = std::env::var("LAIMR_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return Runner { threads: n };
+                }
+            }
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Runner { threads }
+    }
+
+    /// One worker — the reference schedule for determinism checks.
+    pub fn serial() -> Self {
+        Runner { threads: 1 }
+    }
+
+    /// Exactly `threads` workers (floored at 1).
+    pub fn with_threads(threads: usize) -> Self {
+        Runner {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every cell and return results in input order.
+    pub fn run(&self, cfg: &Config, cells: &[Cell]) -> Vec<SimResult> {
+        if self.threads == 1 || cells.len() < 2 {
+            return cells.iter().map(|c| c.run(cfg)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SimResult>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        let workers = self.threads.min(cells.len());
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let k = next.fetch_add(1, Ordering::Relaxed);
+                    if k >= cells.len() {
+                        break;
+                    }
+                    let result = cells[k].run(cfg);
+                    *slots[k].lock().expect("runner slot poisoned") = Some(result);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("runner slot poisoned")
+                    .expect("every cell was claimed by a worker")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid(seeds: &[u64]) -> Vec<Cell> {
+        let mut cells = Vec::new();
+        for &seed in seeds {
+            for policy in [Policy::LaImr, Policy::Baseline, Policy::Hedged] {
+                cells.push(Cell::new(
+                    ScenarioConfig::bursty(3.0, seed)
+                        .with_duration(60.0, 5.0)
+                        .with_replicas(2),
+                    policy,
+                ));
+            }
+        }
+        cells
+    }
+
+    #[test]
+    fn preserves_input_order() {
+        let cfg = Config::default();
+        let cells = grid(&[1, 2]);
+        let results = Runner::with_threads(4).run(&cfg, &cells);
+        assert_eq!(results.len(), cells.len());
+        for (cell, r) in cells.iter().zip(&results) {
+            assert_eq!(r.policy_name, cell.policy.name());
+            assert_eq!(r.scenario_name, cell.scenario.name);
+        }
+    }
+
+    #[test]
+    fn serial_and_parallel_bit_identical() {
+        let cfg = Config::default();
+        let cells = grid(&[41, 42]);
+        let serial = Runner::serial().run(&cfg, &cells);
+        let parallel = Runner::with_threads(4).run(&cfg, &cells);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.completed.len(), b.completed.len());
+            assert_eq!(a.latencies(), b.latencies());
+            assert_eq!(a.scale_outs, b.scale_outs);
+            assert_eq!(a.unfinished, b.unfinished);
+        }
+    }
+
+    #[test]
+    fn thread_count_floors_at_one() {
+        assert_eq!(Runner::with_threads(0).threads(), 1);
+        assert!(Runner::new().threads() >= 1);
+    }
+
+    #[test]
+    fn empty_and_single_cell_work() {
+        let cfg = Config::default();
+        assert!(Runner::new().run(&cfg, &[]).is_empty());
+        let one = grid(&[7]);
+        let r = Runner::with_threads(8).run(&cfg, &one[..1]);
+        assert_eq!(r.len(), 1);
+    }
+}

@@ -185,4 +185,78 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.p99(), 0.0);
     }
+
+    #[test]
+    fn empty_histogram_every_quantile_zero() {
+        let h = LatencyHistogram::for_latency();
+        for q in [0.0, 0.25, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), 0.0, "q={q}");
+        }
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.max(), 0.0);
+        assert_eq!(h.count(), 0);
+    }
+
+    #[test]
+    fn single_sample_quantile_extremes() {
+        let mut h = LatencyHistogram::new(1e-3, 120.0, 1.01);
+        h.record(5.0);
+        // q = 0 is the conservative lower edge of the histogram domain
+        // (target rank 0 is satisfied before any bucket is consumed).
+        assert_eq!(h.quantile(0.0), 1e-3);
+        // Every q > 0 lands in the sample's bucket: its upper edge is at
+        // least the sample and at most one growth factor above it.
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            let got = h.quantile(q);
+            assert!(got >= 5.0, "q={q}: {got} < sample");
+            assert!(got <= 5.0 * 1.01 * 1.001, "q={q}: {got} beyond bucket");
+        }
+        assert_eq!(h.count(), 1);
+        assert!((h.mean() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_q_clamps_to_0_and_1() {
+        let mut h = LatencyHistogram::for_latency();
+        for x in [0.5, 1.0, 2.0] {
+            h.record(x);
+        }
+        assert_eq!(h.quantile(-3.0), h.quantile(0.0));
+        assert_eq!(h.quantile(7.0), h.quantile(1.0));
+    }
+
+    #[test]
+    fn q1_covers_the_maximum() {
+        let mut h = LatencyHistogram::for_latency();
+        let mut r = crate::rng::Rng::new(17);
+        for _ in 0..2000 {
+            h.record(0.1 + r.uniform());
+        }
+        // The 100th percentile must be an upper bound for every sample
+        // (bucket upper edge ≥ max), within one growth factor.
+        assert!(h.quantile(1.0) * 1.01 + 1e-9 >= h.max());
+    }
+
+    #[test]
+    fn growth_factor_bounds_relative_quantile_error() {
+        // The design contract: bucket growth g bounds the relative error
+        // of any quantile by ~g−1 (upper edge reported). Check a 5 %
+        // growth histogram stays within 5 % (+ discretisation slack) on a
+        // dense uniform grid, at several quantiles.
+        let growth = 1.05;
+        let mut h = LatencyHistogram::new(1e-2, 100.0, growth);
+        let n = 50_000;
+        for k in 0..n {
+            h.record(0.5 + 4.5 * k as f64 / n as f64);
+        }
+        for q in [0.10, 0.50, 0.90, 0.99] {
+            let exact = 0.5 + 4.5 * q;
+            let got = h.quantile(q);
+            let rel = (got - exact) / exact;
+            // Upper-edge reporting: error is one-sided (conservative)...
+            assert!(rel > -1e-3, "q={q}: histogram under-reported ({got} < {exact})");
+            // ...and bounded by the growth factor.
+            assert!(rel < growth - 1.0 + 0.01, "q={q}: rel err {rel}");
+        }
+    }
 }

@@ -254,7 +254,7 @@ fn prop_simulation_conserves_requests() {
     let cfg = Config::default();
     for_all(0x51AB, 12, |rng, case| {
         let lambda = rng.range(0.5, 5.0);
-        let policy = [Policy::LaImr, Policy::Baseline, Policy::Static][rng.below(3)];
+        let policy = Policy::ALL[rng.below(Policy::ALL.len())];
         let scenario = ScenarioConfig::poisson(lambda, rng.next_u64())
             .with_duration(60.0, 0.0)
             .with_replicas(1 + rng.below(4) as u32);

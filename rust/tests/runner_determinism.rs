@@ -1,0 +1,122 @@
+//! Regression contract for the sharded runner (ISSUE 1 satellite):
+//! a parallel sweep must produce bit-identical `SimResult` statistics to
+//! a serial sweep of the same cells — per-cell RNG derivation from
+//! `scenario.seed`, never a shared mutable RNG across threads.
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::sim::{Architecture, Cell, Policy, Runner};
+
+fn cfg() -> Config {
+    Config::default()
+}
+
+/// Two seeds × all four policies × two arrival shapes — the satellite's
+/// required "serial == parallel for two seeds", broadened to every policy
+/// so a future impl can't sneak thread-order dependence in through one.
+fn two_seed_grid() -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for &seed in &[7u64, 8] {
+        for policy in Policy::ALL {
+            cells.push(Cell::new(
+                ScenarioConfig::bursty(3.0, seed)
+                    .with_duration(90.0, 10.0)
+                    .with_replicas(2),
+                policy,
+            ));
+            cells.push(Cell::new(
+                ScenarioConfig::poisson(2.0, seed)
+                    .with_duration(90.0, 10.0)
+                    .with_replicas(2),
+                policy,
+            ));
+        }
+    }
+    cells
+}
+
+#[test]
+fn serial_equals_parallel_bit_identical() {
+    let cfg = cfg();
+    let cells = two_seed_grid();
+    let serial = Runner::serial().run(&cfg, &cells);
+    let parallel = Runner::with_threads(8).run(&cfg, &cells);
+    assert_eq!(serial.len(), parallel.len());
+    for (k, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        // Bit-identical statistics, not just "close": same completions,
+        // same latency series, same control actuations.
+        assert_eq!(a.generated, b.generated, "cell {k}: generated");
+        assert_eq!(a.unfinished, b.unfinished, "cell {k}: unfinished");
+        assert_eq!(a.latencies(), b.latencies(), "cell {k}: latency series");
+        assert_eq!(a.scale_outs, b.scale_outs, "cell {k}: scale_outs");
+        assert_eq!(a.scale_ins, b.scale_ins, "cell {k}: scale_ins");
+        assert_eq!(a.peak_replicas, b.peak_replicas, "cell {k}: peak");
+        assert_eq!(a.mean_replicas, b.mean_replicas, "cell {k}: mean replicas");
+    }
+}
+
+#[test]
+fn parallel_repeats_are_stable() {
+    // The parallel schedule itself is nondeterministic (work stealing);
+    // the *results* must not be. Run the same grid twice in parallel.
+    let cfg = cfg();
+    let cells = two_seed_grid();
+    let a = Runner::with_threads(4).run(&cfg, &cells);
+    let b = Runner::with_threads(3).run(&cfg, &cells);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.latencies(), y.latencies());
+        assert_eq!(x.crashes, y.crashes);
+    }
+}
+
+#[test]
+fn fault_injection_survives_sharding() {
+    // Crash scheduling draws from the per-cell engine RNG; the parallel
+    // schedule must not perturb it.
+    let cfg = cfg();
+    let cells: Vec<Cell> = [31u64, 32]
+        .iter()
+        .map(|&seed| {
+            Cell::new(
+                ScenarioConfig::poisson(3.0, seed)
+                    .with_duration(120.0, 0.0)
+                    .with_replicas(3)
+                    .with_faults(30.0),
+                Policy::LaImr,
+            )
+        })
+        .collect();
+    let serial = Runner::serial().run(&cfg, &cells);
+    let parallel = Runner::with_threads(2).run(&cfg, &cells);
+    for (a, b) in serial.iter().zip(&parallel) {
+        assert!(a.crashes > 0, "fault injection never fired");
+        assert_eq!(a.crashes, b.crashes);
+        assert_eq!(a.latencies(), b.latencies());
+    }
+}
+
+#[test]
+fn hedged_runs_through_runner_and_conserves() {
+    // The new comparator must behave under the runner exactly like the
+    // built-ins: conservation + unique completions per cell.
+    let cfg = cfg();
+    let cells: Vec<Cell> = [51u64, 52]
+        .iter()
+        .map(|&seed| {
+            Cell::new(
+                ScenarioConfig::bursty(4.0, seed)
+                    .with_duration(90.0, 0.0)
+                    .with_replicas(1),
+                Policy::Hedged,
+            )
+            .with_arch(Architecture::Microservice)
+        })
+        .collect();
+    for r in Runner::with_threads(2).run(&cfg, &cells) {
+        assert_eq!(r.completed.len() + r.unfinished, r.generated);
+        let mut ids: Vec<u64> = r.completed.iter().map(|c| c.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "hedged run double-counted a request");
+    }
+}
