@@ -1,0 +1,141 @@
+//! Perf-trajectory harness: measures the DES hot path and the memoized
+//! runner, prints the numbers, and writes them to `BENCH_RESULTS.json`
+//! so the repo carries a recorded performance baseline from PR 2 onward
+//! (regenerate after perf-relevant changes and commit the diff — git
+//! history *is* the trajectory).
+//!
+//!   cargo run --release --example bench_baseline                # full
+//!   cargo run --release --example bench_baseline -- --smoke     # CI
+//!   cargo run --release --example bench_baseline -- --out path.json
+//!
+//! Three measurements:
+//!   * `cold_single_pass` — one λ=6 bursty LA-IMR simulation: simulated
+//!     events drained per wall-second (the dense-index engine path);
+//!   * `sweep_cold` — a λ×seed×policy grid with memoization disabled:
+//!     cells per second (the sharded runner's raw throughput);
+//!   * `sweep_repeated` — the same grid requested 3× (the shape of
+//!     `repro all`, where Table VI and Figs 7/8 share cells), cold vs
+//!     memoized: the memo speedup, with results verified bit-identical.
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::sim::{Architecture, Cell, Policy, Runner, Simulation};
+use la_imr::util::bench::bench_once;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+fn arg_value(name: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
+fn grid(duration: f64, trials: &[u64]) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for lam in 1..=6 {
+        for &seed in trials {
+            for policy in [Policy::LaImr, Policy::Baseline, Policy::Hedged] {
+                cells.push(Cell::new(
+                    ScenarioConfig::bursty(lam as f64, seed)
+                        .with_duration(duration, duration / 10.0)
+                        .with_replicas(2),
+                    policy,
+                ));
+            }
+        }
+    }
+    cells
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let out_path = arg_value("--out").unwrap_or_else(|| "BENCH_RESULTS.json".into());
+    let (duration, trials): (f64, &[u64]) = if smoke {
+        (60.0, &[101, 102])
+    } else {
+        (300.0, &[101, 102, 103])
+    };
+    let cfg = Config::default();
+    let runner_threads = Runner::new().threads();
+    println!(
+        "bench_baseline ({} mode): {}s cells, {} seeds, {} workers\n",
+        if smoke { "smoke" } else { "full" },
+        duration,
+        trials.len(),
+        runner_threads
+    );
+
+    // 1) Cold single-pass DES throughput (engine hot path).
+    let scenario = ScenarioConfig::bursty(6.0, 42)
+        .with_duration(duration, duration / 10.0)
+        .with_replicas(2);
+    let (r, cold_dt) = bench_once("cold: single λ=6 LA-IMR pass", || {
+        Simulation::new(&cfg, &scenario, Policy::LaImr, Architecture::Microservice).run()
+    });
+    let events_per_sec = r.events as f64 / cold_dt.max(1e-9);
+    println!(
+        "  {} events, {} completions → {:.0} events/s ({:.0}x real time)\n",
+        r.events,
+        r.completed.len(),
+        events_per_sec,
+        duration / cold_dt.max(1e-9)
+    );
+
+    // 2) Cold sweep (no memo): raw sharded-runner throughput.
+    let cells = grid(duration, trials);
+    let cold_runner = Runner::new().without_cache();
+    let (cold_results, sweep_cold_dt) = bench_once(
+        &format!("sweep cold: {} cells, no cache", cells.len()),
+        || cold_runner.run(&cfg, &cells),
+    );
+    let cold_cells_per_sec = cells.len() as f64 / sweep_cold_dt.max(1e-9);
+    println!("  {:.2} cells/s\n", cold_cells_per_sec);
+
+    // 3) Repeated-cell workload (the `repro all` shape): same grid 3×.
+    let repeated: Vec<Cell> = (0..3).flat_map(|_| cells.iter().cloned()).collect();
+    let rep_runner_cold = Runner::new().without_cache();
+    let (_, rep_cold_dt) = bench_once(
+        &format!("sweep repeated×3: {} cells, no cache", repeated.len()),
+        || rep_runner_cold.run(&cfg, &repeated),
+    );
+    let memo_runner = Runner::new();
+    let (memo_results, rep_memo_dt) = bench_once(
+        &format!("sweep repeated×3: {} cells, memoized", repeated.len()),
+        || memo_runner.run(&cfg, &repeated),
+    );
+    let memo_speedup = rep_cold_dt / rep_memo_dt.max(1e-9);
+    println!(
+        "  memoization speedup on repeated cells: {:.2}x ({} distinct cells computed)\n",
+        memo_speedup,
+        memo_runner.cache_len().unwrap_or(0)
+    );
+
+    // Memo hits must be bit-identical to the cold sweep, cell for cell.
+    for (k, (a, b)) in cold_results.iter().zip(&memo_results).enumerate() {
+        assert_eq!(
+            a.latencies(),
+            b.latencies(),
+            "memoized cell {k} diverged from cold run"
+        );
+    }
+    println!("  bit-identity: memoized == cold across all cells ✓\n");
+
+    let timestamp = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let json = format!(
+        "{{\n  \"schema\": \"la-imr-bench/1\",\n  \"unix_time\": {timestamp},\n  \"mode\": \"{mode}\",\n  \"workers\": {workers},\n  \"cell_duration_s\": {duration},\n  \"cold_single_pass\": {{\n    \"events\": {events},\n    \"wall_s\": {cold_dt:.4},\n    \"events_per_sec\": {eps:.0}\n  }},\n  \"sweep_cold\": {{\n    \"cells\": {n_cells},\n    \"wall_s\": {sweep_cold_dt:.4},\n    \"cells_per_sec\": {cps:.3}\n  }},\n  \"sweep_repeated\": {{\n    \"cells\": {n_rep},\n    \"wall_s_no_cache\": {rep_cold_dt:.4},\n    \"wall_s_memoized\": {rep_memo_dt:.4},\n    \"memo_speedup\": {memo_speedup:.2}\n  }}\n}}\n",
+        mode = if smoke { "smoke" } else { "full" },
+        workers = runner_threads,
+        events = r.events,
+        eps = events_per_sec,
+        n_cells = cells.len(),
+        cps = cold_cells_per_sec,
+        n_rep = repeated.len(),
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path}"),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
+    print!("{json}");
+}

@@ -20,8 +20,10 @@ fn main() {
         Simulation::new(&cfg, &scenario, Policy::LaImr, Architecture::Microservice).run()
     });
     println!(
-        "  {} completions in {dt:.3}s wall → {:.0} simulated requests/s; sim/real ratio {:.0}x",
+        "  {} events / {} completions in {dt:.3}s wall → {:.0} events/s, {:.0} requests/s; sim/real ratio {:.0}x",
+        r.events,
         r.completed.len(),
+        r.events as f64 / dt,
         r.completed.len() as f64 / dt,
         300.0 / dt
     );

@@ -328,6 +328,102 @@ impl Config {
     pub fn slo_budget(&self, model: usize) -> f64 {
         self.slo.x_multiplier * self.models[model].l_ref
     }
+
+    /// Feed every behaviour-affecting field into `h` — half of the
+    /// runner's memoization key (the other half is the scenario/policy/
+    /// architecture; see `sim::runner::Cell::cache_key`). Two configs
+    /// hashing equal must be behaviourally identical for any simulation,
+    /// so every field that reaches the engine is included. Floats hash by
+    /// bit pattern; strings are length-delimited by a 0xFF sentinel (no
+    /// field name contains it).
+    pub fn hash_content<H: std::hash::Hasher>(&self, h: &mut H) {
+        // Exhaustive destructuring (no `..` rest patterns anywhere):
+        // adding a behaviour-affecting field without hashing it becomes
+        // a compile error here, never a silent cache-key collision.
+        let Config {
+            models,
+            instances,
+            slo,
+            cluster,
+        } = self;
+        h.write_usize(models.len());
+        for m in models {
+            let ModelProfile {
+                name,
+                l_ref,
+                r_cost,
+                accuracy,
+                quality,
+                artifact,
+            } = m;
+            h.write(name.as_bytes());
+            h.write_u8(0xFF);
+            h.write_u64(l_ref.to_bits());
+            h.write_u64(r_cost.to_bits());
+            h.write_u64(accuracy.to_bits());
+            h.write_u8(quality.priority() as u8);
+            match artifact {
+                Some(a) => {
+                    h.write_u8(1);
+                    h.write(a.as_bytes());
+                    h.write_u8(0xFF);
+                }
+                None => h.write_u8(0),
+            }
+        }
+        h.write_usize(instances.len());
+        for i in instances {
+            let InstanceSpec {
+                name,
+                tier,
+                speedup,
+                r_max,
+                background,
+                one_way_delay,
+                cost,
+                n_max,
+            } = i;
+            h.write(name.as_bytes());
+            h.write_u8(0xFF);
+            h.write_u8(match tier {
+                Tier::Edge => 0,
+                Tier::Cloud => 1,
+            });
+            for x in [speedup, r_max, background, one_way_delay, cost] {
+                h.write_u64(x.to_bits());
+            }
+            h.write_u32(*n_max);
+        }
+        let SloPolicy {
+            x_multiplier,
+            ewma_alpha,
+            rho_low,
+            gamma,
+            table_refresh,
+            rate_window,
+            beta_cost,
+        } = slo;
+        for x in [
+            x_multiplier,
+            ewma_alpha,
+            rho_low,
+            gamma,
+            table_refresh,
+            rate_window,
+            beta_cost,
+        ] {
+            h.write_u64(x.to_bits());
+        }
+        let ClusterPolicy {
+            hpa_interval,
+            scrape_interval,
+            pod_startup,
+            drain_grace,
+        } = cluster;
+        for x in [hpa_interval, scrape_interval, pod_startup, drain_grace] {
+            h.write_u64(x.to_bits());
+        }
+    }
 }
 
 #[cfg(test)]

@@ -134,6 +134,72 @@ impl ScenarioConfig {
         ]
     }
 
+    /// Feed every behaviour-affecting field into `h` — part of the
+    /// runner's memoization key (see `sim::runner::Cell::cache_key`).
+    /// Floats hash by bit pattern; the name is included because it lands
+    /// verbatim in `SimResult::scenario_name`.
+    pub fn hash_content<H: std::hash::Hasher>(&self, h: &mut H) {
+        // Exhaustive destructuring (no `..`): a new behaviour-affecting
+        // field that is not hashed fails to compile instead of silently
+        // colliding cache keys.
+        let ScenarioConfig {
+            name,
+            arrivals,
+            duration,
+            warmup,
+            seed,
+            quality_mix,
+            initial_replicas,
+            pod_mtbf,
+        } = self;
+        h.write(name.as_bytes());
+        h.write_u8(0xFF);
+        match arrivals {
+            ArrivalKind::Poisson { lambda } => {
+                h.write_u8(0);
+                h.write_u64(lambda.to_bits());
+            }
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                intra_gap,
+            } => {
+                h.write_u8(1);
+                for x in [burst_rate, alpha, lo, hi, intra_gap] {
+                    h.write_u64(x.to_bits());
+                }
+            }
+            ArrivalKind::Periodic { rate } => {
+                h.write_u8(2);
+                h.write_u64(rate.to_bits());
+            }
+            ArrivalKind::Steps { steps } => {
+                h.write_u8(3);
+                h.write_usize(steps.len());
+                for (t, r) in steps {
+                    h.write_u64(t.to_bits());
+                    h.write_u64(r.to_bits());
+                }
+            }
+        }
+        h.write_u64(duration.to_bits());
+        h.write_u64(warmup.to_bits());
+        h.write_u64(*seed);
+        for x in quality_mix {
+            h.write_u64(x.to_bits());
+        }
+        h.write_u32(*initial_replicas);
+        match pod_mtbf {
+            Some(m) => {
+                h.write_u8(1);
+                h.write_u64(m.to_bits());
+            }
+            None => h.write_u8(0),
+        }
+    }
+
     /// Mean offered arrival rate [req/s] — used to parameterise the
     /// analytic model during planning.
     pub fn mean_rate(&self) -> f64 {

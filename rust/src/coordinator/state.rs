@@ -90,11 +90,14 @@ impl ControlState {
         self.views = views;
     }
 
+    #[inline]
     pub fn update(&mut self, key: DeploymentKey, view: ReplicaView) {
+        // Hot path (per-arrival refresh): a pre-sized grid (`with_dims`)
+        // never grows, so this is one bounds check + one flat write.
         if self.idx(key).is_none() {
             self.grow(key);
         }
-        let idx = self.idx(key).expect("grown");
+        let idx = key.model * self.n_instances + key.instance;
         self.views[idx] = Some(view);
     }
 

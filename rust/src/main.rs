@@ -26,9 +26,10 @@ COMMANDS:
              [--mtbf S]                          pod-crash fault injection
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
-  repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|all>
+  repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|all>
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
+                                                 (table6q: per-quality-lane P99)
 ";
 
 fn main() {
@@ -170,6 +171,7 @@ fn run() -> anyhow::Result<()> {
                     "fig7" => println!("{}", report::fig7(&cfg, &runner)),
                     "fig8" => println!("{}", report::fig8(&cfg, &runner)),
                     "table6" => println!("{}", report::table6(&cfg, &runner)),
+                    "table6q" => println!("{}", report::table6_lanes(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())
@@ -177,7 +179,7 @@ fn run() -> anyhow::Result<()> {
             if id == "all" {
                 for id in [
                     "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
-                    "table6",
+                    "table6", "table6q",
                 ] {
                     print_one(id)?;
                     println!();

@@ -5,7 +5,7 @@
 //! run (per-cell seeding; see `sim::runner`). Pass `--threads N` to the
 //! CLI (or set `LAIMR_THREADS`) to pin the worker count.
 
-use crate::config::{ArrivalKind, Config, ScenarioConfig};
+use crate::config::{ArrivalKind, Config, QualityClass, ScenarioConfig};
 use crate::latency_model::{fit_anchored, paper_table4_samples, CalibrationSample};
 use crate::sim::{Architecture, Cell, Policy, Runner};
 use crate::telemetry::{box_stats, Summary};
@@ -437,6 +437,89 @@ pub fn table6(cfg: &Config, runner: &Runner) -> String {
     )
 }
 
+/// λ points of the per-quality lane sweep (Table VI-Q).
+const LANE_LAMBDAS: [u32; 3] = [2, 4, 6];
+
+/// Mixed-traffic cells for the per-quality sweep: one cell per
+/// (λ, seed, policy) with all three lanes populated.
+fn lane_cells(duration: f64, trials: &[u64]) -> Vec<Cell> {
+    let warmup = RUN_WARMUP.min(duration / 10.0);
+    let mut cells = Vec::new();
+    for lam in LANE_LAMBDAS {
+        for &seed in trials {
+            for policy in SWEEP_POLICIES {
+                let mut scenario = ScenarioConfig::bursty(lam as f64, seed)
+                    .with_duration(duration, warmup)
+                    .with_replicas(2);
+                scenario.quality_mix = [0.3, 0.5, 0.2];
+                scenario.name = format!("bursty-mixed-{lam}");
+                cells.push(Cell::new(scenario, policy));
+            }
+        }
+    }
+    cells
+}
+
+/// Table VI-Q data: per (λ, lane), the per-policy mean±SD of per-seed
+/// lane P99s. Uses `SimResult`'s cached per-quality partitions (computed
+/// once per cell, then read per lane).
+pub fn table6_lanes_data(
+    cfg: &Config,
+    duration: f64,
+    trials: &[u64],
+    runner: &Runner,
+) -> Vec<(u32, QualityClass, Vec<Summary>)> {
+    let n_pol = SWEEP_POLICIES.len();
+    let results = runner.run(cfg, &lane_cells(duration, trials));
+    let mut out = Vec::new();
+    for (li, &lam) in LANE_LAMBDAS.iter().enumerate() {
+        for q in QualityClass::ALL {
+            let per_policy: Vec<Summary> = (0..n_pol)
+                .map(|pi| {
+                    let p99s: Vec<f64> = (0..trials.len())
+                        .map(|si| {
+                            results[(li * trials.len() + si) * n_pol + pi]
+                                .summary_for(q)
+                                .p99
+                        })
+                        .collect();
+                    Summary::from(&p99s)
+                })
+                .collect();
+            out.push((lam, q, per_policy));
+        }
+    }
+    out
+}
+
+/// Table VI-Q: P99 per `QualityClass` under mixed traffic — Table VI
+/// pools the lanes, but the multi-queue tracks them, and a pooled P99
+/// hides a Low-Latency lane breach behind well-behaved Precise traffic.
+pub fn table6_lanes(cfg: &Config, runner: &Runner) -> String {
+    let trials = &TRIALS[..3];
+    let data = table6_lanes_data(cfg, RUN_DURATION, trials, runner);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|(lam, q, per_policy)| {
+            let mut row = vec![format!("{lam}"), q.name().into()];
+            row.extend(
+                per_policy
+                    .iter()
+                    .map(|s| format!("{:.3}±{:.3}", s.mean, s.std)),
+            );
+            row
+        })
+        .collect();
+    format!(
+        "Table VI-Q — per-quality-lane P99 [s] under mixed traffic (mix 0.3/0.5/0.2, {} seeds)\n{}",
+        trials.len(),
+        render_table(
+            &["λ", "lane", "LA-IMR P99", "Base P99", "Hedged P99"],
+            &rows
+        )
+    )
+}
+
 /// Fig 7: latency distribution summaries per λ for all three policies.
 pub fn fig7(cfg: &Config, runner: &Runner) -> String {
     let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3], runner);
@@ -549,6 +632,25 @@ mod tests {
             assert_eq!(h.la_p99.count, 2);
             assert_eq!(h.hd_p99.count, 2);
             assert!(!h.hd_all.is_empty(), "hedged latencies missing");
+        }
+    }
+
+    #[test]
+    fn table6_lanes_covers_every_lane() {
+        // Short mixed-traffic slice: every (λ, lane) pair appears, every
+        // lane actually received traffic (non-degenerate per-seed P99s),
+        // and each row carries one summary per sweep policy.
+        let data = table6_lanes_data(&cfg(), 60.0, &TRIALS[..1], &Runner::new());
+        assert_eq!(data.len(), LANE_LAMBDAS.len() * QualityClass::ALL.len());
+        for (lam, q, per_policy) in &data {
+            assert_eq!(per_policy.len(), SWEEP_POLICIES.len());
+            for s in per_policy {
+                assert!(
+                    s.count == 1 && s.mean > 0.0,
+                    "λ={lam} lane {} degenerate: {s:?}",
+                    q.name()
+                );
+            }
         }
     }
 

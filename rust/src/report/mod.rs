@@ -10,6 +10,11 @@
 //!   fig3   — avg/P95/P99 vs λ at N=4
 //!   fig4   — microservice vs monolithic vs N at λ=4
 //!   fig7/8 + table6 — LA-IMR vs baseline across λ = 1..6
+//!   table6q — per-quality-lane P99 under mixed traffic (ROADMAP item)
+//!
+//! Sweeps share cells (Table VI and Figs 7/8 reuse the same λ × seed ×
+//! policy grid); hand every function the *same* `Runner` so its result
+//! memo (`sim::SimCache`) computes each distinct cell once per session.
 
 mod experiments;
 pub use experiments::*;

@@ -9,6 +9,15 @@
 //! running. Fault injection and the control-plane cadences are composed
 //! from [`crate::sim::components`].
 //!
+//! Hot-path layout (§Perf): every per-event lookup is a dense index, not
+//! a hash. Pools live in a flat `model × instance` grid (pool id =
+//! `model * n_instances + instance`), per-request state is a `Vec`
+//! indexed by the request id (ids are `0..generated` by construction),
+//! and every dispatch writes one slot of a side table indexed by its
+//! token — the `ServiceComplete` heap slot carries only that token, and
+//! the record's `live` flag doubles as the crash tombstone that the old
+//! `HashSet<u64>` of live tokens provided.
+//!
 //! Service-time model: a dispatched request takes
 //!   (L_m / S_i) · [1 + (B_i/R_max)^γ] · LogNormal(−σ²/2, σ)
 //! — the idle-utilisation processing term of Eq. 8 (α_i): co-tenant
@@ -39,7 +48,6 @@ use crate::sim::result::{CompletedRequest, SimResult};
 use crate::telemetry::{LatencyHistogram, SlidingRate};
 use crate::workload::ArrivalGenerator;
 use crate::SimTime;
-use std::collections::HashMap;
 
 /// Service architecture (Fig 4 comparison).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,12 +71,33 @@ struct DepRuntime {
     queue: MultiQueue,
     /// Measured arrival rate into this pool (drives the contention term).
     rate: SlidingRate,
-    /// Latency model for service sampling.
-    model: LatencyModel,
     /// Rolling observed-latency histogram (exported as observed_p95).
     window_hist: LatencyHistogram,
-    /// Distinct models currently in flight (monolithic context switching).
-    inflight_models: HashMap<usize, u32>,
+    /// In-flight requests per model id, dense (monolithic ctx switching).
+    inflight_models: Vec<u32>,
+    /// (pod id, dispatch token) pairs executing on this pool — at most
+    /// one per pod (single-request service discipline), scanned linearly
+    /// (a pool is ≤ n_max pods, so this beats any hash).
+    in_service: Vec<(u64, u64)>,
+}
+
+/// Full payload of one dispatch. `Event::ServiceComplete` carries only
+/// the token indexing this table, keeping heap slots small; `live`
+/// doubles as the stale-completion tombstone (pod crashed mid-service).
+#[derive(Debug, Clone, Copy)]
+struct DispatchRecord {
+    req_id: u64,
+    pool: usize,
+    pod_id: u64,
+    /// The request's model (for monolithic context accounting — carried
+    /// so crash cleanup can return the `inflight_models` slot even when
+    /// the request itself already finished via a hedge sibling).
+    model: usize,
+    arrived: SimTime,
+    rtt: f64,
+    quality: QualityClass,
+    offloaded: bool,
+    live: bool,
 }
 
 /// One configured simulation run.
@@ -82,25 +111,30 @@ pub struct Simulation {
     autoscaler: Option<Box<dyn Autoscaler>>,
     hpa: HpaController,
     faults: Box<dyn FaultInjector>,
+    /// Pools in dense model-major order: pool of ⟨m, i⟩ sits at
+    /// `m * n_instances + i` — no map on the per-event path.
     deps: Vec<DepRuntime>,
-    index: HashMap<DeploymentKey, usize>,
+    n_instances: usize,
+    /// Service-time law per (model, instance), same dense layout — the
+    /// cross-model monolithic dispatch no longer rebuilds a model.
+    svc_models: Vec<LatencyModel>,
+    /// Dense quality-lane → model map (replaces the per-arrival catalogue
+    /// scan).
+    model_by_quality: [Option<usize>; 3],
     metrics: MetricRegistry,
     state: ControlState,
     events: EventQueue,
     rng: Rng,
-    // per-request bookkeeping
-    /// Outstanding requests: present until the first completion wins (or
-    /// the horizon passes). Doubles as the hedged-duplicate tombstone.
-    req_quality: HashMap<u64, (SimTime, QualityClass)>,
-    /// (pool, pod) → (request id, dispatch token, quality) executing
-    /// there. Quality is carried so crash cleanup can return the
-    /// `inflight_models` slot even when the request itself is already
-    /// finished (a hedged loser whose winner completed first).
-    in_service: HashMap<(usize, u64), Vec<(u64, u64, QualityClass)>>,
-    /// Live dispatch tokens; a ServiceComplete whose token is absent is
-    /// stale (its pod crashed mid-service) and is swallowed.
-    live_tokens: std::collections::HashSet<u64>,
-    dispatch_seq: u64,
+    // per-request bookkeeping, all dense
+    /// (arrival time, quality) per request id; `None` once the first
+    /// completion wins (or if the lane has no model). Doubles as the
+    /// hedged-duplicate tombstone. Sized once in `run()` — request ids
+    /// are `0..generated` by construction.
+    req_state: Vec<Option<(SimTime, QualityClass)>>,
+    /// Requests admitted and not yet completed (the `unfinished` count).
+    outstanding: usize,
+    /// Dispatch side table indexed by token; grows by one per dispatch.
+    dispatches: Vec<DispatchRecord>,
     completed: Vec<CompletedRequest>,
     generated: usize,
     scale_outs: u64,
@@ -117,6 +151,8 @@ pub struct Simulation {
     policy_needs_state: bool,
     /// Pod crashes injected so far (fault-injection accounting).
     crashes: u64,
+    /// Events drained from the queue (DES throughput accounting).
+    events_processed: u64,
 }
 
 impl Simulation {
@@ -143,11 +179,13 @@ impl Simulation {
         arch: Architecture,
     ) -> Self {
         let homes = home_map(cfg);
-        let mut deps = Vec::new();
-        let mut index = HashMap::new();
+        let n_models = cfg.models.len();
+        let n_instances = cfg.instances.len();
+        let mut deps = Vec::with_capacity(n_models * n_instances);
+        let mut svc_models = Vec::with_capacity(n_models * n_instances);
 
-        for m in 0..cfg.models.len() {
-            for i in 0..cfg.instances.len() {
+        for m in 0..n_models {
+            for i in 0..n_instances {
                 let key = DeploymentKey { model: m, instance: i };
                 let initial = policy.initial_replicas(key, homes[m], scenario);
                 let dep = Deployment::new(
@@ -158,16 +196,21 @@ impl Simulation {
                     cfg.cluster.drain_grace,
                     0.0,
                 );
-                index.insert(key, deps.len());
+                svc_models.push(LatencyModel::from_config(cfg, m, i));
                 deps.push(DepRuntime {
                     dep,
                     queue: MultiQueue::new(),
                     rate: SlidingRate::new(5.0), // smoother window for contention
-                    model: LatencyModel::from_config(cfg, m, i),
                     window_hist: LatencyHistogram::for_latency(),
-                    inflight_models: HashMap::new(),
+                    inflight_models: vec![0; n_models],
+                    in_service: Vec::new(),
                 });
             }
+        }
+
+        let mut model_by_quality = [None; 3];
+        for q in QualityClass::ALL {
+            model_by_quality[q.priority()] = cfg.model_for_quality(q).map(|(k, _)| k);
         }
 
         // The policy's autoscaler manages every home pool.
@@ -204,15 +247,16 @@ impl Simulation {
             hpa: HpaController::new(cfg.cluster.hpa_interval),
             faults: fault_injector_for(scenario),
             deps,
-            index,
+            n_instances,
+            svc_models,
+            model_by_quality,
             metrics: MetricRegistry::new(),
-            state: ControlState::new(),
+            state: ControlState::with_dims(n_models, n_instances),
             events: EventQueue::new(),
             rng: Rng::new(scenario.seed ^ 0xD15EA5E),
-            req_quality: HashMap::new(),
-            in_service: HashMap::new(),
-            live_tokens: std::collections::HashSet::new(),
-            dispatch_seq: 0,
+            req_state: Vec::new(),
+            outstanding: 0,
+            dispatches: Vec::new(),
             completed: Vec::new(),
             generated: 0,
             scale_outs: 0,
@@ -224,27 +268,36 @@ impl Simulation {
             scaling_enabled,
             policy_needs_state,
             crashes: 0,
+            events_processed: 0,
         }
+    }
+
+    /// Dense pool index of a deployment key.
+    #[inline]
+    fn pool_index(&self, key: DeploymentKey) -> usize {
+        key.model * self.n_instances + key.instance
     }
 
     /// In monolithic mode, every model of an instance shares one pool —
     /// map any key to the instance's canonical pool (model 0's slot).
+    #[inline]
     fn pool_of(&self, key: DeploymentKey) -> usize {
         match self.arch {
-            Architecture::Microservice => self.index[&key],
-            Architecture::Monolithic => self.index[&DeploymentKey {
-                model: 0,
-                instance: key.instance,
-            }],
+            Architecture::Microservice => self.pool_index(key),
+            Architecture::Monolithic => key.instance,
         }
     }
 
-    /// Refresh the router-visible control state from cluster truth.
+    /// Refresh the router-visible control state from cluster truth. The
+    /// state grid is pre-sized to the catalogue, so this re-fills slots
+    /// in place — no insertion or growth on the per-arrival path.
     fn refresh_state(&mut self, now: SimTime) {
-        for d in &mut self.deps {
+        for (k, d) in self.deps.iter_mut().enumerate() {
             let lambda = d.rate.rate(now);
             let n = d.dep.active_count().max(1);
-            let rho = d.model.rho(lambda, n);
+            // deps and svc_models share the dense pool layout, so slot k
+            // is this pool's own (model, instance) law.
+            let rho = self.svc_models[k].rho(lambda, n);
             self.state.update(
                 d.dep.key,
                 ReplicaView {
@@ -264,6 +317,12 @@ impl Simulation {
         // fault process, all into one event queue.
         let arrivals = ArrivalGenerator::generate(&self.scenario);
         self.generated = arrivals.len();
+        // Request ids are 0..generated — per-request state is a flat Vec.
+        self.req_state = vec![None; arrivals.len()];
+        self.dispatches = Vec::with_capacity(arrivals.len() + arrivals.len() / 4);
+        // The queue is still empty here — presize it for the bulk insert
+        // (arrivals dominate; cadences and faults ride in the slack).
+        self.events = EventQueue::with_capacity(arrivals.len() + 256);
         for (k, a) in arrivals.arrivals().iter().enumerate() {
             self.events.push(
                 a.at,
@@ -294,7 +353,7 @@ impl Simulation {
         // Final replica accounting.
         self.account_replicas(horizon.min(self.scenario.duration));
 
-        let unfinished = self.req_quality.len();
+        let unfinished = self.outstanding;
         let mean_replicas = if self.scenario.duration > 0.0 {
             self.replica_area / self.scenario.duration
         } else {
@@ -311,11 +370,13 @@ impl Simulation {
             peak_replicas: self.peak_replicas,
             mean_replicas,
             crashes: self.crashes,
+            events: self.events_processed,
+            cache: Default::default(),
         }
     }
 
     fn account_replicas(&mut self, now: SimTime) {
-        let idx = self.index[&self.watched];
+        let idx = self.pool_index(self.watched);
         let n = self.deps[idx].dep.active_count();
         let dt = (now - self.last_replica_change).max(0.0);
         self.replica_area += n as f64 * dt;
@@ -324,20 +385,10 @@ impl Simulation {
     }
 
     fn handle(&mut self, now: SimTime, ev: Event) {
+        self.events_processed += 1;
         match ev {
             Event::Arrival { id, quality } => self.on_arrival(now, id, quality),
-            Event::ServiceComplete {
-                dep,
-                pod_id,
-                req_id,
-                token,
-                arrived,
-                rtt,
-                quality,
-                offloaded,
-            } => {
-                self.on_complete(now, dep, pod_id, req_id, token, arrived, rtt, quality, offloaded)
-            }
+            Event::ServiceComplete { token } => self.on_complete(now, token),
             Event::ControlTick => self.on_control_tick(now),
             Event::HpaTick => self.on_hpa_tick(now),
             Event::ScrapeTick => {
@@ -384,27 +435,30 @@ impl Simulation {
             return;
         }
         let vid = victims[self.rng.below(victims.len())];
-        // Invalidate the victim's tokens so the already-scheduled
+        // Tombstone the victim's dispatch records so the already-scheduled
         // completions are swallowed, and return every executing request's
         // inflight_models slot — including hedged losers whose winner
-        // already finished (those are gone from req_quality but were
-        // still genuinely occupying this pod).
-        let reqs = self.in_service.remove(&(dep, vid)).unwrap_or_default();
-        for &(_, token, quality) in &reqs {
-            self.live_tokens.remove(&token);
-            if let Some((req_model, _)) = self.cfg.model_for_quality(quality) {
-                if let Some(c) = self.deps[dep].inflight_models.get_mut(&req_model) {
-                    *c = c.saturating_sub(1);
-                }
+        // already finished (those are gone from req_state but were still
+        // genuinely occupying this pod). Re-queue only the requests still
+        // outstanding; requests whose hedge sibling already finished stay
+        // finished.
+        let mut requeue: Vec<(u64, QualityClass)> = Vec::new();
+        let mut k = 0;
+        while k < self.deps[dep].in_service.len() {
+            let (pid, token) = self.deps[dep].in_service[k];
+            if pid != vid {
+                k += 1;
+                continue;
+            }
+            self.deps[dep].in_service.swap_remove(k);
+            let rec = self.dispatches[token as usize];
+            self.dispatches[token as usize].live = false;
+            let c = &mut self.deps[dep].inflight_models[rec.model];
+            *c = c.saturating_sub(1);
+            if self.req_state[rec.req_id as usize].is_some() {
+                requeue.push((rec.req_id, rec.quality));
             }
         }
-        // Re-queue only the requests still outstanding; requests whose
-        // hedge sibling already finished stay finished.
-        let requeue: Vec<(u64, QualityClass)> = reqs
-            .iter()
-            .filter(|&&(rid, _, _)| self.req_quality.contains_key(&rid))
-            .map(|&(rid, _, quality)| (rid, quality))
-            .collect();
         let d = &mut self.deps[dep];
         for (rid, quality) in requeue {
             d.queue.push(QueuedRequest {
@@ -420,10 +474,11 @@ impl Simulation {
     }
 
     fn on_arrival(&mut self, now: SimTime, id: u64, quality: QualityClass) {
-        let Some((model, _)) = self.cfg.model_for_quality(quality) else {
+        let Some(model) = self.model_by_quality[quality.priority()] else {
             return;
         };
-        self.req_quality.insert(id, (now, quality));
+        self.req_state[id as usize] = Some((now, quality));
+        self.outstanding += 1;
 
         // The policy decides where this request (and an optional hedged
         // duplicate) executes, reading the refreshed control state.
@@ -483,26 +538,29 @@ impl Simulation {
             // A hedged sibling may already have completed this request
             // while our copy sat queued — drop the stale entry without
             // occupying the pod.
-            let Some(&(arrived, quality)) = self.req_quality.get(&req.id) else {
+            let Some((arrived, quality)) = self.req_state[req.id as usize] else {
                 continue;
             };
             pod.in_flight += 1;
             let pod_id = pod.id;
 
             // Model of the request (for monolithic context accounting).
-            let (req_model, _) = self
-                .cfg
-                .model_for_quality(req.quality)
+            let req_model = self.model_by_quality[req.quality.priority()]
                 .expect("model for quality");
-            *d.inflight_models.entry(req_model).or_insert(0) += 1;
+            d.inflight_models[req_model] += 1;
 
             let key = d.dep.key;
-            // Use the *request's* model for cost, on this pool's instance.
-            let model = if req_model == key.model {
-                d.model.clone()
+            // Monolithic context-switch penalty input (Fig 4): distinct
+            // models in flight, including this one.
+            let distinct = if self.arch == Architecture::Monolithic {
+                d.inflight_models.iter().filter(|&&c| c > 0).count()
             } else {
-                LatencyModel::from_config(&self.cfg, req_model, key.instance)
+                1
             };
+
+            // Use the *request's* model for cost, on this pool's instance
+            // — a precomputed dense read, never a rebuild.
+            let model = self.svc_models[req_model * self.n_instances + key.instance].clone();
             // Service time: idle-utilisation term α_i of Eq. 8 — base
             // latency inflated by co-tenant background only. Load-driven
             // inflation emerges from the queue (see module docs).
@@ -513,82 +571,64 @@ impl Simulation {
                 .rng
                 .lognormal(-SERVICE_SIGMA * SERVICE_SIGMA / 2.0, SERVICE_SIGMA);
             // ... monolithic context-switch penalty (Fig 4).
-            if self.arch == Architecture::Monolithic {
-                let distinct = d.inflight_models.values().filter(|&&c| c > 0).count();
-                if distinct > 1 {
-                    svc *= 1.0 + MONO_CTX_PENALTY * (distinct - 1) as f64;
-                }
+            if self.arch == Architecture::Monolithic && distinct > 1 {
+                svc *= 1.0 + MONO_CTX_PENALTY * (distinct - 1) as f64;
             }
 
             // Network RTT with 10 % jitter, added at completion.
             let rtt = model.rtt * (0.9 + 0.2 * self.rng.uniform());
 
             let home = self.homes[req_model];
-            let token = self.dispatch_seq;
-            self.dispatch_seq += 1;
-            self.live_tokens.insert(token);
-            self.in_service
-                .entry((pool, pod_id))
-                .or_default()
-                .push((req.id, token, quality));
-            self.events.push(
-                now + svc,
-                Event::ServiceComplete {
-                    dep: pool,
-                    pod_id,
-                    req_id: req.id,
-                    token,
-                    arrived,
-                    rtt,
-                    quality,
-                    offloaded: self.pool_of(home) != pool,
-                },
-            );
+            let offloaded = self.pool_of(home) != pool;
+            let token = self.dispatches.len() as u64;
+            self.dispatches.push(DispatchRecord {
+                req_id: req.id,
+                pool,
+                pod_id,
+                model: req_model,
+                arrived,
+                rtt,
+                quality,
+                offloaded,
+                live: true,
+            });
+            self.deps[pool].in_service.push((pod_id, token));
+            self.events.push(now + svc, Event::ServiceComplete { token });
         }
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn on_complete(
-        &mut self,
-        now: SimTime,
-        pool: usize,
-        pod_id: u64,
-        req_id: u64,
-        token: u64,
-        arrived: SimTime,
-        rtt: f64,
-        quality: QualityClass,
-        offloaded: bool,
-    ) {
-        if !self.live_tokens.remove(&token) {
+    fn on_complete(&mut self, now: SimTime, token: u64) {
+        let rec = self.dispatches[token as usize];
+        if !rec.live {
             // Stale completion: the serving pod crashed mid-service and
             // the request was re-queued. Nothing to record.
             return;
         }
-        if let Some(list) = self.in_service.get_mut(&(pool, pod_id)) {
-            list.retain(|&(_, t, _)| t != token);
-        }
+        self.dispatches[token as usize].live = false;
+        let pool = rec.pool;
         let d = &mut self.deps[pool];
-        if let Some(pod) = d.dep.pods.iter_mut().find(|p| p.id == pod_id) {
+        if let Some(pos) = d.in_service.iter().position(|&(_, t)| t == token) {
+            d.in_service.swap_remove(pos);
+        }
+        if let Some(pod) = d.dep.pods.iter_mut().find(|p| p.id == rec.pod_id) {
             pod.in_flight = pod.in_flight.saturating_sub(1);
         }
-        let (req_model, _) = self.cfg.model_for_quality(quality).expect("model");
-        if let Some(c) = d.inflight_models.get_mut(&req_model) {
-            *c = c.saturating_sub(1);
-        }
+        let c = &mut d.inflight_models[rec.model];
+        *c = c.saturating_sub(1);
         // First completion wins: a hedged sibling finishing later only
         // frees its pod (the request was already recorded).
-        if self.req_quality.remove(&req_id).is_some() {
-            let finished = now + rtt;
-            let latency = finished - arrived;
+        if self.req_state[rec.req_id as usize].take().is_some() {
+            self.outstanding -= 1;
+            let finished = now + rec.rtt;
+            let latency = finished - rec.arrived;
             d.window_hist.record(latency);
-            if arrived >= self.scenario.warmup {
+            if rec.arrived >= self.scenario.warmup {
                 self.completed.push(CompletedRequest {
-                    id: req_id,
-                    arrived,
+                    id: rec.req_id,
+                    arrived: rec.arrived,
                     finished,
-                    quality,
-                    offloaded,
+                    quality: rec.quality,
+                    offloaded: rec.offloaded,
                 });
             }
         }
@@ -665,6 +705,8 @@ mod tests {
         assert!(s.count > 50, "count={}", s.count);
         // YOLOv5m base ≈ 0.73 s (+contention, +noise): mean well under τ.
         assert!(s.mean > 0.5 && s.mean < 1.6, "mean={}", s.mean);
+        // Every drained event is accounted (DES throughput telemetry).
+        assert!(r.events as usize >= r.completed.len(), "events={}", r.events);
     }
 
     #[test]
@@ -740,6 +782,7 @@ mod tests {
         let b = quick(3.0, Policy::LaImr, 2, 42);
         assert_eq!(a.summary().count, b.summary().count);
         assert_eq!(a.summary().p99, b.summary().p99);
+        assert_eq!(a.events, b.events);
     }
 
     #[test]
@@ -805,5 +848,24 @@ mod tests {
         );
         // Some winners must actually come from the hedge (off-home) pool.
         assert!(hd.offload_share() > 0.0, "no hedge ever won");
+    }
+
+    #[test]
+    fn crash_cleanup_requeues_and_conserves() {
+        // Dense tombstone path: crashes invalidate dispatch records, the
+        // victims' requests re-enter the queue, and conservation holds.
+        let scenario = ScenarioConfig::poisson(3.0, 77)
+            .with_duration(120.0, 0.0)
+            .with_replicas(3)
+            .with_faults(25.0);
+        let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert!(r.crashes > 0, "fault injection never fired");
+        assert_eq!(r.completed.len() + r.unfinished, r.generated);
+        let mut ids: Vec<u64> = r.completed.iter().map(|c| c.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "crash recovery double-counted a request");
     }
 }

@@ -1,5 +1,16 @@
 //! Event queue: a binary min-heap of timed events with stable FIFO
 //! ordering for ties (sequence numbers), the standard DES core.
+//!
+//! Heap slots are deliberately small: the fat `ServiceComplete` payload
+//! (pool, pod, request, arrival time, RTT, quality, offload flag) lives
+//! in the engine's dispatch side-table, and the event carries only the
+//! dispatch token that indexes it. That shrinks every heap slot from the
+//! size of the largest variant (8 fields) down to `{at, seq, small enum}`
+//! — sift-up/sift-down move a third of the bytes they used to.
+//!
+//! Time ordering is *total* (`f64::total_cmp`), so a NaN timestamp can
+//! never scramble sibling comparisons mid-heap: NaN sorts after every
+//! finite time and ties still break by insertion order.
 
 use crate::config::QualityClass;
 use crate::SimTime;
@@ -7,25 +18,15 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Everything that can happen in the simulation.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Event {
     /// A request arrives at the front door (router / static dispatcher).
     Arrival { id: u64, quality: QualityClass },
-    /// A request finishes service on (deployment, pod).
-    ServiceComplete {
-        dep: usize,
-        pod_id: u64,
-        req_id: u64,
-        /// Dispatch token: stale completions (pod crashed mid-service)
-        /// are swallowed when the token is no longer live.
-        token: u64,
-        /// Request arrival time (for end-to-end latency accounting).
-        arrived: SimTime,
-        /// Network RTT to add on top of completion.
-        rtt: f64,
-        quality: QualityClass,
-        offloaded: bool,
-    },
+    /// A request finishes service. `token` indexes the engine's dispatch
+    /// table, which carries the full payload (pool, pod, request id,
+    /// arrival time, RTT, quality, offload flag) and doubles as the
+    /// staleness tombstone for pods that crashed mid-service.
+    ServiceComplete { token: u64 },
     /// HPA reconcile tick (every 5 s).
     HpaTick,
     /// Prometheus scrape tick.
@@ -40,7 +41,7 @@ pub enum Event {
 }
 
 /// An event scheduled at a time, ordered for a min-heap.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct TimedEvent {
     pub at: SimTime,
     pub seq: u64,
@@ -49,7 +50,7 @@ pub struct TimedEvent {
 
 impl PartialEq for TimedEvent {
     fn eq(&self, other: &Self) -> bool {
-        self.at == other.at && self.seq == other.seq
+        self.at.total_cmp(&other.at) == Ordering::Equal && self.seq == other.seq
     }
 }
 impl Eq for TimedEvent {}
@@ -57,10 +58,12 @@ impl Eq for TimedEvent {}
 impl Ord for TimedEvent {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reversed: BinaryHeap is a max-heap, we want earliest first.
+        // total_cmp keeps the order a genuine total order even for NaN /
+        // signed-zero timestamps — a NaN can delay only itself, never
+        // reorder the rest of the heap.
         other
             .at
-            .partial_cmp(&self.at)
-            .unwrap_or(Ordering::Equal)
+            .total_cmp(&self.at)
             .then(other.seq.cmp(&self.seq))
     }
 }
@@ -71,7 +74,7 @@ impl PartialOrd for TimedEvent {
 }
 
 /// Min-heap event queue with insertion-order tie-breaking.
-#[derive(Debug, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct EventQueue {
     heap: BinaryHeap<TimedEvent>,
     seq: u64,
@@ -80,6 +83,15 @@ pub struct EventQueue {
 impl EventQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-size the heap for a known event volume (arrival streams are
+    /// generated up front, so the bulk insert never regrows).
+    pub fn with_capacity(n: usize) -> Self {
+        EventQueue {
+            heap: BinaryHeap::with_capacity(n),
+            seq: 0,
+        }
     }
 
     pub fn push(&mut self, at: SimTime, event: Event) {
@@ -108,6 +120,7 @@ impl EventQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
     #[test]
     fn pops_in_time_order() {
@@ -140,5 +153,65 @@ mod tests {
         q.push(2.0, Event::HpaTick);
         assert_eq!(q.peek_time(), Some(2.0));
         assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn nan_sorts_last_and_never_scrambles() {
+        // A NaN timestamp is a scheduling bug, but it must degrade
+        // gracefully: total_cmp puts NaN after every finite time, so the
+        // rest of the heap still pops in exact time order.
+        let mut q = EventQueue::new();
+        q.push(2.0, Event::HpaTick);
+        q.push(f64::NAN, Event::ScrapeTick);
+        q.push(1.0, Event::ControlTick);
+        q.push(f64::INFINITY, Event::HpaTick);
+        assert_eq!(q.pop().unwrap().at, 1.0);
+        assert_eq!(q.pop().unwrap().at, 2.0);
+        assert_eq!(q.pop().unwrap().at, f64::INFINITY);
+        assert!(q.pop().unwrap().at.is_nan());
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn property_tie_and_nan_ordering_deterministic() {
+        // Randomised property check: any push sequence (including
+        // duplicate times and NaNs) pops identically from two clones of
+        // the queue, times are non-decreasing under total_cmp, and
+        // same-time runs stay in insertion (seq) order.
+        let mut rng = Rng::new(0xE4E97);
+        for _ in 0..100 {
+            let mut q = EventQueue::new();
+            let n = 2 + rng.below(60);
+            for _ in 0..n {
+                // Coarse times force plenty of exact ties; ~5% NaN.
+                let at = if rng.uniform() < 0.05 {
+                    f64::NAN
+                } else {
+                    (rng.below(8)) as f64
+                };
+                q.push(at, Event::ControlTick);
+            }
+            let mut twin = q.clone();
+            let mut prev: Option<TimedEvent> = None;
+            while let Some(ev) = q.pop() {
+                let tw = twin.pop().expect("clone popped short");
+                assert_eq!(ev.seq, tw.seq, "clone diverged");
+                assert!(ev.at.total_cmp(&tw.at) == Ordering::Equal);
+                if let Some(p) = prev {
+                    assert_ne!(
+                        p.at.total_cmp(&ev.at),
+                        Ordering::Greater,
+                        "time order violated: {} after {}",
+                        ev.at,
+                        p.at
+                    );
+                    if p.at.total_cmp(&ev.at) == Ordering::Equal {
+                        assert!(p.seq < ev.seq, "tie not FIFO: {} then {}", p.seq, ev.seq);
+                    }
+                }
+                prev = Some(ev);
+            }
+            assert!(twin.pop().is_none());
+        }
     }
 }

@@ -9,8 +9,9 @@
 //! * [`policy`] — the pluggable [`ControlPolicy`] trait and the four
 //!   shipped impls (la-imr, baseline, static, hedged);
 //! * [`components`] — composable scenario pieces (cadences, faults);
-//! * [`engine`] — the policy-free event loop;
-//! * [`runner`] — the sharded multi-seed experiment runner.
+//! * [`engine`] — the policy-free event loop (dense-index hot path);
+//! * [`runner`] — the sharded multi-seed experiment runner with result
+//!   memoization (`SimCache`).
 
 pub mod components;
 mod engine;
@@ -26,4 +27,4 @@ pub use policy::{
     BaselinePolicy, ControlPolicy, Dispatch, HedgedPolicy, LaImrPolicy, Policy, StaticPolicy,
 };
 pub use result::{CompletedRequest, SimResult};
-pub use runner::{Cell, Runner};
+pub use runner::{Cell, Runner, SimCache};

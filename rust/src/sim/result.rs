@@ -1,8 +1,17 @@
 //! Simulation results and per-series summaries.
+//!
+//! `SimResult` is compute-once: the sorted latency series and the
+//! per-quality partitions are built lazily on first use and cached, so
+//! the report layer can ask for `summary()` / `box_stats()` /
+//! `summary_for()` per table row without re-allocating and re-sorting
+//! the same vector each time (§Perf — the old path sorted a fresh
+//! `Vec<f64>` on every call). `completed` is logically frozen once the
+//! run returns it; mutate it only before the first cached read.
 
 use crate::config::QualityClass;
-use crate::telemetry::{box_stats, BoxStats, Summary};
+use crate::telemetry::{box_stats_sorted, BoxStats, Summary};
 use crate::SimTime;
+use std::cell::OnceCell;
 
 /// One finished request.
 #[derive(Debug, Clone, Copy)]
@@ -19,6 +28,16 @@ impl CompletedRequest {
     pub fn latency(&self) -> f64 {
         self.finished - self.arrived
     }
+}
+
+/// Lazily-built derived statistics (sorted series + per-lane partitions).
+/// Cloning a result carries any already-computed caches along.
+#[derive(Debug, Clone, Default)]
+pub(crate) struct StatsCache {
+    sorted: OnceCell<Vec<f64>>,
+    /// Per-quality-lane latencies (completion order, then sorted), indexed
+    /// by `QualityClass::priority()`.
+    lanes: OnceCell<[Vec<f64>; 3]>,
 }
 
 /// Aggregated outcome of one simulation run.
@@ -42,22 +61,50 @@ pub struct SimResult {
     pub mean_replicas: f64,
     /// Pod crashes injected (fault-injection scenarios).
     pub crashes: u64,
+    /// Events drained from the DES queue (throughput accounting for the
+    /// bench harness: events / wall-second).
+    pub events: u64,
+    pub(crate) cache: StatsCache,
 }
 
 impl SimResult {
-    /// All post-warm-up latencies.
+    /// All post-warm-up latencies, in completion order (the bit-identity
+    /// series the determinism tests compare).
     pub fn latencies(&self) -> Vec<f64> {
         self.completed.iter().map(|c| c.latency()).collect()
     }
 
+    /// All post-warm-up latencies, ascending — computed once and cached.
+    pub fn sorted_latencies(&self) -> &[f64] {
+        self.cache.sorted.get_or_init(|| {
+            let mut v: Vec<f64> = self.completed.iter().map(|c| c.latency()).collect();
+            v.sort_by(f64::total_cmp);
+            v
+        })
+    }
+
+    /// Per-quality sorted latency partitions, computed once and cached.
+    fn lanes(&self) -> &[Vec<f64>; 3] {
+        self.cache.lanes.get_or_init(|| {
+            let mut lanes: [Vec<f64>; 3] = Default::default();
+            for c in &self.completed {
+                lanes[c.quality.priority()].push(c.latency());
+            }
+            for lane in &mut lanes {
+                lane.sort_by(f64::total_cmp);
+            }
+            lanes
+        })
+    }
+
     /// Latency summary over all completions.
     pub fn summary(&self) -> Summary {
-        Summary::from(&self.latencies())
+        Summary::from_sorted(self.sorted_latencies())
     }
 
     /// Box-plot statistics (Fig 8).
     pub fn box_stats(&self) -> BoxStats {
-        box_stats(&self.latencies())
+        box_stats_sorted(self.sorted_latencies())
     }
 
     /// Share of requests deflected off their home pool.
@@ -77,15 +124,9 @@ impl SimResult {
         1.0 - self.unfinished as f64 / self.generated as f64
     }
 
-    /// Summary restricted to one quality lane.
+    /// Summary restricted to one quality lane (cached partition).
     pub fn summary_for(&self, q: QualityClass) -> Summary {
-        let xs: Vec<f64> = self
-            .completed
-            .iter()
-            .filter(|c| c.quality == q)
-            .map(|c| c.latency())
-            .collect();
-        Summary::from(&xs)
+        Summary::from_sorted(&self.lanes()[q.priority()])
     }
 }
 
@@ -115,6 +156,8 @@ mod tests {
             peak_replicas: 3,
             mean_replicas: 2.0,
             crashes: 0,
+            events: 0,
+            cache: StatsCache::default(),
         }
     }
 
@@ -133,5 +176,32 @@ mod tests {
         assert_eq!(r.summary_for(QualityClass::LowLatency).count, 1);
         assert_eq!(r.summary_for(QualityClass::Balanced).count, 1);
         assert_eq!(r.summary_for(QualityClass::Precise).count, 0);
+    }
+
+    #[test]
+    fn cached_stats_match_fresh_computation() {
+        let r = mk(&[4.0, 1.0, 3.0, 2.0, 5.0]);
+        // Cached sorted series is ascending and complete.
+        assert_eq!(r.sorted_latencies(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        // Repeated summaries are identical (same cached input).
+        let a = r.summary();
+        let b = r.summary();
+        assert_eq!(a, b);
+        // ... and agree with an explicit Summary over the raw series.
+        let fresh = Summary::from(&r.latencies());
+        assert_eq!(a, fresh);
+        // Box stats from the cache agree with the unsorted-input path.
+        let cached_box = r.box_stats();
+        let fresh_box = crate::telemetry::box_stats(&r.latencies());
+        assert_eq!(cached_box, fresh_box);
+    }
+
+    #[test]
+    fn clone_carries_cache_consistently() {
+        let r = mk(&[2.0, 1.0]);
+        let s1 = r.summary();
+        let c = r.clone();
+        assert_eq!(c.summary(), s1);
+        assert_eq!(c.sorted_latencies(), r.sorted_latencies());
     }
 }

@@ -1,17 +1,31 @@
 //! Sharded experiment runner: fans (scenario, policy, architecture)
-//! cells across `std::thread::scope` workers.
+//! cells across `std::thread::scope` workers, with optional result
+//! memoization so repeated sweep cells are computed once.
 //!
 //! Determinism contract: every cell derives its entire random state from
 //! `scenario.seed` alone (arrival stream: `Rng::new(seed)`; engine noise:
 //! `Rng::new(seed ^ 0xD15EA5E)`). No RNG is ever shared across threads —
 //! each worker builds its cell's `Simulation` locally — so the parallel
 //! schedule cannot perturb a single sample and results are bit-identical
-//! to a serial sweep (see `tests/runner_determinism.rs`).
+//! to a serial sweep (see `tests/runner_determinism.rs`). Workers return
+//! `(index, result)` pairs that the coordinating thread writes into
+//! order-preserving slots — no per-slot mutex on the collection path.
+//!
+//! Memoization: a [`SimCache`] maps the key
+//! `hash(cfg, scenario, policy, arch)` — the scenario hash covers the
+//! seed — to its `SimResult`. Because a cell is a pure function of that
+//! key, a hit returns a clone that is bit-identical to the cold run
+//! (enforced by `tests/runner_memoization.rs`). The paper sweeps share
+//! many cells (Table VI and Figs 7/8 reuse the same λ × seed × policy
+//! grid), so a cache-bearing `Runner` computes them once per `repro all`.
 
 use crate::config::{Config, ScenarioConfig};
 use crate::sim::{Architecture, Policy, SimResult, Simulation};
+use std::collections::hash_map::DefaultHasher;
+use std::collections::{HashMap, HashSet};
+use std::hash::Hasher;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// One experiment cell: everything needed to reproduce one `SimResult`.
 #[derive(Debug, Clone)]
@@ -39,13 +53,85 @@ impl Cell {
     pub fn run(&self, cfg: &Config) -> SimResult {
         Simulation::new(cfg, &self.scenario, self.policy, self.arch).run()
     }
+
+    /// Memoization key: `(cfg, scenario incl. seed, policy, arch)` fed
+    /// into `DefaultHasher::new()` — deterministic within a process (and
+    /// in practice across runs of the same binary), but the algorithm is
+    /// unspecified across Rust versions, so never persist these keys.
+    /// A cell is a pure function of the hashed tuple, so equal keys mean
+    /// bit-identical results.
+    pub fn cache_key(&self, cfg: &Config) -> u64 {
+        let mut h = DefaultHasher::new();
+        cfg.hash_content(&mut h);
+        self.scenario.hash_content(&mut h);
+        h.write_u8(match self.policy {
+            Policy::LaImr => 0,
+            Policy::Baseline => 1,
+            Policy::Static => 2,
+            Policy::Hedged => 3,
+        });
+        h.write_u8(match self.arch {
+            Architecture::Microservice => 0,
+            Architecture::Monolithic => 1,
+        });
+        h.finish()
+    }
+}
+
+/// Shared result memo: cache key → `SimResult`. Thread-safe; hits clone
+/// the stored result (clones are bit-identical — same latency series,
+/// same counters).
+#[derive(Debug, Default)]
+pub struct SimCache {
+    map: Mutex<HashMap<u64, SimResult>>,
+}
+
+impl SimCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of distinct cells memoized so far.
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("sim cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, key: u64) -> Option<SimResult> {
+        self.map.lock().expect("sim cache poisoned").get(&key).cloned()
+    }
+
+    fn insert(&self, key: u64, result: &SimResult) {
+        self.map
+            .lock()
+            .expect("sim cache poisoned")
+            .entry(key)
+            .or_insert_with(|| result.clone());
+    }
+}
+
+/// `LAIMR_THREADS` override, read once per process (the env lookup was
+/// previously paid on every `Runner::new()`).
+fn env_threads() -> Option<usize> {
+    static CACHED: OnceLock<Option<usize>> = OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("LAIMR_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n >= 1)
+    })
 }
 
 /// Work-stealing-ish sharded runner: workers pop cells off a shared
-/// atomic cursor and write results back into order-preserving slots.
-#[derive(Debug, Clone, Copy)]
+/// atomic cursor; results come back as `(index, result)` pairs and land
+/// in input order. Carries an optional shared [`SimCache`].
+#[derive(Debug, Clone)]
 pub struct Runner {
     threads: usize,
+    cache: Option<Arc<SimCache>>,
 }
 
 impl Default for Runner {
@@ -55,66 +141,129 @@ impl Default for Runner {
 }
 
 impl Runner {
-    /// Auto-sized: `LAIMR_THREADS` env override, else all available cores.
+    /// Auto-sized: `LAIMR_THREADS` env override, else all available
+    /// cores. Memoization enabled.
     pub fn new() -> Self {
-        if let Ok(v) = std::env::var("LAIMR_THREADS") {
-            if let Ok(n) = v.trim().parse::<usize>() {
-                if n >= 1 {
-                    return Runner { threads: n };
-                }
-            }
+        let threads = env_threads().unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        });
+        Runner {
+            threads,
+            cache: Some(Arc::new(SimCache::new())),
         }
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1);
-        Runner { threads }
     }
 
     /// One worker — the reference schedule for determinism checks.
     pub fn serial() -> Self {
-        Runner { threads: 1 }
+        Runner {
+            threads: 1,
+            cache: Some(Arc::new(SimCache::new())),
+        }
     }
 
     /// Exactly `threads` workers (floored at 1).
     pub fn with_threads(threads: usize) -> Self {
         Runner {
             threads: threads.max(1),
+            cache: Some(Arc::new(SimCache::new())),
         }
+    }
+
+    /// Disable result memoization: every cell is computed, repeats and
+    /// all — the cold-path reference the memoization tests compare
+    /// against.
+    pub fn without_cache(mut self) -> Self {
+        self.cache = None;
+        self
+    }
+
+    /// Share an existing cache (e.g. across several report sweeps).
+    pub fn with_cache(mut self, cache: Arc<SimCache>) -> Self {
+        self.cache = Some(cache);
+        self
     }
 
     pub fn threads(&self) -> usize {
         self.threads
     }
 
+    /// Distinct cells currently memoized (None when caching is off).
+    pub fn cache_len(&self) -> Option<usize> {
+        self.cache.as_ref().map(|c| c.len())
+    }
+
     /// Run every cell and return results in input order.
     pub fn run(&self, cfg: &Config, cells: &[Cell]) -> Vec<SimResult> {
-        if self.threads == 1 || cells.len() < 2 {
-            return cells.iter().map(|c| c.run(cfg)).collect();
+        match &self.cache {
+            None => {
+                let work: Vec<usize> = (0..cells.len()).collect();
+                let mut computed = self.compute(cfg, cells, &work);
+                computed.sort_unstable_by_key(|pair| pair.0);
+                computed.into_iter().map(|(_, r)| r).collect()
+            }
+            Some(cache) => {
+                let keys: Vec<u64> = cells.iter().map(|c| c.cache_key(cfg)).collect();
+                let mut slots: Vec<Option<SimResult>> =
+                    keys.iter().map(|&k| cache.get(k)).collect();
+                // First occurrence of each still-missing key computes;
+                // intra-batch repeats resolve from the cache afterwards.
+                let mut claimed: HashSet<u64> = HashSet::new();
+                let mut work: Vec<usize> = Vec::new();
+                for (i, &k) in keys.iter().enumerate() {
+                    if slots[i].is_none() && claimed.insert(k) {
+                        work.push(i);
+                    }
+                }
+                for (i, r) in self.compute(cfg, cells, &work) {
+                    cache.insert(keys[i], &r);
+                    slots[i] = Some(r);
+                }
+                slots
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, s)| match s {
+                        Some(r) => r,
+                        None => cache.get(keys[i]).expect("repeat cell was computed"),
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Compute the given cell indices, returning `(index, result)` pairs
+    /// (unordered). Parallel workers drain a shared atomic cursor and
+    /// accumulate locally — disjoint writes, no per-slot lock.
+    fn compute(&self, cfg: &Config, cells: &[Cell], work: &[usize]) -> Vec<(usize, SimResult)> {
+        if self.threads == 1 || work.len() < 2 {
+            return work.iter().map(|&i| (i, cells[i].run(cfg))).collect();
         }
         let next = AtomicUsize::new(0);
-        let slots: Vec<Mutex<Option<SimResult>>> =
-            cells.iter().map(|_| Mutex::new(None)).collect();
-        let workers = self.threads.min(cells.len());
+        let workers = self.threads.min(work.len());
+        let mut out: Vec<(usize, SimResult)> = Vec::with_capacity(work.len());
         std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let k = next.fetch_add(1, Ordering::Relaxed);
-                    if k >= cells.len() {
-                        break;
-                    }
-                    let result = cells[k].run(cfg);
-                    *slots[k].lock().expect("runner slot poisoned") = Some(result);
-                });
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    scope.spawn(|| {
+                        let mut local: Vec<(usize, SimResult)> = Vec::new();
+                        loop {
+                            let k = next.fetch_add(1, Ordering::Relaxed);
+                            if k >= work.len() {
+                                break;
+                            }
+                            let i = work[k];
+                            local.push((i, cells[i].run(cfg)));
+                        }
+                        local
+                    })
+                })
+                .collect();
+            for h in handles {
+                out.extend(h.join().expect("runner worker panicked"));
             }
         });
-        slots
-            .into_iter()
-            .map(|s| {
-                s.into_inner()
-                    .expect("runner slot poisoned")
-                    .expect("every cell was claimed by a worker")
-            })
-            .collect()
+        out
     }
 }
 
@@ -176,5 +325,58 @@ mod tests {
         let one = grid(&[7]);
         let r = Runner::with_threads(8).run(&cfg, &one[..1]);
         assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn cache_keys_distinguish_cells() {
+        let cfg = Config::default();
+        let mut keys: Vec<u64> = Vec::new();
+        for seed in 0..20u64 {
+            for policy in Policy::ALL {
+                for arch in [Architecture::Microservice, Architecture::Monolithic] {
+                    keys.push(
+                        Cell::new(
+                            ScenarioConfig::bursty(3.0, seed)
+                                .with_duration(60.0, 5.0)
+                                .with_replicas(2),
+                            policy,
+                        )
+                        .with_arch(arch)
+                        .cache_key(&cfg),
+                    );
+                }
+            }
+        }
+        let n = keys.len();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), n, "cache key collision across seeds/policies/archs");
+    }
+
+    #[test]
+    fn cache_key_sensitive_to_cfg_and_scenario() {
+        let cfg = Config::default();
+        let cell = grid(&[7]).remove(0);
+        let base = cell.cache_key(&cfg);
+        let mut cfg2 = cfg.clone();
+        cfg2.slo.gamma += 0.01;
+        assert_ne!(base, cell.cache_key(&cfg2), "cfg change must change key");
+        let mut cell2 = cell.clone();
+        cell2.scenario.seed ^= 1;
+        assert_ne!(base, cell2.cache_key(&cfg), "seed change must change key");
+        // Same inputs, same key (stable across hasher instances).
+        assert_eq!(base, cell.cache_key(&cfg));
+    }
+
+    #[test]
+    fn intra_batch_repeats_computed_once() {
+        let cfg = Config::default();
+        let one = grid(&[9]).remove(0);
+        let cells = vec![one.clone(), one.clone(), one];
+        let runner = Runner::with_threads(2);
+        let results = runner.run(&cfg, &cells);
+        assert_eq!(runner.cache_len(), Some(1), "repeat cells re-computed");
+        assert_eq!(results[0].latencies(), results[1].latencies());
+        assert_eq!(results[1].latencies(), results[2].latencies());
     }
 }

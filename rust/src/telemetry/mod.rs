@@ -16,4 +16,4 @@ pub use dual_window::DualWindowRate;
 pub use ewma::Ewma;
 pub use histogram::LatencyHistogram;
 pub use sliding::SlidingRate;
-pub use stats::{box_stats, mean, percentile, std_dev, BoxStats, Summary};
+pub use stats::{box_stats, box_stats_sorted, mean, percentile, std_dev, BoxStats, Summary};

@@ -60,7 +60,15 @@ pub struct Summary {
 
 impl Summary {
     pub fn from(xs: &[f64]) -> Self {
-        if xs.is_empty() {
+        let mut v = xs.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Self::from_sorted(&v)
+    }
+
+    /// Summary over an already-sorted (ascending) series — the zero-copy
+    /// path for `SimResult`'s cached latencies (no re-sort, no realloc).
+    pub fn from_sorted(sorted: &[f64]) -> Self {
+        if sorted.is_empty() {
             return Summary {
                 count: 0,
                 mean: 0.0,
@@ -71,16 +79,14 @@ impl Summary {
                 max: 0.0,
             };
         }
-        let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         Summary {
-            count: v.len(),
-            mean: mean(&v),
-            std: std_dev(&v),
-            p50: percentile_sorted(&v, 50.0),
-            p95: percentile_sorted(&v, 95.0),
-            p99: percentile_sorted(&v, 99.0),
-            max: *v.last().unwrap(),
+            count: sorted.len(),
+            mean: mean(sorted),
+            std: std_dev(sorted),
+            p50: percentile_sorted(sorted, 50.0),
+            p95: percentile_sorted(sorted, 95.0),
+            p99: percentile_sorted(sorted, 99.0),
+            max: *sorted.last().unwrap(),
         }
     }
 }
@@ -103,9 +109,15 @@ pub struct BoxStats {
 pub fn box_stats(xs: &[f64]) -> BoxStats {
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let q1 = percentile_sorted(&v, 25.0);
-    let median = percentile_sorted(&v, 50.0);
-    let q3 = percentile_sorted(&v, 75.0);
+    box_stats_sorted(&v)
+}
+
+/// Tukey box stats over an already-sorted (ascending) series — the
+/// zero-copy path for `SimResult`'s cached latencies.
+pub fn box_stats_sorted(v: &[f64]) -> BoxStats {
+    let q1 = percentile_sorted(v, 25.0);
+    let median = percentile_sorted(v, 50.0);
+    let q3 = percentile_sorted(v, 75.0);
     let iqr = q3 - q1;
     let lo_fence = q1 - 1.5 * iqr;
     let hi_fence = q3 + 1.5 * iqr;
@@ -200,6 +212,16 @@ mod tests {
         assert_eq!(b.outliers, vec![50.0]);
         assert_eq!(b.max_outlier, 50.0);
         assert!(b.whisker_hi < 50.0);
+    }
+
+    #[test]
+    fn sorted_fast_paths_match_unsorted() {
+        let xs = [4.0, 1.0, 3.0, 2.0, 9.0, 0.5];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(Summary::from(&xs), Summary::from_sorted(&sorted));
+        assert_eq!(box_stats(&xs), box_stats_sorted(&sorted));
+        assert_eq!(Summary::from(&[]), Summary::from_sorted(&[]));
     }
 
     #[test]
