@@ -171,6 +171,42 @@ impl Default for ClusterPolicy {
     }
 }
 
+/// Tail-control knobs: deadline-aware shedding and cost-budgeted,
+/// cancellable hedging. Deadlines are the hard completion contract
+/// (robotics safety-stop semantics — a request predicted to miss it is
+/// refused at admission rather than queued); the budget caps how much
+/// extra work the SafeTail-style `hedged` policy may add.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TailPolicy {
+    /// Per-quality deadline multiplier d_q: the hard completion deadline
+    /// of a request in lane q is d_q · τ_m (τ_m = x·L_m of the lane's
+    /// model). Indexed by `QualityClass::priority()`.
+    pub deadline_x: [f64; 3],
+    /// Maximum fraction of requests in the budget window that may carry a
+    /// hedged duplicate. 1.0 is effectively unbudgeted (at most one
+    /// duplicate per request exists anyway); 0.0 disables hedging.
+    pub hedge_budget: f64,
+    /// Sliding window over which the duplicate budget is accounted [s].
+    pub budget_window: f64,
+    /// First-completion kill signal: when one copy of a hedged request
+    /// finishes, the losing copy's pod frees immediately (`HedgeCancel`)
+    /// instead of burning until its own completion.
+    pub hedge_cancel: bool,
+}
+
+impl Default for TailPolicy {
+    fn default() -> Self {
+        Self {
+            // 3× the SLO budget: generous enough that shedding engages
+            // only when the backlog is genuinely hopeless.
+            deadline_x: [3.0, 3.0, 3.0],
+            hedge_budget: 1.0,
+            budget_window: 30.0,
+            hedge_cancel: true,
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -178,6 +214,7 @@ pub struct Config {
     pub instances: Vec<InstanceSpec>,
     pub slo: SloPolicy,
     pub cluster: ClusterPolicy,
+    pub tail: TailPolicy,
 }
 
 impl Default for Config {
@@ -238,6 +275,7 @@ impl Default for Config {
             ],
             slo: SloPolicy::default(),
             cluster: ClusterPolicy::default(),
+            tail: TailPolicy::default(),
         }
     }
 }
@@ -287,6 +325,24 @@ impl Config {
             (0.0..1.0).contains(&self.slo.ewma_alpha),
             "EWMA alpha must be in [0,1)"
         );
+        for q in QualityClass::ALL {
+            let d = self.tail.deadline_x[q.priority()];
+            anyhow::ensure!(
+                d.is_finite() && d > 0.0,
+                "tail.deadline_x[{}] must be a positive finite multiple of τ (got {d})",
+                q.name()
+            );
+        }
+        anyhow::ensure!(
+            self.tail.hedge_budget.is_finite() && self.tail.hedge_budget >= 0.0,
+            "tail.hedge_budget must be >= 0 (got {})",
+            self.tail.hedge_budget
+        );
+        anyhow::ensure!(
+            self.tail.budget_window.is_finite() && self.tail.budget_window > 0.0,
+            "tail.budget_window must be > 0 seconds (got {})",
+            self.tail.budget_window
+        );
         let mut names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
         names.sort_unstable();
         names.dedup();
@@ -329,6 +385,24 @@ impl Config {
         self.slo.x_multiplier * self.models[model].l_ref
     }
 
+    /// Hard completion deadline for `model` [s]: d_q · τ_m where q is the
+    /// model's quality lane — the tail-control safety-stop contract.
+    pub fn deadline(&self, model: usize) -> f64 {
+        self.tail.deadline_x[self.models[model].quality.priority()] * self.slo_budget(model)
+    }
+
+    /// Per-lane hard deadlines [s] (the goodput yardstick); lanes without
+    /// a backing model are unbounded.
+    pub fn deadline_by_lane(&self) -> [f64; 3] {
+        let mut out = [f64::INFINITY; 3];
+        for q in QualityClass::ALL {
+            if let Some((m, _)) = self.model_for_quality(q) {
+                out[q.priority()] = self.deadline(m);
+            }
+        }
+        out
+    }
+
     /// Feed every behaviour-affecting field into `h` — half of the
     /// runner's memoization key (the other half is the scenario/policy/
     /// architecture; see `sim::runner::Cell::cache_key`). Two configs
@@ -345,6 +419,7 @@ impl Config {
             instances,
             slo,
             cluster,
+            tail,
         } = self;
         h.write_usize(models.len());
         for m in models {
@@ -423,6 +498,18 @@ impl Config {
         for x in [hpa_interval, scrape_interval, pod_startup, drain_grace] {
             h.write_u64(x.to_bits());
         }
+        let TailPolicy {
+            deadline_x,
+            hedge_budget,
+            budget_window,
+            hedge_cancel,
+        } = tail;
+        for x in deadline_x {
+            h.write_u64(x.to_bits());
+        }
+        h.write_u64(hedge_budget.to_bits());
+        h.write_u64(budget_window.to_bits());
+        h.write_u8(*hedge_cancel as u8);
     }
 }
 
@@ -480,6 +567,36 @@ mod tests {
     fn rejects_bad_accuracy() {
         let mut c = Config::default();
         c.models[0].accuracy = 1.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn tail_defaults_and_deadlines() {
+        let c = Config::default();
+        assert_eq!(c.tail.hedge_budget, 1.0);
+        assert!(c.tail.hedge_cancel);
+        let (yi, _) = c.model_by_name("yolov5m").unwrap();
+        // deadline = 3 × τ = 3 × 2.25 × 0.73.
+        assert!((c.deadline(yi) - 3.0 * 2.25 * 0.73).abs() < 1e-9);
+        let lanes = c.deadline_by_lane();
+        assert!((lanes[QualityClass::Balanced.priority()] - c.deadline(yi)).abs() < 1e-12);
+        assert!(lanes.iter().all(|d| *d > 0.0));
+    }
+
+    #[test]
+    fn rejects_negative_tail_knobs() {
+        let mut c = Config::default();
+        c.tail.hedge_budget = -0.1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("hedge_budget"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.tail.deadline_x[1] = -2.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("deadline_x"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.tail.budget_window = 0.0;
         assert!(c.validate().is_err());
     }
 

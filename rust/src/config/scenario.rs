@@ -121,6 +121,90 @@ impl ScenarioConfig {
         self
     }
 
+    /// Structural validation (used by the JSON path): positive spans and
+    /// rates, non-negative mix — clear errors instead of NaN downstream.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.duration.is_finite() && self.duration > 0.0,
+            "duration must be > 0 seconds (got {})",
+            self.duration
+        );
+        anyhow::ensure!(
+            self.warmup.is_finite() && self.warmup >= 0.0,
+            "warmup must be >= 0 seconds (got {})",
+            self.warmup
+        );
+        anyhow::ensure!(
+            self.quality_mix.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "quality_mix entries must be >= 0 (got {:?})",
+            self.quality_mix
+        );
+        anyhow::ensure!(
+            self.initial_replicas >= 1,
+            "initial_replicas must be >= 1"
+        );
+        if let Some(m) = self.pod_mtbf {
+            anyhow::ensure!(
+                m.is_finite() && m > 0.0,
+                "pod_mtbf must be > 0 seconds (got {m})"
+            );
+        }
+        match &self.arrivals {
+            ArrivalKind::Poisson { lambda } => {
+                anyhow::ensure!(
+                    lambda.is_finite() && *lambda >= 0.0,
+                    "poisson lambda must be >= 0 (got {lambda})"
+                );
+            }
+            ArrivalKind::Periodic { rate } => {
+                anyhow::ensure!(
+                    rate.is_finite() && *rate >= 0.0,
+                    "periodic rate must be >= 0 (got {rate})"
+                );
+            }
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                intra_gap,
+            } => {
+                anyhow::ensure!(
+                    burst_rate.is_finite() && *burst_rate >= 0.0,
+                    "burst_rate must be >= 0 (got {burst_rate})"
+                );
+                anyhow::ensure!(*alpha > 0.0, "pareto alpha must be > 0 (got {alpha})");
+                anyhow::ensure!(
+                    *lo > 0.0 && hi >= lo,
+                    "burst size bounds must satisfy 0 < lo <= hi (got {lo}..{hi})"
+                );
+                anyhow::ensure!(
+                    intra_gap.is_finite() && *intra_gap >= 0.0,
+                    "intra_gap must be >= 0 (got {intra_gap})"
+                );
+            }
+            ArrivalKind::Steps { steps } => {
+                for (t, r) in steps {
+                    anyhow::ensure!(
+                        t.is_finite() && *t >= 0.0 && r.is_finite() && *r >= 0.0,
+                        "step entries must be non-negative (got ({t}, {r}))"
+                    );
+                }
+                // The generator ends each segment at the next entry's
+                // start; out-of-order steps silently drop workload.
+                for w in steps.windows(2) {
+                    anyhow::ensure!(
+                        w[0].0 < w[1].0,
+                        "step times must be strictly increasing (got {} then {})",
+                        w[0].0,
+                        w[1].0
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
     /// Normalised quality mix.
     pub fn mix(&self) -> [f64; 3] {
         let s: f64 = self.quality_mix.iter().sum();

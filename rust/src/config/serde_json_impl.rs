@@ -2,7 +2,10 @@
 //! override semantics: a config file may specify any subset of fields; the
 //! rest keep their paper defaults.
 
-use super::{ClusterPolicy, Config, InstanceSpec, ModelProfile, QualityClass, SloPolicy, Tier};
+use super::{
+    ArrivalKind, ClusterPolicy, Config, InstanceSpec, ModelProfile, QualityClass, ScenarioConfig,
+    SloPolicy, TailPolicy, Tier,
+};
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
 
@@ -135,6 +138,241 @@ impl ClusterPolicy {
     }
 }
 
+impl TailPolicy {
+    fn from_json(v: &Value, base: TailPolicy) -> anyhow::Result<Self> {
+        let deadline_x = match v.get("deadline_x") {
+            None => base.deadline_x,
+            Some(arr) => {
+                let a = arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("tail.deadline_x: expected an array"))?;
+                anyhow::ensure!(
+                    a.len() == 3,
+                    "tail.deadline_x: expected 3 entries (one per quality lane), got {}",
+                    a.len()
+                );
+                let mut out = [0.0; 3];
+                for (k, x) in a.iter().enumerate() {
+                    out[k] = x
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("tail.deadline_x[{k}]: expected a number"))?;
+                }
+                out
+            }
+        };
+        Ok(TailPolicy {
+            deadline_x,
+            hedge_budget: num(v, "hedge_budget", base.hedge_budget)?,
+            budget_window: num(v, "budget_window", base.budget_window)?,
+            hedge_cancel: match v.get("hedge_cancel") {
+                None => base.hedge_cancel,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("tail.hedge_cancel: expected a bool"))?,
+            },
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert(
+            "deadline_x".into(),
+            Value::Arr(self.deadline_x.iter().map(|&d| Value::Num(d)).collect()),
+        );
+        o.insert("hedge_budget".into(), Value::Num(self.hedge_budget));
+        o.insert("budget_window".into(), Value::Num(self.budget_window));
+        o.insert("hedge_cancel".into(), Value::Bool(self.hedge_cancel));
+        Value::Obj(o)
+    }
+}
+
+impl ArrivalKind {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let kind = req_str(v, "kind")?;
+        match kind.as_str() {
+            "poisson" => Ok(ArrivalKind::Poisson {
+                lambda: req_num(v, "lambda")?,
+            }),
+            "bursts" => Ok(ArrivalKind::BoundedParetoBursts {
+                burst_rate: req_num(v, "burst_rate")?,
+                alpha: req_num(v, "alpha")?,
+                lo: req_num(v, "lo")?,
+                hi: req_num(v, "hi")?,
+                intra_gap: req_num(v, "intra_gap")?,
+            }),
+            "periodic" => Ok(ArrivalKind::Periodic {
+                rate: req_num(v, "rate")?,
+            }),
+            "steps" => {
+                let arr = v
+                    .get("steps")
+                    .and_then(|x| x.as_arr())
+                    .ok_or_else(|| anyhow::anyhow!("arrivals.steps: expected an array"))?;
+                let mut steps = Vec::with_capacity(arr.len());
+                for (k, pair) in arr.iter().enumerate() {
+                    let p = pair
+                        .as_arr()
+                        .filter(|p| p.len() == 2)
+                        .ok_or_else(|| anyhow::anyhow!("arrivals.steps[{k}]: expected [t, rate]"))?;
+                    let t = p[0]
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("arrivals.steps[{k}][0]: not a number"))?;
+                    let r = p[1]
+                        .as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("arrivals.steps[{k}][1]: not a number"))?;
+                    steps.push((t, r));
+                }
+                Ok(ArrivalKind::Steps { steps })
+            }
+            other => anyhow::bail!("unknown arrival kind '{other}'"),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        match self {
+            ArrivalKind::Poisson { lambda } => {
+                o.insert("kind".into(), Value::Str("poisson".into()));
+                o.insert("lambda".into(), Value::Num(*lambda));
+            }
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                intra_gap,
+            } => {
+                o.insert("kind".into(), Value::Str("bursts".into()));
+                o.insert("burst_rate".into(), Value::Num(*burst_rate));
+                o.insert("alpha".into(), Value::Num(*alpha));
+                o.insert("lo".into(), Value::Num(*lo));
+                o.insert("hi".into(), Value::Num(*hi));
+                o.insert("intra_gap".into(), Value::Num(*intra_gap));
+            }
+            ArrivalKind::Periodic { rate } => {
+                o.insert("kind".into(), Value::Str("periodic".into()));
+                o.insert("rate".into(), Value::Num(*rate));
+            }
+            ArrivalKind::Steps { steps } => {
+                o.insert("kind".into(), Value::Str("steps".into()));
+                o.insert(
+                    "steps".into(),
+                    Value::Arr(
+                        steps
+                            .iter()
+                            .map(|&(t, r)| Value::Arr(vec![Value::Num(t), Value::Num(r)]))
+                            .collect(),
+                    ),
+                );
+            }
+        }
+        Value::Obj(o)
+    }
+}
+
+impl ScenarioConfig {
+    /// Parse a scenario (full or partial-override over the default) from
+    /// JSON text. Seeds may be JSON numbers (exact up to 2^53) or decimal
+    /// strings (any u64 — the serializer emits strings beyond 2^53 so
+    /// round-trips are always exact).
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let base = ScenarioConfig::default();
+        let s = ScenarioConfig {
+            name: match v.get("name") {
+                None => base.name,
+                Some(x) => x
+                    .as_str()
+                    .map(|s| s.to_string())
+                    .ok_or_else(|| anyhow::anyhow!("name: expected a string"))?,
+            },
+            arrivals: match v.get("arrivals") {
+                None => base.arrivals,
+                Some(a) => ArrivalKind::from_json(a)?,
+            },
+            duration: num(&v, "duration", base.duration)?,
+            warmup: num(&v, "warmup", base.warmup)?,
+            seed: match v.get("seed") {
+                None => base.seed,
+                Some(x) => x
+                    .as_u64()
+                    .or_else(|| x.as_str().and_then(|s| s.parse().ok()))
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "seed: expected a non-negative integer (or a decimal string)"
+                        )
+                    })?,
+            },
+            quality_mix: match v.get("quality_mix") {
+                None => base.quality_mix,
+                Some(arr) => {
+                    let a = arr
+                        .as_arr()
+                        .filter(|a| a.len() == 3)
+                        .ok_or_else(|| anyhow::anyhow!("quality_mix: expected 3 numbers"))?;
+                    let mut out = [0.0; 3];
+                    for (k, x) in a.iter().enumerate() {
+                        out[k] = x
+                            .as_f64()
+                            .ok_or_else(|| anyhow::anyhow!("quality_mix[{k}]: not a number"))?;
+                    }
+                    out
+                }
+            },
+            initial_replicas: match v.get("initial_replicas") {
+                None => base.initial_replicas,
+                Some(x) => x
+                    .as_u64()
+                    .filter(|&n| n <= u32::MAX as u64)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!("initial_replicas: expected a non-negative integer")
+                    })? as u32,
+            },
+            pod_mtbf: match v.get("pod_mtbf") {
+                None | Some(Value::Null) => None,
+                Some(x) => Some(
+                    x.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("pod_mtbf: expected a number"))?,
+                ),
+            },
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Serialise to pretty JSON (round-trips through `from_json_str`).
+    pub fn to_json_string(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("name".into(), Value::Str(self.name.clone()));
+        o.insert("arrivals".into(), self.arrivals.to_json());
+        o.insert("duration".into(), Value::Num(self.duration));
+        o.insert("warmup".into(), Value::Num(self.warmup));
+        // JSON numbers are f64 (exact only to 2^53); bigger seeds go out
+        // as decimal strings so the round-trip never corrupts the RNG
+        // stream or the memo key.
+        o.insert(
+            "seed".into(),
+            if self.seed <= (1u64 << 53) {
+                Value::Num(self.seed as f64)
+            } else {
+                Value::Str(self.seed.to_string())
+            },
+        );
+        o.insert(
+            "quality_mix".into(),
+            Value::Arr(self.quality_mix.iter().map(|&x| Value::Num(x)).collect()),
+        );
+        o.insert(
+            "initial_replicas".into(),
+            Value::Num(self.initial_replicas as f64),
+        );
+        if let Some(m) = self.pod_mtbf {
+            o.insert("pod_mtbf".into(), Value::Num(m));
+        }
+        json::to_string(&Value::Obj(o))
+    }
+}
+
 impl Config {
     /// Parse a config (full or partial-override) from JSON text.
     pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
@@ -166,11 +404,16 @@ impl Config {
             None => base.cluster,
             Some(c) => ClusterPolicy::from_json(c, ClusterPolicy::default())?,
         };
+        let tail = match v.get("tail") {
+            None => base.tail,
+            Some(t) => TailPolicy::from_json(t, TailPolicy::default())?,
+        };
         Ok(Config {
             models,
             instances,
             slo,
             cluster,
+            tail,
         })
     }
 
@@ -187,6 +430,7 @@ impl Config {
         );
         o.insert("slo".into(), self.slo.to_json());
         o.insert("cluster".into(), self.cluster.to_json());
+        o.insert("tail".into(), self.tail.to_json());
         json::to_string(&Value::Obj(o))
     }
 }

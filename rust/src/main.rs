@@ -22,14 +22,18 @@ USAGE: laimr [--config cfg.json] [--artifacts DIR] <command> [flags]
 COMMANDS:
   serve      --robots N --fps F --duration S     serve real PJRT inference
   simulate   --lambda L --policy P --bursty B    run one DES scenario
-             --duration S --replicas N --seed K  (P: la-imr|baseline|static|hedged)
-             [--mtbf S]                          pod-crash fault injection
+             --duration S --replicas N --seed K  (P: la-imr|baseline|static|
+             [--mtbf S]                          hedged|deadline-shed);
+                                                 --mtbf: pod-crash faults
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
-  repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|all>
+  repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|
+              pareto|all>
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
-                                                 (table6q: per-quality-lane P99)
+                                                 (table6q: per-quality-lane P99;
+                                                  pareto: tail vs extra work,
+                                                  hedge budget × deadline)
 ";
 
 fn main() {
@@ -68,7 +72,7 @@ fn run() -> anyhow::Result<()> {
             let policy = match Policy::from_name(args.get_str("policy", "la-imr")) {
                 Some(p) => p,
                 None => anyhow::bail!(
-                    "unknown policy {} (expected la-imr|baseline|static|hedged)",
+                    "unknown policy {} (expected la-imr|baseline|static|hedged|deadline-shed)",
                     args.get_str("policy", "la-imr")
                 ),
             };
@@ -105,6 +109,23 @@ fn run() -> anyhow::Result<()> {
                 r.scale_outs, r.scale_ins, r.peak_replicas, r.mean_replicas
             );
             println!("offloaded  : {:.1}%", 100.0 * r.offload_share());
+            if r.tail.shed > 0 {
+                println!(
+                    "shed       : {} refused at admission ({:.1}%, goodput {:.1}%)",
+                    r.tail.shed,
+                    100.0 * r.shed_share(),
+                    100.0 * r.goodput(cfg.deadline_by_lane())
+                );
+            }
+            if r.tail.hedges_launched > 0 {
+                println!(
+                    "hedging    : {} duplicates ({:.1}% extra work), {} cancelled, {} losers ran out",
+                    r.tail.hedges_launched,
+                    100.0 * r.extra_work_share(),
+                    r.tail.cancelled,
+                    r.tail.losers_finished
+                );
+            }
             if r.crashes > 0 {
                 println!("faults     : {} pod crashes injected", r.crashes);
             }
@@ -172,6 +193,7 @@ fn run() -> anyhow::Result<()> {
                     "fig8" => println!("{}", report::fig8(&cfg, &runner)),
                     "table6" => println!("{}", report::table6(&cfg, &runner)),
                     "table6q" => println!("{}", report::table6_lanes(&cfg, &runner)),
+                    "pareto" => println!("{}", report::pareto(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())
@@ -179,7 +201,7 @@ fn run() -> anyhow::Result<()> {
             if id == "all" {
                 for id in [
                     "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
-                    "table6", "table6q",
+                    "table6", "table6q", "pareto",
                 ] {
                     print_one(id)?;
                     println!();

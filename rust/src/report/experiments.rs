@@ -576,6 +576,178 @@ pub fn fig8(cfg: &Config, runner: &Runner) -> String {
     )
 }
 
+// ----------------------------------------------------------------- pareto
+
+/// Hedge-budget axis of the tail-control sweep: 0 (never duplicate),
+/// two budgeted points, and 1.0 (effectively unbudgeted — the SafeTail
+/// baseline).
+pub const PARETO_BUDGETS: [f64; 4] = [0.0, 0.1, 0.3, 1.0];
+/// Deadline axis (multiples of τ_m) for the deadline-shed policy.
+pub const PARETO_DEADLINES: [f64; 3] = [1.5, 2.5, 4.0];
+/// Offered load of the pareto sweep: sustained overload on 2 replicas,
+/// where tail control actually has to choose what to give up.
+const PARETO_LAMBDA: f64 = 5.0;
+
+/// One tail-control variant's aggregated outcome.
+pub struct ParetoRow {
+    pub policy: String,
+    /// Human-readable knob setting ("budget=0.1", "deadline=2.5τ", "-").
+    pub knob: String,
+    /// P99 across seeds (per-seed P99s summarised).
+    pub p99: Summary,
+    /// Goodput against the *default* deadline contract across seeds.
+    pub goodput: Summary,
+    /// Mean share of requests refused at admission.
+    pub shed_share: f64,
+    /// Mean duplicates per generated request (the extra-work axis).
+    pub extra_work: f64,
+    /// Mean loser copies cancelled per run.
+    pub cancelled: f64,
+}
+
+fn pareto_row(
+    cfg_v: &Config,
+    policy: Policy,
+    knob: String,
+    duration: f64,
+    trials: &[u64],
+    yardstick: [f64; 3],
+    runner: &Runner,
+) -> ParetoRow {
+    let warmup = RUN_WARMUP.min(duration / 10.0);
+    let cells: Vec<Cell> = trials
+        .iter()
+        .map(|&seed| {
+            Cell::new(
+                ScenarioConfig::bursty(PARETO_LAMBDA, seed)
+                    .with_duration(duration, warmup)
+                    .with_replicas(2),
+                policy,
+            )
+        })
+        .collect();
+    let results = runner.run(cfg_v, &cells);
+    let p99s: Vec<f64> = results.iter().map(|r| r.summary().p99).collect();
+    let goodputs: Vec<f64> = results.iter().map(|r| r.goodput(yardstick)).collect();
+    let n = results.len() as f64;
+    ParetoRow {
+        policy: policy.name().into(),
+        knob,
+        p99: Summary::from(&p99s),
+        goodput: Summary::from(&goodputs),
+        shed_share: results.iter().map(|r| r.shed_share()).sum::<f64>() / n,
+        extra_work: results.iter().map(|r| r.extra_work_share()).sum::<f64>() / n,
+        cancelled: results.iter().map(|r| r.tail.cancelled as f64).sum::<f64>() / n,
+    }
+}
+
+/// The tail-control sweep behind `repro pareto`: hedge budget × deadline
+/// variants plus the plain policies, all on the same burst overload.
+/// Goodput is always measured against the *default* deadline contract so
+/// rows stay comparable while the shed threshold sweeps.
+///
+/// Each variant carries its own `Config` (the memo key spans the whole
+/// config), so it needs its own `runner.run` call; the variants fan out
+/// across scoped threads so the sweep still uses the machine, not just
+/// `trials.len()` workers at a time. Results are bit-identical to a
+/// sequential sweep (per-cell seeding) and land in variant order.
+pub fn pareto_data(
+    cfg: &Config,
+    duration: f64,
+    trials: &[u64],
+    runner: &Runner,
+) -> Vec<ParetoRow> {
+    let yardstick = cfg.deadline_by_lane();
+    let mut variants: Vec<(Policy, String, Config)> = Vec::new();
+    for b in PARETO_BUDGETS {
+        let mut c = cfg.clone();
+        c.tail.hedge_budget = b;
+        variants.push((Policy::Hedged, format!("budget={b}"), c));
+    }
+    // The PR-2 comparator: unbudgeted hedging without the kill signal.
+    {
+        let mut c = cfg.clone();
+        c.tail.hedge_budget = 1.0;
+        c.tail.hedge_cancel = false;
+        variants.push((Policy::Hedged, "budget=1 no-cancel".into(), c));
+    }
+    for d in PARETO_DEADLINES {
+        let mut c = cfg.clone();
+        c.tail.deadline_x = [d; 3];
+        variants.push((Policy::DeadlineShed, format!("deadline={d}τ"), c));
+    }
+    for p in [Policy::LaImr, Policy::Baseline, Policy::Static] {
+        variants.push((p, "-".into(), cfg.clone()));
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = variants
+            .iter()
+            .map(|(policy, knob, cfg_v)| {
+                scope.spawn(move || {
+                    pareto_row(cfg_v, *policy, knob.clone(), duration, trials, yardstick, runner)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pareto variant worker panicked"))
+            .collect()
+    })
+}
+
+/// Indices of the (P99, extra-work) Pareto front: rows no other row
+/// beats on both axes (strictly on at least one).
+pub fn pareto_front(rows: &[ParetoRow]) -> Vec<bool> {
+    rows.iter()
+        .map(|r| {
+            !rows.iter().any(|o| {
+                o.p99.mean <= r.p99.mean
+                    && o.extra_work <= r.extra_work
+                    && (o.p99.mean < r.p99.mean || o.extra_work < r.extra_work)
+            })
+        })
+        .collect()
+}
+
+/// `repro pareto`: the tail-vs-extra-work trade-off table. `*` marks the
+/// (P99, extra-work) Pareto front.
+pub fn pareto(cfg: &Config, runner: &Runner) -> String {
+    let trials = &TRIALS[..3];
+    let data = pareto_data(cfg, RUN_DURATION, trials, runner);
+    let front = pareto_front(&data);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .zip(&front)
+        .map(|(r, on_front)| {
+            vec![
+                format!("{}{}", if *on_front { "*" } else { " " }, r.policy),
+                r.knob.clone(),
+                format!("{:.3}±{:.3}", r.p99.mean, r.p99.std),
+                format!("{:.1}%", 100.0 * r.goodput.mean),
+                format!("{:.1}%", 100.0 * r.shed_share),
+                format!("{:.1}%", 100.0 * r.extra_work),
+                format!("{:.0}", r.cancelled),
+            ]
+        })
+        .collect();
+    format!(
+        "Pareto — tail vs extra work under burst overload (λ={PARETO_LAMBDA}, N₀=2, {} seeds; `*` = front)\n{}",
+        trials.len(),
+        render_table(
+            &[
+                "policy",
+                "knob",
+                "P99 [s]",
+                "goodput",
+                "shed",
+                "extra work",
+                "cancelled",
+            ],
+            &rows
+        )
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -652,6 +824,39 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pareto_rows_cover_the_knob_grid() {
+        // Short slice: every variant present, the knob axes behave —
+        // budget 0 adds zero extra work, shedding only ever comes from
+        // deadline-shed, and the tightest deadline actually sheds.
+        let data = pareto_data(&cfg(), 60.0, &TRIALS[..1], &Runner::new());
+        assert_eq!(
+            data.len(),
+            PARETO_BUDGETS.len() + 1 + PARETO_DEADLINES.len() + 3
+        );
+        let b0 = &data[0];
+        assert_eq!(b0.knob, "budget=0");
+        assert_eq!(b0.extra_work, 0.0, "budget 0 still duplicated");
+        let unbudgeted = &data[PARETO_BUDGETS.len() - 1];
+        assert!(
+            unbudgeted.extra_work >= b0.extra_work,
+            "budget axis not monotone at the ends"
+        );
+        for r in &data {
+            if r.policy != "deadline-shed" {
+                assert_eq!(r.shed_share, 0.0, "{} shed without a shed policy", r.policy);
+            }
+        }
+        let tightest = data
+            .iter()
+            .find(|r| r.knob == "deadline=1.5τ")
+            .expect("tightest deadline row");
+        assert!(tightest.shed_share > 0.0, "overload never shed at 1.5τ");
+        // Exactly the front rows are marked, and at least one row is.
+        let front = pareto_front(&data);
+        assert!(front.iter().any(|&f| f), "empty Pareto front");
     }
 
     #[test]

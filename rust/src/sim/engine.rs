@@ -31,8 +31,19 @@
 //! request with 10 % jitter.
 //!
 //! Redundant dispatch: a policy may return a hedge target; the request is
-//! then enqueued at two pools and the first completion wins. The losing
-//! copy only frees its pod when done (no cross-server cancellation).
+//! then enqueued at two pools and the first completion wins. With
+//! `tail.hedge_cancel` on (the default), the winner's completion issues a
+//! `HedgeCancel` kill signal: the losing copy's dispatch record is
+//! tombstoned and its pod freed *immediately*, so capacity accounting
+//! reflects the cancellation; with it off the loser burns its pod until
+//! its own (then-tombstoned) completion, as in hedged-request systems
+//! without kill signals.
+//!
+//! Shedding: a policy may refuse a request at admission
+//! (`Verdict::Shed`); the request leaves the system with its drop reason
+//! recorded and never touches a queue. Every *copy* of a request that
+//! does enter a queue is tracked in the [`TailCounters`] ledger — the
+//! conservation law `tests/engine_invariants.rs` asserts.
 
 use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
@@ -43,8 +54,8 @@ use crate::latency_model::LatencyModel;
 use crate::rng::Rng;
 use crate::sim::components::{fault_injector_for, CadencePlan, FaultInjector};
 use crate::sim::events::{Event, EventQueue};
-use crate::sim::policy::{ControlPolicy, Policy};
-use crate::sim::result::{CompletedRequest, SimResult};
+use crate::sim::policy::{ControlPolicy, Policy, Verdict};
+use crate::sim::result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
 use crate::telemetry::{LatencyHistogram, SlidingRate};
 use crate::workload::ArrivalGenerator;
 use crate::SimTime;
@@ -94,11 +105,17 @@ struct DispatchRecord {
     /// the request itself already finished via a hedge sibling).
     model: usize,
     arrived: SimTime,
+    /// When this copy started service (busy-time accounting: completion,
+    /// cancellation, and crash all charge `now - started`).
+    started: SimTime,
     rtt: f64,
     quality: QualityClass,
     offloaded: bool,
     live: bool,
 }
+
+/// Sentinel for an empty `req_tokens` slot.
+const NO_TOKEN: u64 = u64::MAX;
 
 /// One configured simulation run.
 pub struct Simulation {
@@ -135,6 +152,16 @@ pub struct Simulation {
     outstanding: usize,
     /// Dispatch side table indexed by token; grows by one per dispatch.
     dispatches: Vec<DispatchRecord>,
+    /// Live dispatched copies per request id (≤ 2 at once: primary +
+    /// hedge), `NO_TOKEN` = empty slot. This is how the winner finds the
+    /// losing copy to cancel without scanning the dispatch table.
+    req_tokens: Vec<[u64; 2]>,
+    /// Post-warm-up shed records.
+    shed: Vec<ShedRecord>,
+    /// Tail-control ledger (copy conservation + busy/wasted time).
+    tail: TailCounters,
+    /// Cached `cfg.tail.hedge_cancel` — first-completion kill signal.
+    hedge_cancel: bool,
     completed: Vec<CompletedRequest>,
     generated: usize,
     scale_outs: u64,
@@ -257,6 +284,10 @@ impl Simulation {
             req_state: Vec::new(),
             outstanding: 0,
             dispatches: Vec::new(),
+            req_tokens: Vec::new(),
+            shed: Vec::new(),
+            tail: TailCounters::default(),
+            hedge_cancel: cfg.tail.hedge_cancel,
             completed: Vec::new(),
             generated: 0,
             scale_outs: 0,
@@ -319,6 +350,7 @@ impl Simulation {
         self.generated = arrivals.len();
         // Request ids are 0..generated — per-request state is a flat Vec.
         self.req_state = vec![None; arrivals.len()];
+        self.req_tokens = vec![[NO_TOKEN; 2]; arrivals.len()];
         self.dispatches = Vec::with_capacity(arrivals.len() + arrivals.len() / 4);
         // The queue is still empty here — presize it for the bulk insert
         // (arrivals dominate; cadences and faults ride in the slack).
@@ -353,7 +385,24 @@ impl Simulation {
         // Final replica accounting.
         self.account_replicas(horizon.min(self.scenario.duration));
 
+        // Close the copy ledger: whatever is still queued or in service
+        // when the horizon fell is residual (stale queue entries that
+        // never got popped included — they are still copies in a queue).
+        self.tail.residual_copies = self
+            .deps
+            .iter()
+            .map(|d| (d.queue.len() + d.in_service.len()) as u64)
+            .sum();
+
         let unfinished = self.outstanding;
+        // Outstanding requests that arrived after warm-up — the same
+        // population `completed` and the shed records are drawn from
+        // (`SimResult::goodput`'s denominator).
+        let unfinished_post_warmup = self
+            .req_state
+            .iter()
+            .filter(|s| s.is_some_and(|(at, _)| at >= self.scenario.warmup))
+            .count();
         let mean_replicas = if self.scenario.duration > 0.0 {
             self.replica_area / self.scenario.duration
         } else {
@@ -365,12 +414,15 @@ impl Simulation {
             completed: std::mem::take(&mut self.completed),
             generated: self.generated,
             unfinished,
+            unfinished_post_warmup,
             scale_outs: self.scale_outs,
             scale_ins: self.scale_ins,
             peak_replicas: self.peak_replicas,
             mean_replicas,
             crashes: self.crashes,
             events: self.events_processed,
+            shed: std::mem::take(&mut self.shed),
+            tail: self.tail,
             cache: Default::default(),
         }
     }
@@ -389,6 +441,7 @@ impl Simulation {
         match ev {
             Event::Arrival { id, quality } => self.on_arrival(now, id, quality),
             Event::ServiceComplete { token } => self.on_complete(now, token),
+            Event::HedgeCancel { token } => self.on_hedge_cancel(now, token),
             Event::ControlTick => self.on_control_tick(now),
             Event::HpaTick => self.on_hpa_tick(now),
             Event::ScrapeTick => {
@@ -411,6 +464,38 @@ impl Simulation {
             }
             Event::PodCrash { dep } => self.on_crash(now, dep),
         }
+    }
+
+    /// Register a dispatched copy's token against its request.
+    #[inline]
+    fn register_token(&mut self, req: u64, token: u64) {
+        let slots = &mut self.req_tokens[req as usize];
+        if slots[0] == NO_TOKEN {
+            slots[0] = token;
+        } else {
+            debug_assert_eq!(slots[1], NO_TOKEN, "more than 2 live copies");
+            slots[1] = token;
+        }
+    }
+
+    /// Forget a copy's token (completed, cancelled, or crash-tombstoned).
+    #[inline]
+    fn unregister_token(&mut self, req: u64, token: u64) {
+        let slots = &mut self.req_tokens[req as usize];
+        if slots[0] == token {
+            slots[0] = NO_TOKEN;
+        } else if slots[1] == token {
+            slots[1] = NO_TOKEN;
+        }
+    }
+
+    /// The other live dispatched copy of `req` (the hedge loser to
+    /// cancel), if any.
+    #[inline]
+    fn sibling_token(&self, req: u64, token: u64) -> Option<u64> {
+        self.req_tokens[req as usize]
+            .into_iter()
+            .find(|&t| t != NO_TOKEN && t != token)
     }
 
     /// Fault injection: kill one pod of the pool; its in-flight requests
@@ -455,6 +540,10 @@ impl Simulation {
             self.dispatches[token as usize].live = false;
             let c = &mut self.deps[dep].inflight_models[rec.model];
             *c = c.saturating_sub(1);
+            self.unregister_token(rec.req_id, token);
+            self.tail.crash_tombstoned += 1;
+            self.tail.busy_time += now - rec.started;
+            self.tail.wasted_time += now - rec.started;
             if self.req_state[rec.req_id as usize].is_some() {
                 requeue.push((rec.req_id, rec.quality));
             }
@@ -466,6 +555,9 @@ impl Simulation {
                 quality,
                 enqueued_at: now,
             });
+            // A re-queue is a fresh copy in the ledger (the crashed one
+            // was closed as crash-tombstoned above).
+            self.tail.copies_enqueued += 1;
         }
         d.dep.pods.retain(|p| p.id != vid);
         self.crashes += 1;
@@ -477,16 +569,35 @@ impl Simulation {
         let Some(model) = self.model_by_quality[quality.priority()] else {
             return;
         };
-        self.req_state[id as usize] = Some((now, quality));
-        self.outstanding += 1;
-
-        // The policy decides where this request (and an optional hedged
-        // duplicate) executes, reading the refreshed control state.
-        // Home-only policies never look at it — skip the rebuild.
+        // The policy decides whether this request runs at all, and where
+        // (with an optional hedged duplicate), reading the refreshed
+        // control state. Home-only policies never look at it — skip the
+        // rebuild.
         if self.policy_needs_state {
             self.refresh_state(now);
         }
-        let dispatch = self.policy.admit(model, now, &self.state, &mut self.metrics);
+        let verdict = self.policy.admit(model, now, &self.state, &mut self.metrics);
+        let dispatch = match verdict {
+            Verdict::Run(d) => d,
+            Verdict::Shed { reason, predicted } => {
+                // Safety stop: the request leaves the system right here,
+                // with its drop reason recorded. It never touches a
+                // queue, so it is neither outstanding nor a copy.
+                self.tail.shed += 1;
+                if now >= self.scenario.warmup {
+                    self.shed.push(ShedRecord {
+                        id,
+                        at: now,
+                        quality,
+                        reason,
+                        predicted,
+                    });
+                }
+                return;
+            }
+        };
+        self.req_state[id as usize] = Some((now, quality));
+        self.outstanding += 1;
 
         let pool = self.pool_of(dispatch.target);
         // A hedge collapsing onto the primary pool (e.g. monolithic
@@ -497,8 +608,11 @@ impl Simulation {
             .filter(|&p| p != pool);
 
         self.enqueue(now, pool, id, quality);
+        self.tail.copies_enqueued += 1;
         if let Some(hp) = hedge_pool {
             self.enqueue(now, hp, id, quality);
+            self.tail.copies_enqueued += 1;
+            self.tail.hedges_launched += 1;
         }
         self.try_dispatch(now, pool);
         if let Some(hp) = hedge_pool {
@@ -539,6 +653,7 @@ impl Simulation {
             // while our copy sat queued — drop the stale entry without
             // occupying the pod.
             let Some((arrived, quality)) = self.req_state[req.id as usize] else {
+                self.tail.stale_dropped += 1;
                 continue;
             };
             pod.in_flight += 1;
@@ -587,26 +702,31 @@ impl Simulation {
                 pod_id,
                 model: req_model,
                 arrived,
+                started: now,
                 rtt,
                 quality,
                 offloaded,
                 live: true,
             });
             self.deps[pool].in_service.push((pod_id, token));
+            self.register_token(req.id, token);
             self.events.push(now + svc, Event::ServiceComplete { token });
         }
     }
 
-    fn on_complete(&mut self, now: SimTime, token: u64) {
+    /// Release a live dispatched copy: tombstone its record, free its pod
+    /// slot and accounting rows, forget its token, and charge its service
+    /// span to busy time. The single exit path shared by completion and
+    /// cancellation — every ledger-touching field is handled here once.
+    /// Returns the record, or `None` if the copy was already gone
+    /// (crashed mid-service, or lost a dead-heat tie and was cancelled).
+    fn release_copy(&mut self, now: SimTime, token: u64) -> Option<DispatchRecord> {
         let rec = self.dispatches[token as usize];
         if !rec.live {
-            // Stale completion: the serving pod crashed mid-service and
-            // the request was re-queued. Nothing to record.
-            return;
+            return None;
         }
         self.dispatches[token as usize].live = false;
-        let pool = rec.pool;
-        let d = &mut self.deps[pool];
+        let d = &mut self.deps[rec.pool];
         if let Some(pos) = d.in_service.iter().position(|&(_, t)| t == token) {
             d.in_service.swap_remove(pos);
         }
@@ -615,13 +735,27 @@ impl Simulation {
         }
         let c = &mut d.inflight_models[rec.model];
         *c = c.saturating_sub(1);
+        self.unregister_token(rec.req_id, token);
+        self.tail.busy_time += now - rec.started;
+        Some(rec)
+    }
+
+    fn on_complete(&mut self, now: SimTime, token: u64) {
+        let Some(rec) = self.release_copy(now, token) else {
+            // Stale completion: the serving pod crashed mid-service (the
+            // request was re-queued) or the copy lost and was cancelled.
+            // Nothing to record either way.
+            return;
+        };
+        let pool = rec.pool;
         // First completion wins: a hedged sibling finishing later only
         // frees its pod (the request was already recorded).
         if self.req_state[rec.req_id as usize].take().is_some() {
             self.outstanding -= 1;
+            self.tail.wins += 1;
             let finished = now + rec.rtt;
             let latency = finished - rec.arrived;
-            d.window_hist.record(latency);
+            self.deps[pool].window_hist.record(latency);
             if rec.arrived >= self.scenario.warmup {
                 self.completed.push(CompletedRequest {
                     id: rec.req_id,
@@ -631,11 +765,43 @@ impl Simulation {
                     offloaded: rec.offloaded,
                 });
             }
+            // Kill signal: the losing copy still in service elsewhere is
+            // cancelled *now* — its pod frees via the HedgeCancel event
+            // instead of burning to its own completion.
+            if self.hedge_cancel {
+                if let Some(loser) = self.sibling_token(rec.req_id, token) {
+                    self.events.push(now, Event::HedgeCancel { token: loser });
+                }
+            }
+        } else {
+            // Cancellation off (or an exact completion tie): the loser
+            // ran to the end and only now frees its pod.
+            self.tail.losers_finished += 1;
+            self.tail.wasted_time += now - rec.started;
         }
         // Pod freed → dispatch next waiting request; also progress drains.
         self.account_replicas(now);
         self.deps[pool].dep.tick(now);
         self.try_dispatch(now, pool);
+    }
+
+    /// First-completion cancellation: tombstone the losing copy and free
+    /// its pod immediately, so the pool's capacity accounting reflects
+    /// the kill signal (the loser's already-scheduled `ServiceComplete`
+    /// arrives later and is swallowed by the tombstone).
+    fn on_hedge_cancel(&mut self, now: SimTime, token: u64) {
+        let Some(rec) = self.release_copy(now, token) else {
+            // Already gone: completed in a dead heat with the winner, or
+            // its pod crashed between the kill signal and delivery.
+            return;
+        };
+        self.tail.cancelled += 1;
+        self.tail.wasted_time += now - rec.started;
+        // The freed pod serves the backlog immediately — the point of
+        // cancelling at all.
+        self.account_replicas(now);
+        self.deps[rec.pool].dep.tick(now);
+        self.try_dispatch(now, rec.pool);
     }
 
     fn on_control_tick(&mut self, now: SimTime) {
@@ -848,6 +1014,67 @@ mod tests {
         );
         // Some winners must actually come from the hedge (off-home) pool.
         assert!(hd.offload_share() > 0.0, "no hedge ever won");
+    }
+
+    #[test]
+    fn deadline_shed_refuses_hopeless_load_with_reasons() {
+        // One replica at λ=3 (μ≈1.37): the backlog diverges; the shed
+        // policy must refuse the hopeless tail instead of queueing it,
+        // and every refusal carries its reason + triggering prediction.
+        let scenario = ScenarioConfig::bursty(3.0, 17)
+            .with_duration(180.0, 0.0)
+            .with_replicas(1);
+        let r = Simulation::new(&cfg(), &scenario, Policy::DeadlineShed, Architecture::Microservice)
+            .run();
+        assert!(r.tail.shed > 0, "overload never shed");
+        assert_eq!(r.shed.len(), r.tail.shed as usize, "warmup=0: all recorded");
+        assert_eq!(
+            r.completed.len() + r.tail.shed as usize + r.unfinished,
+            r.generated,
+            "request conservation with shedding"
+        );
+        let c = cfg();
+        for s in &r.shed {
+            assert!(
+                s.predicted > c.deadline(1),
+                "shed below deadline: {} <= {}",
+                s.predicted,
+                c.deadline(1)
+            );
+        }
+        assert!(r.tail.copies_balanced(), "copy ledger: {:?}", r.tail);
+        // Admitted work stays largely inside the contract: what queues
+        // is what the predictor deemed feasible.
+        assert!(r.shed_share() < 1.0 && r.shed_share() > 0.0);
+    }
+
+    #[test]
+    fn cancellation_kills_losers_and_frees_pods() {
+        let scen = ScenarioConfig::bursty(4.0, 29)
+            .with_duration(180.0, 0.0)
+            .with_replicas(1);
+        let on = Simulation::new(&cfg(), &scen, Policy::Hedged, Architecture::Microservice)
+            .run();
+        let mut cfg_off = cfg();
+        cfg_off.tail.hedge_cancel = false;
+        let off = Simulation::new(&cfg_off, &scen, Policy::Hedged, Architecture::Microservice)
+            .run();
+        // Same arrivals; with the kill signal, losers are cancelled
+        // rather than finishing.
+        assert!(on.tail.hedges_launched > 0, "no hedges launched");
+        assert!(on.tail.cancelled > 0, "kill signal never fired");
+        assert_eq!(off.tail.cancelled, 0, "cancel fired while disabled");
+        assert!(off.tail.losers_finished > 0, "no losers without cancel?");
+        assert!(on.tail.copies_balanced(), "on: {:?}", on.tail);
+        assert!(off.tail.copies_balanced(), "off: {:?}", off.tail);
+        // Wasted pod-time (the losers' spans) must shrink with the kill
+        // signal — that's what "the pod frees immediately" buys.
+        assert!(
+            on.tail.wasted_time < off.tail.wasted_time,
+            "wasted {} !< {}",
+            on.tail.wasted_time,
+            off.tail.wasted_time
+        );
     }
 
     #[test]

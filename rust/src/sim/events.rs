@@ -27,6 +27,11 @@ pub enum Event {
     /// arrival time, RTT, quality, offload flag) and doubles as the
     /// staleness tombstone for pods that crashed mid-service.
     ServiceComplete { token: u64 },
+    /// First-completion kill signal: the losing copy of a hedged request
+    /// is cancelled and its pod freed immediately — capacity accounting
+    /// reflects the cancellation instead of the loser burning to its own
+    /// `ServiceComplete` (which arrives later, tombstoned).
+    HedgeCancel { token: u64 },
     /// HPA reconcile tick (every 5 s).
     HpaTick,
     /// Prometheus scrape tick.

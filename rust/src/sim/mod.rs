@@ -6,8 +6,8 @@
 //! logic under test (DESIGN.md §6 "one coordinator, two clocks").
 //!
 //! Layout:
-//! * [`policy`] — the pluggable [`ControlPolicy`] trait and the four
-//!   shipped impls (la-imr, baseline, static, hedged);
+//! * [`policy`] — the pluggable [`ControlPolicy`] trait and the five
+//!   shipped impls (la-imr, baseline, static, hedged, deadline-shed);
 //! * [`components`] — composable scenario pieces (cadences, faults);
 //! * [`engine`] — the policy-free event loop (dense-index hot path);
 //! * [`runner`] — the sharded multi-seed experiment runner with result
@@ -24,7 +24,8 @@ pub use components::{fault_injector_for, CadencePlan, ExpPodCrashes, FaultInject
 pub use engine::{Architecture, Simulation};
 pub use events::{Event, EventQueue, TimedEvent};
 pub use policy::{
-    BaselinePolicy, ControlPolicy, Dispatch, HedgedPolicy, LaImrPolicy, Policy, StaticPolicy,
+    BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, LaImrPolicy,
+    Policy, ShedReason, StaticPolicy, Verdict,
 };
-pub use result::{CompletedRequest, SimResult};
+pub use result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
 pub use runner::{Cell, Runner, SimCache};

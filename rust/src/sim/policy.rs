@@ -16,8 +16,16 @@
 //!   (Table IV / Fig 3 / Fig 4);
 //! * [`HedgedPolicy`] — SafeTail-style redundant dispatch: route home,
 //!   and when the predicted latency breaches τ, launch a duplicate on the
-//!   best alternative pool; the first completion wins. Scaling stays
-//!   reactive, so the comparison isolates redundancy vs prediction.
+//!   best alternative pool; the first completion wins. Duplicates draw on
+//!   a sliding extra-work budget (`tail.hedge_budget`), so hedging
+//!   degrades gracefully under sustained overload instead of doubling it.
+//!   Scaling stays reactive, so the comparison isolates redundancy vs
+//!   prediction.
+//! * [`DeadlineShedPolicy`] — deadline-aware admission control
+//!   (FogROS2-PLR-style, arXiv 2410.05562): a request whose predicted
+//!   completion (queue backlog + affine power-law service estimate)
+//!   already exceeds its lane's hard deadline is refused at the front
+//!   door — robotics safety-stop semantics — instead of queued.
 
 use crate::autoscaler::{Autoscaler, PmHpa, ReactiveBaseline};
 use crate::cluster::{DeploymentKey, MetricRegistry, DESIRED_REPLICAS};
@@ -28,7 +36,8 @@ use crate::telemetry::SlidingRate;
 use crate::{ModelId, SimTime};
 
 /// Where one admitted request executes. `hedge` is an optional redundant
-/// copy (first completion wins; the loser only occupies its pod).
+/// copy (first completion wins; the loser only occupies its pod until the
+/// engine's `HedgeCancel` kill signal frees it, if cancellation is on).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Dispatch {
     pub target: DeploymentKey,
@@ -41,6 +50,47 @@ impl Dispatch {
         Dispatch {
             target,
             hedge: None,
+        }
+    }
+}
+
+/// Why a request was refused at admission (recorded in the result's
+/// `ShedRecord` — shed requests leave the system with their drop reason).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Predicted completion exceeds the lane's hard deadline.
+    DeadlineBreach,
+    /// Same breach while the home pool is saturated (ρ ≥ 1): the backlog
+    /// is diverging, not merely long.
+    Unstable,
+}
+
+impl ShedReason {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShedReason::DeadlineBreach => "deadline-breach",
+            ShedReason::Unstable => "unstable",
+        }
+    }
+}
+
+/// Admission decision: run the request somewhere (possibly duplicated),
+/// or refuse it outright — the deadline-aware safety stop.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Verdict {
+    /// Execute the request per the dispatch.
+    Run(Dispatch),
+    /// Drop the request at admission; `predicted` is the completion
+    /// estimate that triggered the refusal [s].
+    Shed { reason: ShedReason, predicted: f64 },
+}
+
+impl Verdict {
+    /// The dispatch, or `None` when the request was shed.
+    pub fn dispatch(self) -> Option<Dispatch> {
+        match self {
+            Verdict::Run(d) => Some(d),
+            Verdict::Shed { .. } => None,
         }
     }
 }
@@ -81,16 +131,17 @@ pub trait ControlPolicy {
         true
     }
 
-    /// Admission + routing for one arrival of `model` at `now`. The
-    /// policy may publish metrics (e.g. desired-replica updates) as a
-    /// side effect — that is the LA-IMR router's authority channel.
+    /// Admission + routing for one arrival of `model` at `now`: run it
+    /// (with an optional hedged duplicate) or shed it. The policy may
+    /// publish metrics (e.g. desired-replica updates) as a side effect —
+    /// that is the LA-IMR router's authority channel.
     fn admit(
         &mut self,
         model: ModelId,
         now: SimTime,
         state: &ControlState,
         metrics: &mut MetricRegistry,
-    ) -> Dispatch;
+    ) -> Verdict;
 
     /// Per-model arrival-rate signal handed to the autoscaler on each
     /// control tick. Predictive policies export their EWMA estimate;
@@ -110,16 +161,21 @@ pub enum Policy {
     Baseline,
     /// Fixed replica layout, home routing only (Table IV / Fig 3 / Fig 4).
     Static,
-    /// SafeTail-style hedged/redundant dispatch + reactive scaling.
+    /// SafeTail-style hedged/redundant dispatch (budgeted, cancellable) +
+    /// reactive scaling.
     Hedged,
+    /// Deadline-aware admission control: shed requests predicted to miss
+    /// their lane's hard deadline; reactive scaling otherwise.
+    DeadlineShed,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 4] = [
+    pub const ALL: [Policy; 5] = [
         Policy::LaImr,
         Policy::Baseline,
         Policy::Static,
         Policy::Hedged,
+        Policy::DeadlineShed,
     ];
 
     pub fn name(self) -> &'static str {
@@ -128,6 +184,7 @@ impl Policy {
             Policy::Baseline => "baseline",
             Policy::Static => "static",
             Policy::Hedged => "hedged",
+            Policy::DeadlineShed => "deadline-shed",
         }
     }
 
@@ -137,6 +194,7 @@ impl Policy {
             "baseline" => Some(Policy::Baseline),
             "static" => Some(Policy::Static),
             "hedged" => Some(Policy::Hedged),
+            "deadline-shed" => Some(Policy::DeadlineShed),
             _ => None,
         }
     }
@@ -148,6 +206,7 @@ impl Policy {
             Policy::Baseline => Box::new(BaselinePolicy::new(cfg)),
             Policy::Static => Box::new(StaticPolicy::new(cfg)),
             Policy::Hedged => Box::new(HedgedPolicy::new(cfg)),
+            Policy::DeadlineShed => Box::new(DeadlineShedPolicy::new(cfg)),
         }
     }
 }
@@ -199,7 +258,7 @@ impl ControlPolicy for LaImrPolicy {
         now: SimTime,
         state: &ControlState,
         metrics: &mut MetricRegistry,
-    ) -> Dispatch {
+    ) -> Verdict {
         let decision = self.router.route(model, now, state);
         // Publish desired-replica updates (router authority: only ever
         // raises the already-published target, but honours scale-ins).
@@ -213,7 +272,7 @@ impl ControlPolicy for LaImrPolicy {
             };
             metrics.set(&name, v, now);
         }
-        Dispatch::to(decision.target)
+        Verdict::Run(Dispatch::to(decision.target))
     }
 
     fn lambda_signal(&self, n_models: usize) -> Vec<f64> {
@@ -270,8 +329,8 @@ impl ControlPolicy for BaselinePolicy {
         _now: SimTime,
         _state: &ControlState,
         _metrics: &mut MetricRegistry,
-    ) -> Dispatch {
-        Dispatch::to(self.homes[model])
+    ) -> Verdict {
+        Verdict::Run(Dispatch::to(self.homes[model]))
     }
 }
 
@@ -326,8 +385,8 @@ impl ControlPolicy for StaticPolicy {
         _now: SimTime,
         _state: &ControlState,
         _metrics: &mut MetricRegistry,
-    ) -> Dispatch {
-        Dispatch::to(self.homes[model])
+    ) -> Verdict {
+        Verdict::Run(Dispatch::to(self.homes[model]))
     }
 }
 
@@ -337,9 +396,13 @@ impl ControlPolicy for StaticPolicy {
 /// at home, but when the closed-form prediction says the home pool will
 /// breach τ (or home has no ready pod), a duplicate is dispatched to the
 /// alternative pool with the smallest predicted latency. The first copy
-/// to finish defines the request's latency; the loser merely burns its
-/// pod until done (no cross-server cancellation, as in hedged-request
-/// systems without kill signals). Scaling is the same reactive loop the
+/// to finish defines the request's latency; whether the loser burns its
+/// pod to completion or is killed immediately is the engine's
+/// `tail.hedge_cancel` knob. Duplicates draw on a sliding extra-work
+/// budget (`tail.hedge_budget` over `tail.budget_window`): once the
+/// fraction of hedged requests in the window reaches the budget, further
+/// breaches run un-duplicated — graceful degradation under sustained
+/// overload instead of doubling it. Scaling is the same reactive loop the
 /// baseline uses, so Table VI isolates redundancy vs prediction.
 pub struct HedgedPolicy {
     homes: Vec<DeploymentKey>,
@@ -350,6 +413,12 @@ pub struct HedgedPolicy {
     /// Per-model sliding arrival rate (same window as the LA-IMR router).
     rates: Vec<SlidingRate>,
     n_instances: usize,
+    /// Max duplicate fraction over the budget window (1.0 ≈ unbudgeted).
+    budget: f64,
+    /// All admissions in the budget window (the budget's denominator).
+    admits: SlidingRate,
+    /// Hedged admissions in the budget window (the numerator).
+    hedges: SlidingRate,
 }
 
 impl HedgedPolicy {
@@ -369,11 +438,26 @@ impl HedgedPolicy {
                 .map(|_| SlidingRate::new(cfg.slo.rate_window))
                 .collect(),
             n_instances,
+            budget: cfg.tail.hedge_budget,
+            admits: SlidingRate::new(cfg.tail.budget_window),
+            hedges: SlidingRate::new(cfg.tail.budget_window),
         }
     }
 
     fn model_at(&self, model: ModelId, instance: usize) -> &LatencyModel {
         &self.grid[model * self.n_instances + instance]
+    }
+
+    /// Whether one more duplicate fits the sliding extra-work budget:
+    /// the window's duplicate fraction *including this hedge* must stay
+    /// within the budget, so the bound is enforced exactly. The current
+    /// request is already counted in `admits`, and every recorded hedge
+    /// shares its admission's timestamp (they expire together), so
+    /// hedges ≤ admits − 1 here — at budget 1.0 this is always true (the
+    /// unbudgeted SafeTail behaviour), and at 0.0 never.
+    fn within_budget(&mut self, now: SimTime) -> bool {
+        self.hedges.rate(now); // evict stale entries before counting
+        (self.hedges.len() + 1) as f64 <= self.budget * self.admits.len() as f64
     }
 }
 
@@ -406,8 +490,9 @@ impl ControlPolicy for HedgedPolicy {
         now: SimTime,
         state: &ControlState,
         _metrics: &mut MetricRegistry,
-    ) -> Dispatch {
+    ) -> Verdict {
         let home = self.homes[model];
+        self.admits.on_arrival(now);
         let lambda = self.rates[model].on_arrival(now);
         let tau = self.taus[model];
         let hview = state.view(home);
@@ -416,7 +501,7 @@ impl ControlPolicy for HedgedPolicy {
             .g_lambda(lambda, hview.active.max(1));
 
         let mut hedge = None;
-        if g_home > tau || hview.ready == 0 {
+        if (g_home > tau || hview.ready == 0) && self.within_budget(now) {
             // Duplicate onto the warm alternative with minimal predicted
             // g; an unstable (infinite-g) pool ranks last but still beats
             // not hedging at all when everything is saturated.
@@ -437,8 +522,99 @@ impl ControlPolicy for HedgedPolicy {
                 }
             }
             hedge = best.map(|(_, key)| key);
+            if hedge.is_some() {
+                self.hedges.on_arrival(now);
+            }
         }
-        Dispatch { target: home, hedge }
+        Verdict::Run(Dispatch { target: home, hedge })
+    }
+}
+
+// ------------------------------------------------------- deadline-shed
+
+/// Deadline-aware admission control: the deadline, not the mean, is the
+/// contract (FogROS2-PLR, arXiv 2410.05562). Per arrival, predicted
+/// completion = FIFO backlog drain (queue_depth · ŝ / ready) + the
+/// affine power-law per-request service estimate ŝ (Eq. 8 at the offered
+/// per-replica rate) + RTT. If that already exceeds the lane's hard
+/// deadline d_q·τ_m, the request is refused at the front door — the
+/// robot falls back to its safety stop instead of acting on a stale
+/// result. Everything admitted is served at home under the same reactive
+/// scaling as the baseline, so the comparison isolates shedding.
+pub struct DeadlineShedPolicy {
+    homes: Vec<DeploymentKey>,
+    /// Home-instance service law per model (affine estimate inputs).
+    models: Vec<LatencyModel>,
+    /// Hard completion deadline per model [s] (d_q · τ_m).
+    deadlines: Vec<f64>,
+    /// Per-model sliding arrival rate (same window as the LA-IMR router).
+    rates: Vec<SlidingRate>,
+}
+
+impl DeadlineShedPolicy {
+    pub fn new(cfg: &Config) -> Self {
+        let homes = home_map(cfg);
+        DeadlineShedPolicy {
+            models: (0..cfg.models.len())
+                .map(|m| LatencyModel::from_config(cfg, m, homes[m].instance))
+                .collect(),
+            deadlines: (0..cfg.models.len()).map(|m| cfg.deadline(m)).collect(),
+            rates: (0..cfg.models.len())
+                .map(|_| SlidingRate::new(cfg.slo.rate_window))
+                .collect(),
+            homes,
+        }
+    }
+}
+
+impl ControlPolicy for DeadlineShedPolicy {
+    fn name(&self) -> &'static str {
+        "deadline-shed"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            1
+        }
+    }
+
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        Some(Box::new(ReactiveBaseline::new(cfg, homes)))
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        state: &ControlState,
+        _metrics: &mut MetricRegistry,
+    ) -> Verdict {
+        let home = self.homes[model];
+        let lambda = self.rates[model].on_arrival(now);
+        let view = state.view(home);
+        let m = &self.models[model];
+        // Affine power-law per-request service estimate at the offered
+        // per-replica rate (conservative: offered, not admitted, load).
+        let svc = m.processing_affine(lambda / view.active.max(1) as f64);
+        // FIFO backlog ahead of this request, drained by the ready pods.
+        let wait = view.queue_depth as f64 * svc / view.ready.max(1) as f64;
+        let predicted = wait + svc + m.rtt;
+        if predicted > self.deadlines[model] {
+            let reason = if view.rho >= 1.0 {
+                ShedReason::Unstable
+            } else {
+                ShedReason::DeadlineBreach
+            };
+            return Verdict::Shed { reason, predicted };
+        }
+        Verdict::Run(Dispatch::to(home))
     }
 }
 
@@ -490,7 +666,7 @@ mod tests {
         assert!(p.autoscaler(&cfg, &home_map(&cfg)).is_none());
         let state = warm_state(&cfg, 2, 0.5);
         let mut metrics = MetricRegistry::new();
-        let d = p.admit(1, 0.0, &state, &mut metrics);
+        let d = p.admit(1, 0.0, &state, &mut metrics).dispatch().unwrap();
         assert_eq!(d.target, home_map(&cfg)[1]);
         assert_eq!(d.hedge, None);
     }
@@ -502,7 +678,7 @@ mod tests {
         let state = warm_state(&cfg, 4, 0.2);
         let mut metrics = MetricRegistry::new();
         // One isolated request: λ̂ tiny, prediction well under τ.
-        let d = p.admit(1, 0.0, &state, &mut metrics);
+        let d = p.admit(1, 0.0, &state, &mut metrics).dispatch().unwrap();
         assert_eq!(d.target, home_map(&cfg)[1]);
         assert_eq!(d.hedge, None);
     }
@@ -518,10 +694,87 @@ mod tests {
         for k in 0..12 {
             last = Some(p.admit(1, k as f64 * 0.05, &state, &mut metrics));
         }
-        let last = last.unwrap();
+        let last = last.unwrap().dispatch().unwrap();
         let hedge = last.hedge.expect("burst must hedge");
         assert_ne!(hedge.instance, last.target.instance);
         assert_eq!(hedge.model, last.target.model);
+    }
+
+    #[test]
+    fn hedged_zero_budget_never_duplicates() {
+        let mut cfg = Config::default();
+        cfg.tail.hedge_budget = 0.0;
+        let mut p = HedgedPolicy::new(&cfg);
+        let state = warm_state(&cfg, 1, 0.9);
+        let mut metrics = MetricRegistry::new();
+        for k in 0..30 {
+            let d = p
+                .admit(1, k as f64 * 0.05, &state, &mut metrics)
+                .dispatch()
+                .unwrap();
+            assert_eq!(d.hedge, None, "budget 0 must suppress every hedge");
+        }
+    }
+
+    #[test]
+    fn hedged_budget_caps_duplicate_fraction() {
+        let mut cfg = Config::default();
+        cfg.tail.hedge_budget = 0.25;
+        cfg.tail.budget_window = 100.0; // one window covers the whole run
+        let mut p = HedgedPolicy::new(&cfg);
+        let state = warm_state(&cfg, 1, 0.9);
+        let mut metrics = MetricRegistry::new();
+        let n = 200;
+        let mut hedged = 0;
+        for k in 0..n {
+            let d = p
+                .admit(1, k as f64 * 0.05, &state, &mut metrics)
+                .dispatch()
+                .unwrap();
+            if d.hedge.is_some() {
+                hedged += 1;
+            }
+        }
+        assert!(hedged > 0, "sustained breach must hedge at all");
+        assert!(
+            hedged as f64 <= 0.25 * n as f64 + 1.0,
+            "budget breached: {hedged}/{n}"
+        );
+    }
+
+    #[test]
+    fn deadline_shed_admits_idle_refuses_backlogged() {
+        let cfg = Config::default();
+        let mut p = DeadlineShedPolicy::new(&cfg);
+        let mut metrics = MetricRegistry::new();
+        // Idle pool: well under the deadline → run at home.
+        let idle = warm_state(&cfg, 2, 0.2);
+        match p.admit(1, 0.0, &idle, &mut metrics) {
+            Verdict::Run(d) => {
+                assert_eq!(d.target, home_map(&cfg)[1]);
+                assert_eq!(d.hedge, None);
+            }
+            v => panic!("idle admission shed: {v:?}"),
+        }
+        // Deep backlog on one replica: predicted completion hopeless.
+        let mut piled = warm_state(&cfg, 1, 1.2);
+        piled.update(
+            home_map(&cfg)[1],
+            ReplicaView {
+                active: 1,
+                ready: 1,
+                desired: 1,
+                rho: 1.2,
+                queue_depth: 50,
+            },
+        );
+        match p.admit(1, 1.0, &piled, &mut metrics) {
+            Verdict::Shed { reason, predicted } => {
+                assert_eq!(reason, ShedReason::Unstable);
+                assert!(predicted > cfg.deadline(1), "predicted={predicted}");
+            }
+            v => panic!("hopeless admission ran: {v:?}"),
+        }
     }
 
     #[test]
@@ -540,7 +793,9 @@ mod tests {
             let away_n = built.initial_replicas(away, home, &scenario);
             match p {
                 Policy::LaImr | Policy::Hedged => assert_eq!(away_n, 2, "{:?}", p),
-                Policy::Baseline | Policy::Static => assert_eq!(away_n, 1, "{:?}", p),
+                Policy::Baseline | Policy::Static | Policy::DeadlineShed => {
+                    assert_eq!(away_n, 1, "{:?}", p)
+                }
             }
         }
     }

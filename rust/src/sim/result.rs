@@ -9,6 +9,7 @@
 //! run returns it; mutate it only before the first cached read.
 
 use crate::config::QualityClass;
+use crate::sim::policy::ShedReason;
 use crate::telemetry::{box_stats_sorted, BoxStats, Summary};
 use crate::SimTime;
 use std::cell::OnceCell;
@@ -27,6 +28,65 @@ pub struct CompletedRequest {
 impl CompletedRequest {
     pub fn latency(&self) -> f64 {
         self.finished - self.arrived
+    }
+}
+
+/// One request refused at admission — it left the system with its drop
+/// reason recorded (robotics safety-stop semantics).
+#[derive(Debug, Clone, Copy)]
+pub struct ShedRecord {
+    pub id: u64,
+    pub at: SimTime,
+    pub quality: QualityClass,
+    pub reason: ShedReason,
+    /// Predicted completion that triggered the drop [s].
+    pub predicted: f64,
+}
+
+/// Tail-control ledger: every *copy* of a request the engine ever
+/// enqueued (primary, hedged duplicate, or crash re-queue) ends in
+/// exactly one terminal bucket, which is the accounting law the
+/// engine-invariant tests assert (`copies_balanced`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TailCounters {
+    /// Copies pushed into any pool queue (primary + hedge + re-queues).
+    pub copies_enqueued: u64,
+    /// Hedged duplicates launched (the extra-work numerator).
+    pub hedges_launched: u64,
+    /// Requests refused at admission (including during warm-up).
+    pub shed: u64,
+    /// Copies whose completion was recorded (first completion wins;
+    /// includes warm-up completions that the `completed` vec excludes).
+    pub wins: u64,
+    /// Losing copies that ran to completion (cancellation off or tie).
+    pub losers_finished: u64,
+    /// Losing copies killed in service by `HedgeCancel` (pod freed).
+    pub cancelled: u64,
+    /// Queued copies dropped at dispatch because the request already won.
+    pub stale_dropped: u64,
+    /// Dispatched copies invalidated by a pod crash (re-queued if the
+    /// request was still outstanding).
+    pub crash_tombstoned: u64,
+    /// Copies still queued or in service when the horizon closed.
+    pub residual_copies: u64,
+    /// Pod-seconds spent serving any copy.
+    pub busy_time: f64,
+    /// Pod-seconds spent on copies that did not win (losers, cancelled
+    /// spans, crash-lost spans) — what cancellation is meant to cut.
+    pub wasted_time: f64,
+}
+
+impl TailCounters {
+    /// The copy-conservation law: every enqueued copy is in exactly one
+    /// terminal bucket.
+    pub fn copies_balanced(&self) -> bool {
+        self.copies_enqueued
+            == self.wins
+                + self.losers_finished
+                + self.cancelled
+                + self.stale_dropped
+                + self.crash_tombstoned
+                + self.residual_copies
     }
 }
 
@@ -51,6 +111,10 @@ pub struct SimResult {
     pub generated: usize,
     /// Requests still in queues / in flight at the horizon.
     pub unfinished: usize,
+    /// The subset of `unfinished` that arrived after warm-up — the
+    /// stragglers that belong to the same population as `completed` and
+    /// `shed` (the goodput denominator).
+    pub unfinished_post_warmup: usize,
     /// Scale-out actuations observed.
     pub scale_outs: u64,
     /// Scale-in actuations observed.
@@ -64,6 +128,10 @@ pub struct SimResult {
     /// Events drained from the DES queue (throughput accounting for the
     /// bench harness: events / wall-second).
     pub events: u64,
+    /// Post-warm-up shed records (drop reason + triggering prediction).
+    pub shed: Vec<ShedRecord>,
+    /// Tail-control ledger (sheds, duplicates, cancellations, busy time).
+    pub tail: TailCounters,
     pub(crate) cache: StatsCache,
 }
 
@@ -116,17 +184,54 @@ impl SimResult {
             / self.completed.len() as f64
     }
 
-    /// Fraction of generated requests that completed in time.
+    /// Fraction of generated requests that completed (shed requests left
+    /// the system on purpose; they are not completions).
     pub fn completion_rate(&self) -> f64 {
         if self.generated == 0 {
             return 1.0;
         }
-        1.0 - self.unfinished as f64 / self.generated as f64
+        1.0 - (self.unfinished as f64 + self.tail.shed as f64) / self.generated as f64
     }
 
     /// Summary restricted to one quality lane (cached partition).
     pub fn summary_for(&self, q: QualityClass) -> Summary {
         Summary::from_sorted(&self.lanes()[q.priority()])
+    }
+
+    /// Share of generated requests refused at admission.
+    pub fn shed_share(&self) -> f64 {
+        if self.generated == 0 {
+            return 0.0;
+        }
+        self.tail.shed as f64 / self.generated as f64
+    }
+
+    /// Hedged duplicates launched per generated request — the extra-work
+    /// axis of the tail-vs-cost Pareto view.
+    pub fn extra_work_share(&self) -> f64 {
+        if self.generated == 0 {
+            return 0.0;
+        }
+        self.tail.hedges_launched as f64 / self.generated as f64
+    }
+
+    /// Goodput against per-lane hard deadlines: completions within their
+    /// lane's deadline over every post-warm-up outcome (completions +
+    /// sheds + post-warm-up stragglers still unfinished at the horizon —
+    /// one consistent population). Shed and late requests both count
+    /// against it — refusing work is only "good" if the saved capacity
+    /// lands the rest inside the contract.
+    pub fn goodput(&self, deadline_by_lane: [f64; 3]) -> f64 {
+        let good = self
+            .completed
+            .iter()
+            .filter(|c| c.latency() <= deadline_by_lane[c.quality.priority()])
+            .count();
+        let denom = self.completed.len() + self.shed.len() + self.unfinished_post_warmup;
+        if denom == 0 {
+            return 1.0;
+        }
+        good as f64 / denom as f64
     }
 }
 
@@ -151,12 +256,15 @@ mod tests {
                 .collect(),
             generated: latencies.len() + 2,
             unfinished: 2,
+            unfinished_post_warmup: 2,
             scale_outs: 1,
             scale_ins: 0,
             peak_replicas: 3,
             mean_replicas: 2.0,
             crashes: 0,
             events: 0,
+            shed: Vec::new(),
+            tail: TailCounters::default(),
             cache: StatsCache::default(),
         }
     }
@@ -194,6 +302,46 @@ mod tests {
         let cached_box = r.box_stats();
         let fresh_box = crate::telemetry::box_stats(&r.latencies());
         assert_eq!(cached_box, fresh_box);
+    }
+
+    #[test]
+    fn shed_and_goodput_views() {
+        let mut r = mk(&[1.0, 2.0, 9.0]);
+        r.tail.shed = 1;
+        r.shed.push(ShedRecord {
+            id: 99,
+            at: 3.0,
+            quality: QualityClass::Balanced,
+            reason: ShedReason::DeadlineBreach,
+            predicted: 12.0,
+        });
+        // generated = 5 here (3 completions + 2 unfinished from mk).
+        assert!((r.shed_share() - 1.0 / 5.0).abs() < 1e-12);
+        assert!((r.completion_rate() - (1.0 - 3.0 / 5.0)).abs() < 1e-12);
+        // Deadline 5 s on every lane: 2 of (3 completed + 1 shed +
+        // 2 unfinished) make the contract.
+        let g = r.goodput([5.0; 3]);
+        assert!((g - 2.0 / 6.0).abs() < 1e-12, "goodput={g}");
+        r.tail.hedges_launched = 2;
+        assert!((r.extra_work_share() - 2.0 / 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_ledger_balances() {
+        let t = TailCounters {
+            copies_enqueued: 10,
+            wins: 5,
+            losers_finished: 1,
+            cancelled: 2,
+            stale_dropped: 1,
+            crash_tombstoned: 0,
+            residual_copies: 1,
+            ..Default::default()
+        };
+        assert!(t.copies_balanced());
+        let mut bad = t;
+        bad.cancelled += 1;
+        assert!(!bad.copies_balanced());
     }
 
     #[test]

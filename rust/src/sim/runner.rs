@@ -69,6 +69,7 @@ impl Cell {
             Policy::Baseline => 1,
             Policy::Static => 2,
             Policy::Hedged => 3,
+            Policy::DeadlineShed => 4,
         });
         h.write_u8(match self.arch {
             Architecture::Microservice => 0,

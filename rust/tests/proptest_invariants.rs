@@ -249,8 +249,9 @@ fn prop_latency_model_sane_over_parameter_space() {
 
 #[test]
 fn prop_simulation_conserves_requests() {
-    // completed + unfinished == generated for arbitrary small scenarios,
-    // under every policy.
+    // completed + shed + unfinished == generated for arbitrary small
+    // scenarios, under every policy (shed is only ever non-zero for the
+    // deadline-shed policy), and the copy ledger balances.
     let cfg = Config::default();
     for_all(0x51AB, 12, |rng, case| {
         let lambda = rng.range(0.5, 5.0);
@@ -259,14 +260,21 @@ fn prop_simulation_conserves_requests() {
             .with_duration(60.0, 0.0)
             .with_replicas(1 + rng.below(4) as u32);
         let r = Simulation::new(&cfg, &scenario, policy, Architecture::Microservice).run();
-        // Completions recorded post-warmup (warmup 0 here) + still queued.
+        // Completions recorded post-warmup (warmup 0 here) + refusals +
+        // still queued.
         assert_eq!(
-            r.completed.len() + r.unfinished,
+            r.completed.len() + r.tail.shed as usize + r.unfinished,
             r.generated,
-            "case {case}: requests leaked ({} + {} != {})",
+            "case {case}: requests leaked ({} + {} + {} != {})",
             r.completed.len(),
+            r.tail.shed,
             r.unfinished,
             r.generated
+        );
+        assert!(
+            r.tail.copies_balanced(),
+            "case {case}: copy ledger out of balance: {:?}",
+            r.tail
         );
         // Latencies are physical.
         assert!(r.completed.iter().all(|c| c.latency() > 0.0));

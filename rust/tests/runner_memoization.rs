@@ -30,6 +30,10 @@ fn assert_bit_identical(a: &la_imr::sim::SimResult, b: &la_imr::sim::SimResult, 
     assert_eq!(a.latencies(), b.latencies(), "{ctx}: latency series");
     assert_eq!(a.generated, b.generated, "{ctx}: generated");
     assert_eq!(a.unfinished, b.unfinished, "{ctx}: unfinished");
+    assert_eq!(
+        a.unfinished_post_warmup, b.unfinished_post_warmup,
+        "{ctx}: unfinished_post_warmup"
+    );
     assert_eq!(a.scale_outs, b.scale_outs, "{ctx}: scale_outs");
     assert_eq!(a.scale_ins, b.scale_ins, "{ctx}: scale_ins");
     assert_eq!(a.peak_replicas, b.peak_replicas, "{ctx}: peak_replicas");
@@ -38,6 +42,8 @@ fn assert_bit_identical(a: &la_imr::sim::SimResult, b: &la_imr::sim::SimResult, 
     assert_eq!(a.events, b.events, "{ctx}: events");
     assert_eq!(a.scenario_name, b.scenario_name, "{ctx}: scenario");
     assert_eq!(a.policy_name, b.policy_name, "{ctx}: policy");
+    assert_eq!(a.tail, b.tail, "{ctx}: tail-control ledger");
+    assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed records");
 }
 
 #[test]
@@ -94,6 +100,53 @@ fn distinct_seeds_policies_archs_never_collide() {
         r[0].latencies(),
         r[1].latencies(),
         "different seeds returned the same (cached?) series"
+    );
+}
+
+#[test]
+fn tail_knobs_change_cache_keys() {
+    // ISSUE 3 satellite: the memo key must cover the tail-control knobs,
+    // so budget/deadline/cancellation changes can never silently collide
+    // `SimCache` entries. (`Config::hash_content` destructures
+    // exhaustively, so *adding* a knob without hashing it is already a
+    // compile error — this pins the runtime behaviour.)
+    let cell = grid().remove(0);
+    let base = cell.cache_key(&cfg());
+
+    let mut budget = cfg();
+    budget.tail.hedge_budget = 0.5;
+    assert_ne!(base, cell.cache_key(&budget), "hedge_budget not keyed");
+
+    let mut deadline = cfg();
+    deadline.tail.deadline_x[1] = 2.0;
+    assert_ne!(base, cell.cache_key(&deadline), "deadline_x not keyed");
+
+    let mut window = cfg();
+    window.tail.budget_window = 10.0;
+    assert_ne!(base, cell.cache_key(&window), "budget_window not keyed");
+
+    let mut cancel = cfg();
+    cancel.tail.hedge_cancel = false;
+    assert_ne!(base, cell.cache_key(&cancel), "hedge_cancel not keyed");
+
+    // Equal knobs, equal key — and behaviourally: two sweeps through one
+    // cached runner with different budgets must not cross-pollinate.
+    assert_eq!(base, cell.cache_key(&cfg()));
+    let runner = Runner::serial();
+    let hedged = Cell::new(
+        ScenarioConfig::bursty(4.0, 5)
+            .with_duration(60.0, 0.0)
+            .with_replicas(1),
+        Policy::Hedged,
+    );
+    let unbudgeted = runner.run(&cfg(), &[hedged.clone()]);
+    let mut strict = cfg();
+    strict.tail.hedge_budget = 0.0;
+    let capped = runner.run(&strict, &[hedged]);
+    assert!(unbudgeted[0].tail.hedges_launched > 0, "burst never hedged");
+    assert_eq!(
+        capped[0].tail.hedges_launched, 0,
+        "budget=0 result served from the unbudgeted cache entry"
     );
 }
 
