@@ -5,7 +5,7 @@
 
 mod scenario;
 mod serde_json_impl;
-pub use scenario::{ArrivalKind, ScenarioConfig};
+pub use scenario::{parse_trace, ArrivalKind, FaultSpec, ScenarioConfig};
 
 /// Quality lanes of the multi-queue scheduler (§IV-A).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,6 +1,10 @@
 //! Scenario definitions: what workload to run, for how long, which seed —
 //! the knobs the benchmark harness sweeps to regenerate each paper
-//! table/figure.
+//! table/figure — plus the fault shapes a scenario injects
+//! (independent crashes, correlated rack failures, tier partitions,
+//! fail-slow pods).
+
+use super::Tier;
 
 /// Arrival-process families supported by the workload generator.
 #[derive(Debug, Clone, PartialEq)]
@@ -25,6 +29,103 @@ pub enum ArrivalKind {
     Periodic { rate: f64 },
     /// Step profile: (start_time, rate) breakpoints, Poisson within a step.
     Steps { steps: Vec<(f64, f64)> },
+    /// Diurnal profile: Poisson whose rate follows a sinusoidal envelope
+    /// λ(t) = base · (1 + amplitude·sin(2π·t/period + phase)), generated
+    /// exactly by thinning against the peak rate.
+    Diurnal {
+        /// Mean rate of the envelope [req/s].
+        base: f64,
+        /// Relative swing in [0, 1] (1 = rate touches zero at the trough).
+        amplitude: f64,
+        /// Envelope period [s] (a compressed "day").
+        period: f64,
+        /// Phase offset [rad].
+        phase: f64,
+    },
+    /// Markov-modulated Poisson process: regime-switching bursts. State s
+    /// emits Poisson(`rates[s]`) and dwells Exp(mean `dwell[s]`) seconds;
+    /// on expiry it jumps uniformly to one of the *other* states (plain
+    /// alternation for two states — the classic quiet/burst MMPP).
+    Mmpp {
+        /// Per-regime arrival rate [req/s].
+        rates: Vec<f64>,
+        /// Per-regime mean sojourn time [s].
+        dwell: Vec<f64>,
+    },
+    /// Trace replay: recorded arrival timestamps [s], replayed verbatim.
+    /// `scale` multiplies the rate (timestamps divide by it); with
+    /// `loop_around` the trace tiles over the duration with period = its
+    /// last timestamp. `path` is provenance only — the timestamps are
+    /// loaded once (at config parse) and carried inline, so replay is
+    /// deterministic and the memo key covers the actual trace content.
+    TraceReplay {
+        /// Source file, if the trace was loaded from one.
+        path: Option<String>,
+        /// Sorted, non-negative arrival timestamps [s].
+        times: Vec<f64>,
+        /// Rate multiplier (> 0); 1.0 replays the trace as recorded.
+        scale: f64,
+        /// Tile the trace until `duration` (period = last timestamp).
+        loop_around: bool,
+    },
+}
+
+/// One fault shape a scenario injects. Beyond independent pod crashes,
+/// these are the correlated failure modes FogROS2-PLR / SafeTail show
+/// break tail-control wins that were only proven under independence.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// Independent exponential pod crashes per pool (mean time between
+    /// failures) — the same renewal process as the legacy `pod_mtbf`.
+    PodCrashes { mtbf: f64 },
+    /// Correlated rack failure: at time `at`, one event downs a `frac`
+    /// slice of every pool on `tier` simultaneously.
+    RackFailure { tier: Tier, at: f64, frac: f64 },
+    /// Tier partition: during [start, start+duration) the cross-tier
+    /// path is severed — offload/hedge dispatches are coerced back to
+    /// the home pool, forcing local queueing.
+    TierPartition { start: f64, duration: f64 },
+    /// Fail-slow: at time `at`, one serving pod in every pool on `tier`
+    /// has its service times multiplied by `factor` (≥ 1) *without*
+    /// crashing, recovering after `duration` seconds (0 = never). The
+    /// nastiest tail shape: capacity quietly shrinks while the control
+    /// plane's utilisation estimate stays optimistic.
+    FailSlow {
+        tier: Tier,
+        at: f64,
+        factor: f64,
+        duration: f64,
+    },
+}
+
+/// Parse a trace file body: one arrival timestamp [s] per line; blank
+/// lines and `#` comments are skipped. Rejects non-numeric, negative,
+/// non-finite, or unsorted entries with an error naming the offending
+/// line (1-indexed).
+pub fn parse_trace(text: &str) -> anyhow::Result<Vec<f64>> {
+    let mut out = Vec::new();
+    let mut prev = 0.0f64;
+    for (k, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let n = k + 1;
+        let t: f64 = line
+            .parse()
+            .map_err(|_| anyhow::anyhow!("trace line {n}: not a number: '{line}'"))?;
+        anyhow::ensure!(
+            t.is_finite() && t >= 0.0,
+            "trace line {n}: negative or non-finite timestamp {t}"
+        );
+        anyhow::ensure!(
+            t >= prev,
+            "trace line {n}: timestamps not sorted ({t} after {prev})"
+        );
+        prev = t;
+        out.push(t);
+    }
+    Ok(out)
 }
 
 /// One simulation scenario.
@@ -47,6 +148,10 @@ pub struct ScenarioConfig {
     /// in-flight work (the requests are re-queued at the front door);
     /// the autoscaler must detect the capacity gap and re-provision.
     pub pod_mtbf: Option<f64>,
+    /// Additional fault shapes (correlated rack failures, tier
+    /// partitions, fail-slow pods, extra crash processes) — composed on
+    /// top of `pod_mtbf` by the engine.
+    pub faults: Vec<FaultSpec>,
 }
 
 impl Default for ScenarioConfig {
@@ -61,6 +166,7 @@ impl Default for ScenarioConfig {
             quality_mix: [0.0, 1.0, 0.0],
             initial_replicas: 1,
             pod_mtbf: None,
+            faults: Vec::new(),
         }
     }
 }
@@ -114,11 +220,83 @@ impl ScenarioConfig {
         self
     }
 
+    /// Diurnal scenario: sinusoidal rate envelope around `base` req/s
+    /// (amplitude 0.8, compressed 120 s "day") — the ROADMAP's
+    /// diurnal-profile arrival shape.
+    pub fn diurnal(base: f64, seed: u64) -> Self {
+        Self {
+            name: format!("diurnal-{base}"),
+            arrivals: ArrivalKind::Diurnal {
+                base,
+                amplitude: 0.8,
+                period: 120.0,
+                phase: 0.0,
+            },
+            ..Self::default()
+        }
+        .with_seed(seed)
+    }
+
+    /// Regime-switching MMPP scenario with time-weighted mean rate
+    /// `lambda`: a quiet regime at λ/4 (mean dwell 45 s) and a burst
+    /// regime at 3.25λ (dwell 15 s) — (0.25·45 + 3.25·15)/60 = 1.
+    pub fn mmpp_bursts(lambda: f64, seed: u64) -> Self {
+        Self {
+            name: format!("mmpp-{lambda}"),
+            arrivals: ArrivalKind::Mmpp {
+                rates: vec![0.25 * lambda, 3.25 * lambda],
+                dwell: vec![45.0, 15.0],
+            },
+            ..Self::default()
+        }
+        .with_seed(seed)
+    }
+
+    /// Trace-replay scenario over the given timestamps (scale 1, no
+    /// loop-around).
+    pub fn trace_replay(name: &str, times: Vec<f64>, seed: u64) -> Self {
+        Self {
+            name: name.into(),
+            arrivals: ArrivalKind::TraceReplay {
+                path: None,
+                times,
+                scale: 1.0,
+                loop_around: false,
+            },
+            ..Self::default()
+        }
+        .with_seed(seed)
+    }
+
     /// Enable pod-crash fault injection (mean time between crashes per
     /// pool, exponential).
     pub fn with_faults(mut self, mtbf: f64) -> Self {
         self.pod_mtbf = Some(mtbf);
         self
+    }
+
+    /// Append a fault shape (rack failure, partition, fail-slow, extra
+    /// crash process) to the scenario.
+    pub fn with_fault(mut self, fault: FaultSpec) -> Self {
+        self.faults.push(fault);
+        self
+    }
+
+    /// Effective exponential pod-crash MTBF, composing the legacy
+    /// `pod_mtbf` knob with every `PodCrashes` fault spec: independent
+    /// exponential crash processes superpose into one whose rate is the
+    /// sum of the rates, so the combined MTBF is 1 / Σ(1/mtbf_i).
+    pub fn crash_mtbf(&self) -> Option<f64> {
+        let mut mtbfs: Vec<f64> = self.pod_mtbf.into_iter().collect();
+        mtbfs.extend(self.faults.iter().filter_map(|f| match f {
+            FaultSpec::PodCrashes { mtbf } => Some(*mtbf),
+            _ => None,
+        }));
+        match mtbfs.as_slice() {
+            [] => None,
+            [one] => Some(*one),
+            many => Some(1.0 / many.iter().map(|m| 1.0 / m).sum::<f64>()),
+        }
     }
 
     /// Structural validation (used by the JSON path): positive spans and
@@ -201,6 +379,117 @@ impl ScenarioConfig {
                     );
                 }
             }
+            ArrivalKind::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                anyhow::ensure!(
+                    base.is_finite() && *base >= 0.0,
+                    "diurnal base rate must be >= 0 (got {base})"
+                );
+                anyhow::ensure!(
+                    amplitude.is_finite() && (0.0..=1.0).contains(amplitude),
+                    "diurnal amplitude must be in [0, 1] (got {amplitude})"
+                );
+                anyhow::ensure!(
+                    period.is_finite() && *period > 0.0,
+                    "diurnal period must be > 0 seconds (got {period})"
+                );
+                anyhow::ensure!(phase.is_finite(), "diurnal phase must be finite");
+            }
+            ArrivalKind::Mmpp { rates, dwell } => {
+                anyhow::ensure!(!rates.is_empty(), "mmpp needs at least one regime");
+                anyhow::ensure!(
+                    rates.len() == dwell.len(),
+                    "mmpp rates/dwell length mismatch ({} vs {})",
+                    rates.len(),
+                    dwell.len()
+                );
+                for (k, r) in rates.iter().enumerate() {
+                    anyhow::ensure!(
+                        r.is_finite() && *r >= 0.0,
+                        "mmpp rates[{k}] must be >= 0 (got {r})"
+                    );
+                }
+                for (k, d) in dwell.iter().enumerate() {
+                    anyhow::ensure!(
+                        d.is_finite() && *d > 0.0,
+                        "mmpp dwell[{k}] must be > 0 seconds (got {d})"
+                    );
+                }
+            }
+            ArrivalKind::TraceReplay { times, scale, .. } => {
+                anyhow::ensure!(
+                    scale.is_finite() && *scale > 0.0,
+                    "trace scale must be > 0 (got {scale})"
+                );
+                for (k, t) in times.iter().enumerate() {
+                    anyhow::ensure!(
+                        t.is_finite() && *t >= 0.0,
+                        "trace timestamps[{k}] negative or non-finite (got {t})"
+                    );
+                }
+                for (k, w) in times.windows(2).enumerate() {
+                    anyhow::ensure!(
+                        w[0] <= w[1],
+                        "trace timestamps not sorted at [{}] ({} after {})",
+                        k + 1,
+                        w[1],
+                        w[0]
+                    );
+                }
+            }
+        }
+        for (k, f) in self.faults.iter().enumerate() {
+            match f {
+                FaultSpec::PodCrashes { mtbf } => {
+                    anyhow::ensure!(
+                        mtbf.is_finite() && *mtbf > 0.0,
+                        "faults[{k}]: pod-crashes mtbf must be > 0 seconds (got {mtbf})"
+                    );
+                }
+                FaultSpec::RackFailure { at, frac, .. } => {
+                    anyhow::ensure!(
+                        at.is_finite() && *at >= 0.0,
+                        "faults[{k}]: rack-failure time must be >= 0 (got {at})"
+                    );
+                    anyhow::ensure!(
+                        frac.is_finite() && *frac > 0.0 && *frac <= 1.0,
+                        "faults[{k}]: rack-failure frac must be in (0, 1] (got {frac})"
+                    );
+                }
+                FaultSpec::TierPartition { start, duration } => {
+                    anyhow::ensure!(
+                        start.is_finite() && *start >= 0.0,
+                        "faults[{k}]: partition start must be >= 0 (got {start})"
+                    );
+                    anyhow::ensure!(
+                        duration.is_finite() && *duration > 0.0,
+                        "faults[{k}]: partition duration must be > 0 seconds (got {duration})"
+                    );
+                }
+                FaultSpec::FailSlow {
+                    at,
+                    factor,
+                    duration,
+                    ..
+                } => {
+                    anyhow::ensure!(
+                        at.is_finite() && *at >= 0.0,
+                        "faults[{k}]: fail-slow time must be >= 0 (got {at})"
+                    );
+                    anyhow::ensure!(
+                        factor.is_finite() && *factor >= 1.0,
+                        "faults[{k}]: fail-slow factor must be >= 1 (got {factor})"
+                    );
+                    anyhow::ensure!(
+                        duration.is_finite() && *duration >= 0.0,
+                        "faults[{k}]: fail-slow duration must be >= 0 (got {duration})"
+                    );
+                }
+            }
         }
         Ok(())
     }
@@ -235,6 +524,7 @@ impl ScenarioConfig {
             quality_mix,
             initial_replicas,
             pod_mtbf,
+            faults,
         } = self;
         h.write(name.as_bytes());
         h.write_u8(0xFF);
@@ -267,6 +557,49 @@ impl ScenarioConfig {
                     h.write_u64(r.to_bits());
                 }
             }
+            ArrivalKind::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                h.write_u8(4);
+                for x in [base, amplitude, period, phase] {
+                    h.write_u64(x.to_bits());
+                }
+            }
+            ArrivalKind::Mmpp { rates, dwell } => {
+                h.write_u8(5);
+                h.write_usize(rates.len());
+                for r in rates {
+                    h.write_u64(r.to_bits());
+                }
+                for d in dwell {
+                    h.write_u64(d.to_bits());
+                }
+            }
+            ArrivalKind::TraceReplay {
+                path,
+                times,
+                scale,
+                loop_around,
+            } => {
+                h.write_u8(6);
+                match path {
+                    Some(p) => {
+                        h.write_u8(1);
+                        h.write(p.as_bytes());
+                        h.write_u8(0xFF);
+                    }
+                    None => h.write_u8(0),
+                }
+                h.write_usize(times.len());
+                for t in times {
+                    h.write_u64(t.to_bits());
+                }
+                h.write_u64(scale.to_bits());
+                h.write_u8(*loop_around as u8);
+            }
         }
         h.write_u64(duration.to_bits());
         h.write_u64(warmup.to_bits());
@@ -281,6 +614,44 @@ impl ScenarioConfig {
                 h.write_u64(m.to_bits());
             }
             None => h.write_u8(0),
+        }
+        h.write_usize(faults.len());
+        for f in faults {
+            match f {
+                FaultSpec::PodCrashes { mtbf } => {
+                    h.write_u8(0);
+                    h.write_u64(mtbf.to_bits());
+                }
+                FaultSpec::RackFailure { tier, at, frac } => {
+                    h.write_u8(1);
+                    h.write_u8(match tier {
+                        Tier::Edge => 0,
+                        Tier::Cloud => 1,
+                    });
+                    h.write_u64(at.to_bits());
+                    h.write_u64(frac.to_bits());
+                }
+                FaultSpec::TierPartition { start, duration } => {
+                    h.write_u8(2);
+                    h.write_u64(start.to_bits());
+                    h.write_u64(duration.to_bits());
+                }
+                FaultSpec::FailSlow {
+                    tier,
+                    at,
+                    factor,
+                    duration,
+                } => {
+                    h.write_u8(3);
+                    h.write_u8(match tier {
+                        Tier::Edge => 0,
+                        Tier::Cloud => 1,
+                    });
+                    for x in [at, factor, duration] {
+                        h.write_u64(x.to_bits());
+                    }
+                }
+            }
         }
     }
 
@@ -308,6 +679,26 @@ impl ScenarioConfig {
                     total += r * (end - t).max(0.0);
                 }
                 total / self.duration
+            }
+            // The sinusoid averages out over whole periods; treat the
+            // partial-period remainder as noise.
+            ArrivalKind::Diurnal { base, .. } => *base,
+            ArrivalKind::Mmpp { rates, dwell } => {
+                // Uniform jumps to *other* states have a doubly-stochastic
+                // jump chain, so the stationary share of regime i is
+                // dwell[i] / Σ dwell — the time-weighted mean rate.
+                let total: f64 = dwell.iter().sum();
+                if total <= 0.0 {
+                    return 0.0;
+                }
+                rates.iter().zip(dwell).map(|(r, d)| r * d).sum::<f64>() / total
+            }
+            ArrivalKind::TraceReplay { times, scale, .. } => {
+                let span = times.last().copied().unwrap_or(0.0);
+                if span <= 0.0 {
+                    return 0.0;
+                }
+                times.len() as f64 * scale / span
             }
         }
     }
@@ -366,5 +757,127 @@ mod tests {
             ..ScenarioConfig::default()
         };
         assert!((s.mean_rate() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn new_shape_mean_rates() {
+        assert!((ScenarioConfig::diurnal(4.0, 1).mean_rate() - 4.0).abs() < 1e-9);
+        // mmpp_bursts is constructed so the stationary mean is λ exactly.
+        assert!((ScenarioConfig::mmpp_bursts(4.0, 1).mean_rate() - 4.0).abs() < 1e-9);
+        // 5 arrivals over a 2 s span at scale 1 → 2.5 req/s.
+        let t = ScenarioConfig::trace_replay("t", vec![0.0, 0.5, 1.0, 1.5, 2.0], 1);
+        let ArrivalKind::TraceReplay { ref times, .. } = t.arrivals else {
+            panic!("wrong kind")
+        };
+        assert_eq!(times.len(), 5);
+        assert!((t.mean_rate() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn new_shapes_validate() {
+        ScenarioConfig::diurnal(4.0, 1).validate().unwrap();
+        ScenarioConfig::mmpp_bursts(4.0, 1).validate().unwrap();
+        ScenarioConfig::trace_replay("t", vec![0.0, 1.0], 1)
+            .validate()
+            .unwrap();
+
+        let mut bad = ScenarioConfig::diurnal(4.0, 1);
+        bad.arrivals = ArrivalKind::Diurnal {
+            base: 4.0,
+            amplitude: 1.5,
+            period: 120.0,
+            phase: 0.0,
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("amplitude"));
+
+        let mut bad = ScenarioConfig::mmpp_bursts(4.0, 1);
+        bad.arrivals = ArrivalKind::Mmpp {
+            rates: vec![1.0, 2.0],
+            dwell: vec![10.0],
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("mismatch"));
+
+        let unsorted = ScenarioConfig::trace_replay("t", vec![1.0, 0.5], 1);
+        assert!(unsorted
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("sorted"));
+    }
+
+    #[test]
+    fn fault_specs_validate() {
+        let ok = ScenarioConfig::poisson(2.0, 1)
+            .with_fault(FaultSpec::RackFailure {
+                tier: Tier::Edge,
+                at: 30.0,
+                frac: 0.5,
+            })
+            .with_fault(FaultSpec::TierPartition {
+                start: 40.0,
+                duration: 20.0,
+            })
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 10.0,
+                factor: 4.0,
+                duration: 0.0,
+            })
+            .with_fault(FaultSpec::PodCrashes { mtbf: 50.0 });
+        ok.validate().unwrap();
+        assert_eq!(ok.crash_mtbf(), Some(50.0));
+
+        let bad = ScenarioConfig::poisson(2.0, 1).with_fault(FaultSpec::RackFailure {
+            tier: Tier::Edge,
+            at: 30.0,
+            frac: 0.0,
+        });
+        assert!(bad.validate().unwrap_err().to_string().contains("frac"));
+
+        let bad = ScenarioConfig::poisson(2.0, 1).with_fault(FaultSpec::FailSlow {
+            tier: Tier::Cloud,
+            at: 0.0,
+            factor: 0.5,
+            duration: 0.0,
+        });
+        assert!(bad.validate().unwrap_err().to_string().contains("factor"));
+    }
+
+    #[test]
+    fn crash_processes_compose_by_rate() {
+        // Two independent exponential processes superpose: the combined
+        // rate is the sum of rates (MTBF = 1 / Σ(1/mtbf)).
+        let s = ScenarioConfig::poisson(2.0, 1)
+            .with_faults(30.0)
+            .with_fault(FaultSpec::PodCrashes { mtbf: 99.0 });
+        let expect = 1.0 / (1.0 / 30.0 + 1.0 / 99.0);
+        assert!((s.crash_mtbf().unwrap() - expect).abs() < 1e-12);
+        assert_eq!(ScenarioConfig::poisson(2.0, 1).crash_mtbf(), None);
+        // A single source passes through exactly.
+        assert_eq!(
+            ScenarioConfig::poisson(2.0, 1).with_faults(30.0).crash_mtbf(),
+            Some(30.0)
+        );
+    }
+
+    #[test]
+    fn trace_parser_rejects_bad_lines() {
+        let ok = parse_trace("# header\n0.0\n1.5\n\n2.25\n").unwrap();
+        assert_eq!(ok, vec![0.0, 1.5, 2.25]);
+
+        let err = parse_trace("0.5\n-1.0\n").unwrap_err().to_string();
+        assert!(
+            err.contains("line 2") && err.contains("negative"),
+            "unclear error: {err}"
+        );
+
+        let err = parse_trace("1.0\n0.5\n").unwrap_err().to_string();
+        assert!(
+            err.contains("line 2") && err.contains("sorted"),
+            "unclear error: {err}"
+        );
+
+        let err = parse_trace("0.1\nnot-a-time\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "unclear error: {err}");
     }
 }

@@ -3,8 +3,8 @@
 //! rest keep their paper defaults.
 
 use super::{
-    ArrivalKind, ClusterPolicy, Config, InstanceSpec, ModelProfile, QualityClass, ScenarioConfig,
-    SloPolicy, TailPolicy, Tier,
+    parse_trace, ArrivalKind, ClusterPolicy, Config, FaultSpec, InstanceSpec, ModelProfile,
+    QualityClass, ScenarioConfig, SloPolicy, TailPolicy, Tier,
 };
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -224,6 +224,76 @@ impl ArrivalKind {
                 }
                 Ok(ArrivalKind::Steps { steps })
             }
+            "diurnal" => Ok(ArrivalKind::Diurnal {
+                base: req_num(v, "base")?,
+                amplitude: req_num(v, "amplitude")?,
+                period: req_num(v, "period")?,
+                phase: num(v, "phase", 0.0)?,
+            }),
+            "mmpp" => {
+                let floats = |key: &str| -> anyhow::Result<Vec<f64>> {
+                    let arr = v
+                        .get(key)
+                        .and_then(|x| x.as_arr())
+                        .ok_or_else(|| anyhow::anyhow!("arrivals.{key}: expected an array"))?;
+                    arr.iter()
+                        .enumerate()
+                        .map(|(k, x)| {
+                            x.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("arrivals.{key}[{k}]: not a number")
+                            })
+                        })
+                        .collect()
+                };
+                Ok(ArrivalKind::Mmpp {
+                    rates: floats("rates")?,
+                    dwell: floats("dwell")?,
+                })
+            }
+            "trace" => {
+                let path = v
+                    .get("path")
+                    .and_then(|x| x.as_str())
+                    .map(|s| s.to_string());
+                // Inline timestamps win; otherwise the file is loaded
+                // *once*, here, so replay never touches the filesystem.
+                let times = match v.get("times") {
+                    Some(arr) => arr
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("arrivals.times: expected an array"))?
+                        .iter()
+                        .enumerate()
+                        .map(|(k, x)| {
+                            x.as_f64().ok_or_else(|| {
+                                anyhow::anyhow!("arrivals.times[{k}]: not a number")
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<f64>>>()?,
+                    None => match &path {
+                        Some(p) => {
+                            let text = std::fs::read_to_string(p).map_err(|e| {
+                                anyhow::anyhow!("trace file '{p}': {e}")
+                            })?;
+                            parse_trace(&text)
+                                .map_err(|e| anyhow::anyhow!("trace file '{p}': {e}"))?
+                        }
+                        None => anyhow::bail!(
+                            "trace arrivals need either 'times' (inline) or 'path' (file)"
+                        ),
+                    },
+                };
+                Ok(ArrivalKind::TraceReplay {
+                    path,
+                    times,
+                    scale: num(v, "scale", 1.0)?,
+                    loop_around: match v.get("loop") {
+                        None => false,
+                        Some(x) => x
+                            .as_bool()
+                            .ok_or_else(|| anyhow::anyhow!("arrivals.loop: expected a bool"))?,
+                    },
+                })
+            }
             other => anyhow::bail!("unknown arrival kind '{other}'"),
         }
     }
@@ -264,6 +334,113 @@ impl ArrivalKind {
                             .collect(),
                     ),
                 );
+            }
+            ArrivalKind::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                o.insert("kind".into(), Value::Str("diurnal".into()));
+                o.insert("base".into(), Value::Num(*base));
+                o.insert("amplitude".into(), Value::Num(*amplitude));
+                o.insert("period".into(), Value::Num(*period));
+                o.insert("phase".into(), Value::Num(*phase));
+            }
+            ArrivalKind::Mmpp { rates, dwell } => {
+                o.insert("kind".into(), Value::Str("mmpp".into()));
+                o.insert(
+                    "rates".into(),
+                    Value::Arr(rates.iter().map(|&r| Value::Num(r)).collect()),
+                );
+                o.insert(
+                    "dwell".into(),
+                    Value::Arr(dwell.iter().map(|&d| Value::Num(d)).collect()),
+                );
+            }
+            ArrivalKind::TraceReplay {
+                path,
+                times,
+                scale,
+                loop_around,
+            } => {
+                o.insert("kind".into(), Value::Str("trace".into()));
+                if let Some(p) = path {
+                    o.insert("path".into(), Value::Str(p.clone()));
+                }
+                // Timestamps always serialise inline so the round trip
+                // never depends on the source file still existing.
+                o.insert(
+                    "times".into(),
+                    Value::Arr(times.iter().map(|&t| Value::Num(t)).collect()),
+                );
+                o.insert("scale".into(), Value::Num(*scale));
+                o.insert("loop".into(), Value::Bool(*loop_around));
+            }
+        }
+        Value::Obj(o)
+    }
+}
+
+impl FaultSpec {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let kind = req_str(v, "kind")?;
+        let tier_of = |v: &Value| -> anyhow::Result<Tier> {
+            let t = req_str(v, "tier")?;
+            Tier::from_name(&t).ok_or_else(|| anyhow::anyhow!("unknown tier '{t}'"))
+        };
+        match kind.as_str() {
+            "pod-crashes" => Ok(FaultSpec::PodCrashes {
+                mtbf: req_num(v, "mtbf")?,
+            }),
+            "rack-failure" => Ok(FaultSpec::RackFailure {
+                tier: tier_of(v)?,
+                at: req_num(v, "at")?,
+                frac: req_num(v, "frac")?,
+            }),
+            "partition" => Ok(FaultSpec::TierPartition {
+                start: req_num(v, "start")?,
+                duration: req_num(v, "duration")?,
+            }),
+            "fail-slow" => Ok(FaultSpec::FailSlow {
+                tier: tier_of(v)?,
+                at: req_num(v, "at")?,
+                factor: req_num(v, "factor")?,
+                duration: num(v, "duration", 0.0)?,
+            }),
+            other => anyhow::bail!("unknown fault kind '{other}'"),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        match self {
+            FaultSpec::PodCrashes { mtbf } => {
+                o.insert("kind".into(), Value::Str("pod-crashes".into()));
+                o.insert("mtbf".into(), Value::Num(*mtbf));
+            }
+            FaultSpec::RackFailure { tier, at, frac } => {
+                o.insert("kind".into(), Value::Str("rack-failure".into()));
+                o.insert("tier".into(), Value::Str(tier.name().into()));
+                o.insert("at".into(), Value::Num(*at));
+                o.insert("frac".into(), Value::Num(*frac));
+            }
+            FaultSpec::TierPartition { start, duration } => {
+                o.insert("kind".into(), Value::Str("partition".into()));
+                o.insert("start".into(), Value::Num(*start));
+                o.insert("duration".into(), Value::Num(*duration));
+            }
+            FaultSpec::FailSlow {
+                tier,
+                at,
+                factor,
+                duration,
+            } => {
+                o.insert("kind".into(), Value::Str("fail-slow".into()));
+                o.insert("tier".into(), Value::Str(tier.name().into()));
+                o.insert("at".into(), Value::Num(*at));
+                o.insert("factor".into(), Value::Num(*factor));
+                o.insert("duration".into(), Value::Num(*duration));
             }
         }
         Value::Obj(o)
@@ -335,6 +512,18 @@ impl ScenarioConfig {
                         .ok_or_else(|| anyhow::anyhow!("pod_mtbf: expected a number"))?,
                 ),
             },
+            faults: match v.get("faults") {
+                None => base.faults,
+                Some(arr) => arr
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("faults: expected an array"))?
+                    .iter()
+                    .enumerate()
+                    .map(|(k, f)| {
+                        FaultSpec::from_json(f).map_err(|e| anyhow::anyhow!("faults[{k}]: {e}"))
+                    })
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+            },
         };
         s.validate()?;
         Ok(s)
@@ -368,6 +557,12 @@ impl ScenarioConfig {
         );
         if let Some(m) = self.pod_mtbf {
             o.insert("pod_mtbf".into(), Value::Num(m));
+        }
+        if !self.faults.is_empty() {
+            o.insert(
+                "faults".into(),
+                Value::Arr(self.faults.iter().map(|f| f.to_json()).collect()),
+            );
         }
         json::to_string(&Value::Obj(o))
     }

@@ -28,12 +28,17 @@ COMMANDS:
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
   repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|
-              pareto|all>
+              pareto|scenarios|all>
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
                                                  (table6q: per-quality-lane P99;
                                                   pareto: tail vs extra work,
-                                                  hedge budget × deadline)
+                                                  hedge budget × deadline;
+                                                  scenarios: the workload-
+                                                  diversity catalog — diurnal/
+                                                  MMPP/trace arrivals × rack-
+                                                  failure/partition/fail-slow
+                                                  faults, all five policies)
 ";
 
 fn main() {
@@ -194,6 +199,7 @@ fn run() -> anyhow::Result<()> {
                     "table6" => println!("{}", report::table6(&cfg, &runner)),
                     "table6q" => println!("{}", report::table6_lanes(&cfg, &runner)),
                     "pareto" => println!("{}", report::pareto(&cfg, &runner)),
+                    "scenarios" => println!("{}", report::scenarios(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())
@@ -201,7 +207,7 @@ fn run() -> anyhow::Result<()> {
             if id == "all" {
                 for id in [
                     "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
-                    "table6", "table6q", "pareto",
+                    "table6", "table6q", "pareto", "scenarios",
                 ] {
                     print_one(id)?;
                     println!();

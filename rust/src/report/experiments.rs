@@ -5,7 +5,7 @@
 //! run (per-cell seeding; see `sim::runner`). Pass `--threads N` to the
 //! CLI (or set `LAIMR_THREADS`) to pin the worker count.
 
-use crate::config::{ArrivalKind, Config, QualityClass, ScenarioConfig};
+use crate::config::{ArrivalKind, Config, FaultSpec, QualityClass, ScenarioConfig, Tier};
 use crate::latency_model::{fit_anchored, paper_table4_samples, CalibrationSample};
 use crate::sim::{Architecture, Cell, Policy, Runner};
 use crate::telemetry::{box_stats, Summary};
@@ -113,6 +113,7 @@ pub fn table4_data(cfg: &Config, duration: f64, runner: &Runner) -> Vec<(u32, f6
                         quality_mix: [0.0, 1.0, 0.0],
                         initial_replicas: n,
                         pod_mtbf: None,
+                        faults: Vec::new(),
                     },
                     Policy::Static,
                 ));
@@ -748,6 +749,120 @@ pub fn pareto(cfg: &Config, runner: &Runner) -> String {
     )
 }
 
+// -------------------------------------------------------------- scenarios
+
+/// Offered load of the scenario catalog [req/s].
+const CATALOG_LAMBDA: f64 = 4.0;
+/// Per-cell duration of the catalog sweep [s].
+const CATALOG_DURATION: f64 = 180.0;
+
+/// Deterministic sawtooth trace for the catalog's replay entry: three
+/// 60 s ramp cycles, 240 arrivals each (~4 req/s mean), density rising
+/// toward each cycle's end — no file, no RNG, same stream every run.
+pub fn sawtooth_trace() -> Vec<f64> {
+    let mut out = Vec::with_capacity(720);
+    for cycle in 0..3 {
+        for k in 0..240 {
+            out.push(cycle as f64 * 60.0 + 60.0 * (k as f64 / 240.0).sqrt());
+        }
+    }
+    out
+}
+
+/// The named scenario catalog behind `repro scenarios` (ROADMAP "new
+/// arrival shapes" / "new fault shapes"): every arrival family at the
+/// same mean rate, then each fault shape riding on the bursty arrivals
+/// where tails actually bite.
+pub fn scenario_catalog(seed: u64) -> Vec<ScenarioConfig> {
+    let lam = CATALOG_LAMBDA;
+    let base = |s: ScenarioConfig| s.with_duration(CATALOG_DURATION, 20.0).with_replicas(2);
+    let named = |mut s: ScenarioConfig, name: &str| {
+        s.name = name.into();
+        s
+    };
+    vec![
+        base(ScenarioConfig::poisson(lam, seed)),
+        base(ScenarioConfig::bursty(lam, seed)),
+        base(ScenarioConfig::diurnal(lam, seed)),
+        base(ScenarioConfig::mmpp_bursts(lam, seed)),
+        base(ScenarioConfig::trace_replay(
+            "trace-sawtooth",
+            sawtooth_trace(),
+            seed,
+        )),
+        named(
+            base(ScenarioConfig::bursty(lam, seed))
+                .with_fault(FaultSpec::PodCrashes { mtbf: 40.0 }),
+            "bursty+crashes",
+        ),
+        named(
+            base(ScenarioConfig::bursty(lam, seed)).with_fault(FaultSpec::RackFailure {
+                tier: Tier::Edge,
+                at: 60.0,
+                frac: 0.5,
+            }),
+            "bursty+rack-failure",
+        ),
+        named(
+            base(ScenarioConfig::bursty(lam, seed)).with_fault(FaultSpec::TierPartition {
+                start: 60.0,
+                duration: 40.0,
+            }),
+            "bursty+partition",
+        ),
+        named(
+            base(ScenarioConfig::bursty(lam, seed)).with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 40.0,
+                factor: 4.0,
+                duration: 60.0,
+            }),
+            "bursty+fail-slow",
+        ),
+    ]
+}
+
+/// `repro scenarios`: the full workload-diversity catalog × all five
+/// policies — per-scenario P99, goodput against the default deadline
+/// contract, shed share, and fault telemetry in one table.
+pub fn scenarios(cfg: &Config, runner: &Runner) -> String {
+    let catalog = scenario_catalog(TRIALS[0]);
+    let mut cells = Vec::new();
+    for s in &catalog {
+        for policy in Policy::ALL {
+            cells.push(Cell::new(s.clone(), policy));
+        }
+    }
+    let results = runner.run(cfg, &cells);
+    let yardstick = cfg.deadline_by_lane();
+    let rows: Vec<Vec<String>> = results
+        .iter()
+        .map(|r| {
+            vec![
+                r.scenario_name.clone(),
+                r.policy_name.clone(),
+                format!("{:.3}", r.summary().p99),
+                format!("{:.1}%", 100.0 * r.goodput(yardstick)),
+                format!("{:.1}%", 100.0 * r.shed_share()),
+                format!("{:.1}%", 100.0 * r.completion_rate()),
+                format!("{}", r.crashes),
+            ]
+        })
+        .collect();
+    format!(
+        "Scenario catalog — {} scenarios × {} policies (λ̄={CATALOG_LAMBDA}, {}s each)\n{}",
+        catalog.len(),
+        Policy::ALL.len(),
+        CATALOG_DURATION,
+        render_table(
+            &[
+                "scenario", "policy", "P99 [s]", "goodput", "shed", "completed", "crashes",
+            ],
+            &rows
+        )
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -864,5 +979,35 @@ mod tests {
         // Quick-render the cheap reports end to end.
         assert!(!table3(&cfg()).is_empty());
         assert!(!table2(&cfg(), None).is_empty());
+    }
+
+    #[test]
+    fn catalog_names_distinct_and_valid() {
+        let cat = scenario_catalog(1);
+        assert!(cat.len() >= 9, "catalog shrank to {}", cat.len());
+        let mut names: Vec<&str> = cat.iter().map(|s| s.name.as_str()).collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate scenario names in the catalog");
+        for s in &cat {
+            s.validate().unwrap_or_else(|e| panic!("{}: {e}", s.name));
+            // The catalog compares policies on comparable load.
+            assert!(
+                (s.mean_rate() - CATALOG_LAMBDA).abs() < 1.0,
+                "{}: mean rate {} far from λ̄",
+                s.name,
+                s.mean_rate()
+            );
+        }
+    }
+
+    #[test]
+    fn sawtooth_trace_is_a_legal_trace() {
+        let t = sawtooth_trace();
+        assert_eq!(t.len(), 720);
+        assert!(t.windows(2).all(|w| w[0] <= w[1]), "trace unsorted");
+        assert!(t.iter().all(|&x| x.is_finite() && x >= 0.0));
+        assert!(*t.last().unwrap() < CATALOG_DURATION);
     }
 }

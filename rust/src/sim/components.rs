@@ -7,7 +7,7 @@
 //! [`crate::workload::ArrivalGenerator`]; the engine simply composes all
 //! three into its event queue.
 
-use crate::config::{Config, ScenarioConfig};
+use crate::config::{Config, FaultSpec, ScenarioConfig};
 use crate::rng::Rng;
 use crate::sim::events::{Event, EventQueue};
 use crate::SimTime;
@@ -95,12 +95,48 @@ impl FaultInjector for ExpPodCrashes {
     }
 }
 
-/// The fault component a scenario asks for.
+/// The renewal-crash component a scenario asks for: the legacy
+/// `pod_mtbf` knob and any `PodCrashes` fault specs, composed into one
+/// exponential process (rates of independent processes sum — see
+/// [`ScenarioConfig::crash_mtbf`]).
 pub fn fault_injector_for(scenario: &ScenarioConfig) -> Box<dyn FaultInjector> {
-    match scenario.pod_mtbf {
+    match scenario.crash_mtbf() {
         Some(mtbf) => Box::new(ExpPodCrashes { mtbf }),
         None => Box::new(NoFaults),
     }
+}
+
+/// Seed the scenario's *scheduled* fault events: correlated rack
+/// failures and fail-slow onsets fire at fixed times (the correlation is
+/// the point — one event, many pods). Renewal crashes stay with
+/// [`FaultInjector`]; tier partitions are time-window checks on the
+/// arrival path (see [`partition_windows`]), not events.
+pub fn seed_fault_events(scenario: &ScenarioConfig, events: &mut EventQueue) {
+    for (k, f) in scenario.faults.iter().enumerate() {
+        match f {
+            FaultSpec::RackFailure { at, .. } if *at < scenario.duration => {
+                events.push(*at, Event::RackFailure { spec: k });
+            }
+            FaultSpec::FailSlow { at, .. } if *at < scenario.duration => {
+                events.push(*at, Event::FailSlow { spec: k });
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The scenario's tier-partition windows as [(start, end)] — while any
+/// window is open, cross-tier dispatch is severed and the engine coerces
+/// offload/hedge targets back to the home pool.
+pub fn partition_windows(scenario: &ScenarioConfig) -> Vec<(f64, f64)> {
+    scenario
+        .faults
+        .iter()
+        .filter_map(|f| match f {
+            FaultSpec::TierPartition { start, duration } => Some((*start, start + duration)),
+            _ => None,
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -171,5 +207,44 @@ mod tests {
         assert!(fault_injector_for(&faulty)
             .first_crash(0, &mut rng)
             .is_some());
+        // The PodCrashes fault spec is an equivalent spelling.
+        let spec = ScenarioConfig::poisson(1.0, 1).with_fault(FaultSpec::PodCrashes { mtbf: 25.0 });
+        assert!(fault_injector_for(&spec).first_crash(0, &mut rng).is_some());
+    }
+
+    #[test]
+    fn scheduled_faults_seed_expected_events() {
+        use crate::config::Tier;
+        let s = ScenarioConfig::poisson(1.0, 1)
+            .with_fault(FaultSpec::RackFailure {
+                tier: Tier::Edge,
+                at: 30.0,
+                frac: 0.5,
+            })
+            .with_fault(FaultSpec::TierPartition {
+                start: 40.0,
+                duration: 20.0,
+            })
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 10.0,
+                factor: 3.0,
+                duration: 50.0,
+            })
+            // Beyond the horizon: must not seed.
+            .with_fault(FaultSpec::RackFailure {
+                tier: Tier::Cloud,
+                at: 9999.0,
+                frac: 1.0,
+            });
+        let mut events = EventQueue::new();
+        seed_fault_events(&s, &mut events);
+        assert_eq!(events.len(), 2, "partition/late faults must not seed events");
+        // Pops in time order: fail-slow (t=10) then rack failure (t=30).
+        assert_eq!(events.pop().unwrap().event, Event::FailSlow { spec: 2 });
+        assert_eq!(events.pop().unwrap().event, Event::RackFailure { spec: 0 });
+        // Partition windows are exposed as time ranges instead.
+        assert_eq!(partition_windows(&s), vec![(40.0, 60.0)]);
+        assert!(partition_windows(&ScenarioConfig::poisson(1.0, 1)).is_empty());
     }
 }

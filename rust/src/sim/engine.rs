@@ -44,15 +44,26 @@
 //! recorded and never touches a queue. Every *copy* of a request that
 //! does enter a queue is tracked in the [`TailCounters`] ledger — the
 //! conservation law `tests/engine_invariants.rs` asserts.
+//!
+//! Fault shapes (ISSUE 4): beyond independent renewal crashes, the
+//! engine injects *correlated rack failures* (one event kills a slice of
+//! a tier's pods through the same `kill_pod` path, so the ledger laws
+//! hold unchanged), *tier partitions* (cross-tier dispatches are coerced
+//! home while a window is open — environment mechanics, not policy), and
+//! *fail-slow pods* (service times multiplied by a degradation factor
+//! the control state cannot see, staling every capacity-based latency
+//! prediction).
 
 use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
-use crate::config::{Config, QualityClass, ScenarioConfig};
+use crate::config::{Config, FaultSpec, QualityClass, ScenarioConfig};
 use crate::coordinator::state::ReplicaView;
 use crate::coordinator::{home_map, ControlState, MultiQueue, QueuedRequest};
 use crate::latency_model::LatencyModel;
 use crate::rng::Rng;
-use crate::sim::components::{fault_injector_for, CadencePlan, FaultInjector};
+use crate::sim::components::{
+    fault_injector_for, partition_windows, seed_fault_events, CadencePlan, FaultInjector,
+};
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::policy::{ControlPolicy, Policy, Verdict};
 use crate::sim::result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
@@ -90,6 +101,14 @@ struct DepRuntime {
     /// one per pod (single-request service discipline), scanned linearly
     /// (a pool is ≤ n_max pods, so this beats any hash).
     in_service: Vec<(u64, u64)>,
+    /// Fail-slow pods of this pool: (pod id, service-time multiplier,
+    /// recovery deadline — `f64::INFINITY` for permanent). Scanned
+    /// linearly like `in_service`; entries leave on recovery or when the
+    /// pod dies, and the deadline lets a stale `FailSlowRecover` from an
+    /// earlier onset recognise that a later onset re-armed the pod. The
+    /// *control state never sees this* — that is the fault's point: the
+    /// utilisation estimate goes stale.
+    slow: Vec<(u64, f64, f64)>,
 }
 
 /// Full payload of one dispatch. `Event::ServiceComplete` carries only
@@ -128,6 +147,10 @@ pub struct Simulation {
     autoscaler: Option<Box<dyn Autoscaler>>,
     hpa: HpaController,
     faults: Box<dyn FaultInjector>,
+    /// Tier-partition windows [(start, end)]: while one is open,
+    /// cross-tier dispatch targets are coerced back home (the offload /
+    /// hedge path is severed; work queues locally).
+    partitions: Vec<(f64, f64)>,
     /// Pools in dense model-major order: pool of ⟨m, i⟩ sits at
     /// `m * n_instances + i` — no map on the per-event path.
     deps: Vec<DepRuntime>,
@@ -231,6 +254,7 @@ impl Simulation {
                     window_hist: LatencyHistogram::for_latency(),
                     inflight_models: vec![0; n_models],
                     in_service: Vec::new(),
+                    slow: Vec::new(),
                 });
             }
         }
@@ -273,6 +297,7 @@ impl Simulation {
             autoscaler,
             hpa: HpaController::new(cfg.cluster.hpa_interval),
             faults: fault_injector_for(scenario),
+            partitions: partition_windows(scenario),
             deps,
             n_instances,
             svc_models,
@@ -372,6 +397,8 @@ impl Simulation {
                 }
             }
         }
+        // Scheduled correlated faults (rack failures, fail-slow onsets).
+        seed_fault_events(&self.scenario, &mut self.events);
 
         // Drain horizon: let in-flight work finish for a grace period.
         let horizon = self.scenario.duration + 60.0;
@@ -463,7 +490,24 @@ impl Simulation {
                 self.try_dispatch(now, dep);
             }
             Event::PodCrash { dep } => self.on_crash(now, dep),
+            Event::RackFailure { spec } => self.on_rack_failure(now, spec),
+            Event::FailSlow { spec } => self.on_fail_slow(now, spec),
+            Event::FailSlowRecover { dep, pod } => {
+                // Remove only an entry whose own window has expired — a
+                // later onset re-arms the pod with a fresh (possibly
+                // permanent) deadline, and this stale signal must not
+                // erase it.
+                self.deps[dep]
+                    .slow
+                    .retain(|&(pid, _, until)| pid != pod || until > now);
+            }
         }
+    }
+
+    /// Whether a tier-partition window is open at `now`.
+    #[inline]
+    fn partition_active(&self, now: SimTime) -> bool {
+        self.partitions.iter().any(|&(s, e)| now >= s && now < e)
     }
 
     /// Register a dispatched copy's token against its request.
@@ -520,13 +564,19 @@ impl Simulation {
             return;
         }
         let vid = victims[self.rng.below(victims.len())];
-        // Tombstone the victim's dispatch records so the already-scheduled
-        // completions are swallowed, and return every executing request's
-        // inflight_models slot — including hedged losers whose winner
-        // already finished (those are gone from req_state but were still
-        // genuinely occupying this pod). Re-queue only the requests still
-        // outstanding; requests whose hedge sibling already finished stay
-        // finished.
+        self.kill_pod(now, dep, vid);
+        self.try_dispatch(now, dep);
+    }
+
+    /// Kill pod `vid` of pool `dep`: tombstone the victim's dispatch
+    /// records so the already-scheduled completions are swallowed, and
+    /// return every executing request's `inflight_models` slot —
+    /// including hedged losers whose winner already finished (those are
+    /// gone from `req_state` but were still genuinely occupying this
+    /// pod). Re-queue only the requests still outstanding; requests
+    /// whose hedge sibling already finished stay finished. Shared by the
+    /// single-pod crash process and the correlated rack-failure path.
+    fn kill_pod(&mut self, now: SimTime, dep: usize, vid: u64) {
         let mut requeue: Vec<(u64, QualityClass)> = Vec::new();
         let mut k = 0;
         while k < self.deps[dep].in_service.len() {
@@ -560,9 +610,95 @@ impl Simulation {
             self.tail.copies_enqueued += 1;
         }
         d.dep.pods.retain(|p| p.id != vid);
+        d.slow.retain(|&(pid, _, _)| pid != vid);
         self.crashes += 1;
         self.account_replicas(now);
-        self.try_dispatch(now, dep);
+    }
+
+    /// Correlated rack failure: one event downs a `frac` slice of every
+    /// pool on the spec's tier *simultaneously* — the correlated-failure
+    /// shape under which FogROS2-PLR shows independence-assuming tail
+    /// control degrades. Victims and re-queues go through the same
+    /// `kill_pod` path as independent crashes, so the copy ledger and
+    /// conservation laws hold unchanged.
+    fn on_rack_failure(&mut self, now: SimTime, spec: usize) {
+        let FaultSpec::RackFailure { tier, frac, .. } = self.scenario.faults[spec] else {
+            return;
+        };
+        for dep in 0..self.deps.len() {
+            if self.cfg.instances[self.deps[dep].dep.key.instance].tier != tier {
+                continue;
+            }
+            let mut victims: Vec<u64> = self.deps[dep]
+                .dep
+                .pods
+                .iter()
+                .filter(|p| p.can_serve(now) || p.in_flight > 0)
+                .map(|p| p.id)
+                .collect();
+            if victims.is_empty() {
+                continue;
+            }
+            let n_kill = ((frac * victims.len() as f64).ceil() as usize).min(victims.len());
+            for _ in 0..n_kill {
+                let k = self.rng.below(victims.len());
+                let vid = victims.swap_remove(k);
+                self.kill_pod(now, dep, vid);
+            }
+            self.try_dispatch(now, dep);
+        }
+    }
+
+    /// Fail-slow onset: one serving pod in every pool on the spec's tier
+    /// has its service times multiplied by `factor` — no crash, no
+    /// event the autoscaler can see. The control state keeps counting
+    /// the pod as full capacity, so every latency *prediction* built on
+    /// replica counts (deadline-shed's admission estimate, the router's
+    /// g(λ, N)) goes quietly stale — the tail shape SafeTail flags as
+    /// the hardest to hedge against.
+    fn on_fail_slow(&mut self, now: SimTime, spec: usize) {
+        let FaultSpec::FailSlow {
+            tier,
+            factor,
+            duration,
+            ..
+        } = self.scenario.faults[spec]
+        else {
+            return;
+        };
+        for dep in 0..self.deps.len() {
+            if self.cfg.instances[self.deps[dep].dep.key.instance].tier != tier {
+                continue;
+            }
+            let candidates: Vec<u64> = self.deps[dep]
+                .dep
+                .pods
+                .iter()
+                .filter(|p| p.can_serve(now))
+                .map(|p| p.id)
+                .collect();
+            if candidates.is_empty() {
+                continue;
+            }
+            let vid = candidates[self.rng.below(candidates.len())];
+            let until = if duration > 0.0 {
+                now + duration
+            } else {
+                f64::INFINITY
+            };
+            let d = &mut self.deps[dep];
+            match d.slow.iter_mut().find(|(pid, _, _)| *pid == vid) {
+                Some(e) => {
+                    e.1 = factor;
+                    e.2 = until;
+                }
+                None => d.slow.push((vid, factor, until)),
+            }
+            if duration > 0.0 {
+                self.events
+                    .push(until, Event::FailSlowRecover { dep, pod: vid });
+            }
+        }
     }
 
     fn on_arrival(&mut self, now: SimTime, id: u64, quality: QualityClass) {
@@ -577,7 +713,7 @@ impl Simulation {
             self.refresh_state(now);
         }
         let verdict = self.policy.admit(model, now, &self.state, &mut self.metrics);
-        let dispatch = match verdict {
+        let mut dispatch = match verdict {
             Verdict::Run(d) => d,
             Verdict::Shed { reason, predicted } => {
                 // Safety stop: the request leaves the system right here,
@@ -596,6 +732,25 @@ impl Simulation {
                 return;
             }
         };
+        // Tier partition: the cross-tier path is down — whatever the
+        // policy decided, offloads and hedges that would cross tiers are
+        // coerced back to the home pool (local queueing is all there is).
+        // This is environment mechanics, not policy: the policy still
+        // *believes* it offloaded, exactly like a router whose packets
+        // silently die on a partitioned link.
+        if !self.partitions.is_empty() && self.partition_active(now) {
+            let home = self.homes[model];
+            let home_tier = self.cfg.instances[home.instance].tier;
+            if self.cfg.instances[dispatch.target.instance].tier != home_tier {
+                dispatch.target = home;
+            }
+            if dispatch
+                .hedge
+                .is_some_and(|h| self.cfg.instances[h.instance].tier != home_tier)
+            {
+                dispatch.hedge = None;
+            }
+        }
         self.req_state[id as usize] = Some((now, quality));
         self.outstanding += 1;
 
@@ -672,6 +827,13 @@ impl Simulation {
             } else {
                 1
             };
+            // Fail-slow degradation of this pod, if any (1.0 = healthy).
+            let slow_factor = d
+                .slow
+                .iter()
+                .find(|&&(pid, _, _)| pid == pod_id)
+                .map(|&(_, f, _)| f)
+                .unwrap_or(1.0);
 
             // Use the *request's* model for cost, on this pool's instance
             // — a precomputed dense read, never a rebuild.
@@ -689,6 +851,9 @@ impl Simulation {
             if self.arch == Architecture::Monolithic && distinct > 1 {
                 svc *= 1.0 + MONO_CTX_PENALTY * (distinct - 1) as f64;
             }
+            // ... fail-slow degradation: the pod serves, just slower —
+            // invisible to the control state's capacity accounting.
+            svc *= slow_factor;
 
             // Network RTT with 10 % jitter, added at completion.
             let rtt = model.rtt * (0.9 + 0.2 * self.rng.uniform());
@@ -1074,6 +1239,163 @@ mod tests {
             "wasted {} !< {}",
             on.tail.wasted_time,
             off.tail.wasted_time
+        );
+    }
+
+    #[test]
+    fn rack_failure_downs_a_tier_slice_at_once() {
+        use crate::config::{FaultSpec, Tier};
+        // 4 edge replicas under enough load (λ=4 ≈ 3 replicas' worth)
+        // that the autoscaler keeps the pool populated; at t=60 the
+        // whole edge rack goes down in one event. Recovery (HPA
+        // re-provision) + conservation must hold.
+        let scenario = ScenarioConfig::poisson(4.0, 91)
+            .with_duration(180.0, 0.0)
+            .with_replicas(4)
+            .with_fault(FaultSpec::RackFailure {
+                tier: Tier::Edge,
+                at: 60.0,
+                frac: 1.0,
+            });
+        let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice)
+            .run();
+        // One correlated event kills several pods at the same instant.
+        assert!(r.crashes >= 3, "only {} pods died in the rack event", r.crashes);
+        assert_eq!(r.completed.len() + r.unfinished, r.generated);
+        assert!(r.tail.copies_balanced(), "ledger: {:?}", r.tail);
+        assert!(r.completion_rate() > 0.8, "rate={}", r.completion_rate());
+    }
+
+    #[test]
+    fn partition_forces_local_queueing() {
+        use crate::config::FaultSpec;
+        // Overload one home replica so LA-IMR *wants* to offload, then
+        // sever the tier for the whole run: nothing may complete off-home.
+        let mut scenario = ScenarioConfig::bursty(5.0, 93)
+            .with_duration(120.0, 0.0)
+            .with_replicas(1)
+            .with_fault(FaultSpec::TierPartition {
+                start: 0.0,
+                duration: 1e9,
+            });
+        scenario.name = "partition-full".into();
+        let part = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert_eq!(
+            part.offload_share(),
+            0.0,
+            "requests crossed a severed tier boundary"
+        );
+        assert!(part.tail.copies_balanced(), "ledger: {:?}", part.tail);
+        // Same load without the partition must offload (the coercion is
+        // doing real work, not papering over a policy that never tried).
+        let mut open = scenario.clone();
+        open.faults.clear();
+        open.name = "partition-none".into();
+        let free = Simulation::new(&cfg(), &open, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert!(free.offload_share() > 0.0, "control never offloaded");
+    }
+
+    #[test]
+    fn fail_slow_degrades_without_crashing() {
+        use crate::config::{FaultSpec, Tier};
+        let base = ScenarioConfig::poisson(2.0, 95)
+            .with_duration(180.0, 0.0)
+            .with_replicas(2);
+        let slow = base.clone().with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 10.0,
+            factor: 6.0,
+            duration: 0.0,
+        });
+        let healthy = Simulation::new(&cfg(), &base, Policy::Static, Architecture::Microservice)
+            .run();
+        let degraded = Simulation::new(&cfg(), &slow, Policy::Static, Architecture::Microservice)
+            .run();
+        // No crash: the pod serves, just slower.
+        assert_eq!(degraded.crashes, 0, "fail-slow must not kill pods");
+        assert_eq!(degraded.completed.len() + degraded.unfinished, degraded.generated);
+        assert!(degraded.tail.copies_balanced(), "ledger: {:?}", degraded.tail);
+        // The degradation is real: a 6× slowdown on half the static
+        // capacity must push the mean up.
+        assert!(
+            degraded.summary().mean > healthy.summary().mean,
+            "fail-slow mean {} !> healthy {}",
+            degraded.summary().mean,
+            healthy.summary().mean
+        );
+    }
+
+    #[test]
+    fn later_fail_slow_onset_survives_earlier_recovery() {
+        use crate::config::{FaultSpec, Tier};
+        // A windowed onset followed by a *permanent* onset on the same
+        // (single) pod: when the first window's recovery signal fires it
+        // must not erase the permanent degradation. If it did, the
+        // permanent run would behave like the windowed-only run.
+        let windowed_only = ScenarioConfig::poisson(1.0, 99)
+            .with_duration(300.0, 0.0)
+            .with_replicas(1)
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 10.0,
+                factor: 4.0,
+                duration: 30.0,
+            });
+        let then_permanent = windowed_only.clone().with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 20.0,
+            factor: 8.0,
+            duration: 0.0,
+        });
+        let w = Simulation::new(&cfg(), &windowed_only, Policy::Static, Architecture::Microservice)
+            .run();
+        let p = Simulation::new(&cfg(), &then_permanent, Policy::Static, Architecture::Microservice)
+            .run();
+        // λ=1 on one 8×-degraded pod (μ ≈ 0.17) diverges; the windowed
+        // run recovers at t=40 and drains. The stale recovery signal at
+        // t=40 must leave the permanent run far worse.
+        assert!(
+            p.summary().mean > 2.0 * w.summary().mean,
+            "permanent degradation erased by stale recovery: {} !>> {}",
+            p.summary().mean,
+            w.summary().mean
+        );
+    }
+
+    #[test]
+    fn fail_slow_recovery_restores_the_tail() {
+        use crate::config::{FaultSpec, Tier};
+        // A 30 s degradation window early in a long run vs a permanent
+        // one: the recovering system must end up strictly faster.
+        let windowed = ScenarioConfig::poisson(2.0, 97)
+            .with_duration(300.0, 0.0)
+            .with_replicas(2)
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 10.0,
+                factor: 8.0,
+                duration: 30.0,
+            });
+        let permanent = ScenarioConfig::poisson(2.0, 97)
+            .with_duration(300.0, 0.0)
+            .with_replicas(2)
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 10.0,
+                factor: 8.0,
+                duration: 0.0,
+            });
+        let w = Simulation::new(&cfg(), &windowed, Policy::Static, Architecture::Microservice)
+            .run();
+        let p = Simulation::new(&cfg(), &permanent, Policy::Static, Architecture::Microservice)
+            .run();
+        assert!(
+            w.summary().mean < p.summary().mean,
+            "recovered mean {} !< permanent {}",
+            w.summary().mean,
+            p.summary().mean
         );
     }
 

@@ -43,6 +43,16 @@ pub enum Event {
     /// Fault injection: a random ready pod of this pool crashes, losing
     /// its in-flight request (which re-enters the front door).
     PodCrash { dep: usize },
+    /// Correlated rack failure: one event downs a configured slice of
+    /// every pool on one tier simultaneously. `spec` indexes the
+    /// scenario's fault list (the payload lives there, not in the heap).
+    RackFailure { spec: usize },
+    /// Fail-slow onset: one serving pod per pool on the spec's tier has
+    /// its service times multiplied by a degradation factor — capacity
+    /// quietly shrinks without a crash.
+    FailSlow { spec: usize },
+    /// A fail-slow pod recovers its nominal service rate.
+    FailSlowRecover { dep: usize, pod: u64 },
 }
 
 /// An event scheduled at a time, ordered for a min-heap.

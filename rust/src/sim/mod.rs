@@ -20,7 +20,10 @@ pub mod policy;
 mod result;
 pub mod runner;
 
-pub use components::{fault_injector_for, CadencePlan, ExpPodCrashes, FaultInjector, NoFaults};
+pub use components::{
+    fault_injector_for, partition_windows, seed_fault_events, CadencePlan, ExpPodCrashes,
+    FaultInjector, NoFaults,
+};
 pub use engine::{Architecture, Simulation};
 pub use events::{Event, EventQueue, TimedEvent};
 pub use policy::{

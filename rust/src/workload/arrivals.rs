@@ -1,6 +1,7 @@
 //! Arrival-process generators for every `ArrivalKind` in the scenario
 //! config: Poisson, bounded-Pareto burst trains (paper §V-D), periodic,
-//! and step profiles.
+//! step profiles, diurnal (sinusoidal-envelope) profiles, regime-
+//! switching MMPP bursts, and deterministic trace replay.
 
 use crate::config::{ArrivalKind, QualityClass, ScenarioConfig};
 use crate::rng::Rng;
@@ -93,6 +94,85 @@ impl ArrivalGenerator {
                         }
                         times.push(t);
                     }
+                }
+            }
+            ArrivalKind::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                // Thinning (Lewis–Shedler): draw a homogeneous Poisson at
+                // the peak rate, accept each point with probability
+                // λ(t)/peak — an *exact* non-homogeneous Poisson sample.
+                let peak = base * (1.0 + amplitude);
+                if peak > 0.0 {
+                    let two_pi = 2.0 * std::f64::consts::PI;
+                    let mut t = 0.0;
+                    loop {
+                        t += rng.exp(peak);
+                        if t >= scenario.duration {
+                            break;
+                        }
+                        let rate = base * (1.0 + amplitude * (two_pi * t / period + phase).sin());
+                        if rng.uniform() * peak < rate {
+                            times.push(t);
+                        }
+                    }
+                }
+            }
+            ArrivalKind::Mmpp { rates, dwell } => {
+                if !rates.is_empty() {
+                    let mut s = 0usize;
+                    let mut t = 0.0;
+                    while t < scenario.duration {
+                        let seg_end = (t + rng.exp(1.0 / dwell[s])).min(scenario.duration);
+                        if rates[s] > 0.0 {
+                            let mut a = t;
+                            loop {
+                                a += rng.exp(rates[s]);
+                                if a >= seg_end {
+                                    break;
+                                }
+                                times.push(a);
+                            }
+                        }
+                        t = seg_end;
+                        // Jump uniformly to one of the *other* regimes
+                        // (alternation when there are two).
+                        if rates.len() > 1 {
+                            let mut next = rng.below(rates.len() - 1);
+                            if next >= s {
+                                next += 1;
+                            }
+                            s = next;
+                        }
+                    }
+                }
+            }
+            ArrivalKind::TraceReplay {
+                times: trace,
+                scale,
+                loop_around,
+                ..
+            } => {
+                // Replay verbatim; `scale` multiplies the rate (divides
+                // time); loop-around tiles with period = last timestamp.
+                let span = trace.last().copied().unwrap_or(0.0);
+                let mut offset = 0.0;
+                loop {
+                    let mut any_in = false;
+                    for &ts in trace {
+                        let at = (ts + offset) / scale;
+                        if at < scenario.duration {
+                            times.push(at);
+                            any_in = true;
+                        }
+                    }
+                    if !*loop_around || span <= 0.0 || !any_in {
+                        break;
+                    }
+                    offset += span;
                 }
             }
         }
@@ -248,5 +328,79 @@ mod tests {
     fn zero_rate_empty() {
         let s = ScenarioConfig::poisson(0.0, 1);
         assert!(ArrivalGenerator::generate(&s).is_empty());
+    }
+
+    #[test]
+    fn diurnal_peak_outweighs_trough() {
+        // Amplitude 0.8, period 120, phase 0: peak quarter is centred on
+        // t ≡ 30 (mod 120), trough on t ≡ 90. Bin arrivals by phase.
+        let s = ScenarioConfig::diurnal(4.0, 13).with_duration(600.0, 0.0);
+        let g = ArrivalGenerator::generate(&s);
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for a in g.arrivals() {
+            let ph = a.at % 120.0;
+            if (15.0..45.0).contains(&ph) {
+                peak += 1;
+            } else if (75.0..105.0).contains(&ph) {
+                trough += 1;
+            }
+        }
+        assert!(
+            peak > 2 * trough.max(1),
+            "peak {peak} !>> trough {trough}"
+        );
+    }
+
+    #[test]
+    fn mmpp_burstier_than_poisson_same_mean() {
+        let sp = ScenarioConfig::poisson(4.0, 5).with_duration(600.0, 0.0);
+        let sm = ScenarioConfig::mmpp_bursts(4.0, 5).with_duration(600.0, 0.0);
+        let p = ArrivalGenerator::generate(&sp);
+        let m = ArrivalGenerator::generate(&sm);
+        assert!(
+            m.peak_rate() > p.peak_rate(),
+            "mmpp peak {} !> poisson peak {}",
+            m.peak_rate(),
+            p.peak_rate()
+        );
+        // Mean still near the target.
+        assert!(
+            (m.empirical_rate(600.0) - 4.0).abs() < 1.2,
+            "mmpp rate={}",
+            m.empirical_rate(600.0)
+        );
+    }
+
+    #[test]
+    fn trace_replay_identity_at_scale_one() {
+        let trace: Vec<f64> = (0..40).map(|k| 0.5 + k as f64 * 0.7).collect();
+        let s = ScenarioConfig::trace_replay("t", trace.clone(), 3).with_duration(100.0, 0.0);
+        let g = ArrivalGenerator::generate(&s);
+        let replayed: Vec<f64> = g.arrivals().iter().map(|a| a.at).collect();
+        assert_eq!(replayed, trace, "scale=1 must replay the trace verbatim");
+    }
+
+    #[test]
+    fn trace_replay_scales_and_loops() {
+        use crate::config::ArrivalKind;
+        let mut s = ScenarioConfig::trace_replay("t", vec![1.0, 2.0, 4.0], 3)
+            .with_duration(6.0, 0.0);
+        // Scale 2 halves the timestamps.
+        if let ArrivalKind::TraceReplay { scale, .. } = &mut s.arrivals {
+            *scale = 2.0;
+        }
+        let g = ArrivalGenerator::generate(&s);
+        let at: Vec<f64> = g.arrivals().iter().map(|a| a.at).collect();
+        assert_eq!(at, vec![0.5, 1.0, 2.0]);
+
+        // Loop-around tiles with period = last timestamp (4 s).
+        let mut s = ScenarioConfig::trace_replay("t", vec![1.0, 2.0, 4.0], 3)
+            .with_duration(9.0, 0.0);
+        if let ArrivalKind::TraceReplay { loop_around, .. } = &mut s.arrivals {
+            *loop_around = true;
+        }
+        let g = ArrivalGenerator::generate(&s);
+        let at: Vec<f64> = g.arrivals().iter().map(|a| a.at).collect();
+        assert_eq!(at, vec![1.0, 2.0, 4.0, 5.0, 6.0, 8.0]);
     }
 }

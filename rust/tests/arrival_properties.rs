@@ -1,0 +1,212 @@
+//! Property layer for every arrival generator (ISSUE 4 satellite): for
+//! each `ArrivalKind` the stream must (i) hit its configured mean rate
+//! within tolerance, (ii) contain only finite, non-negative, sorted,
+//! in-horizon timestamps, and (iii) be bit-identical under identical
+//! seeds. `TraceReplay` additionally must equal its input trace
+//! verbatim at scale = 1.
+//!
+//! Like `proptest_invariants.rs`, this is a seeded-random property
+//! harness over the crate's own deterministic RNG (proptest itself is
+//! unavailable offline): every case prints enough context to replay.
+
+use la_imr::config::{ArrivalKind, ScenarioConfig};
+use la_imr::workload::ArrivalGenerator;
+
+const DURATION: f64 = 900.0;
+
+/// One catalog entry per arrival family, all targeting the same mean
+/// rate, plus whether the stream is stochastic (seed-sensitive).
+fn shapes(seed: u64) -> Vec<(ScenarioConfig, bool)> {
+    let d = |s: ScenarioConfig| s.with_duration(DURATION, 0.0);
+    vec![
+        (d(ScenarioConfig::poisson(4.0, seed)), true),
+        (d(ScenarioConfig::bursty(4.0, seed)), true),
+        (
+            d(ScenarioConfig {
+                name: "periodic".into(),
+                arrivals: ArrivalKind::Periodic { rate: 4.0 },
+                ..ScenarioConfig::default()
+            }
+            .with_seed(seed)),
+            false,
+        ),
+        (
+            d(ScenarioConfig {
+                name: "steps".into(),
+                arrivals: ArrivalKind::Steps {
+                    steps: vec![(0.0, 2.0), (DURATION / 2.0, 6.0)],
+                },
+                ..ScenarioConfig::default()
+            }
+            .with_seed(seed)),
+            true,
+        ),
+        (d(ScenarioConfig::diurnal(4.0, seed)), true),
+        (d(ScenarioConfig::mmpp_bursts(4.0, seed)), true),
+        (
+            d(ScenarioConfig::trace_replay(
+                "trace-grid",
+                (0..3600).map(|k| k as f64 * 0.25).collect(),
+                seed,
+            )),
+            false,
+        ),
+    ]
+}
+
+#[test]
+fn empirical_rate_matches_configured_mean() {
+    for seed in [7, 21, 1005] {
+        for (s, _) in shapes(seed) {
+            let target = s.mean_rate();
+            let g = ArrivalGenerator::generate(&s);
+            let rate = g.empirical_rate(DURATION);
+            assert!(
+                (rate - target).abs() / target < 0.2,
+                "{} seed {seed}: empirical {rate:.3} vs configured {target:.3}",
+                s.name
+            );
+        }
+    }
+}
+
+#[test]
+fn streams_sorted_finite_and_in_horizon() {
+    for seed in [3, 44] {
+        for (s, _) in shapes(seed) {
+            let g = ArrivalGenerator::generate(&s);
+            assert!(!g.is_empty(), "{}: empty stream", s.name);
+            let arr = g.arrivals();
+            for a in arr {
+                assert!(
+                    a.at.is_finite() && a.at >= 0.0 && a.at < DURATION,
+                    "{} seed {seed}: timestamp {} out of [0, {DURATION})",
+                    s.name,
+                    a.at
+                );
+            }
+            // Non-negative inter-arrival times (sorted stream).
+            for w in arr.windows(2) {
+                assert!(
+                    w[1].at >= w[0].at,
+                    "{} seed {seed}: inter-arrival negative ({} then {})",
+                    s.name,
+                    w[0].at,
+                    w[1].at
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn identical_seeds_identical_streams() {
+    for (s, stochastic) in shapes(99) {
+        let a = ArrivalGenerator::generate(&s);
+        let b = ArrivalGenerator::generate(&s);
+        assert_eq!(
+            a.arrivals(),
+            b.arrivals(),
+            "{}: same seed diverged",
+            s.name
+        );
+        if stochastic {
+            let other = s.clone().with_seed(100);
+            let c = ArrivalGenerator::generate(&other);
+            assert_ne!(
+                a.arrivals(),
+                c.arrivals(),
+                "{}: different seeds produced identical streams",
+                s.name
+            );
+        }
+    }
+}
+
+#[test]
+fn trace_replay_is_the_input_trace_at_scale_one() {
+    let trace: Vec<f64> = (0..500).map(|k| 0.25 + k as f64 * 1.7).collect();
+    let s = ScenarioConfig::trace_replay("trace-idem", trace.clone(), 5)
+        .with_duration(DURATION, 0.0);
+    let g = ArrivalGenerator::generate(&s);
+    let replayed: Vec<f64> = g.arrivals().iter().map(|a| a.at).collect();
+    assert_eq!(replayed, trace, "scale=1 replay must be the trace verbatim");
+}
+
+#[test]
+fn trace_scaling_and_looping_cover_the_horizon() {
+    // Scale k multiplies the rate: k× the arrivals of the unscaled
+    // replay land inside any horizon the trace outlives.
+    let trace: Vec<f64> = (1..=1000).map(|k| k as f64).collect(); // 1..1000 s
+    let mk = |scale: f64, loop_around: bool| {
+        let mut s = ScenarioConfig::trace_replay("trace-scale", trace.clone(), 5)
+            .with_duration(DURATION, 0.0);
+        if let ArrivalKind::TraceReplay {
+            scale: sc,
+            loop_around: lp,
+            ..
+        } = &mut s.arrivals
+        {
+            *sc = scale;
+            *lp = loop_around;
+        }
+        ArrivalGenerator::generate(&s)
+    };
+    let plain = mk(1.0, false);
+    let double = mk(2.0, false);
+    assert_eq!(plain.len(), 899, "1..900 s inside the 900 s horizon");
+    assert_eq!(double.len(), 1000, "scale 2 compresses the whole trace");
+    // Loop-around keeps emitting past the trace end instead of going
+    // silent at t = 1000/2 = 500 s.
+    let looped = mk(2.0, true);
+    assert!(
+        looped.len() > double.len(),
+        "loop-around added nothing ({} vs {})",
+        looped.len(),
+        double.len()
+    );
+    assert!(looped.arrivals().iter().any(|a| a.at > 600.0));
+}
+
+#[test]
+fn diurnal_respects_its_envelope_phase() {
+    // Peak quarter vs trough quarter of the 120 s period: amplitude 0.8
+    // means a 9:1 rate contrast at the extremes.
+    let s = ScenarioConfig::diurnal(4.0, 11).with_duration(DURATION, 0.0);
+    let g = ArrivalGenerator::generate(&s);
+    let (mut peak, mut trough) = (0usize, 0usize);
+    for a in g.arrivals() {
+        let ph = a.at % 120.0;
+        if (15.0..45.0).contains(&ph) {
+            peak += 1;
+        } else if (75.0..105.0).contains(&ph) {
+            trough += 1;
+        }
+    }
+    assert!(
+        peak > 2 * trough.max(1),
+        "diurnal contrast missing: peak {peak} vs trough {trough}"
+    );
+}
+
+#[test]
+fn mmpp_switches_regimes() {
+    // The stream must show both regimes: 1 s windows at both well below
+    // and well above the mean rate — a plain Poisson at the same mean
+    // almost never produces the high-regime counts.
+    let s = ScenarioConfig::mmpp_bursts(4.0, 17).with_duration(DURATION, 0.0);
+    let g = ArrivalGenerator::generate(&s);
+    assert!(
+        g.peak_rate() >= 8.0,
+        "no burst regime visible (peak {})",
+        g.peak_rate()
+    );
+    // Quiet regime: some 30 s window carries < half the mean load.
+    let arr = g.arrivals();
+    let quiet_window = (0..((DURATION as usize) / 30)).any(|w| {
+        let (lo, hi) = (w as f64 * 30.0, (w + 1) as f64 * 30.0);
+        let n = arr.iter().filter(|a| a.at >= lo && a.at < hi).count();
+        n < 60 // < 2 req/s over 30 s
+    });
+    assert!(quiet_window, "no quiet regime visible");
+}

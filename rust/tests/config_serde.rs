@@ -1,9 +1,11 @@
 //! Serde round-trip contract for the tail-control knobs (ISSUE 3
-//! satellite): `Config`/`ScenarioConfig` → JSON → parse → equal, and
-//! negative budgets/deadlines are rejected with a clear error instead of
-//! silently mis-simulating.
+//! satellite) and the scenario-diversity subsystem (ISSUE 4):
+//! `Config`/`ScenarioConfig` → JSON → parse → equal for every
+//! `ArrivalKind` and `FaultSpec` variant, and invalid knobs / trace
+//! files are rejected with a clear error instead of silently
+//! mis-simulating.
 
-use la_imr::config::{ArrivalKind, Config, ScenarioConfig};
+use la_imr::config::{parse_trace, ArrivalKind, Config, FaultSpec, ScenarioConfig, Tier};
 use std::hash::Hasher;
 
 #[test]
@@ -70,9 +72,57 @@ fn scenario_roundtrips_every_arrival_kind() {
             },
             ..ScenarioConfig::default()
         },
+        // ISSUE 4 arrival shapes.
+        ScenarioConfig {
+            name: "diurnal".into(),
+            arrivals: ArrivalKind::Diurnal {
+                base: 4.0,
+                amplitude: 0.65,
+                period: 90.0,
+                phase: 0.5,
+            },
+            ..ScenarioConfig::default()
+        },
+        ScenarioConfig {
+            name: "mmpp".into(),
+            arrivals: ArrivalKind::Mmpp {
+                rates: vec![1.0, 9.0, 3.0],
+                dwell: vec![40.0, 10.0, 25.0],
+            },
+            ..ScenarioConfig::default()
+        },
+        ScenarioConfig {
+            name: "trace".into(),
+            arrivals: ArrivalKind::TraceReplay {
+                path: Some("somewhere/trace.txt".into()),
+                times: vec![0.0, 0.25, 1.5, 4.0],
+                scale: 2.0,
+                loop_around: true,
+            },
+            ..ScenarioConfig::default()
+        },
     ];
     scenarios[0].quality_mix = [0.3, 0.5, 0.2];
     scenarios[1].pod_mtbf = Some(25.0);
+    // Every fault shape rides one scenario through the round trip.
+    scenarios[4].faults = vec![
+        FaultSpec::PodCrashes { mtbf: 50.0 },
+        FaultSpec::RackFailure {
+            tier: Tier::Edge,
+            at: 60.0,
+            frac: 0.5,
+        },
+        FaultSpec::TierPartition {
+            start: 80.0,
+            duration: 30.0,
+        },
+        FaultSpec::FailSlow {
+            tier: Tier::Cloud,
+            at: 20.0,
+            factor: 4.0,
+            duration: 45.0,
+        },
+    ];
     for s in &scenarios {
         let back = ScenarioConfig::from_json_str(&s.to_json_string()).unwrap();
         assert_eq!(back.name, s.name);
@@ -83,6 +133,7 @@ fn scenario_roundtrips_every_arrival_kind() {
         assert_eq!(back.quality_mix, s.quality_mix);
         assert_eq!(back.initial_replicas, s.initial_replicas);
         assert_eq!(back.pod_mtbf, s.pod_mtbf);
+        assert_eq!(back.faults, s.faults, "{}: fault specs drifted", s.name);
         // Equal knobs must mean an equal memo key (the runner's cache
         // contract rides on this).
         let mut ha = std::collections::hash_map::DefaultHasher::new();
@@ -112,10 +163,121 @@ fn scenario_partial_override_and_rejections() {
         ),
         (r#"{"quality_mix": [0.5, -0.1, 0.6]}"#, "quality_mix"),
         (r#"{"initial_replicas": 2.9}"#, "initial_replicas"),
+        // ISSUE 4 arrival shapes: out-of-range knobs must name the knob.
+        (
+            r#"{"arrivals": {"kind": "diurnal", "base": 4, "amplitude": 1.4, "period": 120}}"#,
+            "amplitude",
+        ),
+        (
+            r#"{"arrivals": {"kind": "diurnal", "base": 4, "amplitude": 0.5, "period": 0}}"#,
+            "period",
+        ),
+        (
+            r#"{"arrivals": {"kind": "mmpp", "rates": [1, 5], "dwell": [30]}}"#,
+            "mismatch",
+        ),
+        (
+            r#"{"arrivals": {"kind": "mmpp", "rates": [1, 5], "dwell": [30, 0]}}"#,
+            "dwell",
+        ),
+        (
+            r#"{"arrivals": {"kind": "trace", "times": [1.0, 0.5]}}"#,
+            "sorted",
+        ),
+        (
+            r#"{"arrivals": {"kind": "trace", "times": [-1.0, 0.5]}}"#,
+            "negative",
+        ),
+        (
+            r#"{"arrivals": {"kind": "trace", "times": [0.5], "scale": 0}}"#,
+            "scale",
+        ),
+        (r#"{"arrivals": {"kind": "trace"}}"#, "either"),
+        // Fault specs: bad knobs must name the fault index and the knob.
+        (
+            r#"{"faults": [{"kind": "rack-failure", "tier": "edge", "at": 10, "frac": 1.5}]}"#,
+            "frac",
+        ),
+        (
+            r#"{"faults": [{"kind": "fail-slow", "tier": "edge", "at": 5, "factor": 0.5}]}"#,
+            "factor",
+        ),
+        (
+            r#"{"faults": [{"kind": "partition", "start": 5, "duration": 0}]}"#,
+            "duration",
+        ),
+        (r#"{"faults": [{"kind": "gremlins"}]}"#, "fault kind"),
+        (
+            r#"{"faults": [{"kind": "rack-failure", "tier": "fog", "at": 1, "frac": 0.5}]}"#,
+            "tier",
+        ),
     ] {
         let err = ScenarioConfig::from_json_str(bad)
             .unwrap_err()
             .to_string();
         assert!(err.contains(needle), "{bad}: unclear error: {err}");
     }
+}
+
+#[test]
+fn trace_file_errors_name_the_offending_line() {
+    // The loader is the file-facing contract (ISSUE 4 satellite): the
+    // error must carry the 1-indexed line so a bad trace is fixable
+    // without bisecting it.
+    let err = parse_trace("0.0\n1.0\n0.75\n").unwrap_err().to_string();
+    assert!(
+        err.contains("line 3") && err.contains("sorted"),
+        "unclear error: {err}"
+    );
+    let err = parse_trace("# comment\n\n-0.5\n").unwrap_err().to_string();
+    assert!(
+        err.contains("line 3") && err.contains("negative"),
+        "unclear error: {err}"
+    );
+    let err = parse_trace("0.5\nbanana\n").unwrap_err().to_string();
+    assert!(
+        err.contains("line 2") && err.contains("banana"),
+        "unclear error: {err}"
+    );
+    // NaN/inf are data errors too, not silent NaN timestamps downstream.
+    let err = parse_trace("0.5\nnan\n").unwrap_err().to_string();
+    assert!(err.contains("line 2"), "unclear error: {err}");
+}
+
+#[test]
+fn trace_from_file_loads_once_and_serialises_inline() {
+    // The committed example trace (≤ 200 lines, no network): loading via
+    // `path` materialises the timestamps inline, so the JSON round trip
+    // never needs the file again.
+    let s = ScenarioConfig::from_json_str(
+        r#"{"name": "replay", "arrivals": {"kind": "trace", "path": "../examples/trace_bursty.txt", "scale": 1.5, "loop": true}}"#,
+    )
+    .unwrap();
+    let ArrivalKind::TraceReplay {
+        ref times,
+        ref path,
+        scale,
+        loop_around,
+    } = s.arrivals
+    else {
+        panic!("wrong kind: {:?}", s.arrivals)
+    };
+    assert!(times.len() >= 100, "example trace too small: {}", times.len());
+    assert_eq!(path.as_deref(), Some("../examples/trace_bursty.txt"));
+    assert_eq!(scale, 1.5);
+    assert!(loop_around);
+    assert!(times.windows(2).all(|w| w[0] <= w[1]));
+
+    let json = s.to_json_string();
+    assert!(json.contains("\"times\""), "timestamps not inlined: {json}");
+    let back = ScenarioConfig::from_json_str(&json).unwrap();
+    assert_eq!(back.arrivals, s.arrivals);
+
+    // A missing file is a load-time error naming the path.
+    let err = ScenarioConfig::from_json_str(
+        r#"{"arrivals": {"kind": "trace", "path": "no/such/trace.txt"}}"#,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("no/such/trace.txt"), "unclear error: {err}");
 }

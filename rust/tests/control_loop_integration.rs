@@ -23,6 +23,7 @@ fn proactive_scaling_beats_reactive_on_step_load() {
         quality_mix: [0.0, 1.0, 0.0],
         initial_replicas: 1,
         pod_mtbf: None,
+        faults: Vec::new(),
     };
     let (mut la, mut bl) = (0.0, 0.0);
     for seed in [3, 4, 5] {
@@ -74,6 +75,7 @@ fn scales_in_after_burst_passes() {
         quality_mix: [0.0, 1.0, 0.0],
         initial_replicas: 1,
         pod_mtbf: None,
+        faults: Vec::new(),
     };
     let r = Simulation::new(&cfg(), &scenario, Policy::LaImr, Architecture::Microservice).run();
     assert!(r.scale_outs > 0, "never scaled out during the spike");

@@ -19,7 +19,7 @@
 //! harness over the crate's own deterministic RNG (proptest itself is
 //! unavailable offline): each case prints enough context to replay.
 
-use la_imr::config::{ArrivalKind, Config, ScenarioConfig};
+use la_imr::config::{ArrivalKind, Config, FaultSpec, ScenarioConfig, Tier};
 use la_imr::rng::Rng;
 use la_imr::sim::{Architecture, Cell, Policy, Runner, SimResult, Simulation};
 
@@ -74,6 +74,12 @@ fn shapes(seed: u64, faults: bool) -> Vec<ScenarioConfig> {
         }
         .with_seed(seed)
         .with_duration(90.0, 0.0),
+        // ISSUE 4 arrival shapes: diurnal envelope, regime-switching
+        // MMPP, deterministic trace replay.
+        ScenarioConfig::diurnal(4.0, seed).with_duration(90.0, 0.0),
+        ScenarioConfig::mmpp_bursts(4.0, seed).with_duration(90.0, 0.0),
+        ScenarioConfig::trace_replay("trace", (0..360).map(|k| k as f64 * 0.25).collect(), seed)
+            .with_duration(90.0, 0.0),
     ];
     if faults {
         for s in &mut out {
@@ -81,6 +87,59 @@ fn shapes(seed: u64, faults: bool) -> Vec<ScenarioConfig> {
         }
     }
     out
+}
+
+/// The ISSUE 4 fault shapes, each as a fault-spec list to attach to a
+/// scenario: correlated rack failure, tier partition, fail-slow, and
+/// the all-at-once combination.
+fn fault_shapes() -> Vec<(&'static str, Vec<FaultSpec>)> {
+    vec![
+        (
+            "rack-failure",
+            vec![FaultSpec::RackFailure {
+                tier: Tier::Edge,
+                at: 30.0,
+                frac: 0.5,
+            }],
+        ),
+        (
+            "partition",
+            vec![FaultSpec::TierPartition {
+                start: 30.0,
+                duration: 30.0,
+            }],
+        ),
+        (
+            "fail-slow",
+            vec![FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 20.0,
+                factor: 4.0,
+                duration: 40.0,
+            }],
+        ),
+        (
+            "everything",
+            vec![
+                FaultSpec::PodCrashes { mtbf: 45.0 },
+                FaultSpec::RackFailure {
+                    tier: Tier::Edge,
+                    at: 40.0,
+                    frac: 1.0,
+                },
+                FaultSpec::TierPartition {
+                    start: 50.0,
+                    duration: 20.0,
+                },
+                FaultSpec::FailSlow {
+                    tier: Tier::Cloud,
+                    at: 10.0,
+                    factor: 3.0,
+                    duration: 0.0,
+                },
+            ],
+        ),
+    ]
 }
 
 #[test]
@@ -168,6 +227,103 @@ fn conservation_serial_equals_parallel() {
         assert_eq!(a.latencies(), b.latencies(), "cell {k}: latency series differs");
         assert_eq!(a.shed.len(), b.shed.len(), "cell {k}: shed series differs");
     }
+}
+
+#[test]
+fn conservation_under_correlated_fault_shapes() {
+    // ISSUE 4 matrix: the new fault shapes × two arrival shapes × every
+    // policy. Rack failures re-queue through the same kill path as
+    // independent crashes, partitions only re-route, and fail-slow only
+    // stretches service — so the request and copy laws must hold exactly.
+    let cfg = Config::default();
+    for (fname, faults) in fault_shapes() {
+        for base in [
+            ScenarioConfig::bursty(4.0, 7).with_duration(90.0, 0.0),
+            ScenarioConfig::diurnal(4.0, 7).with_duration(90.0, 0.0),
+        ] {
+            let mut scenario = base.clone().with_replicas(2);
+            scenario.name = format!("{}+{fname}", scenario.name);
+            scenario.faults = faults.clone();
+            for policy in Policy::ALL {
+                let r = Simulation::new(&cfg, &scenario, policy, Architecture::Microservice)
+                    .run();
+                assert_conserved(&r, &format!("{} / {:?}", scenario.name, policy));
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_shapes_serial_equals_parallel() {
+    // The sharded runner must not let correlated fault events perturb
+    // determinism: serial and parallel schedules agree bit-for-bit on
+    // the ledger and the latency series for every fault × policy cell.
+    let cfg = Config::default();
+    let mut cells = Vec::new();
+    for (fname, faults) in fault_shapes() {
+        let mut scenario = ScenarioConfig::bursty(4.0, 13)
+            .with_duration(90.0, 0.0)
+            .with_replicas(2);
+        scenario.name = format!("bursty+{fname}");
+        scenario.faults = faults;
+        for policy in Policy::ALL {
+            cells.push(Cell::new(scenario.clone(), policy));
+        }
+    }
+    let serial = Runner::serial().without_cache().run(&cfg, &cells);
+    let parallel = Runner::with_threads(4).without_cache().run(&cfg, &cells);
+    for (k, (a, b)) in serial.iter().zip(&parallel).enumerate() {
+        assert_conserved(a, &format!("serial fault cell {k}"));
+        assert_eq!(a.tail, b.tail, "cell {k}: ledger differs across schedules");
+        assert_eq!(a.latencies(), b.latencies(), "cell {k}: series differs");
+        assert_eq!(a.crashes, b.crashes, "cell {k}: crash count differs");
+    }
+}
+
+#[test]
+fn fail_slow_stale_estimate_regression_for_deadline_shed() {
+    // The targeted ISSUE 4 regression: fail-slow multiplies real service
+    // times while deadline-shed's admission estimate keeps using the
+    // nominal law and the (unchanged) replica count — the estimate goes
+    // optimistic. The contract under that staleness: the accounting laws
+    // still hold exactly, every shed still carries a prediction that
+    // genuinely breached the deadline, and the degradation must actually
+    // reach the tail (the engine may not quietly drop the slow factor).
+    let cfg = Config::default();
+    let (mut p99_slow, mut p99_clean) = (0.0, 0.0);
+    for seed in [71, 72, 73] {
+        let clean = ScenarioConfig::bursty(3.0, seed)
+            .with_duration(180.0, 0.0)
+            .with_replicas(2);
+        let slow = clean.clone().with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 15.0,
+            factor: 6.0,
+            duration: 0.0,
+        });
+        let rs = Simulation::new(&cfg, &slow, Policy::DeadlineShed, Architecture::Microservice)
+            .run();
+        let rc = Simulation::new(&cfg, &clean, Policy::DeadlineShed, Architecture::Microservice)
+            .run();
+        assert_conserved(&rs, &format!("fail-slow deadline-shed seed {seed}"));
+        assert_conserved(&rc, &format!("clean deadline-shed seed {seed}"));
+        // Every recorded refusal must still be an honest deadline breach
+        // (the stale estimate may under-shed, never mis-record).
+        for s in &rs.shed {
+            assert!(
+                s.predicted > cfg.deadline(1),
+                "seed {seed}: shed below the deadline ({} <= {})",
+                s.predicted,
+                cfg.deadline(1)
+            );
+        }
+        p99_slow += rs.summary().p99;
+        p99_clean += rc.summary().p99;
+    }
+    assert!(
+        p99_slow > p99_clean,
+        "fail-slow never reached the tail: ΣP99 {p99_slow:.2} !> {p99_clean:.2}"
+    );
 }
 
 #[test]

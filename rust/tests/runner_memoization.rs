@@ -4,7 +4,7 @@
 //! cache-disabled path must behave exactly like the pre-memoization
 //! runner (every cell computed, repeats and all).
 
-use la_imr::config::{Config, ScenarioConfig};
+use la_imr::config::{ArrivalKind, Config, FaultSpec, ScenarioConfig, Tier};
 use la_imr::sim::{Cell, Policy, Runner};
 
 fn cfg() -> Config {
@@ -147,6 +147,151 @@ fn tail_knobs_change_cache_keys() {
     assert_eq!(
         capped[0].tail.hedges_launched, 0,
         "budget=0 result served from the unbudgeted cache entry"
+    );
+}
+
+#[test]
+fn scenario_shape_knobs_change_cache_keys() {
+    // ISSUE 4 satellite: every new arrival/fault knob must be covered by
+    // `ScenarioConfig::hash_content`, so two configs differing only in
+    // (e.g.) diurnal phase can never collide in `SimCache`. The
+    // destructuring in hash_content is exhaustive, so *adding* a field
+    // without hashing it is a compile error — this pins the per-knob
+    // runtime behaviour.
+    let cfg = cfg();
+    let key_of = |s: &ScenarioConfig| Cell::new(s.clone(), Policy::LaImr).cache_key(&cfg);
+
+    // Diurnal: each envelope knob alone must change the key.
+    let diurnal = ScenarioConfig::diurnal(4.0, 7).with_duration(60.0, 5.0);
+    let base = key_of(&diurnal);
+    for (field, tweak) in [
+        ("base", 0usize),
+        ("amplitude", 1),
+        ("period", 2),
+        ("phase", 3),
+    ] {
+        let mut s = diurnal.clone();
+        let ArrivalKind::Diurnal {
+            base: b,
+            amplitude,
+            period,
+            phase,
+        } = &mut s.arrivals
+        else {
+            panic!("wrong kind")
+        };
+        match tweak {
+            0 => *b += 0.5,
+            1 => *amplitude += 0.05,
+            2 => *period += 1.0,
+            _ => *phase += 0.1,
+        }
+        assert_ne!(base, key_of(&s), "diurnal {field} not keyed");
+    }
+
+    // MMPP: rates, dwell, and regime count.
+    let mmpp = ScenarioConfig::mmpp_bursts(4.0, 7).with_duration(60.0, 5.0);
+    let base = key_of(&mmpp);
+    let mut s = mmpp.clone();
+    if let ArrivalKind::Mmpp { rates, .. } = &mut s.arrivals {
+        rates[1] += 0.5;
+    }
+    assert_ne!(base, key_of(&s), "mmpp rates not keyed");
+    let mut s = mmpp.clone();
+    if let ArrivalKind::Mmpp { dwell, .. } = &mut s.arrivals {
+        dwell[0] += 1.0;
+    }
+    assert_ne!(base, key_of(&s), "mmpp dwell not keyed");
+
+    // Trace replay: content, scale, loop-around, and provenance path.
+    let trace = ScenarioConfig::trace_replay("t", vec![0.5, 1.0, 2.0], 7)
+        .with_duration(60.0, 5.0);
+    let base = key_of(&trace);
+    let mut s = trace.clone();
+    if let ArrivalKind::TraceReplay { times, .. } = &mut s.arrivals {
+        times[2] = 2.5;
+    }
+    assert_ne!(base, key_of(&s), "trace timestamps not keyed");
+    let mut s = trace.clone();
+    if let ArrivalKind::TraceReplay { scale, .. } = &mut s.arrivals {
+        *scale = 2.0;
+    }
+    assert_ne!(base, key_of(&s), "trace scale not keyed");
+    let mut s = trace.clone();
+    if let ArrivalKind::TraceReplay { loop_around, .. } = &mut s.arrivals {
+        *loop_around = true;
+    }
+    assert_ne!(base, key_of(&s), "trace loop_around not keyed");
+
+    // Fault specs: presence and every knob of each shape.
+    let plain = ScenarioConfig::bursty(3.0, 7).with_duration(60.0, 5.0);
+    let base = key_of(&plain);
+    let rack = |frac: f64, at: f64| {
+        plain.clone().with_fault(FaultSpec::RackFailure {
+            tier: Tier::Edge,
+            at,
+            frac,
+        })
+    };
+    assert_ne!(base, key_of(&rack(0.5, 30.0)), "fault presence not keyed");
+    assert_ne!(
+        key_of(&rack(0.5, 30.0)),
+        key_of(&rack(0.75, 30.0)),
+        "rack frac not keyed"
+    );
+    assert_ne!(
+        key_of(&rack(0.5, 30.0)),
+        key_of(&rack(0.5, 35.0)),
+        "rack time not keyed"
+    );
+    let mut cloud_rack = rack(0.5, 30.0);
+    cloud_rack.faults[0] = FaultSpec::RackFailure {
+        tier: Tier::Cloud,
+        at: 30.0,
+        frac: 0.5,
+    };
+    assert_ne!(key_of(&rack(0.5, 30.0)), key_of(&cloud_rack), "rack tier not keyed");
+
+    let part = |start: f64, duration: f64| {
+        plain.clone().with_fault(FaultSpec::TierPartition { start, duration })
+    };
+    assert_ne!(base, key_of(&part(20.0, 10.0)), "partition not keyed");
+    assert_ne!(
+        key_of(&part(20.0, 10.0)),
+        key_of(&part(20.0, 15.0)),
+        "partition duration not keyed"
+    );
+
+    let slow = |factor: f64, duration: f64| {
+        plain.clone().with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 10.0,
+            factor,
+            duration,
+        })
+    };
+    assert_ne!(base, key_of(&slow(3.0, 0.0)), "fail-slow not keyed");
+    assert_ne!(
+        key_of(&slow(3.0, 0.0)),
+        key_of(&slow(4.0, 0.0)),
+        "fail-slow factor not keyed"
+    );
+    assert_ne!(
+        key_of(&slow(3.0, 0.0)),
+        key_of(&slow(3.0, 30.0)),
+        "fail-slow recovery window not keyed"
+    );
+
+    // Behaviourally: a partitioned and an unpartitioned run through one
+    // cached runner must not cross-pollinate — the severed run can never
+    // complete an offloaded request, whatever the cache did first.
+    let runner = Runner::serial();
+    let _open = runner.run(&cfg, &[Cell::new(plain.clone(), Policy::LaImr)]);
+    let severed = runner.run(&cfg, &[Cell::new(part(0.0, 1e9), Policy::LaImr)]);
+    assert_eq!(
+        severed[0].offload_share(),
+        0.0,
+        "partitioned result served from the open-path cache entry"
     );
 }
 
