@@ -29,16 +29,17 @@ fn main() {
     );
 
     let runner = Runner::new();
-    let (data, dt) = bench_once("fig7/8: λ=1..6 × 3 policies × 3 seeds", || {
+    let (data, dt) = bench_once("fig7/8: λ=1..6 × 4 policies × 3 seeds", || {
         report::head_to_head(&cfg, 300.0, &[101, 102, 103], &runner)
     });
     println!("  full sweep in {dt:.2}s on {} workers\n", runner.threads());
     println!("  λ   LA-IMR P50/P95/P99      baseline P50/P95/P99    hedged P50/P95/P99     IQR(LA)  IQR(BL)");
     for h in &data {
-        let la = Summary::from(&h.la_all);
-        let bl = Summary::from(&h.bl_all);
-        let hd = Summary::from(&h.hd_all);
-        let (bla, blb) = (box_stats(&h.la_all), box_stats(&h.bl_all));
+        // Pooled series index like report::SWEEP_POLICIES.
+        let la = Summary::from(&h.all[0]);
+        let bl = Summary::from(&h.all[1]);
+        let hd = Summary::from(&h.all[2]);
+        let (bla, blb) = (box_stats(&h.all[0]), box_stats(&h.all[1]));
         println!(
             "  {}   {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}      {:5.2}/{:5.2}/{:5.2}     {:6.2}  {:6.2}",
             h.lambda,

@@ -1,0 +1,316 @@
+//! Confidence-weighted hybrid reactive–proactive autoscaler (the open
+//! ROADMAP item; A Hybrid Reactive-Proactive Auto-scaling approach,
+//! arXiv 2512.14290): blend PM-HPA's model-inverted replica target with
+//! the reactive observed-latency signal, weighting by how much the
+//! prediction plane can currently be trusted.
+//!
+//! Per managed pool on each control tick:
+//!   N_p ← min{ N : g(N, λ̂) ≤ τ }      (proactive, through the plane's
+//!                                       current — possibly re-fitted — law)
+//!   N_r ← ceil(N · observed_P95 / τ)   (reactive k8s ratio rule on the
+//!                                       scraped, stale observed latency)
+//!   c   ← plane confidence ∈ (0, 1]
+//!   desired ← round(c·N_p + (1−c)·N_r)
+//!
+//! With a healthy model (c → 1) this *is* PM-HPA: replicas spin up before
+//! queues build. When the model drifts (fail-slow pods, co-tenant ramps)
+//! the residual-driven confidence collapses and the blend degrades toward
+//! the reactive signal — trusting what was measured over what was
+//! predicted, exactly when prediction is what's broken. Scale-in keeps
+//! PM-HPA's sustained-low-ρ hysteresis so transient dips don't flap.
+
+use super::baseline::observed_p95_metric;
+use super::{Autoscaler, ScaleInHold};
+use crate::cluster::{DeploymentKey, MetricRegistry};
+use crate::config::Config;
+use crate::coordinator::ControlState;
+use crate::latency_model::Predictor;
+use crate::SimTime;
+
+/// Confidence-weighted blend of the proactive and reactive replica
+/// targets: full trust → proactive, zero trust → reactive, linear in
+/// between, clamped to [1, n_max].
+pub fn blend_targets(confidence: f64, proactive: u32, reactive: u32, n_max: u32) -> u32 {
+    let c = confidence.clamp(0.0, 1.0);
+    let t = c * proactive as f64 + (1.0 - c) * reactive as f64;
+    (t.round() as u32).clamp(1, n_max.max(1))
+}
+
+struct Managed {
+    key: DeploymentKey,
+    /// τ_m — both the inversion budget and the reactive ratio target.
+    tau: f64,
+    n_max: u32,
+    hold: ScaleInHold,
+}
+
+/// The hybrid scaler.
+pub struct HybridScaler {
+    managed: Vec<Managed>,
+    keys: Vec<DeploymentKey>,
+    predictor: Predictor,
+    rho_low: f64,
+    /// How long ρ must stay below ρ_low before scaling in [s].
+    scale_in_delay: f64,
+}
+
+impl HybridScaler {
+    /// Manage the given deployments with a private prediction plane.
+    pub fn new(cfg: &Config, keys: &[DeploymentKey]) -> Self {
+        Self::with_predictor(cfg, keys, Predictor::from_config(cfg))
+    }
+
+    /// Manage the given deployments over a shared prediction plane (the
+    /// handle the hybrid policy also exposes to the engine, so completion
+    /// observations drive the confidence this scaler blends by).
+    pub fn with_predictor(cfg: &Config, keys: &[DeploymentKey], predictor: Predictor) -> Self {
+        let managed = keys
+            .iter()
+            .map(|&key| Managed {
+                key,
+                tau: cfg.slo_budget(key.model),
+                n_max: cfg.instances[key.instance].n_max,
+                hold: ScaleInHold::default(),
+            })
+            .collect();
+        HybridScaler {
+            managed,
+            keys: keys.to_vec(),
+            predictor,
+            rho_low: cfg.slo.rho_low,
+            scale_in_delay: 30.0,
+        }
+    }
+
+    /// Override the scale-in hysteresis delay (tests / ablations).
+    pub fn with_scale_in_delay(mut self, delay: f64) -> Self {
+        self.scale_in_delay = delay;
+        self
+    }
+
+    /// Current blend weight on the *proactive* target for a pool — the
+    /// prediction plane's confidence (telemetry / tests).
+    pub fn blend_weight(&self, key: DeploymentKey) -> f64 {
+        self.predictor.confidence(key)
+    }
+}
+
+impl Autoscaler for HybridScaler {
+    fn publish(
+        &mut self,
+        now: SimTime,
+        state: &ControlState,
+        metrics: &mut MetricRegistry,
+        lambda: &[f64],
+    ) {
+        for m in &mut self.managed {
+            let lambda = lambda.get(m.key.model).copied().unwrap_or(0.0);
+            let view = state.view(m.key);
+            let n = view.active.max(1);
+
+            // Proactive: invert the current law; pin at n_max when even
+            // that cannot meet τ (PM-HPA semantics).
+            let proactive = self
+                .predictor
+                .required_replicas(m.key, lambda, m.tau, m.n_max)
+                .unwrap_or(m.n_max);
+
+            // Reactive: k8s ratio rule on the scraped observed P95. No
+            // scrape yet → nothing measured to blend toward.
+            let reactive = metrics
+                .scraped(&observed_p95_metric(m.key), now)
+                .map(|(p95, _)| ((n as f64 * p95 / m.tau).ceil() as u32).clamp(1, m.n_max));
+
+            let blended = match reactive {
+                None => proactive,
+                Some(r) => {
+                    blend_targets(self.predictor.confidence(m.key), proactive, r, m.n_max)
+                }
+            };
+
+            // Scale-in hysteresis — the same shared rule PM-HPA applies.
+            let target = m.hold.apply(
+                now,
+                view.active,
+                view.rho,
+                blended,
+                self.rho_low,
+                self.scale_in_delay,
+            );
+
+            let name = MetricRegistry::scoped(
+                crate::cluster::DESIRED_REPLICAS,
+                m.key.model,
+                m.key.instance,
+            );
+            metrics.set(&name, target as f64, now);
+        }
+    }
+
+    fn managed(&self) -> &[DeploymentKey] {
+        &self.keys
+    }
+
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::state::ReplicaView;
+    use crate::latency_model::LatencyModel;
+
+    fn setup(online: bool) -> (Config, HybridScaler, ControlState, MetricRegistry, DeploymentKey) {
+        let mut cfg = Config::default();
+        cfg.prediction.online = online;
+        cfg.prediction.min_samples = 5;
+        cfg.prediction.refit_every = 1.0;
+        cfg.prediction.confidence_halflife = 2.0;
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let key = DeploymentKey { model: m, instance: 0 };
+        let scaler = HybridScaler::new(&cfg, &[key]);
+        let mut state = ControlState::new();
+        state.update(
+            key,
+            ReplicaView {
+                active: 2,
+                ready: 2,
+                desired: 2,
+                rho: 0.8,
+                queue_depth: 0,
+            },
+        );
+        (cfg, scaler, state, MetricRegistry::new(), key)
+    }
+
+    fn desired(metrics: &MetricRegistry, key: DeploymentKey) -> Option<f64> {
+        metrics.latest(&MetricRegistry::scoped(
+            crate::cluster::DESIRED_REPLICAS,
+            key.model,
+            key.instance,
+        ))
+    }
+
+    /// λ vector with one model's rate set.
+    fn lam(cfg: &Config, model: usize, v: f64) -> Vec<f64> {
+        let mut l = vec![0.0; cfg.models.len()];
+        l[model] = v;
+        l
+    }
+
+    #[test]
+    fn blend_endpoints_and_monotonicity() {
+        assert_eq!(blend_targets(1.0, 6, 2, 8), 6);
+        assert_eq!(blend_targets(0.0, 6, 2, 8), 2);
+        // Monotone from reactive to proactive as confidence rises.
+        let mut prev = 0;
+        for k in 0..=10 {
+            let t = blend_targets(k as f64 / 10.0, 8, 1, 8);
+            assert!(t >= prev, "blend not monotone at c={}", k as f64 / 10.0);
+            prev = t;
+        }
+        // Clamped into [1, n_max].
+        assert_eq!(blend_targets(0.5, 30, 30, 8), 8);
+        assert_eq!(blend_targets(1.5, 4, 1, 8), 4); // over-trust clamps to c=1
+    }
+
+    #[test]
+    fn no_scrape_means_pure_proactive() {
+        let (cfg, mut s, state, mut metrics, key) = setup(false);
+        s.publish(0.0, &state, &mut metrics, &lam(&cfg, key.model, 4.0));
+        let lm = LatencyModel::from_config(&cfg, key.model, key.instance);
+        let expect = lm
+            .required_replicas(4.0, cfg.slo_budget(key.model), cfg.instances[0].n_max)
+            .unwrap();
+        assert_eq!(desired(&metrics, key), Some(expect as f64));
+    }
+
+    #[test]
+    fn full_confidence_ignores_reactive_signal() {
+        // Static mode: confidence is pinned at 1.0 → the scraped latency
+        // cannot drag the target off the model inversion.
+        let (cfg, mut s, state, mut metrics, key) = setup(false);
+        metrics.set(&observed_p95_metric(key), 40.0, 0.0); // screaming
+        metrics.scrape(0.0);
+        assert_eq!(s.blend_weight(key), 1.0);
+        s.publish(0.0, &state, &mut metrics, &lam(&cfg, key.model, 4.0));
+        let lm = LatencyModel::from_config(&cfg, key.model, key.instance);
+        let expect = lm
+            .required_replicas(4.0, cfg.slo_budget(key.model), cfg.instances[0].n_max)
+            .unwrap();
+        assert_eq!(desired(&metrics, key), Some(expect as f64));
+    }
+
+    #[test]
+    fn blend_shifts_toward_reactive_as_confidence_drops() {
+        // The ISSUE 5 acceptance property: inject drift so the plane's
+        // confidence collapses, then show the published target moves from
+        // the (stale, low) proactive inversion toward the (high) reactive
+        // ratio recommendation.
+        let (cfg, mut s, state, mut metrics, key) = setup(true);
+        let lm = LatencyModel::from_config(&cfg, key.model, key.instance);
+        let tau = cfg.slo_budget(key.model);
+        let n_max = cfg.instances[0].n_max;
+
+        // Reactive evidence: observed P95 at 6x the target on 2 actives
+        // → ratio target ceil(2·6) = 12, clamped to n_max = 8.
+        metrics.set(&observed_p95_metric(key), 6.0 * tau, 0.0);
+        metrics.scrape(0.0);
+
+        // Healthy plane first: targets stay near the model inversion.
+        s.publish(0.0, &state, &mut metrics, &lam(&cfg, key.model, 1.0));
+        let confident_target = desired(&metrics, key).unwrap();
+
+        // Drift: completions come back 6x slower than predicted, for many
+        // half-lives — confidence collapses (and the refit happens, but
+        // residuals during the transition already sank the trust).
+        for k in 0..120 {
+            let t = 1.0 + k as f64 * 0.25;
+            // Alternate clean/degraded observations so the re-fitted law
+            // keeps mispredicting *both* populations: trust stays low.
+            let factor = if k % 2 == 0 { 6.0 } else { 1.0 };
+            let tilde = 0.5;
+            s.predictor
+                .observe(key, t, tilde, factor * lm.processing_affine(tilde));
+        }
+        let c = s.blend_weight(key);
+        assert!(c < 0.6, "confidence never dropped: {c}");
+
+        metrics.set(&observed_p95_metric(key), 6.0 * tau, 40.0);
+        metrics.scrape(40.0);
+        s.publish(40.0, &state, &mut metrics, &lam(&cfg, key.model, 1.0));
+        let drifted_target = desired(&metrics, key).unwrap();
+
+        // λ=1 on the nominal law needs 1 replica; the reactive signal
+        // says 8. Low confidence must pull the blend strictly upward.
+        assert!(
+            drifted_target > confident_target,
+            "blend never moved toward reactive: {drifted_target} !> {confident_target}"
+        );
+        assert!(drifted_target <= n_max as f64);
+    }
+
+    #[test]
+    fn scale_in_waits_for_sustained_low_rho() {
+        let (cfg, mut s, mut state, mut metrics, key) = setup(false);
+        state.update(
+            key,
+            ReplicaView {
+                active: 4,
+                ready: 4,
+                desired: 4,
+                rho: 0.1,
+                queue_depth: 0,
+            },
+        );
+        let l = lam(&cfg, key.model, 0.5);
+        s.publish(0.0, &state, &mut metrics, &l);
+        assert_eq!(desired(&metrics, key), Some(4.0));
+        s.publish(10.0, &state, &mut metrics, &l);
+        assert_eq!(desired(&metrics, key), Some(4.0));
+        s.publish(31.0, &state, &mut metrics, &l);
+        assert!(desired(&metrics, key).unwrap() < 4.0);
+    }
+}

@@ -7,12 +7,18 @@
 //! * [`ReactiveBaseline`] — "traditional latency-only autoscaling"
 //!   (§V-B's comparator): thresholds on the *scraped* (stale) observed
 //!   latency with a stabilisation window, reproducing the 60–120 s
-//!   reaction lag the paper ascribes to metric-driven HPA.
+//!   reaction lag the paper ascribes to metric-driven HPA;
+//! * [`HybridScaler`] — confidence-weighted reactive–proactive blend
+//!   (ISSUE 5 / arXiv 2512.14290): PM-HPA's model-inverted target and the
+//!   reactive ratio rule, mixed by the prediction plane's trust score, so
+//!   scaling degrades toward reactive exactly when the model drifts.
 
 mod baseline;
+mod hybrid;
 mod pm_hpa;
 
 pub use baseline::ReactiveBaseline;
+pub use hybrid::{blend_targets, HybridScaler};
 pub use pm_hpa::PmHpa;
 
 use crate::cluster::{DeploymentKey, MetricRegistry};
@@ -20,6 +26,46 @@ use crate::coordinator::ControlState;
 use crate::SimTime;
 
 pub use baseline::observed_p95_metric;
+
+/// Scale-in hysteresis shared by the proactive scalers (PM-HPA and the
+/// hybrid blend): a target below the pool's active count only applies
+/// after ρ has stayed under ρ_low for the delay; any ρ recovery — or a
+/// target at/above active — resets the clock. One instance per managed
+/// deployment (it carries the per-pool clock).
+#[derive(Debug, Default)]
+pub(crate) struct ScaleInHold {
+    /// Time at which ρ first dropped below ρ_low (the hysteresis clock).
+    low_since: Option<SimTime>,
+}
+
+impl ScaleInHold {
+    /// Clamp `target` per the hysteresis rule for a pool currently at
+    /// `active` replicas with traffic intensity `rho`.
+    pub(crate) fn apply(
+        &mut self,
+        now: SimTime,
+        active: u32,
+        rho: f64,
+        target: u32,
+        rho_low: f64,
+        delay: f64,
+    ) -> u32 {
+        if target >= active {
+            self.low_since = None;
+            return target;
+        }
+        if rho >= rho_low {
+            self.low_since = None;
+            return active;
+        }
+        let since = *self.low_since.get_or_insert(now);
+        if now - since < delay {
+            active
+        } else {
+            target
+        }
+    }
+}
 
 /// A policy that periodically publishes `desired_replicas{m,i}` gauges.
 pub trait Autoscaler {

@@ -7,48 +7,57 @@
 //! SLO and are shed once ρ < ρ_low (with hysteresis so transient dips
 //! don't flap the pool).
 
-use super::Autoscaler;
+use super::{Autoscaler, ScaleInHold};
 use crate::cluster::{DeploymentKey, MetricRegistry};
 use crate::config::Config;
 use crate::coordinator::ControlState;
-use crate::latency_model::LatencyModel;
+use crate::latency_model::Predictor;
 use crate::SimTime;
 
 /// One managed deployment's state.
 struct Managed {
     key: DeploymentKey,
-    model: LatencyModel,
     tau: f64,
     n_max: u32,
-    /// Time at which ρ first dropped below ρ_low (hysteresis clock).
-    low_since: Option<SimTime>,
+    hold: ScaleInHold,
 }
 
 /// The proactive autoscaler.
 pub struct PmHpa {
     managed: Vec<Managed>,
     keys: Vec<DeploymentKey>,
+    /// Shared prediction plane (ISSUE 5): the inversion g(N) ≤ τ reads the
+    /// current — possibly online-recalibrated — law instead of a model
+    /// cloned at startup. Static mode is the frozen closed form exactly.
+    predictor: Predictor,
     rho_low: f64,
     /// How long ρ must stay below ρ_low before scaling in [s].
     scale_in_delay: f64,
 }
 
 impl PmHpa {
-    /// Manage the given deployments with the paper's constants.
+    /// Manage the given deployments with the paper's constants and a
+    /// private (frozen unless configured otherwise) prediction plane.
     pub fn new(cfg: &Config, keys: &[DeploymentKey]) -> Self {
+        Self::with_predictor(cfg, keys, Predictor::from_config(cfg))
+    }
+
+    /// Manage the given deployments over a *shared* prediction plane —
+    /// the handle the owning policy also exposes to the engine.
+    pub fn with_predictor(cfg: &Config, keys: &[DeploymentKey], predictor: Predictor) -> Self {
         let managed = keys
             .iter()
             .map(|&key| Managed {
                 key,
-                model: LatencyModel::from_config(cfg, key.model, key.instance),
                 tau: cfg.slo_budget(key.model),
                 n_max: cfg.instances[key.instance].n_max,
-                low_since: None,
+                hold: ScaleInHold::default(),
             })
             .collect();
         PmHpa {
             managed,
             keys: keys.to_vec(),
+            predictor,
             rho_low: cfg.slo.rho_low,
             scale_in_delay: 30.0,
         }
@@ -75,26 +84,21 @@ impl Autoscaler for PmHpa {
             // Proactive target: minimal N with predicted g ≤ τ. If even
             // n_max cannot meet τ we still pin the pool at n_max (the
             // router's φ-offload handles the residual).
-            let mut target = m
-                .model
-                .required_replicas(lambda, m.tau, m.n_max)
+            let raw = self
+                .predictor
+                .required_replicas(m.key, lambda, m.tau, m.n_max)
                 .unwrap_or(m.n_max);
 
             // Scale-in hysteresis: only drop below the current active
             // count after ρ has stayed under ρ_low for scale_in_delay.
-            if target < view.active {
-                if view.rho < self.rho_low {
-                    let since = *m.low_since.get_or_insert(now);
-                    if now - since < self.scale_in_delay {
-                        target = view.active;
-                    }
-                } else {
-                    m.low_since = None;
-                    target = view.active;
-                }
-            } else {
-                m.low_since = None;
-            }
+            let target = m.hold.apply(
+                now,
+                view.active,
+                view.rho,
+                raw,
+                self.rho_low,
+                self.scale_in_delay,
+            );
 
             let name = MetricRegistry::scoped(
                 crate::cluster::DESIRED_REPLICAS,
@@ -118,6 +122,7 @@ impl Autoscaler for PmHpa {
 mod tests {
     use super::*;
     use crate::coordinator::state::ReplicaView;
+    use crate::latency_model::LatencyModel;
 
     fn setup() -> (Config, PmHpa, ControlState, MetricRegistry) {
         let cfg = Config::default();

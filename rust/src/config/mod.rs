@@ -207,6 +207,46 @@ impl Default for TailPolicy {
     }
 }
 
+/// Prediction-plane knobs (ISSUE 5): online recalibration of the affine
+/// power law from observed completions, with an EWMA confidence score.
+/// With `online = false` (the default) every consumer delegates to the
+/// frozen "once calibrated" closed-form model bit-for-bit, so the paper's
+/// comparators are untouched; with it on, per-deployment calibrators
+/// re-fit (α, β, γ) over a sliding sample window and the router /
+/// PM-HPA / deadline-shed / hybrid predictions track observed drift
+/// (fail-slow pods, co-tenant interference) instead of going stale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PredictionPolicy {
+    /// Enable online recalibration. Off = frozen model, bit-identical to
+    /// the pre-prediction-plane behaviour.
+    pub online: bool,
+    /// Sliding sample-buffer span [s]: completions older than this are
+    /// evicted before a refit, bounding how long dead drift lingers.
+    pub window: f64,
+    /// Refit cadence [s]: at most one (α, β, γ) re-fit per calibrator per
+    /// this many seconds.
+    pub refit_every: f64,
+    /// Minimum buffered samples before any refit (the anchored fit needs
+    /// 2, the free fit 3 — below `min_samples` the nominal model holds).
+    pub min_samples: usize,
+    /// Half-life [s] of the confidence EWMA over relative prediction
+    /// residuals: after this long of consistently wrong predictions the
+    /// confidence has moved halfway to the observed accuracy score.
+    pub confidence_halflife: f64,
+}
+
+impl Default for PredictionPolicy {
+    fn default() -> Self {
+        Self {
+            online: false,
+            window: 60.0,
+            refit_every: 5.0,
+            min_samples: 8,
+            confidence_halflife: 10.0,
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -215,6 +255,7 @@ pub struct Config {
     pub slo: SloPolicy,
     pub cluster: ClusterPolicy,
     pub tail: TailPolicy,
+    pub prediction: PredictionPolicy,
 }
 
 impl Default for Config {
@@ -276,6 +317,7 @@ impl Default for Config {
             slo: SloPolicy::default(),
             cluster: ClusterPolicy::default(),
             tail: TailPolicy::default(),
+            prediction: PredictionPolicy::default(),
         }
     }
 }
@@ -342,6 +384,27 @@ impl Config {
             self.tail.budget_window.is_finite() && self.tail.budget_window > 0.0,
             "tail.budget_window must be > 0 seconds (got {})",
             self.tail.budget_window
+        );
+        anyhow::ensure!(
+            self.prediction.window.is_finite() && self.prediction.window > 0.0,
+            "prediction.window must be > 0 seconds (got {})",
+            self.prediction.window
+        );
+        anyhow::ensure!(
+            self.prediction.refit_every.is_finite() && self.prediction.refit_every > 0.0,
+            "prediction.refit_every must be > 0 seconds (got {})",
+            self.prediction.refit_every
+        );
+        anyhow::ensure!(
+            self.prediction.min_samples >= 2,
+            "prediction.min_samples must be >= 2 (got {}; the anchored fit needs two points)",
+            self.prediction.min_samples
+        );
+        anyhow::ensure!(
+            self.prediction.confidence_halflife.is_finite()
+                && self.prediction.confidence_halflife > 0.0,
+            "prediction.confidence_halflife must be > 0 seconds (got {})",
+            self.prediction.confidence_halflife
         );
         let mut names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
         names.sort_unstable();
@@ -420,6 +483,7 @@ impl Config {
             slo,
             cluster,
             tail,
+            prediction,
         } = self;
         h.write_usize(models.len());
         for m in models {
@@ -510,6 +574,18 @@ impl Config {
         h.write_u64(hedge_budget.to_bits());
         h.write_u64(budget_window.to_bits());
         h.write_u8(*hedge_cancel as u8);
+        let PredictionPolicy {
+            online,
+            window,
+            refit_every,
+            min_samples,
+            confidence_halflife,
+        } = prediction;
+        h.write_u8(*online as u8);
+        for x in [window, refit_every, confidence_halflife] {
+            h.write_u64(x.to_bits());
+        }
+        h.write_usize(*min_samples);
     }
 }
 
@@ -598,6 +674,36 @@ mod tests {
         let mut c = Config::default();
         c.tail.budget_window = 0.0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn prediction_defaults_frozen_and_valid() {
+        let c = Config::default();
+        assert!(!c.prediction.online, "online recalibration must default off");
+        assert!(c.prediction.window > 0.0);
+        assert!(c.prediction.refit_every > 0.0);
+        assert!(c.prediction.min_samples >= 2);
+        assert!(c.prediction.confidence_halflife > 0.0);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn rejects_bad_prediction_knobs() {
+        let mut c = Config::default();
+        c.prediction.window = 0.0;
+        assert!(c.validate().unwrap_err().to_string().contains("window"));
+
+        let mut c = Config::default();
+        c.prediction.min_samples = 1;
+        assert!(c.validate().unwrap_err().to_string().contains("min_samples"));
+
+        let mut c = Config::default();
+        c.prediction.confidence_halflife = -2.0;
+        assert!(c
+            .validate()
+            .unwrap_err()
+            .to_string()
+            .contains("confidence_halflife"));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 
 use super::{
     parse_trace, ArrivalKind, ClusterPolicy, Config, FaultSpec, InstanceSpec, ModelProfile,
-    QualityClass, ScenarioConfig, SloPolicy, TailPolicy, Tier,
+    PredictionPolicy, QualityClass, ScenarioConfig, SloPolicy, TailPolicy, Tier,
 };
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -182,6 +182,41 @@ impl TailPolicy {
         o.insert("hedge_budget".into(), Value::Num(self.hedge_budget));
         o.insert("budget_window".into(), Value::Num(self.budget_window));
         o.insert("hedge_cancel".into(), Value::Bool(self.hedge_cancel));
+        Value::Obj(o)
+    }
+}
+
+impl PredictionPolicy {
+    fn from_json(v: &Value, base: PredictionPolicy) -> anyhow::Result<Self> {
+        Ok(PredictionPolicy {
+            online: match v.get("online") {
+                None => base.online,
+                Some(x) => x
+                    .as_bool()
+                    .ok_or_else(|| anyhow::anyhow!("prediction.online: expected a bool"))?,
+            },
+            window: num(v, "window", base.window)?,
+            refit_every: num(v, "refit_every", base.refit_every)?,
+            min_samples: match v.get("min_samples") {
+                None => base.min_samples,
+                Some(x) => x.as_u64().ok_or_else(|| {
+                    anyhow::anyhow!("prediction.min_samples: expected a non-negative integer")
+                })? as usize,
+            },
+            confidence_halflife: num(v, "confidence_halflife", base.confidence_halflife)?,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("online".into(), Value::Bool(self.online));
+        o.insert("window".into(), Value::Num(self.window));
+        o.insert("refit_every".into(), Value::Num(self.refit_every));
+        o.insert("min_samples".into(), Value::Num(self.min_samples as f64));
+        o.insert(
+            "confidence_halflife".into(),
+            Value::Num(self.confidence_halflife),
+        );
         Value::Obj(o)
     }
 }
@@ -603,12 +638,17 @@ impl Config {
             None => base.tail,
             Some(t) => TailPolicy::from_json(t, TailPolicy::default())?,
         };
+        let prediction = match v.get("prediction") {
+            None => base.prediction,
+            Some(p) => PredictionPolicy::from_json(p, PredictionPolicy::default())?,
+        };
         Ok(Config {
             models,
             instances,
             slo,
             cluster,
             tail,
+            prediction,
         })
     }
 
@@ -626,6 +666,7 @@ impl Config {
         o.insert("slo".into(), self.slo.to_json());
         o.insert("cluster".into(), self.cluster.to_json());
         o.insert("tail".into(), self.tail.to_json());
+        o.insert("prediction".into(), self.prediction.to_json());
         json::to_string(&Value::Obj(o))
     }
 }

@@ -4,7 +4,7 @@
 use crate::cluster::DeploymentKey;
 use crate::config::{Config, Tier};
 use crate::coordinator::state::ControlState;
-use crate::latency_model::LatencyModel;
+use crate::latency_model::Predictor;
 
 /// Pick the upstream target for a request of model `m` currently homed on
 /// `from`: the instance (excluding `from.instance`) with the smallest
@@ -12,15 +12,16 @@ use crate::latency_model::LatencyModel;
 /// tier". Prefers feasible (finite-g) targets; falls back to the cloud
 /// tier with most headroom when every pool is saturated.
 ///
-/// `models` is the router's flat model-major grid: index = m·|I| + i.
+/// Predictions (and the per-pod service rate μ̂ in the headroom fallback)
+/// go through the shared prediction plane, so an online-recalibrated
+/// upstream estimate steers deflection the same as routing.
 pub fn pick_upstream(
     cfg: &Config,
-    models: &[LatencyModel],
+    predictor: &Predictor,
     state: &ControlState,
     from: DeploymentKey,
     lambda: f64,
 ) -> Option<DeploymentKey> {
-    let n_instances = cfg.instances.len();
     let mut best: Option<(f64, DeploymentKey)> = None;
     let mut fallback: Option<(f64, DeploymentKey)> = None;
     for (i, spec) in cfg.instances.iter().enumerate() {
@@ -31,11 +32,8 @@ pub fn pick_upstream(
             model: from.model,
             instance: i,
         };
-        let Some(model) = models.get(from.model * n_instances + i) else {
-            continue;
-        };
         let view = state.view(key);
-        let g = model.g_lambda(lambda, view.active.max(1));
+        let g = predictor.g_lambda(key, lambda, view.active.max(1));
         if g.is_finite() {
             if best.map(|(b, _)| g < b).unwrap_or(true) {
                 best = Some((g, key));
@@ -43,7 +41,7 @@ pub fn pick_upstream(
         } else if spec.tier == Tier::Cloud {
             // Saturated everywhere: prefer the cloud pool with most μ·N
             // headroom (least negative margin).
-            let headroom = view.active as f64 * model.mu() - lambda;
+            let headroom = view.active as f64 * predictor.mu(key) - lambda;
             if fallback.map(|(h, _)| headroom > h).unwrap_or(true) {
                 fallback = Some((headroom, key));
             }
@@ -103,14 +101,12 @@ mod tests {
     use super::*;
     use crate::coordinator::state::ReplicaView;
 
-    fn setup() -> (Config, Vec<LatencyModel>, ControlState) {
+    fn setup() -> (Config, Predictor, ControlState) {
         let cfg = Config::default();
-        let mut models = Vec::new();
         let mut state = ControlState::new();
         for m in 0..cfg.models.len() {
             for i in 0..cfg.instances.len() {
                 let key = DeploymentKey { model: m, instance: i };
-                models.push(LatencyModel::from_config(&cfg, m, i));
                 state.update(
                     key,
                     ReplicaView {
@@ -123,30 +119,31 @@ mod tests {
                 );
             }
         }
-        (cfg, models, state)
+        let predictor = Predictor::from_config(&cfg);
+        (cfg, predictor, state)
     }
 
     #[test]
     fn upstream_is_cloud_for_edge_yolo() {
-        let (cfg, models, state) = setup();
+        let (cfg, predictor, state) = setup();
         let (m, _) = cfg.model_by_name("yolov5m").unwrap();
         let from = DeploymentKey { model: m, instance: 0 };
-        let up = pick_upstream(&cfg, &models, &state, from, 3.0).unwrap();
+        let up = pick_upstream(&cfg, &predictor, &state, from, 3.0).unwrap();
         assert_eq!(up.instance, 1); // the cloud tier
         assert_eq!(up.model, m);
     }
 
     #[test]
     fn upstream_excludes_origin() {
-        let (cfg, models, state) = setup();
+        let (cfg, predictor, state) = setup();
         let from = DeploymentKey { model: 1, instance: 1 };
-        let up = pick_upstream(&cfg, &models, &state, from, 1.0).unwrap();
+        let up = pick_upstream(&cfg, &predictor, &state, from, 1.0).unwrap();
         assert_ne!(up.instance, 1);
     }
 
     #[test]
     fn saturated_falls_back_to_cloud_headroom() {
-        let (cfg, models, mut state) = setup();
+        let (cfg, predictor, mut state) = setup();
         // Saturate every pool: huge λ.
         let (m, _) = cfg.model_by_name("yolov5m").unwrap();
         for i in 0..cfg.instances.len() {
@@ -162,7 +159,7 @@ mod tests {
             );
         }
         let from = DeploymentKey { model: m, instance: 0 };
-        let up = pick_upstream(&cfg, &models, &state, from, 100.0);
+        let up = pick_upstream(&cfg, &predictor, &state, from, 100.0);
         assert_eq!(up.unwrap().instance, 1); // still lands on cloud
     }
 

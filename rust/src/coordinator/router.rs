@@ -24,7 +24,7 @@ use crate::cluster::DeploymentKey;
 use crate::config::Config;
 use crate::coordinator::offload::{offload_fraction, pick_upstream, FractionSplitter};
 use crate::coordinator::state::ControlState;
-use crate::latency_model::{LatencyModel, PredictionTable};
+use crate::latency_model::{LatencyModel, PredictionTable, Predictor};
 use crate::telemetry::{Ewma, SlidingRate};
 use crate::{ModelId, SimTime};
 
@@ -103,29 +103,53 @@ pub struct Router {
     /// Home deployment per model (its quality tier's default pool).
     home: Vec<DeploymentKey>,
     telemetry: Vec<ModelTelemetry>,
+    /// Shared prediction plane (ISSUE 5). With `prediction.online` off
+    /// the router's own static tables/models drive every prediction
+    /// bit-for-bit as before; with it on, predictions read the plane's
+    /// windowed re-fits (the frozen tables would defeat recalibration).
+    predictor: Predictor,
+    /// Cached `predictor.online()` — read once at construction so the
+    /// static hot path never touches the plane's `RefCell`.
+    predictor_online: bool,
     /// Use the interpolated table (true) or evaluate the model directly —
-    /// switchable for the table-vs-direct ablation bench.
+    /// switchable for the table-vs-direct ablation bench. Ignored in
+    /// online-prediction mode.
     pub use_table: bool,
 }
 
 impl Router {
-    /// Build from config. `table_lambda_max`/`points` size the prediction
-    /// tables (λ up to ~4× the paper's peak keeps every lookup on-grid).
+    /// Build from config with a private prediction plane. `table_lambda_max`/
+    /// `points` size the prediction tables (λ up to ~4× the paper's peak
+    /// keeps every lookup on-grid).
     pub fn new(cfg: &Config) -> Self {
+        Self::with_predictor(cfg, Predictor::from_config(cfg))
+    }
+
+    /// Build from config over a *shared* prediction plane — the ISSUE 5
+    /// wiring: the engine publishes observations into the same plane this
+    /// router predicts from.
+    pub fn with_predictor(cfg: &Config, predictor: Predictor) -> Self {
         let n_instances = cfg.instances.len();
+        let build_tables = !predictor.online();
         let mut models = Vec::with_capacity(cfg.models.len() * n_instances);
         let mut tables = Vec::with_capacity(cfg.models.len() * n_instances);
         for m in 0..cfg.models.len() {
             for i in 0..n_instances {
                 let lm = LatencyModel::from_config(cfg, m, i);
-                tables.push(PredictionTable::build(
-                    &lm,
-                    24.0,
-                    1025,
-                    cfg.instances[i].n_max,
-                    cfg.slo.table_refresh,
-                    0.0,
-                ));
+                // The interpolated tables exist to make the *frozen* law
+                // cheap; in online mode predict() bypasses them entirely
+                // (a frozen table is what drift invalidates), so skip the
+                // ~50k model evaluations their construction costs.
+                if build_tables {
+                    tables.push(PredictionTable::build(
+                        &lm,
+                        24.0,
+                        1025,
+                        cfg.instances[i].n_max,
+                        cfg.slo.table_refresh,
+                        0.0,
+                    ));
+                }
                 models.push(lm);
             }
         }
@@ -139,6 +163,7 @@ impl Router {
                 splitter: FractionSplitter::new(),
             })
             .collect();
+        let predictor_online = predictor.online();
         Router {
             cfg: cfg.clone(),
             n_instances,
@@ -146,6 +171,8 @@ impl Router {
             tables,
             home,
             telemetry,
+            predictor,
+            predictor_online,
             use_table: true,
         }
     }
@@ -166,9 +193,14 @@ impl Router {
     }
 
     /// Predicted g for (key, λ, N): table lookup on the hot path, direct
-    /// evaluation when `use_table` is off.
+    /// evaluation when `use_table` is off. In online-prediction mode both
+    /// static paths are bypassed — the shared plane's recalibrated law is
+    /// the prediction (a frozen table is exactly what drift invalidates).
     #[inline]
     pub fn predict(&self, key: DeploymentKey, lambda: f64, n: u32) -> f64 {
+        if self.predictor_online {
+            return self.predictor.g_lambda(key, lambda, n);
+        }
         let k = self.idx(key);
         if self.use_table {
             self.tables[k].lookup(lambda, n)
@@ -197,7 +229,7 @@ impl Router {
 
         // 4. Instantaneous breach → protect THIS request: offload now.
         if g_inst > tau {
-            if let Some(up) = pick_upstream(&self.cfg, &self.models, state, home, lambda) {
+            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda) {
                 let uview = state.view(up);
                 let predicted = self.predict(up, lambda, uview.active.max(1));
                 // Even when deflecting, keep the slow loop informed (6–9).
@@ -217,7 +249,7 @@ impl Router {
 
         // Fractional bulk offload: this request may fall in the φ share.
         if phi > 0.0 && self.telemetry[model].splitter.should_offload(phi) {
-            if let Some(up) = pick_upstream(&self.cfg, &self.models, state, home, lambda) {
+            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda) {
                 let uview = state.view(up);
                 return Decision {
                     target: up,
@@ -268,7 +300,7 @@ impl Router {
             None => {
                 // No replica meets the budget → offload upstream
                 // (§IV-B step v fallback).
-                let up = pick_upstream(&self.cfg, &self.models, state, home, lambda)
+                let up = pick_upstream(&self.cfg, &self.predictor, state, home, lambda)
                     .unwrap_or(home);
                 let uview = state.view(up);
                 Decision {

@@ -12,12 +12,16 @@
 //!     replica count (Eq. 17) → capacity planning / PM-HPA targets.
 
 mod calibration;
+mod online;
+mod predictor;
 mod table;
 
 pub use calibration::{
     fit_affine_power_law, fit_anchored, paper_table4_samples, CalibrationFit,
     CalibrationSample,
 };
+pub use online::OnlineCalibrator;
+pub use predictor::Predictor;
 pub use table::PredictionTable;
 
 use crate::config::{Config, InstanceSpec, ModelProfile};

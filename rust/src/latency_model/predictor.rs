@@ -1,0 +1,243 @@
+//! The prediction plane (ISSUE 5): one shared, cheaply-cloneable
+//! [`Predictor`] handle over a dense grid of per-(model, instance)
+//! [`OnlineCalibrator`]s, replacing the `LatencyModel` clones each
+//! consumer used to freeze at startup.
+//!
+//! Flow: the engine publishes every completion as an observation
+//! `(deployment, λ̃ at dispatch, observed service latency)` via
+//! [`Predictor::observe`]; the router, PM-HPA, the capacity planner, the
+//! deadline-shed admission estimate, and the hybrid scaler all read their
+//! predictions back through the same handle. With `prediction.online`
+//! off (the default) `observe` is a no-op and every read delegates to the
+//! frozen nominal model bit-for-bit — the paper's comparators are
+//! unchanged. With it on, predictions track the windowed re-fits and
+//! [`Predictor::confidence`] reports how much the model can currently be
+//! trusted (the hybrid scaler's blend weight).
+//!
+//! The handle is `Rc<RefCell<…>>`: the simulation is single-threaded per
+//! cell (the sharded runner builds each cell's world inside its worker),
+//! so no lock is needed and determinism is untouched.
+
+use super::online::OnlineCalibrator;
+use super::LatencyModel;
+use crate::cluster::DeploymentKey;
+use crate::config::Config;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+#[derive(Debug)]
+struct Plane {
+    online: bool,
+    n_instances: usize,
+    /// Dense model-major grid: calibrator of ⟨m, i⟩ at m·|I| + i.
+    cals: Vec<OnlineCalibrator>,
+}
+
+impl Plane {
+    #[inline]
+    fn idx(&self, key: DeploymentKey) -> usize {
+        key.model * self.n_instances + key.instance
+    }
+}
+
+/// Shared handle onto the prediction plane.
+#[derive(Debug, Clone)]
+pub struct Predictor {
+    inner: Rc<RefCell<Plane>>,
+}
+
+impl Predictor {
+    /// Build the plane for a configuration: nominal models per pool plus
+    /// the `prediction.*` knobs.
+    pub fn from_config(cfg: &Config) -> Self {
+        let n_instances = cfg.instances.len();
+        let mut cals = Vec::with_capacity(cfg.models.len() * n_instances);
+        for m in 0..cfg.models.len() {
+            for i in 0..n_instances {
+                cals.push(OnlineCalibrator::new(
+                    LatencyModel::from_config(cfg, m, i),
+                    &cfg.prediction,
+                ));
+            }
+        }
+        Predictor {
+            inner: Rc::new(RefCell::new(Plane {
+                online: cfg.prediction.online,
+                n_instances,
+                cals,
+            })),
+        }
+    }
+
+    /// Whether online recalibration is enabled.
+    pub fn online(&self) -> bool {
+        self.inner.borrow().online
+    }
+
+    /// Publish one completion observation. No-op in static mode, so the
+    /// frozen path stays bit-identical (no calibrator state ever forms).
+    pub fn observe(&self, key: DeploymentKey, now: f64, lambda_tilde: f64, latency: f64) {
+        let mut p = self.inner.borrow_mut();
+        if !p.online {
+            return;
+        }
+        let k = p.idx(key);
+        p.cals[k].observe(now, lambda_tilde, latency);
+    }
+
+    /// Trust in the pool's current model ∈ (0, 1]; 1.0 in static mode.
+    pub fn confidence(&self, key: DeploymentKey) -> f64 {
+        let p = self.inner.borrow();
+        if !p.online {
+            return 1.0;
+        }
+        p.cals[p.idx(key)].confidence()
+    }
+
+    /// Fixed-replica latency prediction g(λ, N) for a pool (Eq. 15
+    /// through the current — possibly re-fitted — law).
+    pub fn g_lambda(&self, key: DeploymentKey, lambda: f64, n: u32) -> f64 {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].g_lambda(lambda, n)
+    }
+
+    /// Fixed-traffic view g(N, λ) (Eq. 17) — identical arithmetic.
+    #[inline]
+    pub fn g_n(&self, key: DeploymentKey, n: u32, lambda: f64) -> f64 {
+        self.g_lambda(key, lambda, n)
+    }
+
+    /// Per-request service estimate at per-replica rate λ̃ (Eq. 8).
+    pub fn processing_affine(&self, key: DeploymentKey, lambda_tilde: f64) -> f64 {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].predict_service(lambda_tilde)
+    }
+
+    /// Smallest N with g(N) ≤ τ — the PM-HPA replica target (§IV-D),
+    /// inverted through the current law. `None` if no N ≤ n_max fits.
+    pub fn required_replicas(
+        &self,
+        key: DeploymentKey,
+        lambda: f64,
+        tau: f64,
+        n_max: u32,
+    ) -> Option<u32> {
+        let p = self.inner.borrow();
+        let cal = &p.cals[p.idx(key)];
+        (1..=n_max).find(|&n| cal.g_lambda(lambda, n) <= tau)
+    }
+
+    /// Effective per-pod service rate μ̂ (nominal μ until a fit exists).
+    pub fn mu(&self, key: DeploymentKey) -> f64 {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].mu_hat()
+    }
+
+    /// Round-trip network delay for the pool (not recalibrated).
+    pub fn rtt(&self, key: DeploymentKey) -> f64 {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].nominal().rtt
+    }
+
+    /// Stability ρ < 1 under the effective service rate.
+    pub fn is_stable(&self, key: DeploymentKey, lambda: f64, n: u32) -> bool {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].is_stable(lambda, n)
+    }
+
+    /// Clone of the pool's frozen nominal model (prediction-table inputs
+    /// and other consumers that explicitly want the static law).
+    pub fn nominal(&self, key: DeploymentKey) -> LatencyModel {
+        let p = self.inner.borrow();
+        p.cals[p.idx(key)].nominal().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn yolo_edge(cfg: &Config) -> DeploymentKey {
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        DeploymentKey { model: m, instance: 0 }
+    }
+
+    #[test]
+    fn static_mode_matches_frozen_model_bit_for_bit() {
+        let cfg = Config::default();
+        let p = Predictor::from_config(&cfg);
+        assert!(!p.online());
+        let key = yolo_edge(&cfg);
+        let lm = LatencyModel::from_config(&cfg, key.model, key.instance);
+        // Observations are dropped in static mode...
+        for k in 0..50 {
+            p.observe(key, k as f64, 0.5, 7.0);
+        }
+        assert_eq!(p.confidence(key), 1.0);
+        // ...so every prediction is the frozen closed form, exactly.
+        for &lam in &[0.3, 1.0, 2.7, 5.5] {
+            for n in 1..6 {
+                assert_eq!(p.g_lambda(key, lam, n), lm.g_lambda(lam, n));
+                assert_eq!(p.g_n(key, n, lam), lm.g_n(n, lam));
+            }
+            assert_eq!(p.processing_affine(key, lam), lm.processing_affine(lam));
+        }
+        assert_eq!(
+            p.required_replicas(key, 4.0, cfg.slo_budget(key.model), 16),
+            lm.required_replicas(4.0, cfg.slo_budget(key.model), 16)
+        );
+        assert_eq!(p.mu(key), lm.mu());
+        assert_eq!(p.rtt(key), lm.rtt);
+        assert_eq!(p.is_stable(key, 2.0, 2), lm.is_stable(2.0, 2));
+    }
+
+    #[test]
+    fn online_mode_raises_targets_under_observed_slowdown() {
+        let mut cfg = Config::default();
+        cfg.prediction.online = true;
+        cfg.prediction.min_samples = 6;
+        let p = Predictor::from_config(&cfg);
+        let key = yolo_edge(&cfg);
+        let lm = LatencyModel::from_config(&cfg, key.model, key.instance);
+        let tau = cfg.slo_budget(key.model);
+        let frozen_target = lm.required_replicas(2.0, tau, 16).unwrap();
+        // 5x-degraded observations arrive.
+        for k in 0..60 {
+            let t = k as f64 * 0.5;
+            let lam = 0.2 + 0.1 * (k % 8) as f64;
+            p.observe(key, t, lam, 5.0 * lm.processing_affine(lam));
+        }
+        let online_target = p.required_replicas(key, 2.0, tau, 16).unwrap_or(16);
+        assert!(
+            online_target > frozen_target,
+            "online target {online_target} !> frozen {frozen_target}"
+        );
+        assert!(p.confidence(key) < 1.0);
+        // Handles share the plane: a clone sees the same recalibration.
+        let h = p.clone();
+        assert_eq!(
+            h.required_replicas(key, 2.0, tau, 16).unwrap_or(16),
+            online_target
+        );
+        assert!(h.g_lambda(key, 1.0, 2) > lm.g_lambda(1.0, 2));
+    }
+
+    #[test]
+    fn calibrators_are_per_deployment() {
+        let mut cfg = Config::default();
+        cfg.prediction.online = true;
+        cfg.prediction.min_samples = 4;
+        let p = Predictor::from_config(&cfg);
+        let edge = yolo_edge(&cfg);
+        let cloud = DeploymentKey { model: edge.model, instance: 1 };
+        let lm = LatencyModel::from_config(&cfg, edge.model, 0);
+        for k in 0..40 {
+            p.observe(edge, k as f64, 0.5, 6.0 * lm.processing_affine(0.5));
+        }
+        // Only the edge pool drifted; the cloud calibrator is untouched.
+        let cloud_lm = LatencyModel::from_config(&cfg, cloud.model, 1);
+        assert_eq!(p.g_lambda(cloud, 1.0, 2), cloud_lm.g_lambda(1.0, 2));
+        assert!(p.g_lambda(edge, 1.0, 2) > lm.g_lambda(1.0, 2));
+    }
+}

@@ -23,12 +23,15 @@ COMMANDS:
   serve      --robots N --fps F --duration S     serve real PJRT inference
   simulate   --lambda L --policy P --bursty B    run one DES scenario
              --duration S --replicas N --seed K  (P: la-imr|baseline|static|
-             [--mtbf S]                          hedged|deadline-shed);
-                                                 --mtbf: pod-crash faults
+             [--mtbf S] [--online B]             hedged|deadline-shed|hybrid);
+                                                 --mtbf: pod-crash faults;
+                                                 --online: enable the online
+                                                 prediction plane (drift
+                                                 recalibration)
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
   repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|
-              pareto|scenarios|all>
+              pareto|scenarios|drift|all>
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
                                                  (table6q: per-quality-lane P99;
@@ -38,7 +41,9 @@ COMMANDS:
                                                   diversity catalog — diurnal/
                                                   MMPP/trace arrivals × rack-
                                                   failure/partition/fail-slow
-                                                  faults, all five policies)
+                                                  faults, all six policies;
+                                                  drift: frozen vs online
+                                                  prediction under fail-slow)
 ";
 
 fn main() {
@@ -50,7 +55,12 @@ fn main() {
 
 fn run() -> anyhow::Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
-    let cfg = Config::load(args.get("config").map(Path::new))?;
+    let mut cfg = Config::load(args.get("config").map(Path::new))?;
+    // `--online true|false` overrides the prediction plane's mode without
+    // needing a config file (mirrors `prediction.online`).
+    cfg.prediction.online = args
+        .get_bool("online", cfg.prediction.online)
+        .map_err(anyhow::Error::msg)?;
     let artifacts = PathBuf::from(args.get_str("artifacts", "artifacts"));
 
     let Some(cmd) = args.positional().first().map(|s| s.as_str()) else {
@@ -77,7 +87,7 @@ fn run() -> anyhow::Result<()> {
             let policy = match Policy::from_name(args.get_str("policy", "la-imr")) {
                 Some(p) => p,
                 None => anyhow::bail!(
-                    "unknown policy {} (expected la-imr|baseline|static|hedged|deadline-shed)",
+                    "unknown policy {} (expected la-imr|baseline|static|hedged|deadline-shed|hybrid)",
                     args.get_str("policy", "la-imr")
                 ),
             };
@@ -200,6 +210,7 @@ fn run() -> anyhow::Result<()> {
                     "table6q" => println!("{}", report::table6_lanes(&cfg, &runner)),
                     "pareto" => println!("{}", report::pareto(&cfg, &runner)),
                     "scenarios" => println!("{}", report::scenarios(&cfg, &runner)),
+                    "drift" => println!("{}", report::drift(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())
@@ -207,7 +218,7 @@ fn run() -> anyhow::Result<()> {
             if id == "all" {
                 for id in [
                     "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
-                    "table6", "table6q", "pareto", "scenarios",
+                    "table6", "table6q", "pareto", "scenarios", "drift",
                 ] {
                     print_one(id)?;
                     println!();

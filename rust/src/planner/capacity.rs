@@ -9,8 +9,9 @@
 //! swept by growing N while the marginal max-latency gain beats β·c.
 
 use super::routing::{Placement, TaskClass};
+use crate::cluster::DeploymentKey;
 use crate::config::Config;
-use crate::latency_model::LatencyModel;
+use crate::latency_model::Predictor;
 
 /// Result of capacity planning.
 #[derive(Debug, Clone)]
@@ -28,8 +29,22 @@ pub struct CapacityPlan {
 
 /// Solve Eq. 23 for the given task classes.
 ///
-/// `beta` is the cost–latency trade-off (paper: β = 2.5).
+/// `beta` is the cost–latency trade-off (paper: β = 2.5). Latency
+/// evaluations go through a private prediction plane built from `cfg` —
+/// the frozen closed form unless `prediction.online` has re-fits.
 pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<CapacityPlan> {
+    plan_capacity_with(cfg, classes, beta, &Predictor::from_config(cfg))
+}
+
+/// [`plan_capacity`] over a *shared* prediction plane: re-planning with
+/// drift-recalibrated laws (e.g. after a fail-slow window) sees the
+/// effective — not nominal — per-pool capacity.
+pub fn plan_capacity_with(
+    cfg: &Config,
+    classes: &[TaskClass],
+    beta: f64,
+    predictor: &Predictor,
+) -> Option<CapacityPlan> {
     if classes.is_empty() {
         return Some(CapacityPlan {
             replicas: vec![vec![0; cfg.instances.len()]; cfg.models.len()],
@@ -79,7 +94,7 @@ pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<C
                 if lam <= 0.0 {
                     continue;
                 }
-                let lm = LatencyModel::from_config(cfg, m, i);
+                let pool = DeploymentKey { model: m, instance: i };
                 let n_max = cfg.instances[i].n_max;
                 // Tightest SLO among classes routed here.
                 let tau = idx
@@ -91,7 +106,7 @@ pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<C
                 // Minimal N: stable + SLO.
                 let mut n_opt = None;
                 for n in 1..=n_max {
-                    let g = lm.g_n(n, lam);
+                    let g = predictor.g_n(pool, n, lam);
                     if g.is_finite() && g <= tau {
                         n_opt = Some(n);
                         break;
@@ -103,7 +118,7 @@ pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<C
                 };
                 // Grow N while the latency drop beats the marginal cost.
                 while n < n_max {
-                    let gain = lm.g_n(n, lam) - lm.g_n(n + 1, lam);
+                    let gain = predictor.g_n(pool, n, lam) - predictor.g_n(pool, n + 1, lam);
                     if gain > beta * cfg.instances[i].cost {
                         n += 1;
                     } else {
@@ -132,8 +147,11 @@ pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<C
             let mut placements = Vec::new();
             for (c, &k) in idx.iter().enumerate() {
                 let (m, i) = candidates[c][k];
-                let lm = LatencyModel::from_config(cfg, m, i);
-                let g = lm.g_n(replicas[m][i], lambda_mi[m][i]);
+                let g = predictor.g_n(
+                    DeploymentKey { model: m, instance: i },
+                    replicas[m][i],
+                    lambda_mi[m][i],
+                );
                 worst = worst.max(g);
                 placements.push(Placement {
                     class: c,
@@ -179,6 +197,7 @@ pub fn plan_capacity(cfg: &Config, classes: &[TaskClass], beta: f64) -> Option<C
 mod tests {
     use super::*;
     use crate::config::QualityClass;
+    use crate::latency_model::LatencyModel;
 
     fn class(lambda: f64, slo: f64, acc: f64) -> TaskClass {
         TaskClass {

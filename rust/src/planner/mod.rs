@@ -15,5 +15,5 @@
 mod capacity;
 mod routing;
 
-pub use capacity::{plan_capacity, CapacityPlan};
+pub use capacity::{plan_capacity, plan_capacity_with, CapacityPlan};
 pub use routing::{route_tasks, RoutingProblem, TaskClass};

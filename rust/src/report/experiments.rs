@@ -20,8 +20,14 @@ pub const RUN_WARMUP: f64 = 30.0;
 pub const TRIALS: &[u64] = &[101, 102, 103, 104, 105];
 
 /// The Table VI / Fig 7 policy columns: LA-IMR vs the reactive baseline
-/// vs the SafeTail-style hedged comparator.
-pub const SWEEP_POLICIES: [Policy; 3] = [Policy::LaImr, Policy::Baseline, Policy::Hedged];
+/// vs the SafeTail-style hedged comparator vs the confidence-weighted
+/// hybrid scaler (ISSUE 5).
+pub const SWEEP_POLICIES: [Policy; 4] = [
+    Policy::LaImr,
+    Policy::Baseline,
+    Policy::Hedged,
+    Policy::Hybrid,
+];
 
 // ---------------------------------------------------------------- table 2
 
@@ -324,21 +330,19 @@ pub fn fig4(cfg: &Config, runner: &Runner) -> String {
 
 // --------------------------------------------------- fig 7 / fig 8 / tbl 6
 
-/// The paper's headline experiment plus the hedged comparator: LA-IMR vs
-/// reactive baseline vs SafeTail-style hedging across λ = 1..6 under
-/// bursty arrivals, multi-seed, all cells sharded across the runner.
+/// The paper's headline experiment plus the comparators: LA-IMR vs
+/// reactive baseline vs SafeTail-style hedging vs the hybrid scaler
+/// across λ = 1..6 under bursty arrivals, multi-seed, all cells sharded
+/// across the runner. Per-policy vectors are indexed like
+/// [`SWEEP_POLICIES`].
 pub struct HeadToHead {
     pub lambda: f64,
-    pub la_p95: Summary,
-    pub bl_p95: Summary,
-    pub hd_p95: Summary,
-    pub la_p99: Summary,
-    pub bl_p99: Summary,
-    pub hd_p99: Summary,
-    /// Pooled latencies (all seeds) for box plots.
-    pub la_all: Vec<f64>,
-    pub bl_all: Vec<f64>,
-    pub hd_all: Vec<f64>,
+    /// Across-seed summary of per-seed P95s, per sweep policy.
+    pub p95: Vec<Summary>,
+    /// Across-seed summary of per-seed P99s, per sweep policy.
+    pub p99: Vec<Summary>,
+    /// Pooled latencies (all seeds) for box plots, per sweep policy.
+    pub all: Vec<Vec<f64>>,
 }
 
 pub fn head_to_head(
@@ -349,13 +353,6 @@ pub fn head_to_head(
 ) -> Vec<HeadToHead> {
     let warmup = RUN_WARMUP.min(duration / 10.0);
     let n_pol = SWEEP_POLICIES.len();
-    // The aggregation below assigns la_/bl_/hd_ fields positionally;
-    // keep it honest if SWEEP_POLICIES is ever reordered or extended.
-    assert_eq!(
-        SWEEP_POLICIES,
-        [Policy::LaImr, Policy::Baseline, Policy::Hedged],
-        "head_to_head field mapping is coupled to SWEEP_POLICIES order"
-    );
     let mut cells = Vec::new();
     for lam in 1..=6 {
         for &seed in trials {
@@ -388,53 +385,37 @@ pub fn head_to_head(
             }
             HeadToHead {
                 lambda: lam as f64,
-                la_p95: Summary::from(&p95s[0]),
-                bl_p95: Summary::from(&p95s[1]),
-                hd_p95: Summary::from(&p95s[2]),
-                la_p99: Summary::from(&p99s[0]),
-                bl_p99: Summary::from(&p99s[1]),
-                hd_p99: Summary::from(&p99s[2]),
-                la_all: std::mem::take(&mut alls[0]),
-                bl_all: std::mem::take(&mut alls[1]),
-                hd_all: std::mem::take(&mut alls[2]),
+                p95: p95s.iter().map(|v| Summary::from(v.as_slice())).collect(),
+                p99: p99s.iter().map(|v| Summary::from(v.as_slice())).collect(),
+                all: alls,
             }
         })
         .collect()
 }
 
-/// Table VI: P95/P99 mean±SD across λ — LA-IMR vs baseline vs hedged.
+/// Table VI: P95/P99 mean±SD across λ — LA-IMR vs baseline vs hedged vs
+/// hybrid.
 pub fn table6(cfg: &Config, runner: &Runner) -> String {
     let data = head_to_head(cfg, RUN_DURATION, TRIALS, runner);
     let mut rows = Vec::new();
     for h in &data {
-        let imp = 100.0 * (1.0 - h.la_p99.mean / h.bl_p99.mean.max(1e-9));
-        rows.push(vec![
-            format!("{:.0}", h.lambda),
-            format!("{:.3}±{:.3}", h.la_p95.mean, h.la_p95.std),
-            format!("{:.3}±{:.3}", h.bl_p95.mean, h.bl_p95.std),
-            format!("{:.3}±{:.3}", h.hd_p95.mean, h.hd_p95.std),
-            format!("{:.3}±{:.3}", h.la_p99.mean, h.la_p99.std),
-            format!("{:.3}±{:.3}", h.bl_p99.mean, h.bl_p99.std),
-            format!("{:.3}±{:.3}", h.hd_p99.mean, h.hd_p99.std),
-            format!("{imp:+.1}%"),
-        ]);
+        // P99 gain: LA-IMR (index 0) over the baseline (index 1).
+        let imp = 100.0 * (1.0 - h.p99[0].mean / h.p99[1].mean.max(1e-9));
+        let mut row = vec![format!("{:.0}", h.lambda)];
+        row.extend(h.p95.iter().map(|s| format!("{:.3}±{:.3}", s.mean, s.std)));
+        row.extend(h.p99.iter().map(|s| format!("{:.3}±{:.3}", s.mean, s.std)));
+        row.push(format!("{imp:+.1}%"));
+        rows.push(row);
     }
+    let mut headers: Vec<String> = vec!["λ".into()];
+    headers.extend(SWEEP_POLICIES.iter().map(|p| format!("{} P95", p.name())));
+    headers.extend(SWEEP_POLICIES.iter().map(|p| format!("{} P99", p.name())));
+    headers.push("P99 gain".into());
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     format!(
-        "Table VI — P95/P99 across λ (bursty arrivals, {} seeds; hedged = SafeTail-style comparator)\n{}",
+        "Table VI — P95/P99 across λ (bursty arrivals, {} seeds; hedged = SafeTail-style comparator, hybrid = confidence-weighted scaler)\n{}",
         TRIALS.len(),
-        render_table(
-            &[
-                "λ",
-                "LA-IMR P95",
-                "Base P95",
-                "Hedged P95",
-                "LA-IMR P99",
-                "Base P99",
-                "Hedged P99",
-                "P99 gain",
-            ],
-            &rows
-        )
+        render_table(&header_refs, &rows)
     )
 }
 
@@ -511,34 +492,34 @@ pub fn table6_lanes(cfg: &Config, runner: &Runner) -> String {
             row
         })
         .collect();
+    let mut headers: Vec<String> = vec!["λ".into(), "lane".into()];
+    headers.extend(SWEEP_POLICIES.iter().map(|p| format!("{} P99", p.name())));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     format!(
         "Table VI-Q — per-quality-lane P99 [s] under mixed traffic (mix 0.3/0.5/0.2, {} seeds)\n{}",
         trials.len(),
-        render_table(
-            &["λ", "lane", "LA-IMR P99", "Base P99", "Hedged P99"],
-            &rows
-        )
+        render_table(&header_refs, &rows)
     )
 }
 
-/// Fig 7: latency distribution summaries per λ for all three policies.
+/// Fig 7: latency distribution summaries per λ for every sweep policy.
 pub fn fig7(cfg: &Config, runner: &Runner) -> String {
     let data = head_to_head(cfg, RUN_DURATION, &TRIALS[..3], runner);
     let mut rows = Vec::new();
     for h in &data {
-        let la = Summary::from(&h.la_all);
-        let bl = Summary::from(&h.bl_all);
-        let hd = Summary::from(&h.hd_all);
-        rows.push(vec![
-            format!("{:.0}", h.lambda),
-            format!("{:.2}/{:.2}/{:.2}", la.p50, la.p95, la.p99),
-            format!("{:.2}/{:.2}/{:.2}", bl.p50, bl.p95, bl.p99),
-            format!("{:.2}/{:.2}/{:.2}", hd.p50, hd.p95, hd.p99),
-        ]);
+        let mut row = vec![format!("{:.0}", h.lambda)];
+        row.extend(h.all.iter().map(|pooled| {
+            let s = Summary::from(pooled);
+            format!("{:.2}/{:.2}/{:.2}", s.p50, s.p95, s.p99)
+        }));
+        rows.push(row);
     }
+    let mut headers: Vec<String> = vec!["λ".into()];
+    headers.extend(SWEEP_POLICIES.iter().map(|p| p.name().to_string()));
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     format!(
         "Fig 7 — latency distributions (P50/P95/P99 [s]) per λ\n{}",
-        render_table(&["λ", "LA-IMR", "baseline", "hedged"], &rows)
+        render_table(&header_refs, &rows)
     )
 }
 
@@ -550,8 +531,10 @@ pub fn fig8(cfg: &Config, runner: &Runner) -> String {
     let (mut la_iqr, mut bl_iqr, mut la_max, mut bl_max) = (0.0, 0.0, 0.0f64, 0.0f64);
     let mut rows = Vec::new();
     for h in &data {
-        let la = box_stats(&h.la_all);
-        let bl = box_stats(&h.bl_all);
+        // The paper's box figure compares LA-IMR (index 0) and the
+        // reactive baseline (index 1).
+        let la = box_stats(&h.all[0]);
+        let bl = box_stats(&h.all[1]);
         la_iqr += la.iqr;
         bl_iqr += bl.iqr;
         la_max = la_max.max(la.max_outlier);
@@ -822,7 +805,7 @@ pub fn scenario_catalog(seed: u64) -> Vec<ScenarioConfig> {
     ]
 }
 
-/// `repro scenarios`: the full workload-diversity catalog × all five
+/// `repro scenarios`: the full workload-diversity catalog × all six
 /// policies — per-scenario P99, goodput against the default deadline
 /// contract, shed share, and fault telemetry in one table.
 pub fn scenarios(cfg: &Config, runner: &Runner) -> String {
@@ -858,6 +841,124 @@ pub fn scenarios(cfg: &Config, runner: &Runner) -> String {
             &[
                 "scenario", "policy", "P99 [s]", "goodput", "shed", "completed", "crashes",
             ],
+            &rows
+        )
+    )
+}
+
+// ------------------------------------------------------------------ drift
+
+/// Offered load of the drift sweep [req/s] — sustained past the degraded
+/// pool's capacity so stale predictions actually cost something.
+const DRIFT_LAMBDA: f64 = 3.0;
+/// Fail-slow degradation factor of the drift scenario.
+const DRIFT_FACTOR: f64 = 6.0;
+/// Drift onset [s].
+const DRIFT_AT: f64 = 20.0;
+
+/// The PR-4 fail-slow scenario the drift sweep replays: bursty load on a
+/// 2-replica home pool, one edge pod silently serving `DRIFT_FACTOR`x
+/// slower from `DRIFT_AT` on — the shape that stales every frozen
+/// capacity-based prediction.
+pub fn drift_scenario(seed: u64, duration: f64) -> ScenarioConfig {
+    let mut s = ScenarioConfig::bursty(DRIFT_LAMBDA, seed)
+        .with_duration(duration, 0.0)
+        .with_replicas(2)
+        .with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: DRIFT_AT,
+            factor: DRIFT_FACTOR,
+            duration: 0.0,
+        });
+    s.name = format!("drift-failslow-{seed}");
+    s
+}
+
+/// One (policy, prediction-mode) outcome of the drift sweep.
+pub struct DriftRow {
+    /// "frozen" or "online".
+    pub mode: &'static str,
+    pub policy: String,
+    /// P99 across seeds (per-seed P99s summarised).
+    pub p99: Summary,
+    /// Goodput against the default deadline contract across seeds.
+    pub goodput: Summary,
+    /// Mean share of requests refused at admission.
+    pub shed_share: f64,
+    /// Mean admission mistakes per run (`SimResult::mis_sheds`).
+    pub mis_sheds: f64,
+}
+
+/// Drift-sweep policies: the admission controller the recalibration is
+/// for, the two predictive scalers, and the reactive yardstick.
+const DRIFT_POLICIES: [Policy; 4] = [
+    Policy::DeadlineShed,
+    Policy::LaImr,
+    Policy::Hybrid,
+    Policy::Baseline,
+];
+
+/// `repro drift` data: the fail-slow scenario × frozen vs online
+/// prediction × policies. Each mode carries its own `Config` (the memo
+/// key spans `prediction.online`), mirroring the pareto sweep's layout.
+pub fn drift_data(cfg: &Config, duration: f64, trials: &[u64], runner: &Runner) -> Vec<DriftRow> {
+    let yardstick = cfg.deadline_by_lane();
+    let mut rows = Vec::new();
+    for (mode, online) in [("frozen", false), ("online", true)] {
+        let mut cfg_m = cfg.clone();
+        cfg_m.prediction.online = online;
+        for policy in DRIFT_POLICIES {
+            let cells: Vec<Cell> = trials
+                .iter()
+                .map(|&seed| Cell::new(drift_scenario(seed, duration), policy))
+                .collect();
+            let results = runner.run(&cfg_m, &cells);
+            let p99s: Vec<f64> = results.iter().map(|r| r.summary().p99).collect();
+            let goodputs: Vec<f64> = results.iter().map(|r| r.goodput(yardstick)).collect();
+            let n = results.len() as f64;
+            rows.push(DriftRow {
+                mode,
+                policy: policy.name().into(),
+                p99: Summary::from(&p99s),
+                goodput: Summary::from(&goodputs),
+                shed_share: results.iter().map(|r| r.shed_share()).sum::<f64>() / n,
+                mis_sheds: results
+                    .iter()
+                    .map(|r| r.mis_sheds(yardstick) as f64)
+                    .sum::<f64>()
+                    / n,
+            });
+        }
+    }
+    rows
+}
+
+/// `repro drift`: frozen vs online prediction under the fail-slow fault —
+/// the ISSUE 5 acceptance sweep. Watch the deadline-shed rows: with the
+/// frozen model the stale (optimistic) admission estimate keeps letting
+/// doomed work through (high mis-sheds); online recalibration re-fits the
+/// observed slowdown and refuses it at the front door instead.
+pub fn drift(cfg: &Config, runner: &Runner) -> String {
+    let trials = &TRIALS[..3];
+    let data = drift_data(cfg, RUN_DURATION, trials, runner);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|r| {
+            vec![
+                r.policy.clone(),
+                r.mode.into(),
+                format!("{:.3}±{:.3}", r.p99.mean, r.p99.std),
+                format!("{:.1}%", 100.0 * r.goodput.mean),
+                format!("{:.1}%", 100.0 * r.shed_share),
+                format!("{:.1}", r.mis_sheds),
+            ]
+        })
+        .collect();
+    format!(
+        "Drift — frozen vs online prediction under fail-slow (λ={DRIFT_LAMBDA} bursty, x{DRIFT_FACTOR} slowdown @{DRIFT_AT}s, {} seeds; mis-sheds = admitted requests that missed their deadline)\n{}",
+        trials.len(),
+        render_table(
+            &["policy", "prediction", "P99 [s]", "goodput", "shed", "mis-sheds"],
             &rows
         )
     )
@@ -911,14 +1012,44 @@ mod tests {
     }
 
     #[test]
-    fn head_to_head_includes_hedged_column() {
+    fn head_to_head_covers_every_sweep_policy() {
         // One λ-sized slice of the sweep, short duration, 2 seeds.
         let data = head_to_head(&cfg(), 60.0, &TRIALS[..2], &Runner::new());
         assert_eq!(data.len(), 6);
         for h in &data {
-            assert_eq!(h.la_p99.count, 2);
-            assert_eq!(h.hd_p99.count, 2);
-            assert!(!h.hd_all.is_empty(), "hedged latencies missing");
+            assert_eq!(h.p95.len(), SWEEP_POLICIES.len());
+            assert_eq!(h.p99.len(), SWEEP_POLICIES.len());
+            assert_eq!(h.all.len(), SWEEP_POLICIES.len());
+            for (pi, p) in SWEEP_POLICIES.iter().enumerate() {
+                assert_eq!(h.p99[pi].count, 2, "{:?} lost a seed", p);
+                assert!(!h.all[pi].is_empty(), "{:?} latencies missing", p);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_rows_cover_modes_and_policies() {
+        // Short slice: every (mode, policy) pair present with sane stats;
+        // the online-vs-frozen deadline-shed regression itself lives in
+        // tests/engine_invariants.rs on a full-length run.
+        let data = drift_data(&cfg(), 60.0, &TRIALS[..1], &Runner::new());
+        assert_eq!(data.len(), 2 * DRIFT_POLICIES.len());
+        for r in &data {
+            assert!(r.p99.mean > 0.0, "{} {} degenerate P99", r.policy, r.mode);
+            assert!((0.0..=1.0).contains(&r.goodput.mean));
+            assert!(r.mis_sheds >= 0.0);
+            if r.policy != "deadline-shed" {
+                assert_eq!(r.shed_share, 0.0, "{} shed without a shed policy", r.policy);
+            }
+        }
+        // Both modes actually ran for each policy.
+        for p in DRIFT_POLICIES {
+            let modes: Vec<&str> = data
+                .iter()
+                .filter(|r| r.policy == p.name())
+                .map(|r| r.mode)
+                .collect();
+            assert_eq!(modes, ["frozen", "online"], "{:?} modes wrong", p);
         }
     }
 

@@ -9,8 +9,9 @@
 //!   fig2   — affine power-law fit vs measurement
 //!   fig3   — avg/P95/P99 vs λ at N=4
 //!   fig4   — microservice vs monolithic vs N at λ=4
-//!   fig7/8 + table6 — LA-IMR vs baseline across λ = 1..6
+//!   fig7/8 + table6 — LA-IMR vs baseline/hedged/hybrid across λ = 1..6
 //!   table6q — per-quality-lane P99 under mixed traffic (ROADMAP item)
+//!   drift   — frozen vs online prediction under fail-slow (ISSUE 5)
 //!
 //! Sweeps share cells (Table VI and Figs 7/8 reuse the same λ × seed ×
 //! policy grid); hand every function the *same* `Runner` so its result

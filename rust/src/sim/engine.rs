@@ -53,13 +53,22 @@
 //! *fail-slow pods* (service times multiplied by a degradation factor
 //! the control state cannot see, staling every capacity-based latency
 //! prediction).
+//!
+//! Prediction plane (ISSUE 5): when the installed policy exposes a
+//! [`Predictor`] handle and `prediction.online` is enabled, the engine
+//! publishes every completed copy as an observation `(deployment, λ̃ at
+//! dispatch, observed service latency)` into the shared plane — the
+//! recalibration loop that lets admission/scaling predictions track
+//! fail-slow drift instead of going stale. In static mode (the default)
+//! nothing is published and the run is bit-identical to the
+//! pre-prediction-plane engine.
 
 use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
 use crate::config::{Config, FaultSpec, QualityClass, ScenarioConfig};
 use crate::coordinator::state::ReplicaView;
 use crate::coordinator::{home_map, ControlState, MultiQueue, QueuedRequest};
-use crate::latency_model::LatencyModel;
+use crate::latency_model::{LatencyModel, Predictor};
 use crate::rng::Rng;
 use crate::sim::components::{
     fault_injector_for, partition_windows, seed_fault_events, CadencePlan, FaultInjector,
@@ -127,6 +136,10 @@ struct DispatchRecord {
     /// When this copy started service (busy-time accounting: completion,
     /// cancellation, and crash all charge `now - started`).
     started: SimTime,
+    /// Per-replica offered rate λ̃ of the pool at dispatch time — the
+    /// abscissa of the completion observation the prediction plane
+    /// ingests. 0.0 when no plane is listening (static mode).
+    lambda_tilde: f64,
     rtt: f64,
     quality: QualityClass,
     offloaded: bool,
@@ -199,6 +212,12 @@ pub struct Simulation {
     /// Cached `policy.needs_state()` — home-only policies skip the
     /// per-arrival control-state rebuild (DES hot path).
     policy_needs_state: bool,
+    /// The policy's prediction-plane handle, if it predicts at all.
+    predictor: Option<Predictor>,
+    /// Cached "plane is listening": predictor present AND online mode on.
+    /// Gates the λ̃ capture and the completion publishing, keeping the
+    /// static hot path untouched.
+    predictor_online: bool,
     /// Pod crashes injected so far (fault-injection accounting).
     crashes: u64,
     /// Events drained from the queue (DES throughput accounting).
@@ -287,6 +306,8 @@ impl Simulation {
         let watched = homes[watched_model];
         let scaling_enabled = policy.scaling_enabled();
         let policy_needs_state = policy.needs_state();
+        let predictor = policy.predictor();
+        let predictor_online = predictor.as_ref().map(|p| p.online()).unwrap_or(false);
 
         Simulation {
             cfg: cfg.clone(),
@@ -323,6 +344,8 @@ impl Simulation {
             peak_replicas: scenario.initial_replicas,
             scaling_enabled,
             policy_needs_state,
+            predictor,
+            predictor_online,
             crashes: 0,
             events_processed: 0,
         }
@@ -834,6 +857,13 @@ impl Simulation {
                 .find(|&&(pid, _, _)| pid == pod_id)
                 .map(|&(_, f, _)| f)
                 .unwrap_or(1.0);
+            // λ̃ at dispatch for the prediction plane's observation; only
+            // computed when a plane is actually listening.
+            let lambda_tilde = if self.predictor_online {
+                d.rate.rate(now) / d.dep.active_count().max(1) as f64
+            } else {
+                0.0
+            };
 
             // Use the *request's* model for cost, on this pool's instance
             // — a precomputed dense read, never a rebuild.
@@ -868,6 +898,7 @@ impl Simulation {
                 model: req_model,
                 arrived,
                 started: now,
+                lambda_tilde,
                 rtt,
                 quality,
                 offloaded,
@@ -913,6 +944,19 @@ impl Simulation {
             return;
         };
         let pool = rec.pool;
+        // Publish the completion into the prediction plane: every copy
+        // that genuinely ran to the end is a service-latency observation
+        // (winners and hedge losers alike; cancelled or crashed copies
+        // are partial spans and are not).
+        if self.predictor_online {
+            if let Some(p) = &self.predictor {
+                let key = DeploymentKey {
+                    model: rec.model,
+                    instance: self.deps[pool].dep.key.instance,
+                };
+                p.observe(key, now, rec.lambda_tilde, now - rec.started);
+            }
+        }
         // First completion wins: a hedged sibling finishing later only
         // frees its pod (the request was already recorded).
         if self.req_state[rec.req_id as usize].take().is_some() {

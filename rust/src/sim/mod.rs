@@ -6,8 +6,9 @@
 //! logic under test (DESIGN.md §6 "one coordinator, two clocks").
 //!
 //! Layout:
-//! * [`policy`] — the pluggable [`ControlPolicy`] trait and the five
-//!   shipped impls (la-imr, baseline, static, hedged, deadline-shed);
+//! * [`policy`] — the pluggable [`ControlPolicy`] trait and the six
+//!   shipped impls (la-imr, baseline, static, hedged, deadline-shed,
+//!   hybrid);
 //! * [`components`] — composable scenario pieces (cadences, faults);
 //! * [`engine`] — the policy-free event loop (dense-index hot path);
 //! * [`runner`] — the sharded multi-seed experiment runner with result
@@ -27,8 +28,8 @@ pub use components::{
 pub use engine::{Architecture, Simulation};
 pub use events::{Event, EventQueue, TimedEvent};
 pub use policy::{
-    BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, LaImrPolicy,
-    Policy, ShedReason, StaticPolicy, Verdict,
+    BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, HybridPolicy,
+    LaImrPolicy, Policy, ShedReason, StaticPolicy, Verdict,
 };
 pub use result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
 pub use runner::{Cell, Runner, SimCache};

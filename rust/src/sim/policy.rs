@@ -26,13 +26,25 @@
 //!   completion (queue backlog + affine power-law service estimate)
 //!   already exceeds its lane's hard deadline is refused at the front
 //!   door — robotics safety-stop semantics — instead of queued.
+//! * [`HybridPolicy`] — confidence-weighted reactive–proactive scaling
+//!   (ISSUE 5 / arXiv 2512.14290): home routing, but the autoscaler
+//!   blends the model-inverted replica target with the reactive
+//!   observed-P95 signal weighted by the prediction plane's trust score,
+//!   so it degrades toward reactive exactly when the model drifts.
+//!
+//! Prediction plane (ISSUE 5): policies that predict hold a shared
+//! [`Predictor`] handle instead of `LatencyModel` clones frozen at
+//! startup, and expose it through [`ControlPolicy::predictor`] so the
+//! engine can publish completion observations into the same plane. With
+//! `prediction.online` off (the default) the handle delegates to the
+//! frozen closed form bit-for-bit.
 
-use crate::autoscaler::{Autoscaler, PmHpa, ReactiveBaseline};
+use crate::autoscaler::{Autoscaler, HybridScaler, PmHpa, ReactiveBaseline};
 use crate::cluster::{DeploymentKey, MetricRegistry, DESIRED_REPLICAS};
 use crate::config::{Config, ScenarioConfig};
 use crate::coordinator::{home_map, ControlState, Router};
-use crate::latency_model::LatencyModel;
-use crate::telemetry::SlidingRate;
+use crate::latency_model::Predictor;
+use crate::telemetry::{Ewma, SlidingRate};
 use crate::{ModelId, SimTime};
 
 /// Where one admitted request executes. `hedge` is an optional redundant
@@ -149,6 +161,16 @@ pub trait ControlPolicy {
     fn lambda_signal(&self, n_models: usize) -> Vec<f64> {
         vec![0.0; n_models]
     }
+
+    /// The policy's prediction-plane handle, if it predicts at all. The
+    /// engine publishes every completion observation `(deployment, λ̃ at
+    /// dispatch, observed service latency)` into this plane, closing the
+    /// recalibration loop when `prediction.online` is enabled. Policies
+    /// that never predict (baseline, static) return `None` and the engine
+    /// skips the publishing entirely.
+    fn predictor(&self) -> Option<Predictor> {
+        None
+    }
 }
 
 /// Named policy catalogue — the CLI/report-facing handle. The only
@@ -167,15 +189,20 @@ pub enum Policy {
     /// Deadline-aware admission control: shed requests predicted to miss
     /// their lane's hard deadline; reactive scaling otherwise.
     DeadlineShed,
+    /// Confidence-weighted hybrid reactive–proactive scaling: home
+    /// routing, autoscaler blends model-inverted and reactive targets by
+    /// prediction-plane trust.
+    Hybrid,
 }
 
 impl Policy {
-    pub const ALL: [Policy; 5] = [
+    pub const ALL: [Policy; 6] = [
         Policy::LaImr,
         Policy::Baseline,
         Policy::Static,
         Policy::Hedged,
         Policy::DeadlineShed,
+        Policy::Hybrid,
     ];
 
     pub fn name(self) -> &'static str {
@@ -185,6 +212,7 @@ impl Policy {
             Policy::Static => "static",
             Policy::Hedged => "hedged",
             Policy::DeadlineShed => "deadline-shed",
+            Policy::Hybrid => "hybrid",
         }
     }
 
@@ -195,6 +223,7 @@ impl Policy {
             "static" => Some(Policy::Static),
             "hedged" => Some(Policy::Hedged),
             "deadline-shed" => Some(Policy::DeadlineShed),
+            "hybrid" => Some(Policy::Hybrid),
             _ => None,
         }
     }
@@ -207,6 +236,7 @@ impl Policy {
             Policy::Static => Box::new(StaticPolicy::new(cfg)),
             Policy::Hedged => Box::new(HedgedPolicy::new(cfg)),
             Policy::DeadlineShed => Box::new(DeadlineShedPolicy::new(cfg)),
+            Policy::Hybrid => Box::new(HybridPolicy::new(cfg)),
         }
     }
 }
@@ -215,15 +245,19 @@ impl Policy {
 
 /// Full LA-IMR (§IV): the Algorithm-1 router decides target + offload and
 /// publishes desired-replica updates; PM-HPA scales proactively from the
-/// router's EWMA rate.
+/// router's EWMA rate. Router and PM-HPA share one prediction plane, and
+/// the engine feeds completion observations back into it.
 pub struct LaImrPolicy {
     router: Router,
+    predictor: Predictor,
 }
 
 impl LaImrPolicy {
     pub fn new(cfg: &Config) -> Self {
+        let predictor = Predictor::from_config(cfg);
         LaImrPolicy {
-            router: Router::new(cfg),
+            router: Router::with_predictor(cfg, predictor.clone()),
+            predictor,
         }
     }
 }
@@ -249,7 +283,11 @@ impl ControlPolicy for LaImrPolicy {
     }
 
     fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
-        Some(Box::new(PmHpa::new(cfg, homes)))
+        Some(Box::new(PmHpa::with_predictor(cfg, homes, self.predictor.clone())))
+    }
+
+    fn predictor(&self) -> Option<Predictor> {
+        Some(self.predictor.clone())
     }
 
     fn admit(
@@ -406,8 +444,9 @@ impl ControlPolicy for StaticPolicy {
 /// baseline uses, so Table VI isolates redundancy vs prediction.
 pub struct HedgedPolicy {
     homes: Vec<DeploymentKey>,
-    /// Closed-form model per (m, i) — flat, model-major.
-    grid: Vec<LatencyModel>,
+    /// Shared prediction plane: the breach test and the alternative-pool
+    /// ranking read the current (possibly re-fitted) law.
+    predictor: Predictor,
     /// τ_m = x·L_m per model.
     taus: Vec<f64>,
     /// Per-model sliding arrival rate (same window as the LA-IMR router).
@@ -423,29 +462,18 @@ pub struct HedgedPolicy {
 
 impl HedgedPolicy {
     pub fn new(cfg: &Config) -> Self {
-        let n_instances = cfg.instances.len();
-        let mut grid = Vec::with_capacity(cfg.models.len() * n_instances);
-        for m in 0..cfg.models.len() {
-            for i in 0..n_instances {
-                grid.push(LatencyModel::from_config(cfg, m, i));
-            }
-        }
         HedgedPolicy {
             homes: home_map(cfg),
-            grid,
+            predictor: Predictor::from_config(cfg),
             taus: (0..cfg.models.len()).map(|m| cfg.slo_budget(m)).collect(),
             rates: (0..cfg.models.len())
                 .map(|_| SlidingRate::new(cfg.slo.rate_window))
                 .collect(),
-            n_instances,
+            n_instances: cfg.instances.len(),
             budget: cfg.tail.hedge_budget,
             admits: SlidingRate::new(cfg.tail.budget_window),
             hedges: SlidingRate::new(cfg.tail.budget_window),
         }
-    }
-
-    fn model_at(&self, model: ModelId, instance: usize) -> &LatencyModel {
-        &self.grid[model * self.n_instances + instance]
     }
 
     /// Whether one more duplicate fits the sliding extra-work budget:
@@ -484,6 +512,10 @@ impl ControlPolicy for HedgedPolicy {
         Some(Box::new(ReactiveBaseline::new(cfg, homes)))
     }
 
+    fn predictor(&self) -> Option<Predictor> {
+        Some(self.predictor.clone())
+    }
+
     fn admit(
         &mut self,
         model: ModelId,
@@ -496,9 +528,7 @@ impl ControlPolicy for HedgedPolicy {
         let lambda = self.rates[model].on_arrival(now);
         let tau = self.taus[model];
         let hview = state.view(home);
-        let g_home = self
-            .model_at(model, home.instance)
-            .g_lambda(lambda, hview.active.max(1));
+        let g_home = self.predictor.g_lambda(home, lambda, hview.active.max(1));
 
         let mut hedge = None;
         if (g_home > tau || hview.ready == 0) && self.within_budget(now) {
@@ -515,7 +545,7 @@ impl ControlPolicy for HedgedPolicy {
                 if view.ready == 0 {
                     continue;
                 }
-                let g = self.model_at(model, i).g_lambda(lambda, view.active.max(1));
+                let g = self.predictor.g_lambda(key, lambda, view.active.max(1));
                 let rank = if g.is_finite() { g } else { f64::MAX };
                 if best.map(|(b, _)| rank < b).unwrap_or(true) {
                     best = Some((rank, key));
@@ -543,8 +573,9 @@ impl ControlPolicy for HedgedPolicy {
 /// scaling as the baseline, so the comparison isolates shedding.
 pub struct DeadlineShedPolicy {
     homes: Vec<DeploymentKey>,
-    /// Home-instance service law per model (affine estimate inputs).
-    models: Vec<LatencyModel>,
+    /// Shared prediction plane: the affine service estimate tracks the
+    /// re-fitted law, so a fail-slowed pool stops looking admissible.
+    predictor: Predictor,
     /// Hard completion deadline per model [s] (d_q · τ_m).
     deadlines: Vec<f64>,
     /// Per-model sliding arrival rate (same window as the LA-IMR router).
@@ -553,16 +584,13 @@ pub struct DeadlineShedPolicy {
 
 impl DeadlineShedPolicy {
     pub fn new(cfg: &Config) -> Self {
-        let homes = home_map(cfg);
         DeadlineShedPolicy {
-            models: (0..cfg.models.len())
-                .map(|m| LatencyModel::from_config(cfg, m, homes[m].instance))
-                .collect(),
+            homes: home_map(cfg),
+            predictor: Predictor::from_config(cfg),
             deadlines: (0..cfg.models.len()).map(|m| cfg.deadline(m)).collect(),
             rates: (0..cfg.models.len())
                 .map(|_| SlidingRate::new(cfg.slo.rate_window))
                 .collect(),
-            homes,
         }
     }
 }
@@ -589,6 +617,10 @@ impl ControlPolicy for DeadlineShedPolicy {
         Some(Box::new(ReactiveBaseline::new(cfg, homes)))
     }
 
+    fn predictor(&self) -> Option<Predictor> {
+        Some(self.predictor.clone())
+    }
+
     fn admit(
         &mut self,
         model: ModelId,
@@ -599,13 +631,15 @@ impl ControlPolicy for DeadlineShedPolicy {
         let home = self.homes[model];
         let lambda = self.rates[model].on_arrival(now);
         let view = state.view(home);
-        let m = &self.models[model];
         // Affine power-law per-request service estimate at the offered
-        // per-replica rate (conservative: offered, not admitted, load).
-        let svc = m.processing_affine(lambda / view.active.max(1) as f64);
+        // per-replica rate (conservative: offered, not admitted, load),
+        // through the prediction plane's current law.
+        let svc = self
+            .predictor
+            .processing_affine(home, lambda / view.active.max(1) as f64);
         // FIFO backlog ahead of this request, drained by the ready pods.
         let wait = view.queue_depth as f64 * svc / view.ready.max(1) as f64;
-        let predicted = wait + svc + m.rtt;
+        let predicted = wait + svc + self.predictor.rtt(home);
         if predicted > self.deadlines[model] {
             let reason = if view.rho >= 1.0 {
                 ShedReason::Unstable
@@ -615,6 +649,93 @@ impl ControlPolicy for DeadlineShedPolicy {
             return Verdict::Shed { reason, predicted };
         }
         Verdict::Run(Dispatch::to(home))
+    }
+}
+
+// ------------------------------------------------------------- hybrid
+
+/// Confidence-weighted hybrid reactive–proactive scaling (ISSUE 5, the
+/// open ROADMAP item; arXiv 2512.14290). Routing is home-only — like the
+/// baseline — so Table VI isolates the *scaling* contribution: the
+/// [`HybridScaler`] blends PM-HPA's model-inverted target with the
+/// reactive observed-latency ratio rule, weighted by the prediction
+/// plane's confidence. With online recalibration off the confidence is
+/// pinned at 1.0 and the blend is pure PM-HPA; under drift (fail-slow
+/// pods) residuals sink the confidence and scaling leans on what was
+/// measured instead of what the stale model predicts.
+pub struct HybridPolicy {
+    homes: Vec<DeploymentKey>,
+    predictor: Predictor,
+    /// Per-model sliding arrival rate (fast signal, Algorithm 1 window).
+    rates: Vec<SlidingRate>,
+    /// Per-model EWMA-smoothed rate (the slow signal the scaler inverts).
+    ewmas: Vec<Ewma>,
+}
+
+impl HybridPolicy {
+    pub fn new(cfg: &Config) -> Self {
+        HybridPolicy {
+            homes: home_map(cfg),
+            predictor: Predictor::from_config(cfg),
+            rates: (0..cfg.models.len())
+                .map(|_| SlidingRate::new(cfg.slo.rate_window))
+                .collect(),
+            ewmas: (0..cfg.models.len())
+                .map(|_| Ewma::new(cfg.slo.ewma_alpha))
+                .collect(),
+        }
+    }
+}
+
+impl ControlPolicy for HybridPolicy {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn initial_replicas(
+        &self,
+        key: DeploymentKey,
+        home: DeploymentKey,
+        scenario: &ScenarioConfig,
+    ) -> u32 {
+        if key == home {
+            scenario.initial_replicas
+        } else {
+            1
+        }
+    }
+
+    fn autoscaler(&self, cfg: &Config, homes: &[DeploymentKey]) -> Option<Box<dyn Autoscaler>> {
+        Some(Box::new(HybridScaler::with_predictor(cfg, homes, self.predictor.clone())))
+    }
+
+    fn predictor(&self) -> Option<Predictor> {
+        Some(self.predictor.clone())
+    }
+
+    fn needs_state(&self) -> bool {
+        // Admission is home-only; the scaler reads the control state on
+        // its own tick, so the per-arrival rebuild is skipped.
+        false
+    }
+
+    fn admit(
+        &mut self,
+        model: ModelId,
+        now: SimTime,
+        _state: &ControlState,
+        _metrics: &mut MetricRegistry,
+    ) -> Verdict {
+        // Keep the slow λ signal current — the scaler's proactive input.
+        let lambda = self.rates[model].on_arrival(now);
+        self.ewmas[model].update(lambda);
+        Verdict::Run(Dispatch::to(self.homes[model]))
+    }
+
+    fn lambda_signal(&self, n_models: usize) -> Vec<f64> {
+        (0..n_models)
+            .map(|m| self.ewmas.get(m).map(|e| e.value()).unwrap_or(0.0))
+            .collect()
     }
 }
 
@@ -793,10 +914,34 @@ mod tests {
             let away_n = built.initial_replicas(away, home, &scenario);
             match p {
                 Policy::LaImr | Policy::Hedged => assert_eq!(away_n, 2, "{:?}", p),
-                Policy::Baseline | Policy::Static | Policy::DeadlineShed => {
+                Policy::Baseline | Policy::Static | Policy::DeadlineShed | Policy::Hybrid => {
                     assert_eq!(away_n, 1, "{:?}", p)
                 }
             }
         }
+    }
+
+    #[test]
+    fn hybrid_routes_home_and_exports_lambda() {
+        let cfg = Config::default();
+        let mut p = HybridPolicy::new(&cfg);
+        assert!(!p.needs_state());
+        assert!(p.predictor().is_some());
+        let state = warm_state(&cfg, 2, 0.5);
+        let mut metrics = MetricRegistry::new();
+        // 4 req/s steady for a few seconds: home dispatch, EWMA near 4.
+        let mut last = None;
+        for k in 0..20 {
+            last = Some(p.admit(1, k as f64 * 0.25, &state, &mut metrics));
+        }
+        let d = last.unwrap().dispatch().unwrap();
+        assert_eq!(d.target, home_map(&cfg)[1]);
+        assert_eq!(d.hedge, None);
+        let sig = p.lambda_signal(cfg.models.len());
+        assert!((sig[1] - 4.0).abs() < 1.5, "λ signal {}", sig[1]);
+        assert_eq!(sig[0], 0.0);
+        // The autoscaler it builds is the hybrid scaler.
+        let scaler = p.autoscaler(&cfg, &home_map(&cfg)).unwrap();
+        assert_eq!(scaler.name(), "hybrid");
     }
 }

@@ -215,6 +215,23 @@ impl SimResult {
         self.tail.hedges_launched as f64 / self.generated as f64
     }
 
+    /// Admission mistakes under the hard-deadline contract — the
+    /// "mis-shed" count of the drift experiments (ISSUE 5): post-warm-up
+    /// requests the admission controller let through that then missed
+    /// their lane's deadline (late completions) or never finished at all
+    /// (stragglers at the horizon). Every one of them is a request a
+    /// perfect predictor would have refused at the front door; a frozen
+    /// model under fail-slow drift under-predicts service time and racks
+    /// these up.
+    pub fn mis_sheds(&self, deadline_by_lane: [f64; 3]) -> usize {
+        let late = self
+            .completed
+            .iter()
+            .filter(|c| c.latency() > deadline_by_lane[c.quality.priority()])
+            .count();
+        late + self.unfinished_post_warmup
+    }
+
     /// Goodput against per-lane hard deadlines: completions within their
     /// lane's deadline over every post-warm-up outcome (completions +
     /// sheds + post-warm-up stragglers still unfinished at the horizon —
@@ -324,6 +341,10 @@ mod tests {
         assert!((g - 2.0 / 6.0).abs() < 1e-12, "goodput={g}");
         r.tail.hedges_launched = 2;
         assert!((r.extra_work_share() - 2.0 / 5.0).abs() < 1e-12);
+        // Mis-sheds: 1 late completion (9.0 > 5.0) + 2 stragglers.
+        assert_eq!(r.mis_sheds([5.0; 3]), 3);
+        // Under an unbounded contract only the stragglers remain.
+        assert_eq!(r.mis_sheds([f64::INFINITY; 3]), 2);
     }
 
     #[test]

@@ -70,6 +70,7 @@ impl Cell {
             Policy::Static => 2,
             Policy::Hedged => 3,
             Policy::DeadlineShed => 4,
+            Policy::Hybrid => 5,
         });
         h.write_u8(match self.arch {
             Architecture::Microservice => 0,

@@ -53,6 +53,77 @@ fn negative_tail_knobs_rejected_with_clear_errors() {
 }
 
 #[test]
+fn config_prediction_knobs_roundtrip() {
+    let mut c = Config::default();
+    c.prediction.online = true;
+    c.prediction.window = 12.5;
+    c.prediction.refit_every = 2.0;
+    c.prediction.min_samples = 4;
+    c.prediction.confidence_halflife = 3.25;
+    let back = Config::from_json_str(&c.to_json_string()).unwrap();
+    assert_eq!(back.prediction, c.prediction);
+    back.validate().unwrap();
+}
+
+#[test]
+fn config_partial_prediction_override_keeps_defaults() {
+    let c = Config::from_json_str(r#"{"prediction": {"online": true}}"#).unwrap();
+    assert!(c.prediction.online);
+    assert_eq!(c.prediction.window, 60.0); // untouched defaults
+    assert_eq!(c.prediction.refit_every, 5.0);
+    assert_eq!(c.prediction.min_samples, 8);
+    assert_eq!(c.prediction.confidence_halflife, 10.0);
+    // Absent section entirely → pure (frozen) defaults.
+    let d = Config::from_json_str("{}").unwrap();
+    assert_eq!(d.prediction, Config::default().prediction);
+    assert!(!d.prediction.online);
+}
+
+#[test]
+fn invalid_prediction_knobs_rejected_with_clear_errors() {
+    // Non-positive window/halflife/cadence and min_samples < 2 must each
+    // be rejected naming the knob — at validate() and through JSON.
+    let mut c = Config::default();
+    c.prediction.window = 0.0;
+    let err = c.validate().unwrap_err().to_string();
+    assert!(err.contains("prediction.window"), "unclear error: {err}");
+
+    let mut c = Config::default();
+    c.prediction.window = -3.0;
+    assert!(c.validate().is_err());
+
+    let mut c = Config::default();
+    c.prediction.refit_every = 0.0;
+    let err = c.validate().unwrap_err().to_string();
+    assert!(err.contains("refit_every"), "unclear error: {err}");
+
+    let mut c = Config::default();
+    c.prediction.confidence_halflife = 0.0;
+    let err = c.validate().unwrap_err().to_string();
+    assert!(err.contains("confidence_halflife"), "unclear error: {err}");
+
+    let mut c = Config::default();
+    c.prediction.min_samples = 1;
+    let err = c.validate().unwrap_err().to_string();
+    assert!(err.contains("min_samples") && err.contains("2"), "unclear error: {err}");
+
+    // Same knobs arriving via JSON parse fine but fail validation (the
+    // Config::load contract), and non-numeric/non-bool types fail parse.
+    let parsed = Config::from_json_str(r#"{"prediction": {"window": -1}}"#).unwrap();
+    assert!(parsed.validate().is_err());
+    let parsed = Config::from_json_str(r#"{"prediction": {"min_samples": 1}}"#).unwrap();
+    assert!(parsed.validate().is_err());
+    let err = Config::from_json_str(r#"{"prediction": {"online": "yes"}}"#)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("online"), "unclear error: {err}");
+    let err = Config::from_json_str(r#"{"prediction": {"min_samples": -4}}"#)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("min_samples"), "unclear error: {err}");
+}
+
+#[test]
 fn scenario_roundtrips_every_arrival_kind() {
     let mut scenarios = vec![
         ScenarioConfig::poisson(3.5, 7),

@@ -1,0 +1,174 @@
+//! Drift/calibrator gate (ISSUE 5): the prediction plane's contracts.
+//!
+//! * Property layer — [`OnlineCalibrator`] recovers known (α, β, γ) from
+//!   synthetic noisy samples; confidence decays under injected drift and
+//!   recovers once the refit tracks it.
+//! * Bit-identity lock — with `prediction.online = false` (the default)
+//!   every policy's `SimResult` is independent of every other
+//!   `prediction.*` knob (the plane is provably inert), and flipping
+//!   `online` on under a fail-slow fault actually changes behaviour (the
+//!   flag is live, not decorative).
+//!
+//! The engine-level mis-shed regression (online recalibration must beat
+//! the frozen model for deadline-shed under fail-slow) lives with the
+//! other conservation laws in `tests/engine_invariants.rs`.
+
+use la_imr::config::{Config, FaultSpec, PredictionPolicy, ScenarioConfig, Tier};
+use la_imr::latency_model::{LatencyModel, OnlineCalibrator};
+use la_imr::rng::Rng;
+use la_imr::sim::{Architecture, Policy, SimResult, Simulation};
+
+fn nominal() -> LatencyModel {
+    let cfg = Config::default();
+    let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+    LatencyModel::from_config(&cfg, m, 0)
+}
+
+// ------------------------------------------------------- property layer
+
+#[test]
+fn calibrator_recovers_known_parameters_from_noisy_samples() {
+    let knobs = PredictionPolicy {
+        online: true,
+        window: 1e9, // keep every sample: this is a pure fitting test
+        refit_every: 1.0,
+        min_samples: 8,
+        confidence_halflife: 10.0,
+    };
+    let truth = (0.7, 1.3, 1.5);
+    let mut cal = OnlineCalibrator::new(nominal(), &knobs);
+    let mut rng = Rng::new(41);
+    for k in 0..400 {
+        let t = k as f64 * 0.1;
+        let lam = 0.2 + 0.1 * (k % 40) as f64; // λ̃ sweeps [0.2, 4.1]
+        let y = (truth.0 + truth.1 * lam.powf(truth.2)) * (1.0 + 0.01 * rng.normal());
+        cal.observe(t, lam, y);
+    }
+    let fit = cal.fit().expect("400 samples never produced a fit");
+    assert!((fit.alpha - truth.0).abs() < 0.1, "α={} (truth {})", fit.alpha, truth.0);
+    assert!((fit.beta - truth.1).abs() < 0.1, "β={} (truth {})", fit.beta, truth.1);
+    assert!((fit.gamma - truth.2).abs() < 0.1, "γ={} (truth {})", fit.gamma, truth.2);
+    // Accurate predictions during the fitted phase mean high trust.
+    assert!(cal.confidence() > 0.8, "confidence={}", cal.confidence());
+}
+
+#[test]
+fn confidence_decays_under_drift_and_recovers_after_refit() {
+    let knobs = PredictionPolicy {
+        online: true,
+        window: 60.0,
+        refit_every: 5.0,
+        min_samples: 5,
+        confidence_halflife: 5.0,
+    };
+    let n = nominal();
+    let mut cal = OnlineCalibrator::new(n.clone(), &knobs);
+    let lam_of = |k: usize| 0.2 + 0.1 * (k % 8) as f64;
+
+    // Healthy phase (t = 0..40): observations match the nominal law.
+    for k in 0..40 {
+        let lam = lam_of(k);
+        cal.observe(k as f64, lam, n.processing_affine(lam));
+    }
+    assert!(cal.confidence() > 0.95, "healthy confidence {}", cal.confidence());
+
+    // Drift onset (t = 40..55): everything comes back 6x slower. The
+    // window still holds mostly-healthy samples, so the refit lags and
+    // residuals sink the trust — many half-lives of wrong predictions.
+    for k in 40..55 {
+        let lam = lam_of(k);
+        cal.observe(k as f64, lam, 6.0 * n.processing_affine(lam));
+    }
+    let drifted = cal.confidence();
+    assert!(drifted < 0.5, "confidence never decayed: {drifted}");
+
+    // Sustained drift (t = 55..160): the sliding window turns over to the
+    // degraded population, the refit tracks it, predictions match again —
+    // trust recovers even though the world is still 6x slow.
+    for k in 55..160 {
+        let lam = lam_of(k);
+        cal.observe(k as f64, lam, 6.0 * n.processing_affine(lam));
+    }
+    let recovered = cal.confidence();
+    assert!(recovered > 0.8, "confidence never recovered: {recovered}");
+    // And the refit genuinely tracks the degraded law.
+    let predicted = cal.predict_service(0.5);
+    let actual = 6.0 * n.processing_affine(0.5);
+    assert!(
+        (predicted - actual).abs() / actual < 0.15,
+        "refit never tracked the slowdown: predicted {predicted}, actual {actual}"
+    );
+}
+
+// ---------------------------------------------------- bit-identity lock
+
+fn drift_scenario(seed: u64) -> ScenarioConfig {
+    ScenarioConfig::bursty(4.0, seed)
+        .with_duration(90.0, 0.0)
+        .with_replicas(2)
+        .with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 15.0,
+            factor: 6.0,
+            duration: 0.0,
+        })
+}
+
+fn run(cfg: &Config, scenario: &ScenarioConfig, policy: Policy) -> SimResult {
+    Simulation::new(cfg, scenario, policy, Architecture::Microservice).run()
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.latencies(), b.latencies(), "{ctx}: latency series");
+    assert_eq!(a.generated, b.generated, "{ctx}: generated");
+    assert_eq!(a.unfinished, b.unfinished, "{ctx}: unfinished");
+    assert_eq!(a.scale_outs, b.scale_outs, "{ctx}: scale_outs");
+    assert_eq!(a.scale_ins, b.scale_ins, "{ctx}: scale_ins");
+    assert_eq!(a.peak_replicas, b.peak_replicas, "{ctx}: peak_replicas");
+    assert_eq!(a.tail, b.tail, "{ctx}: tail ledger");
+    assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed records");
+    assert_eq!(a.events, b.events, "{ctx}: events");
+}
+
+#[test]
+fn frozen_mode_is_inert_to_prediction_knobs_for_every_policy() {
+    // The ISSUE 5 acceptance lock: with `prediction.online = false` the
+    // prediction plane delegates to the frozen model bit-for-bit, so the
+    // other prediction knobs cannot change ANY policy's results — even
+    // under the fail-slow fault where online mode would diverge.
+    let base_cfg = Config::default();
+    let mut tweaked = Config::default();
+    tweaked.prediction.window = 7.0;
+    tweaked.prediction.refit_every = 0.5;
+    tweaked.prediction.min_samples = 2;
+    tweaked.prediction.confidence_halflife = 1.0;
+    assert!(!tweaked.prediction.online, "tweaked config must stay frozen");
+    let scenario = drift_scenario(31);
+    for policy in Policy::ALL {
+        let a = run(&base_cfg, &scenario, policy);
+        let b = run(&tweaked, &scenario, policy);
+        assert_bit_identical(&a, &b, &format!("{policy:?} frozen-mode knob inertness"));
+    }
+}
+
+#[test]
+fn online_flag_is_live_under_drift() {
+    // Enabling the plane must actually change the trajectory where drift
+    // exists — otherwise the frozen-mode lock above would hold vacuously.
+    let frozen = Config::default();
+    let mut online = Config::default();
+    online.prediction.online = true;
+    let scenario = drift_scenario(37);
+    let f = run(&frozen, &scenario, Policy::DeadlineShed);
+    let o = run(&online, &scenario, Policy::DeadlineShed);
+    assert_ne!(
+        f.latencies(),
+        o.latencies(),
+        "online recalibration changed nothing under a 6x fail-slow"
+    );
+    // Recalibrated admission still engages the safety stop under drift
+    // (the directional mis-shed comparison lives in
+    // engine_invariants::online_recalibration_beats_frozen_model_under_fail_slow,
+    // aggregated over seeds — single trajectories are not paired samples).
+    assert!(o.tail.shed > 0, "online mode never shed under overload drift");
+}

@@ -327,6 +327,64 @@ fn fail_slow_stale_estimate_regression_for_deadline_shed() {
 }
 
 #[test]
+fn online_recalibration_beats_frozen_model_under_fail_slow() {
+    // The ISSUE 5 regression riding on the PR-4 fail-slow fault: from
+    // t=20 one edge pod silently serves 6x slower. The frozen model's
+    // admission estimate stays optimistic, so deadline-shed keeps
+    // admitting work that then blows its deadline (mis-sheds). With
+    // `prediction.online` the engine's completion observations re-fit the
+    // affine law, the service estimate inflates, and the doomed work is
+    // refused at the front door instead. Aggregated over seeds (the two
+    // modes are different trajectories, not paired samples): online must
+    // strictly reduce the mis-shed count AND the admitted tail, while
+    // every conservation law keeps holding.
+    let frozen = Config::default();
+    let mut online = Config::default();
+    online.prediction.online = true;
+    let deadlines = frozen.deadline_by_lane();
+    let (mut mis_frozen, mut mis_online) = (0usize, 0usize);
+    let (mut p99_frozen, mut p99_online) = (0.0, 0.0);
+    for seed in [81, 82, 83] {
+        let scen = ScenarioConfig::bursty(3.0, seed)
+            .with_duration(240.0, 0.0)
+            .with_replicas(2)
+            .with_fault(FaultSpec::FailSlow {
+                tier: Tier::Edge,
+                at: 20.0,
+                factor: 6.0,
+                duration: 0.0,
+            });
+        let rf = Simulation::new(&frozen, &scen, Policy::DeadlineShed, Architecture::Microservice)
+            .run();
+        let ro = Simulation::new(&online, &scen, Policy::DeadlineShed, Architecture::Microservice)
+            .run();
+        assert_conserved(&rf, &format!("frozen fail-slow seed {seed}"));
+        assert_conserved(&ro, &format!("online fail-slow seed {seed}"));
+        // Every shed, frozen or online, still records an honest breach.
+        for s in rf.shed.iter().chain(ro.shed.iter()) {
+            assert!(
+                s.predicted > frozen.deadline(1),
+                "seed {seed}: shed below the deadline ({} <= {})",
+                s.predicted,
+                frozen.deadline(1)
+            );
+        }
+        mis_frozen += rf.mis_sheds(deadlines);
+        mis_online += ro.mis_sheds(deadlines);
+        p99_frozen += rf.summary().p99;
+        p99_online += ro.summary().p99;
+    }
+    assert!(
+        mis_online < mis_frozen,
+        "online recalibration did not reduce mis-sheds: Σ {mis_online} !< {mis_frozen}"
+    );
+    assert!(
+        p99_online < p99_frozen,
+        "online recalibration did not improve the admitted tail: ΣP99 {p99_online:.2} !< {p99_frozen:.2}"
+    );
+}
+
+#[test]
 fn cancellation_regression_on_burst() {
     // ROADMAP asked how much of SafeTail's win needs the kill signal —
     // as an executable assertion: with cancellation, hedged P99 must not

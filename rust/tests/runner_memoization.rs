@@ -151,6 +151,93 @@ fn tail_knobs_change_cache_keys() {
 }
 
 #[test]
+fn prediction_knobs_change_cache_keys() {
+    // ISSUE 5 satellite: every `prediction.*` knob must reach the memo
+    // key, so a frozen-mode and an online-mode sweep (or two different
+    // calibrator tunings) can never collide in `SimCache`. The
+    // exhaustive destructure in `Config::hash_content` makes *adding* a
+    // knob without hashing it a compile error; this pins each knob's
+    // runtime behaviour.
+    let cell = grid().remove(0);
+    let base = cell.cache_key(&cfg());
+
+    let mut online = cfg();
+    online.prediction.online = true;
+    assert_ne!(base, cell.cache_key(&online), "prediction.online not keyed");
+
+    let mut window = cfg();
+    window.prediction.window = 30.0;
+    assert_ne!(base, cell.cache_key(&window), "prediction.window not keyed");
+
+    let mut refit = cfg();
+    refit.prediction.refit_every = 2.0;
+    assert_ne!(base, cell.cache_key(&refit), "prediction.refit_every not keyed");
+
+    let mut min_samples = cfg();
+    min_samples.prediction.min_samples = 3;
+    assert_ne!(
+        base,
+        cell.cache_key(&min_samples),
+        "prediction.min_samples not keyed"
+    );
+
+    let mut halflife = cfg();
+    halflife.prediction.confidence_halflife = 4.0;
+    assert_ne!(
+        base,
+        cell.cache_key(&halflife),
+        "prediction.confidence_halflife not keyed"
+    );
+
+    // Equal knobs, equal key.
+    assert_eq!(base, cell.cache_key(&cfg()));
+
+    // Behaviourally: a frozen and an online run of the same drifting cell
+    // through one cached runner must not cross-pollinate — the online run
+    // sheds more under fail-slow, whatever the cache computed first.
+    let runner = Runner::serial();
+    let mut scen = ScenarioConfig::bursty(4.0, 5)
+        .with_duration(90.0, 0.0)
+        .with_replicas(2)
+        .with_fault(FaultSpec::FailSlow {
+            tier: Tier::Edge,
+            at: 15.0,
+            factor: 6.0,
+            duration: 0.0,
+        });
+    scen.name = "memo-drift".into();
+    let cell = Cell::new(scen, Policy::DeadlineShed);
+    let frozen = runner.run(&cfg(), &[cell.clone()]);
+    let online_r = runner.run(&online, &[cell]);
+    assert_ne!(
+        frozen[0].latencies(),
+        online_r[0].latencies(),
+        "online result served from the frozen cache entry"
+    );
+}
+
+#[test]
+fn hybrid_policy_has_its_own_cache_key() {
+    // The new sixth policy must key distinctly from every other policy on
+    // the same scenario (the policy discriminant byte covers it).
+    let cfg = cfg();
+    let scen = ScenarioConfig::bursty(3.0, 11)
+        .with_duration(60.0, 5.0)
+        .with_replicas(2);
+    let hybrid = Cell::new(scen.clone(), Policy::Hybrid).cache_key(&cfg);
+    for policy in Policy::ALL {
+        if policy == Policy::Hybrid {
+            continue;
+        }
+        assert_ne!(
+            hybrid,
+            Cell::new(scen.clone(), policy).cache_key(&cfg),
+            "hybrid collides with {policy:?}"
+        );
+    }
+}
+
+#[test]
 fn scenario_shape_knobs_change_cache_keys() {
     // ISSUE 4 satellite: every new arrival/fault knob must be covered by
     // `ScenarioConfig::hash_content`, so two configs differing only in
