@@ -8,18 +8,24 @@
 //!   cargo run --release --example bench_baseline -- --smoke     # CI
 //!   cargo run --release --example bench_baseline -- --out path.json
 //!
-//! Three measurements:
+//! Four measurements:
 //!   * `cold_single_pass` — one λ=6 bursty LA-IMR simulation: simulated
 //!     events drained per wall-second (the dense-index engine path);
 //!   * `sweep_cold` — a λ×seed×policy grid with memoization disabled:
 //!     cells per second (the sharded runner's raw throughput);
 //!   * `sweep_repeated` — the same grid requested 3× (the shape of
 //!     `repro all`, where Table VI and Figs 7/8 share cells), cold vs
-//!     memoized: the memo speedup, with results verified bit-identical.
+//!     memoized: the memo speedup, with results verified bit-identical;
+//!   * `million_robot` — the ISSUE 6 yardstick: the ~10⁶-request smooth
+//!     scenario (smoke: ~60k) under `engine.mode = des` vs `hybrid`,
+//!     reporting per-mode wall time, request throughput, how many
+//!     completions the fluid fast path batched, and the process peak
+//!     RSS (the chunk-streamed arrival front end bounds it).
 
-use la_imr::config::{Config, ScenarioConfig};
+use la_imr::config::{Config, EngineMode, ScenarioConfig};
+use la_imr::report::{million_robot_config, million_robot_scenario};
 use la_imr::sim::{Architecture, Cell, Policy, Runner, Simulation};
-use la_imr::util::bench::bench_once;
+use la_imr::util::bench::{bench_once, peak_rss_bytes};
 use std::time::{SystemTime, UNIX_EPOCH};
 
 fn arg_value(name: &str) -> Option<String> {
@@ -119,12 +125,49 @@ fn main() {
     }
     println!("  bit-identity: memoized == cold across all cells ✓\n");
 
+    // 4) Million-robot fast path (ISSUE 6): the big smooth scenario under
+    //    both engine modes. Same arrivals by construction; hybrid must
+    //    batch a large share of completions through the fluid path.
+    let mr_cfg = million_robot_config();
+    let mr_scenario = million_robot_scenario(7, smoke);
+    let mut mr_hybrid_cfg = mr_cfg.clone();
+    mr_hybrid_cfg.engine.mode = EngineMode::Hybrid;
+    let arch = Architecture::Microservice;
+    let (mr_des, mr_des_dt) = bench_once(
+        &format!("million-robot ({}): engine.mode=des", mr_scenario.name),
+        || Simulation::new(&mr_cfg, &mr_scenario, Policy::Static, arch).run(),
+    );
+    let (mr_hyb, mr_hyb_dt) = bench_once(
+        &format!("million-robot ({}): engine.mode=hybrid", mr_scenario.name),
+        || Simulation::new(&mr_hybrid_cfg, &mr_scenario, Policy::Static, arch).run(),
+    );
+    assert_eq!(
+        mr_des.generated, mr_hyb.generated,
+        "engine modes saw different million-robot arrival streams"
+    );
+    let mr_des_rps = mr_des.generated as f64 / mr_des_dt.max(1e-9);
+    let mr_hyb_rps = mr_hyb.generated as f64 / mr_hyb_dt.max(1e-9);
+    let mr_speedup = mr_des_dt / mr_hyb_dt.max(1e-9);
+    let peak_rss_mb = peak_rss_bytes().map(|b| b as f64 / (1024.0 * 1024.0));
+    println!(
+        "  {} requests: des {:.0} req/s ({} events), hybrid {:.0} req/s \
+         ({} events, {} fluid-batched) → {:.2}x; peak RSS {}\n",
+        mr_des.generated,
+        mr_des_rps,
+        mr_des.events,
+        mr_hyb_rps,
+        mr_hyb.events,
+        mr_hyb.fluid_batched,
+        mr_speedup,
+        peak_rss_mb.map_or_else(|| "n/a".into(), |mb| format!("{mb:.0} MiB")),
+    );
+
     let timestamp = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let json = format!(
-        "{{\n  \"schema\": \"la-imr-bench/1\",\n  \"unix_time\": {timestamp},\n  \"mode\": \"{mode}\",\n  \"workers\": {workers},\n  \"cell_duration_s\": {duration},\n  \"cold_single_pass\": {{\n    \"events\": {events},\n    \"wall_s\": {cold_dt:.4},\n    \"events_per_sec\": {eps:.0}\n  }},\n  \"sweep_cold\": {{\n    \"cells\": {n_cells},\n    \"wall_s\": {sweep_cold_dt:.4},\n    \"cells_per_sec\": {cps:.3}\n  }},\n  \"sweep_repeated\": {{\n    \"cells\": {n_rep},\n    \"wall_s_no_cache\": {rep_cold_dt:.4},\n    \"wall_s_memoized\": {rep_memo_dt:.4},\n    \"memo_speedup\": {memo_speedup:.2}\n  }}\n}}\n",
+        "{{\n  \"schema\": \"la-imr-bench/1\",\n  \"unix_time\": {timestamp},\n  \"mode\": \"{mode}\",\n  \"workers\": {workers},\n  \"cell_duration_s\": {duration},\n  \"cold_single_pass\": {{\n    \"events\": {events},\n    \"wall_s\": {cold_dt:.4},\n    \"events_per_sec\": {eps:.0}\n  }},\n  \"sweep_cold\": {{\n    \"cells\": {n_cells},\n    \"wall_s\": {sweep_cold_dt:.4},\n    \"cells_per_sec\": {cps:.3}\n  }},\n  \"sweep_repeated\": {{\n    \"cells\": {n_rep},\n    \"wall_s_no_cache\": {rep_cold_dt:.4},\n    \"wall_s_memoized\": {rep_memo_dt:.4},\n    \"memo_speedup\": {memo_speedup:.2}\n  }},\n  \"million_robot\": {{\n    \"scenario\": \"{mr_name}\",\n    \"requests\": {mr_requests},\n    \"des\": {{\n      \"wall_s\": {mr_des_dt:.4},\n      \"events\": {mr_des_events},\n      \"requests_per_sec\": {mr_des_rps:.0}\n    }},\n    \"hybrid\": {{\n      \"wall_s\": {mr_hyb_dt:.4},\n      \"events\": {mr_hyb_events},\n      \"fluid_batched\": {mr_fluid},\n      \"requests_per_sec\": {mr_hyb_rps:.0}\n    }},\n    \"hybrid_speedup\": {mr_speedup:.2},\n    \"peak_rss_mb\": {mr_rss}\n  }}\n}}\n",
         mode = if smoke { "smoke" } else { "full" },
         workers = runner_threads,
         events = r.events,
@@ -132,6 +175,12 @@ fn main() {
         n_cells = cells.len(),
         cps = cold_cells_per_sec,
         n_rep = repeated.len(),
+        mr_name = mr_scenario.name,
+        mr_requests = mr_des.generated,
+        mr_des_events = mr_des.events,
+        mr_hyb_events = mr_hyb.events,
+        mr_fluid = mr_hyb.fluid_batched,
+        mr_rss = peak_rss_mb.map_or_else(|| "null".to_string(), |mb| format!("{mb:.1}")),
     );
     match std::fs::write(&out_path, &json) {
         Ok(()) => println!("wrote {out_path}"),

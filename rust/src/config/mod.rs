@@ -247,6 +247,77 @@ impl Default for PredictionPolicy {
     }
 }
 
+/// Simulation-engine execution mode (ISSUE 6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Full discrete-event simulation — the reference semantics; results
+    /// are bit-identical to the pre-calendar-queue engine.
+    Des,
+    /// Opt-in fluid/DES hybrid: while arrivals are smooth (utilisation
+    /// below `fluid_rho_max`, queues empty) and no killing fault is
+    /// scheduled within the guard window, uncontended requests complete
+    /// inline against the closed-form service model instead of paying a
+    /// completion event + dispatch-record round trip. Converges to full
+    /// DES within `hybrid_tolerance` (locked by the hybrid-convergence
+    /// invariant test across the 9-scenario catalog × all 6 policies).
+    Hybrid,
+}
+
+impl EngineMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineMode::Des => "des",
+            EngineMode::Hybrid => "hybrid",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "des" => Some(EngineMode::Des),
+            "hybrid" => Some(EngineMode::Hybrid),
+            _ => None,
+        }
+    }
+}
+
+/// Engine fast-path knobs (ISSUE 6): calendar-queue geometry and the
+/// hybrid fluid/DES integration envelope.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnginePolicy {
+    /// `des` (default, reference semantics) or `hybrid` (fluid fast path
+    /// through smooth stretches, full DES inside guard windows).
+    pub mode: EngineMode,
+    /// Calendar-queue band width [s]; 0 = auto-size from the arrival
+    /// density. A pure performance knob: pop order is provably
+    /// width-invariant (see `sim::events`), so `des` results do not
+    /// change with it — but it is still hashed into the memo key.
+    pub bucket_width: f64,
+    /// Utilisation ceiling for certifying a fluid window: a pool whose
+    /// estimated ρ exceeds this keeps full DES semantics.
+    pub fluid_rho_max: f64,
+    /// Relative tolerance on P99 (plus the goodput/shed-share bands) the
+    /// hybrid mode must stay within of full DES — consumed by the
+    /// convergence gate, not the engine itself.
+    pub hybrid_tolerance: f64,
+    /// Guard window [s] around killing faults (pod crashes, rack
+    /// failures): no fluid completion may extend into `now + control
+    /// interval + guard` of one, so a fluid pod can never need a crash
+    /// tombstone.
+    pub hybrid_guard: f64,
+}
+
+impl Default for EnginePolicy {
+    fn default() -> Self {
+        Self {
+            mode: EngineMode::Des,
+            bucket_width: 0.0,
+            fluid_rho_max: 0.5,
+            hybrid_tolerance: 0.25,
+            hybrid_guard: 2.0,
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -256,6 +327,7 @@ pub struct Config {
     pub cluster: ClusterPolicy,
     pub tail: TailPolicy,
     pub prediction: PredictionPolicy,
+    pub engine: EnginePolicy,
 }
 
 impl Default for Config {
@@ -318,6 +390,7 @@ impl Default for Config {
             cluster: ClusterPolicy::default(),
             tail: TailPolicy::default(),
             prediction: PredictionPolicy::default(),
+            engine: EnginePolicy::default(),
         }
     }
 }
@@ -406,6 +479,28 @@ impl Config {
             "prediction.confidence_halflife must be > 0 seconds (got {})",
             self.prediction.confidence_halflife
         );
+        anyhow::ensure!(
+            self.engine.bucket_width.is_finite() && self.engine.bucket_width >= 0.0,
+            "engine.bucket_width must be >= 0 seconds (0 = auto; got {})",
+            self.engine.bucket_width
+        );
+        anyhow::ensure!(
+            self.engine.fluid_rho_max.is_finite()
+                && self.engine.fluid_rho_max > 0.0
+                && self.engine.fluid_rho_max <= 1.0,
+            "engine.fluid_rho_max must be in (0, 1] (got {})",
+            self.engine.fluid_rho_max
+        );
+        anyhow::ensure!(
+            self.engine.hybrid_tolerance.is_finite() && self.engine.hybrid_tolerance > 0.0,
+            "engine.hybrid_tolerance must be > 0 (got {})",
+            self.engine.hybrid_tolerance
+        );
+        anyhow::ensure!(
+            self.engine.hybrid_guard.is_finite() && self.engine.hybrid_guard >= 0.0,
+            "engine.hybrid_guard must be >= 0 seconds (got {})",
+            self.engine.hybrid_guard
+        );
         let mut names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
         names.sort_unstable();
         names.dedup();
@@ -484,6 +579,7 @@ impl Config {
             cluster,
             tail,
             prediction,
+            engine,
         } = self;
         h.write_usize(models.len());
         for m in models {
@@ -586,6 +682,20 @@ impl Config {
             h.write_u64(x.to_bits());
         }
         h.write_usize(*min_samples);
+        let EnginePolicy {
+            mode,
+            bucket_width,
+            fluid_rho_max,
+            hybrid_tolerance,
+            hybrid_guard,
+        } = engine;
+        h.write_u8(match mode {
+            EngineMode::Des => 0,
+            EngineMode::Hybrid => 1,
+        });
+        for x in [bucket_width, fluid_rho_max, hybrid_tolerance, hybrid_guard] {
+            h.write_u64(x.to_bits());
+        }
     }
 }
 
@@ -704,6 +814,47 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("confidence_halflife"));
+    }
+
+    #[test]
+    fn engine_defaults_are_des_and_valid() {
+        let c = Config::default();
+        assert_eq!(c.engine.mode, EngineMode::Des, "engine must default to des");
+        assert_eq!(c.engine.bucket_width, 0.0, "bucket width defaults to auto");
+        assert!(c.engine.fluid_rho_max > 0.0 && c.engine.fluid_rho_max <= 1.0);
+        assert!(c.engine.hybrid_tolerance > 0.0);
+        assert!(c.engine.hybrid_guard >= 0.0);
+        c.validate().unwrap();
+        assert_eq!(EngineMode::from_name("hybrid"), Some(EngineMode::Hybrid));
+        assert_eq!(EngineMode::from_name("des"), Some(EngineMode::Des));
+        assert_eq!(EngineMode::from_name("fluid"), None);
+    }
+
+    #[test]
+    fn rejects_bad_engine_knobs() {
+        let mut c = Config::default();
+        c.engine.bucket_width = -1.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("bucket_width"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.engine.fluid_rho_max = 0.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("fluid_rho_max"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.engine.fluid_rho_max = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = Config::default();
+        c.engine.hybrid_tolerance = 0.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("hybrid_tolerance"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.engine.hybrid_guard = f64::NAN;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("hybrid_guard"), "unclear error: {err}");
     }
 
     #[test]

@@ -3,8 +3,9 @@
 //! rest keep their paper defaults.
 
 use super::{
-    parse_trace, ArrivalKind, ClusterPolicy, Config, FaultSpec, InstanceSpec, ModelProfile,
-    PredictionPolicy, QualityClass, ScenarioConfig, SloPolicy, TailPolicy, Tier,
+    parse_trace, ArrivalKind, ClusterPolicy, Config, EngineMode, EnginePolicy, FaultSpec,
+    InstanceSpec, ModelProfile, PredictionPolicy, QualityClass, ScenarioConfig, SloPolicy,
+    TailPolicy, Tier,
 };
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -217,6 +218,38 @@ impl PredictionPolicy {
             "confidence_halflife".into(),
             Value::Num(self.confidence_halflife),
         );
+        Value::Obj(o)
+    }
+}
+
+impl EnginePolicy {
+    fn from_json(v: &Value, base: EnginePolicy) -> anyhow::Result<Self> {
+        Ok(EnginePolicy {
+            mode: match v.get("mode") {
+                None => base.mode,
+                Some(x) => {
+                    let s = x
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("engine.mode: expected a string"))?;
+                    EngineMode::from_name(s).ok_or_else(|| {
+                        anyhow::anyhow!("engine.mode: expected 'des' or 'hybrid', got '{s}'")
+                    })?
+                }
+            },
+            bucket_width: num(v, "bucket_width", base.bucket_width)?,
+            fluid_rho_max: num(v, "fluid_rho_max", base.fluid_rho_max)?,
+            hybrid_tolerance: num(v, "hybrid_tolerance", base.hybrid_tolerance)?,
+            hybrid_guard: num(v, "hybrid_guard", base.hybrid_guard)?,
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("mode".into(), Value::Str(self.mode.name().into()));
+        o.insert("bucket_width".into(), Value::Num(self.bucket_width));
+        o.insert("fluid_rho_max".into(), Value::Num(self.fluid_rho_max));
+        o.insert("hybrid_tolerance".into(), Value::Num(self.hybrid_tolerance));
+        o.insert("hybrid_guard".into(), Value::Num(self.hybrid_guard));
         Value::Obj(o)
     }
 }
@@ -642,6 +675,10 @@ impl Config {
             None => base.prediction,
             Some(p) => PredictionPolicy::from_json(p, PredictionPolicy::default())?,
         };
+        let engine = match v.get("engine") {
+            None => base.engine,
+            Some(e) => EnginePolicy::from_json(e, EnginePolicy::default())?,
+        };
         Ok(Config {
             models,
             instances,
@@ -649,6 +686,7 @@ impl Config {
             cluster,
             tail,
             prediction,
+            engine,
         })
     }
 
@@ -667,6 +705,7 @@ impl Config {
         o.insert("cluster".into(), self.cluster.to_json());
         o.insert("tail".into(), self.tail.to_json());
         o.insert("prediction".into(), self.prediction.to_json());
+        o.insert("engine".into(), self.engine.to_json());
         json::to_string(&Value::Obj(o))
     }
 }
@@ -708,5 +747,28 @@ mod tests {
         let c = Config::from_json_str(r#"{"cluster": {"pod_startup": 5.0}}"#).unwrap();
         assert_eq!(c.cluster.pod_startup, 5.0);
         assert_eq!(c.cluster.hpa_interval, 5.0);
+    }
+
+    #[test]
+    fn engine_partial_override_and_roundtrip() {
+        let c = Config::from_json_str(r#"{"engine": {"mode": "hybrid", "bucket_width": 0.5}}"#)
+            .unwrap();
+        assert_eq!(c.engine.mode, EngineMode::Hybrid);
+        assert_eq!(c.engine.bucket_width, 0.5);
+        // Untouched knobs keep their defaults.
+        assert_eq!(c.engine.hybrid_guard, EnginePolicy::default().hybrid_guard);
+        let back = Config::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(back.engine, c.engine);
+        // Defaults omit the section entirely and still parse to des.
+        let d = Config::from_json_str("{}").unwrap();
+        assert_eq!(d.engine, EnginePolicy::default());
+    }
+
+    #[test]
+    fn engine_rejects_unknown_mode() {
+        let err = Config::from_json_str(r#"{"engine": {"mode": "fluid"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("engine.mode"), "unclear error: {err}");
     }
 }

@@ -125,6 +125,23 @@ pub fn seed_fault_events(scenario: &ScenarioConfig, events: &mut EventQueue) {
     }
 }
 
+/// Times of the scenario's *scheduled killing* faults — rack failures
+/// tear pods down, so the hybrid engine's fluid certifier must keep its
+/// guard window clear of them (a fluid completion may never need a crash
+/// tombstone). Fail-slow onsets and partitions do not kill and are
+/// handled per-arrival, so they are not listed here; renewal crashes are
+/// drawn at runtime and tracked by the engine as they are scheduled.
+pub fn scheduled_kill_times(scenario: &ScenarioConfig) -> Vec<SimTime> {
+    scenario
+        .faults
+        .iter()
+        .filter_map(|f| match f {
+            FaultSpec::RackFailure { at, .. } if *at < scenario.duration => Some(*at),
+            _ => None,
+        })
+        .collect()
+}
+
 /// The scenario's tier-partition windows as [(start, end)] — while any
 /// window is open, cross-tier dispatch is severed and the engine coerces
 /// offload/hedge targets back to the home pool.
@@ -246,5 +263,9 @@ mod tests {
         // Partition windows are exposed as time ranges instead.
         assert_eq!(partition_windows(&s), vec![(40.0, 60.0)]);
         assert!(partition_windows(&ScenarioConfig::poisson(1.0, 1)).is_empty());
+        // Kill times list only the in-horizon rack failure — fail-slow
+        // and partitions never kill, the 9999 s failure never seeds.
+        assert_eq!(scheduled_kill_times(&s), vec![30.0]);
+        assert!(scheduled_kill_times(&ScenarioConfig::poisson(1.0, 1)).is_empty());
     }
 }

@@ -62,22 +62,41 @@
 //! fail-slow drift instead of going stale. In static mode (the default)
 //! nothing is published and the run is bit-identical to the
 //! pre-prediction-plane engine.
+//!
+//! Million-robot fast path (ISSUE 6): the event core is a calendar
+//! queue ([`EventQueue`] — O(1) amortised push/pop with the exact same
+//! pop order as a single heap), and arrivals are *chunk-streamed*: the
+//! [`ArrivalStream`] refills one calendar band at a time, so peak
+//! memory scales with the arrival rate, not the total request count.
+//! With `engine.mode = hybrid` (opt-in; `des` is the bit-identical
+//! reference), each control tick *certifies* the next interval as
+//! fluid when every pool is drained, utilisation sits under
+//! `engine.fluid_rho_max`, and no killing fault (renewal crash or rack
+//! failure) can land inside `engine.hybrid_guard` of it. Inside a
+//! certified window an unhedged request landing on an empty pool with
+//! an idle pod completes *inline* against the closed-form service law —
+//! no dispatch record, no completion event — with the pod held in a
+//! lazy `fluid_busy` table so queue-path dispatches still see it as
+//! occupied. Any condition failing for a given request falls that
+//! request back to full DES; convergence to `des` results within
+//! `engine.hybrid_tolerance` is locked by `tests/hybrid_convergence.rs`.
 
 use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
-use crate::config::{Config, FaultSpec, QualityClass, ScenarioConfig};
+use crate::config::{Config, EngineMode, FaultSpec, QualityClass, ScenarioConfig};
 use crate::coordinator::state::ReplicaView;
 use crate::coordinator::{home_map, ControlState, MultiQueue, QueuedRequest};
 use crate::latency_model::{LatencyModel, Predictor};
 use crate::rng::Rng;
 use crate::sim::components::{
-    fault_injector_for, partition_windows, seed_fault_events, CadencePlan, FaultInjector,
+    fault_injector_for, partition_windows, scheduled_kill_times, seed_fault_events, CadencePlan,
+    FaultInjector,
 };
 use crate::sim::events::{Event, EventQueue};
 use crate::sim::policy::{ControlPolicy, Policy, Verdict};
 use crate::sim::result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
 use crate::telemetry::{LatencyHistogram, SlidingRate};
-use crate::workload::ArrivalGenerator;
+use crate::workload::ArrivalStream;
 use crate::SimTime;
 
 /// Service architecture (Fig 4 comparison).
@@ -118,6 +137,12 @@ struct DepRuntime {
     /// *control state never sees this* — that is the fault's point: the
     /// utilisation estimate goes stale.
     slow: Vec<(u64, f64, f64)>,
+    /// Pods occupied by an *inline fluid completion* (hybrid mode):
+    /// (pod id, free time). The fluid path never touches `in_flight`
+    /// or `in_service` — this lazy table is how queue-path dispatches
+    /// see the pod as busy until its fluid span ends. Purged against
+    /// `now` whenever consulted; always empty under `engine.mode = des`.
+    fluid_busy: Vec<(u64, f64)>,
 }
 
 /// Full payload of one dispatch. `Event::ServiceComplete` carries only
@@ -222,6 +247,22 @@ pub struct Simulation {
     crashes: u64,
     /// Events drained from the queue (DES throughput accounting).
     events_processed: u64,
+    // -- hybrid fluid/DES machinery (ISSUE 6); inert under `des` --
+    /// Cached `cfg.engine.mode == Hybrid`.
+    hybrid: bool,
+    /// End of the currently certified fluid window (−∞ = none).
+    fluid_until: SimTime,
+    /// Hard bound on fluid completions: `fluid_until + hybrid_guard`.
+    /// A request whose inline service would extend past this falls back
+    /// to full DES, so no fluid span can overlap a killing fault.
+    fluid_horizon: SimTime,
+    /// Pending *killing* fault times (renewal crashes as scheduled,
+    /// rack failures from the scenario); pruned against `now` at each
+    /// certification. The certifier refuses any window whose guard
+    /// would overlap one.
+    fault_times: Vec<SimTime>,
+    /// Requests completed inline by the fluid fast path.
+    fluid_batched: u64,
 }
 
 impl Simulation {
@@ -274,6 +315,7 @@ impl Simulation {
                     inflight_models: vec![0; n_models],
                     in_service: Vec::new(),
                     slow: Vec::new(),
+                    fluid_busy: Vec::new(),
                 });
             }
         }
@@ -348,6 +390,11 @@ impl Simulation {
             predictor_online,
             crashes: 0,
             events_processed: 0,
+            hybrid: cfg.engine.mode == EngineMode::Hybrid,
+            fluid_until: f64::NEG_INFINITY,
+            fluid_horizon: f64::NEG_INFINITY,
+            fault_times: Vec::new(),
+            fluid_batched: 0,
         }
     }
 
@@ -392,45 +439,64 @@ impl Simulation {
 
     /// Run to completion and produce the result.
     pub fn run(mut self) -> SimResult {
-        // Compose the scenario: arrival stream + control-plane cadences +
-        // fault process, all into one event queue.
-        let arrivals = ArrivalGenerator::generate(&self.scenario);
-        self.generated = arrivals.len();
-        // Request ids are 0..generated — per-request state is a flat Vec.
-        self.req_state = vec![None; arrivals.len()];
-        self.req_tokens = vec![[NO_TOKEN; 2]; arrivals.len()];
-        self.dispatches = Vec::with_capacity(arrivals.len() + arrivals.len() / 4);
-        // The queue is still empty here — presize it for the bulk insert
-        // (arrivals dominate; cadences and faults ride in the slack).
-        self.events = EventQueue::with_capacity(arrivals.len() + 256);
-        for (k, a) in arrivals.arrivals().iter().enumerate() {
-            self.events.push(
-                a.at,
-                Event::Arrival {
-                    id: k as u64,
-                    quality: a.quality,
-                },
-            );
-        }
+        // Compose the scenario: chunk-streamed arrivals + control-plane
+        // cadences + fault process, all into one calendar event queue
+        // sized from the analytic rate envelope. Arrivals are no longer
+        // materialised up front: the stream refills one calendar band at
+        // a time, so peak memory scales with the arrival *rate*, not the
+        // run's total request count (§Million-robot fast path).
+        let horizon = self.scenario.duration + 60.0;
+        // Pre-reservation only — the tables grow past it if the draw
+        // runs hot, and the cap keeps a degenerate rate × duration
+        // product from over-reserving.
+        let est = (self.scenario.mean_rate() * self.scenario.duration)
+            .ceil()
+            .clamp(0.0, 8e6) as usize;
+        self.events = EventQueue::with_profile(
+            est + 256,
+            horizon + self.cfg.cluster.drain_grace,
+            self.cfg.engine.bucket_width,
+        );
+        let mut stream = ArrivalStream::new(&self.scenario, self.events.refill_span());
+        // Request ids are 0..generated — the per-request tables grow by
+        // one slot per streamed arrival (reserved to the envelope).
+        self.req_state = Vec::with_capacity(est + est / 8);
+        self.req_tokens = Vec::with_capacity(est + est / 8);
+        self.dispatches = Vec::with_capacity(est + est / 4);
         CadencePlan::from_config(&self.cfg).seed(&mut self.events, self.scenario.duration);
         for dep in 0..self.deps.len() {
             if let Some(at) = self.faults.first_crash(dep, &mut self.rng) {
                 if at < self.scenario.duration {
                     self.events.push(at, Event::PodCrash { dep });
+                    self.fault_times.push(at);
                 }
             }
         }
         // Scheduled correlated faults (rack failures, fail-slow onsets).
         seed_fault_events(&self.scenario, &mut self.events);
+        self.fault_times.extend(scheduled_kill_times(&self.scenario));
 
         // Drain horizon: let in-flight work finish for a grace period.
-        let horizon = self.scenario.duration + 60.0;
-        while let Some(ev) = self.events.pop() {
+        loop {
+            // Refill *before* popping: a not-yet-loaded chunk may hold
+            // an arrival at exactly the head event's time that must pop
+            // first (arrival seqs sort below every runtime seq at equal
+            // times — the same order the old up-front bulk insert gave).
+            while !stream.is_done()
+                && self
+                    .events
+                    .peek_time()
+                    .map_or(true, |t| t >= stream.loaded_until())
+            {
+                self.push_chunk(&mut stream);
+            }
+            let Some(ev) = self.events.pop() else { break };
             if ev.at > horizon {
                 break;
             }
             self.handle(ev.at, ev.event);
         }
+        self.generated = self.req_state.len();
 
         // Final replica accounting.
         self.account_replicas(horizon.min(self.scenario.duration));
@@ -473,7 +539,31 @@ impl Simulation {
             events: self.events_processed,
             shed: std::mem::take(&mut self.shed),
             tail: self.tail,
+            fluid_batched: self.fluid_batched,
             cache: Default::default(),
+        }
+    }
+
+    /// Load the next arrival chunk into the queue, growing the dense
+    /// per-request tables by one slot per arrival. Ids stay the global
+    /// arrival index — exactly what the old up-front bulk insert used —
+    /// and double as the tie-break seq (see [`EventQueue::push_arrival`]).
+    fn push_chunk(&mut self, stream: &mut ArrivalStream) {
+        let chunk = stream.next_chunk();
+        self.req_state.reserve(chunk.len());
+        self.req_tokens.reserve(chunk.len());
+        for a in chunk {
+            let id = self.req_state.len() as u64;
+            self.req_state.push(None);
+            self.req_tokens.push([NO_TOKEN; 2]);
+            self.events.push_arrival(
+                a.at,
+                id,
+                Event::Arrival {
+                    id,
+                    quality: a.quality,
+                },
+            );
         }
     }
 
@@ -574,6 +664,8 @@ impl Simulation {
         if let Some(at) = self.faults.next_crash(dep, now, &mut self.rng) {
             if at < self.scenario.duration {
                 self.events.push(at, Event::PodCrash { dep });
+                // The fluid certifier must see every pending kill.
+                self.fault_times.push(at);
             }
         }
         let victims: Vec<u64> = self.deps[dep]
@@ -785,6 +877,18 @@ impl Simulation {
             .map(|key| self.pool_of(key))
             .filter(|&p| p != pool);
 
+        // Fluid fast path (ISSUE 6): inside a certified smooth window an
+        // unhedged request landing on a drained pool with an idle pod
+        // completes inline — no dispatch record, no completion event.
+        // Any per-request condition failing falls back to full DES.
+        if self.hybrid
+            && now < self.fluid_until
+            && hedge_pool.is_none()
+            && self.fluid_complete(now, id, quality, pool)
+        {
+            return;
+        }
+
         self.enqueue(now, pool, id, quality);
         self.tail.copies_enqueued += 1;
         if let Some(hp) = hedge_pool {
@@ -796,6 +900,122 @@ impl Simulation {
         if let Some(hp) = hedge_pool {
             self.try_dispatch(now, hp);
         }
+    }
+
+    /// Try to complete one request inline against the closed-form
+    /// service law (the hybrid engine's fluid integration step). The
+    /// bookkeeping is the enqueue → dispatch → complete sequence
+    /// collapsed into one: the rate meter, copy ledger, busy time,
+    /// latency histogram, and completion record all move exactly as the
+    /// DES path moves them, so every conservation invariant holds
+    /// unchanged. Returns false (caller takes the DES path) when the
+    /// pool has a backlog, no idle pod exists, or the drawn service span
+    /// would extend past `fluid_horizon` (a killing fault might land).
+    fn fluid_complete(&mut self, now: SimTime, id: u64, quality: QualityClass, pool: usize) -> bool {
+        let req_model = self.model_by_quality[quality.priority()].expect("model for quality");
+        let offloaded = self.pool_of(self.homes[req_model]) != pool;
+        let d = &mut self.deps[pool];
+        if !d.queue.is_empty() {
+            return false;
+        }
+        if !d.fluid_busy.is_empty() {
+            d.fluid_busy.retain(|&(_, free)| free > now);
+        }
+        // Same pod choice as `try_dispatch`: lowest-id idle serving pod,
+        // with fluid-held pods counting as occupied.
+        let Some(pod_id) = d
+            .dep
+            .pods
+            .iter()
+            .filter(|p| {
+                p.can_serve(now)
+                    && p.in_flight == 0
+                    && !d.fluid_busy.iter().any(|&(pid, _)| pid == p.id)
+            })
+            .map(|p| p.id)
+            .min()
+        else {
+            return false;
+        };
+        // Same service-law evaluation, same draw order, as the DES
+        // dispatch (fail-slow degradation included — slow pods stay
+        // slow in fluid windows; certification never hides them).
+        let slow_factor = d
+            .slow
+            .iter()
+            .find(|&&(pid, _, _)| pid == pod_id)
+            .map(|&(_, f, _)| f)
+            .unwrap_or(1.0);
+        let instance = d.dep.key.instance;
+        let model = &self.svc_models[req_model * self.n_instances + instance];
+        let bg = (model.background / model.r_max).powf(model.gamma);
+        let mut svc = model.base_latency() * (1.0 + bg);
+        svc *= self
+            .rng
+            .lognormal(-SERVICE_SIGMA * SERVICE_SIGMA / 2.0, SERVICE_SIGMA);
+        svc *= slow_factor;
+        let rtt = model.rtt * (0.9 + 0.2 * self.rng.uniform());
+        if now + svc > self.fluid_horizon {
+            // The span would outlive the certified window's guard — fall
+            // back to full DES. (The drawn noise is discarded: hybrid
+            // promises convergence within `engine.hybrid_tolerance`,
+            // not RNG-stream identity with `des`.)
+            return false;
+        }
+        let d = &mut self.deps[pool];
+        d.rate.on_arrival(now);
+        let finished = now + svc + rtt;
+        d.window_hist.record(finished - now);
+        d.fluid_busy.push((pod_id, now + svc));
+        self.tail.copies_enqueued += 1;
+        self.tail.wins += 1;
+        self.tail.busy_time += svc;
+        self.req_state[id as usize] = None;
+        self.outstanding -= 1;
+        if now >= self.scenario.warmup {
+            self.completed.push(CompletedRequest {
+                id,
+                arrived: now,
+                finished,
+                quality,
+                offloaded,
+            });
+        }
+        self.fluid_batched += 1;
+        true
+    }
+
+    /// Certify (or refuse) the next control interval as fluid: every
+    /// pool drained and under `engine.fluid_rho_max` estimated
+    /// utilisation, microservice layout, no prediction plane listening,
+    /// and no killing fault inside the guard window — so no fluid span
+    /// can ever need a crash tombstone. Runs once per control tick;
+    /// never called under `engine.mode = des`.
+    fn certify_fluid(&mut self, now: SimTime) {
+        self.fluid_until = f64::NEG_INFINITY;
+        if self.arch != Architecture::Microservice || self.predictor_online {
+            return;
+        }
+        // CadencePlan pins the control cadence at 1 s — the window a
+        // certification is valid for.
+        let interval = 1.0;
+        let guard_end = now + interval + self.cfg.engine.hybrid_guard;
+        self.fault_times.retain(|&t| t > now);
+        if self.fault_times.iter().any(|&t| t <= guard_end) {
+            return;
+        }
+        for (k, d) in self.deps.iter().enumerate() {
+            if !d.queue.is_empty() {
+                return;
+            }
+            let n = d.dep.ready_count(now).max(1) as f64;
+            let rho = d.rate.rate(now) * self.svc_models[k].base_latency() / n;
+            if rho > self.cfg.engine.fluid_rho_max {
+                return;
+            }
+        }
+        self.fluid_until = now + interval;
+        self.fluid_horizon = guard_end;
     }
 
     fn enqueue(&mut self, now: SimTime, pool: usize, id: u64, quality: QualityClass) {
@@ -816,14 +1036,34 @@ impl Simulation {
             if d.queue.is_empty() {
                 return;
             }
-            // Find an idle, serving pod.
+            // Expired fluid holds free their pods lazily (hybrid mode
+            // only — the table is always empty under `des`).
+            if !d.fluid_busy.is_empty() {
+                d.fluid_busy.retain(|&(_, free)| free > now);
+            }
+            // Find an idle, serving pod (fluid-held pods are occupied).
             let Some(pod) = d
                 .dep
                 .pods
                 .iter_mut()
-                .filter(|p| p.can_serve(now) && p.in_flight == 0)
+                .filter(|p| {
+                    p.can_serve(now)
+                        && p.in_flight == 0
+                        && !d.fluid_busy.iter().any(|&(pid, _)| pid == p.id)
+                })
                 .min_by_key(|p| p.id)
             else {
+                // Fluid holds release without any completion event — if
+                // the backlog is stranded behind them, schedule a wakeup
+                // at the earliest release so it drains then.
+                if !d.fluid_busy.is_empty() {
+                    let wake = d
+                        .fluid_busy
+                        .iter()
+                        .map(|&(_, free)| free)
+                        .fold(f64::INFINITY, f64::min);
+                    self.events.push(wake, Event::PodTick { dep: pool });
+                }
                 return;
             };
             let req = d.queue.pop().expect("non-empty");
@@ -1026,6 +1266,11 @@ impl Simulation {
             self.account_replicas(now);
             self.deps[k].dep.tick(now);
             self.try_dispatch(now, k);
+        }
+        // Hybrid only: decide whether the *next* interval may run
+        // fluidly (see `certify_fluid`). `des` never certifies.
+        if self.hybrid {
+            self.certify_fluid(now);
         }
     }
 
@@ -1441,6 +1686,58 @@ mod tests {
             w.summary().mean,
             p.summary().mean
         );
+    }
+
+    #[test]
+    fn hybrid_fluid_path_engages_on_smooth_load() {
+        use crate::config::EngineMode;
+        // λ=1 over 2 replicas (ρ ≈ 0.37): smooth enough that the fluid
+        // certifier fires, close enough that results must track DES.
+        // Warm-up 0 so the request-conservation law is exact.
+        let scenario = ScenarioConfig::poisson(1.0, 41)
+            .with_duration(120.0, 0.0)
+            .with_replicas(2);
+        let des = Simulation::new(&cfg(), &scenario, Policy::Static, Architecture::Microservice)
+            .run();
+        let mut hcfg = cfg();
+        hcfg.engine.mode = EngineMode::Hybrid;
+        let hyb = Simulation::new(&hcfg, &scenario, Policy::Static, Architecture::Microservice)
+            .run();
+        assert_eq!(des.fluid_batched, 0, "des mode must never run fluidly");
+        assert!(hyb.fluid_batched > 0, "fluid path never engaged");
+        // Conservation holds through inline completions.
+        assert_eq!(hyb.completed.len() + hyb.unfinished, hyb.generated);
+        assert!(hyb.tail.copies_balanced(), "ledger: {:?}", hyb.tail);
+        assert_eq!(hyb.generated, des.generated, "same arrival stream");
+        let (dm, hm) = (des.summary().mean, hyb.summary().mean);
+        assert!(
+            (dm - hm).abs() / dm < 0.2,
+            "hybrid mean {hm} diverged from des {dm}"
+        );
+    }
+
+    #[test]
+    fn hybrid_respects_killing_fault_guard() {
+        use crate::config::EngineMode;
+        // Crash-heavy run under hybrid: the certifier must refuse
+        // windows near kills, and every invariant must survive the mix
+        // of fluid windows and crash recovery.
+        let scenario = ScenarioConfig::poisson(1.0, 77)
+            .with_duration(120.0, 0.0)
+            .with_replicas(3)
+            .with_faults(25.0);
+        let mut hcfg = cfg();
+        hcfg.engine.mode = EngineMode::Hybrid;
+        let r = Simulation::new(&hcfg, &scenario, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert!(r.crashes > 0, "fault injection never fired");
+        assert_eq!(r.completed.len() + r.unfinished, r.generated);
+        assert!(r.tail.copies_balanced(), "ledger: {:?}", r.tail);
+        let mut ids: Vec<u64> = r.completed.iter().map(|c| c.id).collect();
+        let n = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), n, "a request completed twice");
     }
 
     #[test]

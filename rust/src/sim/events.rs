@@ -1,21 +1,46 @@
-//! Event queue: a binary min-heap of timed events with stable FIFO
-//! ordering for ties (sequence numbers), the standard DES core.
+//! Event queue: a calendar/ladder queue with stable FIFO ordering for
+//! ties, tuned so the near-future band behaves like an O(1)-amortised
+//! bucket ring while far-future timers (crash renewals, fail-slow
+//! recoveries, drain graces) wait in an overflow ladder.
+//!
+//! Layout: an `active` binary heap owns the earliest time band
+//! `[.., active_end)`; `buckets` hold unsorted events for the remaining
+//! bands of the current epoch `[epoch_start, epoch_end)`; `overflow`
+//! holds everything at or beyond `epoch_end` (plus `+inf`/NaN timers).
+//! A pop drains the active heap; when it empties, the next non-empty
+//! bucket is heapified wholesale (O(bucket) -> heap build, amortised
+//! O(1) per event for near-uniform arrival streams); when the epoch is
+//! exhausted the overflow re-seeds a fresh epoch at its minimum time.
+//! Every event is routed by timestamp alone, so all events of the active
+//! band compare <= all bucketed events <= all overflow events, and the
+//! pop sequence is *identical* to a single global heap — the bucket
+//! width is a pure performance knob, never an ordering one (locked by
+//! the differential oracle test below).
 //!
 //! Heap slots are deliberately small: the fat `ServiceComplete` payload
 //! (pool, pod, request, arrival time, RTT, quality, offload flag) lives
 //! in the engine's dispatch side-table, and the event carries only the
-//! dispatch token that indexes it. That shrinks every heap slot from the
-//! size of the largest variant (8 fields) down to `{at, seq, small enum}`
-//! — sift-up/sift-down move a third of the bytes they used to.
+//! dispatch token that indexes it.
 //!
 //! Time ordering is *total* (`f64::total_cmp`), so a NaN timestamp can
 //! never scramble sibling comparisons mid-heap: NaN sorts after every
 //! finite time and ties still break by insertion order.
+//!
+//! Tie-breaking uses two seq spaces. Arrival events carry their global
+//! arrival index as `seq` (the chunk-streamed generator pushes them
+//! mid-run, but they keep the seqs the old pre-materialised bulk insert
+//! would have assigned), while every runtime `push` gets
+//! `RUNTIME_SEQ_BASE + counter`. Equal-time ties therefore pop arrivals
+//! first (lowest seqs) and runtime events in insertion order — exactly
+//! the order the single-counter heap produced when all arrivals were
+//! pushed up front, which is what keeps `engine.mode = des` bit-identical
+//! across the streaming change.
 
 use crate::config::QualityClass;
 use crate::SimTime;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::mem;
 
 /// Everything that can happen in the simulation.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -88,47 +113,232 @@ impl PartialOrd for TimedEvent {
     }
 }
 
-/// Min-heap event queue with insertion-order tie-breaking.
-#[derive(Debug, Clone, Default)]
+/// First seq of the runtime space: arrival indices live in
+/// `[0, RUNTIME_SEQ_BASE)`, runtime-scheduled events above it.
+const RUNTIME_SEQ_BASE: u64 = 1 << 48;
+
+/// Calendar/ladder event queue with insertion-order tie-breaking.
+#[derive(Debug, Clone)]
 pub struct EventQueue {
-    heap: BinaryHeap<TimedEvent>,
+    /// Heap over the earliest band — its minimum is the global minimum.
+    active: BinaryHeap<TimedEvent>,
+    /// Events strictly below this time are routed into `active`.
+    active_end: f64,
+    /// Unsorted future bands of the current epoch; bucket `i` covers
+    /// `[epoch_start + i*width, epoch_start + (i+1)*width)`.
+    buckets: Vec<Vec<TimedEvent>>,
+    /// Next bucket to activate (all earlier buckets are empty).
+    cursor: usize,
+    epoch_start: f64,
+    width: f64,
+    /// Everything at/after the epoch end, plus +inf and NaN timers.
+    overflow: Vec<TimedEvent>,
+    /// Runtime seq counter (arrivals carry their own index instead).
     seq: u64,
+    len: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl EventQueue {
     pub fn new() -> Self {
-        Self::default()
+        Self::with_profile(1024, 256.0, 0.0)
     }
 
-    /// Pre-size the heap for a known event volume (arrival streams are
-    /// generated up front, so the bulk insert never regrows).
+    /// Pre-size for a known event volume with a default horizon.
     pub fn with_capacity(n: usize) -> Self {
+        Self::with_profile(n, 256.0, 0.0)
+    }
+
+    /// Size the calendar to the workload: `expected_events` over
+    /// `horizon` seconds. `bucket_width > 0` pins the band width
+    /// (a pure perf knob — pop order is provably width-invariant);
+    /// `0` picks one from the event density.
+    pub fn with_profile(expected_events: usize, horizon: f64, bucket_width: f64) -> Self {
+        let horizon = if horizon.is_finite() && horizon > 0.0 {
+            horizon
+        } else {
+            256.0
+        };
+        let (n_buckets, width) = if bucket_width.is_finite() && bucket_width > 0.0 {
+            let n = ((horizon / bucket_width).ceil() as usize).clamp(16, 65_536);
+            (n, bucket_width)
+        } else {
+            let n = (expected_events / 8).clamp(64, 4096);
+            (n, horizon / n as f64)
+        };
         EventQueue {
-            heap: BinaryHeap::with_capacity(n),
-            seq: 0,
+            active: BinaryHeap::with_capacity((expected_events / n_buckets).max(16)),
+            active_end: 0.0,
+            buckets: vec![Vec::new(); n_buckets],
+            cursor: 0,
+            epoch_start: 0.0,
+            width,
+            overflow: Vec::new(),
+            seq: RUNTIME_SEQ_BASE,
+            len: 0,
         }
     }
 
+    fn epoch_end(&self) -> f64 {
+        self.epoch_start + self.width * self.buckets.len() as f64
+    }
+
+    /// Span of one full epoch — the total reach of the ladder before
+    /// events fall into the overflow band.
+    pub fn epoch_span(&self) -> f64 {
+        self.width * self.buckets.len() as f64
+    }
+
+    /// The streamed-arrival refill granularity: a 64-band slice of the
+    /// calendar. Chunks this long land in the near-future bands (never
+    /// the overflow ladder) while bounding how many arrivals are
+    /// materialised at once — peak memory scales with `rate × span`,
+    /// not the run's total request count.
+    pub fn refill_span(&self) -> f64 {
+        (self.width * 64.0).max(1.0)
+    }
+
+    /// Schedule a runtime event (completion, tick, fault, ...).
     pub fn push(&mut self, at: SimTime, event: Event) {
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(TimedEvent { at, seq, event });
+        self.insert(TimedEvent { at, seq, event });
+    }
+
+    /// Schedule an arrival with its global arrival index as the tie-break
+    /// seq — chunk-streamed arrivals keep the seqs the old up-front bulk
+    /// insert assigned, so equal-time ties still pop arrivals first.
+    pub fn push_arrival(&mut self, at: SimTime, arrival_seq: u64, event: Event) {
+        debug_assert!(arrival_seq < RUNTIME_SEQ_BASE, "arrival seq space overflow");
+        self.insert(TimedEvent {
+            at,
+            seq: arrival_seq,
+            event,
+        });
+    }
+
+    fn insert(&mut self, ev: TimedEvent) {
+        self.len += 1;
+        if ev.at < self.active_end {
+            // Near band (includes "now"): straight into the heap. DES
+            // never schedules before the current time, so this band
+            // stays small.
+            self.active.push(ev);
+        } else if ev.at < self.epoch_end() {
+            // NB: `at >= active_end` here implies `cursor < n_buckets`;
+            // the clamp guards float fuzz at band boundaries only.
+            let idx = (((ev.at - self.epoch_start) / self.width).floor() as usize)
+                .clamp(self.cursor, self.buckets.len() - 1);
+            self.buckets[idx].push(ev);
+        } else {
+            // Far future, +inf, or NaN (NaN fails both `<` tests).
+            self.overflow.push(ev);
+        }
+    }
+
+    /// Activate the next non-empty band; re-seed the epoch from the
+    /// overflow ladder when the current one is exhausted.
+    fn advance(&mut self) {
+        loop {
+            while self.cursor < self.buckets.len() {
+                let i = self.cursor;
+                self.cursor += 1;
+                self.active_end = self.epoch_start + self.width * self.cursor as f64;
+                if !self.buckets[i].is_empty() {
+                    self.active = BinaryHeap::from(mem::take(&mut self.buckets[i]));
+                    return;
+                }
+            }
+            if self.overflow.is_empty() {
+                return;
+            }
+            let mut min = self.overflow[0].at;
+            for ev in &self.overflow[1..] {
+                if ev.at.total_cmp(&min) == Ordering::Less {
+                    min = ev.at;
+                }
+            }
+            if min.is_finite() {
+                // Fresh epoch anchored at the overflow minimum.
+                self.epoch_start = min;
+                self.active_end = min;
+                self.cursor = 0;
+                let epoch_end = self.epoch_end();
+                let n = self.buckets.len();
+                let mut keep = Vec::new();
+                for ev in mem::take(&mut self.overflow) {
+                    if ev.at < epoch_end {
+                        let idx =
+                            (((ev.at - min) / self.width).floor() as usize).min(n - 1);
+                        self.buckets[idx].push(ev);
+                    } else {
+                        keep.push(ev);
+                    }
+                }
+                self.overflow = keep;
+                // Loop re-enters the bucket scan and finds the band
+                // holding `min`.
+            } else {
+                // Only +inf / NaN timers remain: degenerate to a single
+                // heap — total_cmp pops +inf first, NaN last, ties FIFO.
+                for ev in mem::take(&mut self.overflow) {
+                    self.active.push(ev);
+                }
+                self.epoch_start = f64::INFINITY;
+                self.active_end = f64::INFINITY;
+                self.cursor = self.buckets.len();
+                return;
+            }
+        }
     }
 
     pub fn pop(&mut self) -> Option<TimedEvent> {
-        self.heap.pop()
+        if self.active.is_empty() {
+            self.advance();
+        }
+        let ev = self.active.pop();
+        if ev.is_some() {
+            self.len -= 1;
+        }
+        ev
     }
 
     pub fn peek_time(&self) -> Option<SimTime> {
-        self.heap.peek().map(|e| e.at)
+        if let Some(e) = self.active.peek() {
+            return Some(e.at);
+        }
+        for b in &self.buckets[self.cursor..] {
+            if let Some(first) = b.first() {
+                let mut min = first.at;
+                for ev in &b[1..] {
+                    if ev.at.total_cmp(&min) == Ordering::Less {
+                        min = ev.at;
+                    }
+                }
+                return Some(min);
+            }
+        }
+        let first = self.overflow.first()?;
+        let mut min = first.at;
+        for ev in &self.overflow[1..] {
+            if ev.at.total_cmp(&min) == Ordering::Less {
+                min = ev.at;
+            }
+        }
+        Some(min)
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
@@ -227,6 +437,166 @@ mod tests {
                 prev = Some(ev);
             }
             assert!(twin.pop().is_none());
+        }
+    }
+
+    /// The pre-PR queue, verbatim: one global heap, one seq counter —
+    /// the reference oracle for the calendar queue's pop order.
+    struct HeapOracle {
+        heap: BinaryHeap<TimedEvent>,
+    }
+
+    impl HeapOracle {
+        fn new() -> Self {
+            HeapOracle {
+                heap: BinaryHeap::new(),
+            }
+        }
+        fn push(&mut self, at: SimTime, seq: u64, event: Event) {
+            self.heap.push(TimedEvent { at, seq, event });
+        }
+        fn pop(&mut self) -> Option<TimedEvent> {
+            self.heap.pop()
+        }
+    }
+
+    fn assert_same_pop(a: Option<TimedEvent>, b: Option<TimedEvent>, ctx: &str) {
+        match (a, b) {
+            (None, None) => {}
+            (Some(x), Some(y)) => {
+                assert!(
+                    x.at.total_cmp(&y.at) == Ordering::Equal,
+                    "{ctx}: time diverged {} vs {}",
+                    x.at,
+                    y.at
+                );
+                assert_eq!(x.seq, y.seq, "{ctx}: seq diverged at t={}", x.at);
+                assert_eq!(x.event, y.event, "{ctx}: event diverged at t={}", x.at);
+            }
+            (x, y) => panic!("{ctx}: length diverged ({:?} vs {:?})", x, y),
+        }
+    }
+
+    #[test]
+    fn differential_matches_binaryheap_oracle() {
+        // Randomised interleaved push/pop workloads — duplicate times,
+        // NaN, +inf, and far-future timers spanning many epochs — must
+        // pop the identical (at, seq, event) sequence from the calendar
+        // queue and the retained BinaryHeap reference oracle. Both the
+        // runtime seq space (`push`) and the arrival seq space
+        // (`push_arrival`) are exercised.
+        let mut rng = Rng::new(0xCA1E17DA);
+        for iter in 0..60 {
+            // Vary the calendar geometry so band boundaries land
+            // everywhere relative to the times drawn below.
+            let width = [0.0, 0.25, 1.0, 7.3][iter % 4];
+            let mut q = EventQueue::with_profile(64, 32.0, width);
+            let mut oracle = HeapOracle::new();
+            let mut runtime_seq = RUNTIME_SEQ_BASE;
+            let mut arrival_seq = 0u64;
+            let n = 20 + rng.below(200);
+            for _ in 0..n {
+                let roll = rng.uniform();
+                if roll < 0.3 {
+                    // Interleave pops with pushes.
+                    assert_same_pop(q.pop(), oracle.pop(), "interleaved pop");
+                    continue;
+                }
+                let at = if roll < 0.33 {
+                    f64::NAN
+                } else if roll < 0.36 {
+                    f64::INFINITY
+                } else if roll < 0.5 {
+                    // Far future: several epochs out (crash renewals,
+                    // fail-slow recoveries).
+                    1.0e4 + rng.below(50) as f64 * 97.0
+                } else {
+                    // Coarse near times force exact ties.
+                    rng.below(24) as f64 * 0.5
+                };
+                if rng.uniform() < 0.3 {
+                    let ev = Event::Arrival {
+                        id: arrival_seq,
+                        quality: crate::config::QualityClass::Balanced,
+                    };
+                    q.push_arrival(at, arrival_seq, ev);
+                    oracle.push(at, arrival_seq, ev);
+                    arrival_seq += 1;
+                } else {
+                    let ev = Event::ControlTick;
+                    q.push(at, ev);
+                    oracle.push(at, runtime_seq, ev);
+                    runtime_seq += 1;
+                }
+            }
+            loop {
+                let (a, b) = (q.pop(), oracle.pop());
+                let done = a.is_none();
+                assert_same_pop(a, b, "drain");
+                if done {
+                    break;
+                }
+            }
+            assert!(q.is_empty());
+        }
+    }
+
+    #[test]
+    fn far_future_timers_cross_epoch_reseed() {
+        // Events several epochs beyond the initial calendar must wait in
+        // the overflow ladder and still pop in exact time order after
+        // the epoch re-seeds — including a push into a band that was
+        // already re-anchored.
+        let mut q = EventQueue::with_profile(64, 8.0, 1.0); // epoch [0, 8)
+        q.push(0.5, Event::ControlTick);
+        q.push(123.4, Event::HpaTick); // overflow
+        q.push(7.9, Event::ScrapeTick); // last bucket
+        q.push(4000.0, Event::ControlTick); // overflow, next-next epoch
+        assert_eq!(q.pop().unwrap().at, 0.5);
+        q.push(0.6, Event::PodTick { dep: 0 }); // back into the active band
+        assert_eq!(q.pop().unwrap().at, 0.6);
+        assert_eq!(q.pop().unwrap().at, 7.9);
+        // Epoch exhausted: overflow re-seeds at 123.4.
+        assert_eq!(q.peek_time(), Some(123.4));
+        assert_eq!(q.pop().unwrap().at, 123.4);
+        q.push(123.4 + 2.0, Event::ControlTick); // lands in re-seeded epoch
+        assert_eq!(q.pop().unwrap().at, 125.4);
+        assert_eq!(q.pop().unwrap().at, 4000.0);
+        assert!(q.pop().is_none());
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn pop_order_is_bucket_width_invariant() {
+        // The bucket width is a pure performance knob: the same push
+        // sequence pops identically for every geometry (this is what
+        // lets `engine.bucket_width` stay out of behavioural space even
+        // though it is hashed into the memo key).
+        let mut rng = Rng::new(0x51D3CA7);
+        let mut pushes: Vec<f64> = Vec::new();
+        for _ in 0..300 {
+            pushes.push(rng.below(64) as f64 * 0.25);
+        }
+        pushes.push(f64::INFINITY);
+        pushes.push(9_999.0);
+        let mut reference: Vec<(f64, u64)> = Vec::new();
+        for (gi, geometry) in [0.0, 0.125, 1.0, 50.0].iter().enumerate() {
+            let mut q = EventQueue::with_profile(128, 16.0, *geometry);
+            for &at in &pushes {
+                q.push(at, Event::ControlTick);
+            }
+            let mut got: Vec<(f64, u64)> = Vec::new();
+            while let Some(ev) = q.pop() {
+                got.push((ev.at, ev.seq));
+            }
+            assert_eq!(got.len(), pushes.len());
+            if gi == 0 {
+                reference = got;
+            } else {
+                for (a, b) in reference.iter().zip(&got) {
+                    assert!(a.0.total_cmp(&b.0) == Ordering::Equal && a.1 == b.1);
+                }
+            }
         }
     }
 }

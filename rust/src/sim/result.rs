@@ -132,6 +132,9 @@ pub struct SimResult {
     pub shed: Vec<ShedRecord>,
     /// Tail-control ledger (sheds, duplicates, cancellations, busy time).
     pub tail: TailCounters,
+    /// Requests completed inline by the hybrid engine's fluid fast path
+    /// (ISSUE 6). Always 0 under `engine.mode = des`.
+    pub fluid_batched: u64,
     pub(crate) cache: StatsCache,
 }
 
@@ -282,6 +285,7 @@ mod tests {
             events: 0,
             shed: Vec::new(),
             tail: TailCounters::default(),
+            fluid_batched: 0,
             cache: StatsCache::default(),
         }
     }

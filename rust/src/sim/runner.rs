@@ -13,11 +13,14 @@
 //!
 //! Memoization: a [`SimCache`] maps the key
 //! `hash(cfg, scenario, policy, arch)` — the scenario hash covers the
-//! seed — to its `SimResult`. Because a cell is a pure function of that
-//! key, a hit returns a clone that is bit-identical to the cold run
-//! (enforced by `tests/runner_memoization.rs`). The paper sweeps share
-//! many cells (Table VI and Figs 7/8 reuse the same λ × seed × policy
-//! grid), so a cache-bearing `Runner` computes them once per `repro all`.
+//! seed, and the config hash covers every `engine` knob (mode, calendar
+//! bucket width, fluid envelope), so `des` and `hybrid` runs can never
+//! cross-pollinate the cache — to its `SimResult`. Because a cell is a
+//! pure function of that key, a hit returns a clone that is
+//! bit-identical to the cold run (enforced by
+//! `tests/runner_memoization.rs`). The paper sweeps share many cells
+//! (Table VI and Figs 7/8 reuse the same λ × seed × policy grid), so a
+//! cache-bearing `Runner` computes them once per `repro all`.
 
 use crate::config::{Config, ScenarioConfig};
 use crate::sim::{Architecture, Policy, SimResult, Simulation};

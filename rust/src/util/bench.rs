@@ -90,6 +90,19 @@ pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> Measurement {
     m
 }
 
+/// Peak resident set size of this process [bytes], from Linux
+/// `/proc/self/status` (`VmHWM`, the RSS high-water mark). `None` off
+/// Linux or if the field is missing — callers should report "n/a"
+/// rather than fail. Used by the million-robot bench to show that the
+/// chunk-streamed arrival front end bounds peak memory.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    // Format: "VmHWM:    123456 kB".
+    let kb: u64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024)
+}
+
 /// Time a single (possibly slow) run — for end-to-end scenario benches
 /// where one run is seconds of virtual workload.
 pub fn bench_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
@@ -121,6 +134,18 @@ mod tests {
         let (v, dt) = bench_once("const", || 42);
         assert_eq!(v, 42);
         assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn peak_rss_sane_on_linux() {
+        if let Some(bytes) = peak_rss_bytes() {
+            // Any live process has at least a page resident; gigantic
+            // values would mean we parsed the wrong field.
+            assert!(bytes >= 4096, "peak RSS {bytes} implausibly small");
+            assert!(bytes < 1 << 45, "peak RSS {bytes} implausibly large");
+        } else {
+            assert!(!cfg!(target_os = "linux"), "VmHWM must parse on Linux");
+        }
     }
 
     #[test]

@@ -2,6 +2,24 @@
 //! config: Poisson, bounded-Pareto burst trains (paper §V-D), periodic,
 //! step profiles, diurnal (sinusoidal-envelope) profiles, regime-
 //! switching MMPP bursts, and deterministic trace replay.
+//!
+//! Two front ends share the same per-kind samplers:
+//!
+//! * [`ArrivalGenerator`] materialises the whole stream up front — the
+//!   historical API, still used by tests and reports, and the reference
+//!   oracle for the streaming path.
+//! * [`ArrivalStream`] emits the stream in time-banded chunks so peak
+//!   memory scales with the chunk span (≈ one calendar-queue epoch), not
+//!   with the total request count — the million-robot fast path. Time
+//!   draws consume `Rng::new(seed)` in *exactly* the materialised order
+//!   (overshoot draws are stashed across chunk boundaries; overlapping
+//!   burst trains are re-merged by (time, generation-order) to match the
+//!   stable sort), so the emitted times are bit-identical to
+//!   `ArrivalGenerator::generate`. Quality classes come from a second,
+//!   salted stream (`seed ^ QUALITY_SALT`, one uniform per arrival in
+//!   emission order) — for the default `[0, 1, 0]` mix every arrival is
+//!   `Balanced` either way, so default-mix scenarios stay bit-identical
+//!   across both front ends.
 
 use crate::config::{ArrivalKind, QualityClass, ScenarioConfig};
 use crate::rng::Rng;
@@ -12,6 +30,177 @@ use crate::SimTime;
 pub struct Arrival {
     pub at: SimTime,
     pub quality: QualityClass,
+}
+
+/// Salt separating the quality-class stream from the time stream so the
+/// time draws can be chunk-streamed without buffering the whole horizon.
+const QUALITY_SALT: u64 = 0x0051_C1A5_5A17_ED01;
+
+fn classify(u: f64, mix: [f64; 3]) -> QualityClass {
+    if u < mix[0] {
+        QualityClass::LowLatency
+    } else if u < mix[0] + mix[1] {
+        QualityClass::Balanced
+    } else {
+        QualityClass::Precise
+    }
+}
+
+/// Materialise the sorted time stream for `scenario`, consuming `rng`
+/// draws in the canonical per-kind order. Shared by both front ends
+/// (the streamer uses it for kinds whose draw order cannot be banded by
+/// time: step profiles, and unsorted replay traces).
+fn materialise_times(scenario: &ScenarioConfig, rng: &mut Rng) -> Vec<SimTime> {
+    let mut times: Vec<SimTime> = Vec::new();
+    match &scenario.arrivals {
+        ArrivalKind::Poisson { lambda } => {
+            let mut t = 0.0;
+            if *lambda > 0.0 {
+                loop {
+                    t += rng.exp(*lambda);
+                    if t >= scenario.duration {
+                        break;
+                    }
+                    times.push(t);
+                }
+            }
+        }
+        ArrivalKind::Periodic { rate } => {
+            if *rate > 0.0 {
+                let period = 1.0 / rate;
+                let mut t = period;
+                while t < scenario.duration {
+                    times.push(t);
+                    t += period;
+                }
+            }
+        }
+        ArrivalKind::BoundedParetoBursts {
+            burst_rate,
+            alpha,
+            lo,
+            hi,
+            intra_gap,
+        } => {
+            let mut t = 0.0;
+            if *burst_rate > 0.0 {
+                loop {
+                    t += rng.exp(*burst_rate);
+                    if t >= scenario.duration {
+                        break;
+                    }
+                    let size = rng.bounded_pareto(*alpha, *lo, *hi).round() as usize;
+                    for k in 0..size.max(1) {
+                        let at = t + k as f64 * intra_gap;
+                        if at < scenario.duration {
+                            times.push(at);
+                        }
+                    }
+                }
+            }
+        }
+        ArrivalKind::Steps { steps } => {
+            for (idx, &(start, rate)) in steps.iter().enumerate() {
+                let end = steps
+                    .get(idx + 1)
+                    .map(|s| s.0)
+                    .unwrap_or(scenario.duration)
+                    .min(scenario.duration);
+                if rate <= 0.0 {
+                    continue;
+                }
+                let mut t = start;
+                loop {
+                    t += rng.exp(rate);
+                    if t >= end {
+                        break;
+                    }
+                    times.push(t);
+                }
+            }
+        }
+        ArrivalKind::Diurnal {
+            base,
+            amplitude,
+            period,
+            phase,
+        } => {
+            // Thinning (Lewis–Shedler): draw a homogeneous Poisson at
+            // the peak rate, accept each point with probability
+            // λ(t)/peak — an *exact* non-homogeneous Poisson sample.
+            let peak = base * (1.0 + amplitude);
+            if peak > 0.0 {
+                let two_pi = 2.0 * std::f64::consts::PI;
+                let mut t = 0.0;
+                loop {
+                    t += rng.exp(peak);
+                    if t >= scenario.duration {
+                        break;
+                    }
+                    let rate = base * (1.0 + amplitude * (two_pi * t / period + phase).sin());
+                    if rng.uniform() * peak < rate {
+                        times.push(t);
+                    }
+                }
+            }
+        }
+        ArrivalKind::Mmpp { rates, dwell } => {
+            if !rates.is_empty() {
+                let mut s = 0usize;
+                let mut t = 0.0;
+                while t < scenario.duration {
+                    let seg_end = (t + rng.exp(1.0 / dwell[s])).min(scenario.duration);
+                    if rates[s] > 0.0 {
+                        let mut a = t;
+                        loop {
+                            a += rng.exp(rates[s]);
+                            if a >= seg_end {
+                                break;
+                            }
+                            times.push(a);
+                        }
+                    }
+                    t = seg_end;
+                    // Jump uniformly to one of the *other* regimes
+                    // (alternation when there are two).
+                    if rates.len() > 1 {
+                        let mut next = rng.below(rates.len() - 1);
+                        if next >= s {
+                            next += 1;
+                        }
+                        s = next;
+                    }
+                }
+            }
+        }
+        ArrivalKind::TraceReplay {
+            times: trace,
+            scale,
+            loop_around,
+            ..
+        } => {
+            // Replay verbatim; `scale` multiplies the rate (divides
+            // time); loop-around tiles with period = last timestamp.
+            let span = trace.last().copied().unwrap_or(0.0);
+            let mut offset = 0.0;
+            loop {
+                let mut any_in = false;
+                for &ts in trace {
+                    let at = (ts + offset) / scale;
+                    if at < scenario.duration {
+                        times.push(at);
+                        any_in = true;
+                    }
+                }
+                if !*loop_around || span <= 0.0 || !any_in {
+                    break;
+                }
+                offset += span;
+            }
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times
 }
 
 /// Pre-materialised arrival stream for a scenario (sorted by time).
@@ -28,171 +217,16 @@ impl ArrivalGenerator {
     /// Generate the full stream for `scenario`.
     pub fn generate(scenario: &ScenarioConfig) -> Self {
         let mut rng = Rng::new(scenario.seed);
-        let mut times: Vec<SimTime> = Vec::new();
-        match &scenario.arrivals {
-            ArrivalKind::Poisson { lambda } => {
-                let mut t = 0.0;
-                if *lambda > 0.0 {
-                    loop {
-                        t += rng.exp(*lambda);
-                        if t >= scenario.duration {
-                            break;
-                        }
-                        times.push(t);
-                    }
-                }
-            }
-            ArrivalKind::Periodic { rate } => {
-                if *rate > 0.0 {
-                    let period = 1.0 / rate;
-                    let mut t = period;
-                    while t < scenario.duration {
-                        times.push(t);
-                        t += period;
-                    }
-                }
-            }
-            ArrivalKind::BoundedParetoBursts {
-                burst_rate,
-                alpha,
-                lo,
-                hi,
-                intra_gap,
-            } => {
-                let mut t = 0.0;
-                if *burst_rate > 0.0 {
-                    loop {
-                        t += rng.exp(*burst_rate);
-                        if t >= scenario.duration {
-                            break;
-                        }
-                        let size = rng.bounded_pareto(*alpha, *lo, *hi).round() as usize;
-                        for k in 0..size.max(1) {
-                            let at = t + k as f64 * intra_gap;
-                            if at < scenario.duration {
-                                times.push(at);
-                            }
-                        }
-                    }
-                }
-            }
-            ArrivalKind::Steps { steps } => {
-                for (idx, &(start, rate)) in steps.iter().enumerate() {
-                    let end = steps
-                        .get(idx + 1)
-                        .map(|s| s.0)
-                        .unwrap_or(scenario.duration)
-                        .min(scenario.duration);
-                    if rate <= 0.0 {
-                        continue;
-                    }
-                    let mut t = start;
-                    loop {
-                        t += rng.exp(rate);
-                        if t >= end {
-                            break;
-                        }
-                        times.push(t);
-                    }
-                }
-            }
-            ArrivalKind::Diurnal {
-                base,
-                amplitude,
-                period,
-                phase,
-            } => {
-                // Thinning (Lewis–Shedler): draw a homogeneous Poisson at
-                // the peak rate, accept each point with probability
-                // λ(t)/peak — an *exact* non-homogeneous Poisson sample.
-                let peak = base * (1.0 + amplitude);
-                if peak > 0.0 {
-                    let two_pi = 2.0 * std::f64::consts::PI;
-                    let mut t = 0.0;
-                    loop {
-                        t += rng.exp(peak);
-                        if t >= scenario.duration {
-                            break;
-                        }
-                        let rate = base * (1.0 + amplitude * (two_pi * t / period + phase).sin());
-                        if rng.uniform() * peak < rate {
-                            times.push(t);
-                        }
-                    }
-                }
-            }
-            ArrivalKind::Mmpp { rates, dwell } => {
-                if !rates.is_empty() {
-                    let mut s = 0usize;
-                    let mut t = 0.0;
-                    while t < scenario.duration {
-                        let seg_end = (t + rng.exp(1.0 / dwell[s])).min(scenario.duration);
-                        if rates[s] > 0.0 {
-                            let mut a = t;
-                            loop {
-                                a += rng.exp(rates[s]);
-                                if a >= seg_end {
-                                    break;
-                                }
-                                times.push(a);
-                            }
-                        }
-                        t = seg_end;
-                        // Jump uniformly to one of the *other* regimes
-                        // (alternation when there are two).
-                        if rates.len() > 1 {
-                            let mut next = rng.below(rates.len() - 1);
-                            if next >= s {
-                                next += 1;
-                            }
-                            s = next;
-                        }
-                    }
-                }
-            }
-            ArrivalKind::TraceReplay {
-                times: trace,
-                scale,
-                loop_around,
-                ..
-            } => {
-                // Replay verbatim; `scale` multiplies the rate (divides
-                // time); loop-around tiles with period = last timestamp.
-                let span = trace.last().copied().unwrap_or(0.0);
-                let mut offset = 0.0;
-                loop {
-                    let mut any_in = false;
-                    for &ts in trace {
-                        let at = (ts + offset) / scale;
-                        if at < scenario.duration {
-                            times.push(at);
-                            any_in = true;
-                        }
-                    }
-                    if !*loop_around || span <= 0.0 || !any_in {
-                        break;
-                    }
-                    offset += span;
-                }
-            }
-        }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let times = materialise_times(scenario, &mut rng);
 
         // Assign quality classes by the scenario mix, deterministically
         // from the same seed stream.
         let mix = scenario.mix();
         let arrivals = times
             .into_iter()
-            .map(|at| {
-                let u = rng.uniform();
-                let quality = if u < mix[0] {
-                    QualityClass::LowLatency
-                } else if u < mix[0] + mix[1] {
-                    QualityClass::Balanced
-                } else {
-                    QualityClass::Precise
-                };
-                Arrival { at, quality }
+            .map(|at| Arrival {
+                at,
+                quality: classify(rng.uniform(), mix),
             })
             .collect();
         ArrivalGenerator { arrivals }
@@ -229,6 +263,511 @@ impl ArrivalGenerator {
             peak = peak.max(hi - lo + 1);
         }
         peak as f64
+    }
+}
+
+/// Per-kind resumable sampler state for the chunk streamer.
+#[derive(Debug)]
+enum KindState {
+    Poisson {
+        lambda: f64,
+        t: f64,
+        pending: Option<f64>,
+    },
+    Periodic {
+        period: f64,
+        t: f64,
+    },
+    Bursts {
+        burst_rate: f64,
+        alpha: f64,
+        lo: f64,
+        hi: f64,
+        intra_gap: f64,
+        /// Base (burst-start) process clock.
+        t: f64,
+        src_done: bool,
+        /// Materialised members not yet emitted: (time, generation seq).
+        /// Bounded by burst overlap, never by the total request count.
+        pending: Vec<(f64, u64)>,
+        gen_seq: u64,
+    },
+    Diurnal {
+        base: f64,
+        amplitude: f64,
+        period: f64,
+        phase: f64,
+        peak: f64,
+        t: f64,
+        pending: Option<f64>,
+    },
+    Mmpp {
+        rates: Vec<f64>,
+        dwell: Vec<f64>,
+        s: usize,
+        t: f64,
+        seg_end: f64,
+        a: f64,
+        in_segment: bool,
+        pending: Option<f64>,
+    },
+    Trace {
+        trace: Vec<f64>,
+        scale: f64,
+        loop_around: bool,
+        span: f64,
+        offset: f64,
+        pos: usize,
+        any_in: bool,
+    },
+    /// Fallback for kinds whose canonical draw order cannot be banded by
+    /// time (step profiles draw segment-by-segment; an unsorted replay
+    /// trace emits out of order): materialise once, stream by index.
+    Eager {
+        times: Vec<f64>,
+        pos: usize,
+    },
+    Done,
+}
+
+/// Push every stream time in `[.., chunk_end)` into `out` (ascending,
+/// generation order on ties — matching the materialised stable sort),
+/// consuming `rng` in the canonical order. Returns true once the source
+/// is fully exhausted (nothing pending either).
+fn fill(
+    state: &mut KindState,
+    rng: &mut Rng,
+    duration: f64,
+    chunk_end: f64,
+    out: &mut Vec<SimTime>,
+) -> bool {
+    match state {
+        KindState::Done => true,
+        KindState::Eager { times, pos } => {
+            while *pos < times.len() && times[*pos] < chunk_end {
+                out.push(times[*pos]);
+                *pos += 1;
+            }
+            *pos >= times.len()
+        }
+        KindState::Poisson { lambda, t, pending } => {
+            if let Some(p) = *pending {
+                if p < chunk_end {
+                    out.push(p);
+                    *pending = None;
+                } else {
+                    return false;
+                }
+            }
+            loop {
+                *t += rng.exp(*lambda);
+                if *t >= duration {
+                    return true;
+                }
+                if *t < chunk_end {
+                    out.push(*t);
+                } else {
+                    *pending = Some(*t);
+                    return false;
+                }
+            }
+        }
+        KindState::Periodic { period, t } => {
+            while *t < duration && *t < chunk_end {
+                out.push(*t);
+                *t += *period;
+            }
+            *t >= duration
+        }
+        KindState::Bursts {
+            burst_rate,
+            alpha,
+            lo,
+            hi,
+            intra_gap,
+            t,
+            src_done,
+            pending,
+            gen_seq,
+        } => {
+            // Advance the base process until every burst that could
+            // start before `chunk_end` has materialised its members
+            // (members only extend *forward* from the burst start, so
+            // once the base clock passes the boundary the chunk is
+            // closed). Time and size draws stay interleaved exactly as
+            // in the materialised path.
+            while !*src_done && *t < chunk_end {
+                *t += rng.exp(*burst_rate);
+                if *t >= duration {
+                    *src_done = true;
+                    break;
+                }
+                let size = rng.bounded_pareto(*alpha, *lo, *hi).round() as usize;
+                for k in 0..size.max(1) {
+                    let at = *t + k as f64 * *intra_gap;
+                    if at < duration {
+                        pending.push((at, *gen_seq));
+                        *gen_seq += 1;
+                    }
+                }
+            }
+            let mut due: Vec<(f64, u64)> = Vec::new();
+            pending.retain(|&(at, gs)| {
+                if at < chunk_end {
+                    due.push((at, gs));
+                    false
+                } else {
+                    true
+                }
+            });
+            // (time, generation order) == the stable sort of the
+            // materialised member list.
+            due.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then(x.1.cmp(&y.1)));
+            out.extend(due.iter().map(|d| d.0));
+            *src_done && pending.is_empty()
+        }
+        KindState::Diurnal {
+            base,
+            amplitude,
+            period,
+            phase,
+            peak,
+            t,
+            pending,
+        } => {
+            if let Some(p) = *pending {
+                if p < chunk_end {
+                    out.push(p);
+                    *pending = None;
+                } else {
+                    return false;
+                }
+            }
+            let two_pi = 2.0 * std::f64::consts::PI;
+            loop {
+                *t += rng.exp(*peak);
+                if *t >= duration {
+                    return true;
+                }
+                let rate = *base * (1.0 + *amplitude * (two_pi * *t / *period + *phase).sin());
+                if rng.uniform() * *peak < rate {
+                    if *t < chunk_end {
+                        out.push(*t);
+                    } else {
+                        *pending = Some(*t);
+                        return false;
+                    }
+                }
+            }
+        }
+        KindState::Mmpp {
+            rates,
+            dwell,
+            s,
+            t,
+            seg_end,
+            a,
+            in_segment,
+            pending,
+        } => {
+            if let Some(p) = *pending {
+                if p < chunk_end {
+                    out.push(p);
+                    *pending = None;
+                } else {
+                    return false;
+                }
+            }
+            loop {
+                if !*in_segment {
+                    if *t >= duration {
+                        return true;
+                    }
+                    *seg_end = (*t + rng.exp(1.0 / dwell[*s])).min(duration);
+                    *a = *t;
+                    *in_segment = true;
+                }
+                if rates[*s] > 0.0 {
+                    loop {
+                        *a += rng.exp(rates[*s]);
+                        if *a >= *seg_end {
+                            break;
+                        }
+                        if *a < chunk_end {
+                            out.push(*a);
+                        } else {
+                            *pending = Some(*a);
+                            return false;
+                        }
+                    }
+                }
+                *t = *seg_end;
+                *in_segment = false;
+                if rates.len() > 1 {
+                    let mut next = rng.below(rates.len() - 1);
+                    if next >= *s {
+                        next += 1;
+                    }
+                    *s = next;
+                }
+            }
+        }
+        KindState::Trace {
+            trace,
+            scale,
+            loop_around,
+            span,
+            offset,
+            pos,
+            any_in,
+        } => {
+            if trace.is_empty() {
+                return true;
+            }
+            loop {
+                if *pos >= trace.len() {
+                    if !*loop_around || *span <= 0.0 || !*any_in {
+                        return true;
+                    }
+                    *offset += *span;
+                    *pos = 0;
+                    *any_in = false;
+                }
+                let at = (trace[*pos] + *offset) / *scale;
+                if at >= duration {
+                    *pos += 1;
+                    continue;
+                }
+                if at < chunk_end {
+                    out.push(at);
+                    *any_in = true;
+                    *pos += 1;
+                } else {
+                    return false;
+                }
+            }
+        }
+    }
+}
+
+/// Chunk-streamed arrival generation: the same stream as
+/// [`ArrivalGenerator::generate`], emitted in `[k·span, (k+1)·span)`
+/// time bands so peak memory is O(rate × span) instead of O(total).
+#[derive(Debug)]
+pub struct ArrivalStream {
+    state: KindState,
+    rng: Rng,
+    qrng: Rng,
+    mix: [f64; 3],
+    duration: f64,
+    span: f64,
+    loaded_until: f64,
+    scratch: Vec<SimTime>,
+    buf: Vec<Arrival>,
+    emitted: u64,
+    done: bool,
+}
+
+impl ArrivalStream {
+    /// `chunk_span` is the time band per refill — callers tie it to the
+    /// event queue's ladder-epoch span so refills land on epoch
+    /// boundaries. The chunk buffer is presized from the scenario's
+    /// analytic mean-rate envelope.
+    pub fn new(scenario: &ScenarioConfig, chunk_span: f64) -> Self {
+        let mut rng = Rng::new(scenario.seed);
+        let qrng = Rng::new(scenario.seed ^ QUALITY_SALT);
+        let state = match &scenario.arrivals {
+            ArrivalKind::Poisson { lambda } => {
+                if *lambda > 0.0 {
+                    KindState::Poisson {
+                        lambda: *lambda,
+                        t: 0.0,
+                        pending: None,
+                    }
+                } else {
+                    KindState::Done
+                }
+            }
+            ArrivalKind::Periodic { rate } => {
+                if *rate > 0.0 {
+                    KindState::Periodic {
+                        period: 1.0 / rate,
+                        t: 1.0 / rate,
+                    }
+                } else {
+                    KindState::Done
+                }
+            }
+            ArrivalKind::BoundedParetoBursts {
+                burst_rate,
+                alpha,
+                lo,
+                hi,
+                intra_gap,
+            } => {
+                if *burst_rate > 0.0 {
+                    KindState::Bursts {
+                        burst_rate: *burst_rate,
+                        alpha: *alpha,
+                        lo: *lo,
+                        hi: *hi,
+                        intra_gap: *intra_gap,
+                        t: 0.0,
+                        src_done: false,
+                        pending: Vec::new(),
+                        gen_seq: 0,
+                    }
+                } else {
+                    KindState::Done
+                }
+            }
+            ArrivalKind::Steps { .. } => KindState::Eager {
+                times: materialise_times(scenario, &mut rng),
+                pos: 0,
+            },
+            ArrivalKind::Diurnal {
+                base,
+                amplitude,
+                period,
+                phase,
+            } => {
+                let peak = base * (1.0 + amplitude);
+                if peak > 0.0 {
+                    KindState::Diurnal {
+                        base: *base,
+                        amplitude: *amplitude,
+                        period: *period,
+                        phase: *phase,
+                        peak,
+                        t: 0.0,
+                        pending: None,
+                    }
+                } else {
+                    KindState::Done
+                }
+            }
+            ArrivalKind::Mmpp { rates, dwell } => {
+                if rates.is_empty() {
+                    KindState::Done
+                } else {
+                    KindState::Mmpp {
+                        rates: rates.clone(),
+                        dwell: dwell.clone(),
+                        s: 0,
+                        t: 0.0,
+                        seg_end: 0.0,
+                        a: 0.0,
+                        in_segment: false,
+                        pending: None,
+                    }
+                }
+            }
+            ArrivalKind::TraceReplay {
+                times: trace,
+                scale,
+                loop_around,
+                ..
+            } => {
+                if trace.windows(2).any(|w| w[0] > w[1]) {
+                    // Unsorted trace: generation order != time order, so
+                    // banding would scramble the stable sort. Rare and
+                    // bounded by the trace file size.
+                    KindState::Eager {
+                        times: materialise_times(scenario, &mut rng),
+                        pos: 0,
+                    }
+                } else {
+                    KindState::Trace {
+                        trace: trace.clone(),
+                        scale: *scale,
+                        loop_around: *loop_around,
+                        span: trace.last().copied().unwrap_or(0.0),
+                        offset: 0.0,
+                        pos: 0,
+                        any_in: false,
+                    }
+                }
+            }
+        };
+        let span = if chunk_span.is_finite() && chunk_span > 1e-3 {
+            chunk_span
+        } else {
+            16.0
+        };
+        // Presize from the analytic rate envelope (satellite: capacity
+        // hints so chunk emission never regrows in the steady state).
+        let cap = (scenario.mean_rate() * span * 1.3).ceil() as usize + 8;
+        let done = matches!(state, KindState::Done);
+        ArrivalStream {
+            state,
+            rng,
+            qrng,
+            mix: scenario.mix(),
+            duration: scenario.duration,
+            span,
+            loaded_until: 0.0,
+            scratch: Vec::with_capacity(cap),
+            buf: Vec::with_capacity(cap),
+            emitted: 0,
+            done,
+        }
+    }
+
+    /// All arrivals so far are strictly before this time; the next chunk
+    /// starts here.
+    pub fn loaded_until(&self) -> f64 {
+        self.loaded_until
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.done
+    }
+
+    /// Total arrivals emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Emit the next time band. The slice is valid until the next call.
+    pub fn next_chunk(&mut self) -> &[Arrival] {
+        self.buf.clear();
+        if self.done {
+            return &self.buf;
+        }
+        self.scratch.clear();
+        let mut chunk_end = self.loaded_until + self.span;
+        if chunk_end >= self.duration {
+            // Final band: drain everything (all kinds terminate at the
+            // duration horizon).
+            chunk_end = f64::INFINITY;
+        }
+        let finished = fill(
+            &mut self.state,
+            &mut self.rng,
+            self.duration,
+            chunk_end,
+            &mut self.scratch,
+        );
+        for &at in &self.scratch {
+            let quality = classify(self.qrng.uniform(), self.mix);
+            self.buf.push(Arrival { at, quality });
+        }
+        self.emitted += self.buf.len() as u64;
+        self.loaded_until = chunk_end;
+        if finished || chunk_end.is_infinite() {
+            self.done = true;
+            self.loaded_until = f64::INFINITY;
+        }
+        &self.buf
+    }
+
+    /// Drain the whole stream (tests / small scenarios).
+    pub fn collect_all(mut self) -> Vec<Arrival> {
+        let mut all = Vec::new();
+        while !self.is_done() {
+            all.extend_from_slice(self.next_chunk());
+        }
+        all
     }
 }
 
@@ -402,5 +941,122 @@ mod tests {
         let g = ArrivalGenerator::generate(&s);
         let at: Vec<f64> = g.arrivals().iter().map(|a| a.at).collect();
         assert_eq!(at, vec![1.0, 2.0, 4.0, 5.0, 6.0, 8.0]);
+    }
+
+    // ---- chunk streamer: differential against the materialised oracle ----
+
+    fn stream_kinds() -> Vec<ScenarioConfig> {
+        let mut trace_loop = ScenarioConfig::trace_replay("t", vec![1.0, 2.0, 4.0], 3)
+            .with_duration(9.0, 0.0);
+        if let ArrivalKind::TraceReplay { loop_around, .. } = &mut trace_loop.arrivals {
+            *loop_around = true;
+        }
+        vec![
+            ScenarioConfig::poisson(4.0, 7).with_duration(200.0, 0.0),
+            ScenarioConfig::bursty(4.0, 3).with_duration(200.0, 0.0),
+            ScenarioConfig::diurnal(4.0, 13).with_duration(300.0, 0.0),
+            ScenarioConfig::mmpp_bursts(4.0, 5).with_duration(300.0, 0.0),
+            ScenarioConfig {
+                arrivals: ArrivalKind::Periodic { rate: 2.0 },
+                duration: 50.0,
+                ..ScenarioConfig::default()
+            },
+            ScenarioConfig {
+                arrivals: ArrivalKind::Steps {
+                    steps: vec![(0.0, 1.0), (60.0, 8.0)],
+                },
+                duration: 120.0,
+                warmup: 0.0,
+                ..ScenarioConfig::default()
+            },
+            trace_loop,
+        ]
+    }
+
+    #[test]
+    fn stream_times_match_materialised_for_every_kind() {
+        // The chunked stream must reproduce the materialised oracle's
+        // time sequence *exactly* (same RNG draw order), for every
+        // arrival kind. With the default [0,1,0] quality mix the full
+        // Arrival sequence matches too — the property that keeps
+        // `engine.mode = des` bit-identical after the streaming swap.
+        for s in stream_kinds() {
+            let oracle = ArrivalGenerator::generate(&s);
+            let streamed = ArrivalStream::new(&s, 7.0).collect_all();
+            assert_eq!(
+                streamed.len(),
+                oracle.len(),
+                "count diverged for {:?}",
+                s.arrivals
+            );
+            for (i, (a, b)) in streamed.iter().zip(oracle.arrivals()).enumerate() {
+                assert_eq!(a.at.to_bits(), b.at.to_bits(), "time {i} diverged");
+                assert_eq!(a.quality, b.quality, "quality {i} diverged (default mix)");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_is_chunk_span_invariant() {
+        // The chunk span is a memory knob, not a behavioural one.
+        for s in stream_kinds() {
+            let a = ArrivalStream::new(&s, 3.0).collect_all();
+            let b = ArrivalStream::new(&s, 17.0).collect_all();
+            let c = ArrivalStream::new(&s, 1.0e6).collect_all();
+            assert_eq!(a, b, "span 3 vs 17 diverged for {:?}", s.arrivals);
+            assert_eq!(a, c, "span 3 vs one-shot diverged for {:?}", s.arrivals);
+        }
+    }
+
+    #[test]
+    fn stream_chunks_are_time_banded() {
+        // Every chunk stays within [previous loaded_until, chunk_end):
+        // the engine relies on this to bound how much of the stream can
+        // be in the event queue at once.
+        let s = ScenarioConfig::bursty(6.0, 11).with_duration(150.0, 0.0);
+        let mut stream = ArrivalStream::new(&s, 5.0);
+        let mut lo = 0.0f64;
+        let mut total = 0usize;
+        while !stream.is_done() {
+            let hi = stream.loaded_until() + 5.0;
+            let chunk = stream.next_chunk();
+            assert!(
+                chunk.iter().all(|a| a.at >= lo && (a.at < hi || hi.is_nan())),
+                "chunk escaped its band [{lo}, {hi})"
+            );
+            assert!(chunk.windows(2).all(|w| w[0].at <= w[1].at));
+            total += chunk.len();
+            lo = if stream.loaded_until().is_finite() {
+                stream.loaded_until()
+            } else {
+                lo
+            };
+        }
+        assert_eq!(total as u64, stream.emitted());
+        assert_eq!(total, ArrivalGenerator::generate(&s).len());
+    }
+
+    #[test]
+    fn stream_salted_quality_mix_respected() {
+        // The streaming front end draws qualities from the salted
+        // stream; the configured mix must still hold statistically.
+        let mut s = ScenarioConfig::poisson(10.0, 21).with_duration(300.0, 0.0);
+        s.quality_mix = [0.5, 0.5, 0.0];
+        let all = ArrivalStream::new(&s, 11.0).collect_all();
+        let n = all.len() as f64;
+        let low = all
+            .iter()
+            .filter(|a| a.quality == QualityClass::LowLatency)
+            .count() as f64;
+        assert!((low / n - 0.5).abs() < 0.05, "low share={}", low / n);
+        assert!(all.iter().all(|a| a.quality != QualityClass::Precise));
+    }
+
+    #[test]
+    fn stream_zero_rate_terminates_empty() {
+        let s = ScenarioConfig::poisson(0.0, 1);
+        let mut stream = ArrivalStream::new(&s, 4.0);
+        assert!(stream.is_done());
+        assert!(stream.next_chunk().is_empty());
     }
 }

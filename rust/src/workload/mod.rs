@@ -6,5 +6,5 @@
 mod arrivals;
 mod robots;
 
-pub use arrivals::{Arrival, ArrivalGenerator};
+pub use arrivals::{Arrival, ArrivalGenerator, ArrivalStream};
 pub use robots::{Robot, RobotFleet};

@@ -1,0 +1,183 @@
+//! ISSUE 6 engine-invariant gate: the hybrid fluid/DES engine mode must
+//! *converge* to the full-DES reference, and the `des` mode must be
+//! completely inert to every new engine knob.
+//!
+//! Contract under test:
+//! * Across the PR-4 nine-scenario catalog × all six policies, hybrid
+//!   P99 stays within `engine.hybrid_tolerance` (relative, plus a small
+//!   absolute floor for near-zero tails) of the des run, and goodput /
+//!   shed-share stay within tight absolute bands.
+//! * Every conservation law (request conservation, copy ledger, unique
+//!   completions) holds on the hybrid results — inline fluid
+//!   completions move the same ledger fields the DES path moves.
+//! * Under `engine.mode = des`, changing the calendar bucket width or
+//!   any hybrid knob produces bit-identical results (the calendar
+//!   queue's pop order is width-invariant, and the fluid machinery
+//!   never runs).
+
+use la_imr::config::{Config, EngineMode, ScenarioConfig};
+use la_imr::report::scenario_catalog;
+use la_imr::sim::{Architecture, Policy, SimResult, Simulation};
+
+fn des_cfg() -> Config {
+    Config::default()
+}
+
+fn hybrid_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.engine.mode = EngineMode::Hybrid;
+    cfg
+}
+
+fn run(cfg: &Config, scenario: &ScenarioConfig, policy: Policy) -> SimResult {
+    Simulation::new(cfg, scenario, policy, Architecture::Microservice).run()
+}
+
+fn assert_conserved(r: &SimResult, ctx: &str) {
+    assert_eq!(
+        r.completed.len() + r.tail.shed as usize + r.unfinished,
+        r.generated,
+        "{ctx}: request conservation ({} + {} + {} != {})",
+        r.completed.len(),
+        r.tail.shed,
+        r.unfinished,
+        r.generated
+    );
+    assert!(
+        r.tail.copies_balanced(),
+        "{ctx}: copy ledger out of balance: {:?}",
+        r.tail
+    );
+    let mut ids: Vec<u64> = r.completed.iter().map(|c| c.id).collect();
+    let n = ids.len();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "{ctx}: duplicate completions");
+}
+
+/// The headline invariant: hybrid converges to full DES on every
+/// (catalog scenario × policy) cell, within the configured tolerance.
+#[test]
+fn hybrid_converges_to_des_on_catalog() {
+    let des_cfg = des_cfg();
+    let hyb_cfg = hybrid_cfg();
+    let tol = hyb_cfg.engine.hybrid_tolerance;
+    let deadlines = des_cfg.deadline_by_lane();
+    for mut scenario in scenario_catalog(5) {
+        // Warm-up 0 so the request-conservation law is exact (the
+        // engine only records post-warm-up arrivals); both engine modes
+        // share whatever cold-start transient this adds.
+        scenario.warmup = 0.0;
+        for policy in Policy::ALL {
+            let ctx = format!("{} / {policy:?}", scenario.name);
+            let des = run(&des_cfg, &scenario, policy);
+            let hyb = run(&hyb_cfg, &scenario, policy);
+            assert_conserved(&hyb, &ctx);
+            assert_eq!(
+                hyb.generated, des.generated,
+                "{ctx}: engine modes saw different arrival streams"
+            );
+            // P99 within the relative tolerance (absolute floor keeps a
+            // near-base-latency tail from failing on noise alone).
+            let (dp, hp) = (des.summary().p99, hyb.summary().p99);
+            assert!(
+                (hp - dp).abs() <= (tol * dp).max(0.3),
+                "{ctx}: P99 diverged — des {dp:.3} s vs hybrid {hp:.3} s \
+                 (tolerance {tol})"
+            );
+            // Goodput and shed share within tight absolute bands.
+            let (dg, hg) = (des.goodput(deadlines), hyb.goodput(deadlines));
+            assert!(
+                (hg - dg).abs() <= 0.05,
+                "{ctx}: goodput diverged — des {dg:.3} vs hybrid {hg:.3}"
+            );
+            let (ds, hs) = (des.shed_share(), hyb.shed_share());
+            assert!(
+                (hs - ds).abs() <= 0.05,
+                "{ctx}: shed share diverged — des {ds:.3} vs hybrid {hs:.3}"
+            );
+        }
+    }
+}
+
+/// Under `des`, the calendar geometry and every hybrid knob are pure
+/// perf/latent knobs: results must stay bit-identical to the defaults,
+/// and the fluid path must never engage.
+#[test]
+fn des_mode_engine_knobs_are_inert() {
+    let scenario = ScenarioConfig::bursty(4.0, 21)
+        .with_duration(120.0, 10.0)
+        .with_replicas(2);
+    let base = run(&des_cfg(), &scenario, Policy::LaImr);
+    assert_eq!(base.fluid_batched, 0, "des mode ran fluidly");
+    let variants: Vec<(&str, Config)> = vec![
+        ("bucket_width=0.25", {
+            let mut c = des_cfg();
+            c.engine.bucket_width = 0.25;
+            c
+        }),
+        ("bucket_width=7.0", {
+            let mut c = des_cfg();
+            c.engine.bucket_width = 7.0;
+            c
+        }),
+        ("fluid_rho_max=0.9", {
+            let mut c = des_cfg();
+            c.engine.fluid_rho_max = 0.9;
+            c
+        }),
+        ("hybrid_tolerance=0.01", {
+            let mut c = des_cfg();
+            c.engine.hybrid_tolerance = 0.01;
+            c
+        }),
+        ("hybrid_guard=10.0", {
+            let mut c = des_cfg();
+            c.engine.hybrid_guard = 10.0;
+            c
+        }),
+    ];
+    for (name, cfg) in variants {
+        let r = run(&cfg, &scenario, Policy::LaImr);
+        assert_eq!(
+            r.latencies(),
+            base.latencies(),
+            "{name}: des results changed with an engine knob"
+        );
+        assert_eq!(r.events, base.events, "{name}: event count changed");
+        assert_eq!(r.tail, base.tail, "{name}: ledger changed");
+        assert_eq!(r.fluid_batched, 0, "{name}: des mode ran fluidly");
+    }
+}
+
+/// The fast path genuinely engages on smooth load (the speedup is not
+/// vacuous) and stays disengaged exactly when it must: under `des`, and
+/// under load heavy enough that certification keeps failing.
+#[test]
+fn hybrid_fast_path_engages_where_certified() {
+    let smooth = ScenarioConfig::poisson(1.0, 31)
+        .with_duration(120.0, 10.0)
+        .with_replicas(3);
+    let des = run(&des_cfg(), &smooth, Policy::Static);
+    let hyb = run(&hybrid_cfg(), &smooth, Policy::Static);
+    assert_eq!(des.fluid_batched, 0);
+    assert!(
+        hyb.fluid_batched > 0,
+        "smooth low-ρ load never took the fluid path"
+    );
+    // A drowning single replica (ρ ≫ fluid_rho_max): certification must
+    // keep refusing, so hybrid degenerates to full DES behaviour.
+    let heavy = ScenarioConfig::poisson(3.0, 31)
+        .with_duration(90.0, 0.0)
+        .with_replicas(1);
+    let hyb_heavy = run(&hybrid_cfg(), &heavy, Policy::Static);
+    let des_heavy = run(&des_cfg(), &heavy, Policy::Static);
+    assert!(
+        (hyb_heavy.fluid_batched as f64) < 0.02 * hyb_heavy.generated as f64,
+        "overloaded pool still certified {} fluid completions",
+        hyb_heavy.fluid_batched
+    );
+    assert_conserved(&hyb_heavy, "overloaded hybrid");
+    // And the overloaded runs agree bit-for-bit on arrivals.
+    assert_eq!(hyb_heavy.generated, des_heavy.generated);
+}

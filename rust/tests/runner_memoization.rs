@@ -44,6 +44,7 @@ fn assert_bit_identical(a: &la_imr::sim::SimResult, b: &la_imr::sim::SimResult, 
     assert_eq!(a.policy_name, b.policy_name, "{ctx}: policy");
     assert_eq!(a.tail, b.tail, "{ctx}: tail-control ledger");
     assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed records");
+    assert_eq!(a.fluid_batched, b.fluid_batched, "{ctx}: fluid_batched");
 }
 
 #[test]
@@ -213,6 +214,60 @@ fn prediction_knobs_change_cache_keys() {
         frozen[0].latencies(),
         online_r[0].latencies(),
         "online result served from the frozen cache entry"
+    );
+}
+
+#[test]
+fn engine_knobs_change_cache_keys() {
+    // ISSUE 6 satellite: every `engine.*` knob must reach the memo key,
+    // so a `des` and a `hybrid` sweep — or two calendar geometries — can
+    // never collide in `SimCache`. The exhaustive destructure in
+    // `Config::hash_content` makes *adding* a knob without hashing it a
+    // compile error; this pins each knob's runtime behaviour.
+    use la_imr::config::EngineMode;
+    let cell = grid().remove(0);
+    let base = cell.cache_key(&cfg());
+
+    let mut mode = cfg();
+    mode.engine.mode = EngineMode::Hybrid;
+    assert_ne!(base, cell.cache_key(&mode), "engine.mode not keyed");
+
+    let mut width = cfg();
+    width.engine.bucket_width = 0.5;
+    assert_ne!(base, cell.cache_key(&width), "engine.bucket_width not keyed");
+
+    let mut rho = cfg();
+    rho.engine.fluid_rho_max = 0.3;
+    assert_ne!(base, cell.cache_key(&rho), "engine.fluid_rho_max not keyed");
+
+    let mut tol = cfg();
+    tol.engine.hybrid_tolerance = 0.1;
+    assert_ne!(base, cell.cache_key(&tol), "engine.hybrid_tolerance not keyed");
+
+    let mut guard = cfg();
+    guard.engine.hybrid_guard = 5.0;
+    assert_ne!(base, cell.cache_key(&guard), "engine.hybrid_guard not keyed");
+
+    // Equal knobs, equal key.
+    assert_eq!(base, cell.cache_key(&cfg()));
+
+    // Behaviourally: a `des` and a `hybrid` run of the same smooth cell
+    // through one cached runner must not cross-pollinate — the hybrid
+    // result carries fluid completions, the des result never does,
+    // whichever the cache computed first.
+    let runner = Runner::serial();
+    let smooth = Cell::new(
+        ScenarioConfig::poisson(1.0, 13)
+            .with_duration(90.0, 10.0)
+            .with_replicas(2),
+        Policy::Static,
+    );
+    let des = runner.run(&cfg(), &[smooth.clone()]);
+    let hyb = runner.run(&mode, &[smooth]);
+    assert_eq!(des[0].fluid_batched, 0, "des result ran fluidly");
+    assert!(
+        hyb[0].fluid_batched > 0,
+        "hybrid result served from the des cache entry"
     );
 }
 
