@@ -84,6 +84,13 @@ impl Autoscaler for ReactiveBaseline {
     ) {
         for m in &mut self.managed {
             let view = state.view(m.key);
+            // ISSUE 7: never-reported pool (cross-tier, lagged or
+            // partitioned away) — the ratio rule would scale off the
+            // placeholder N and publish a bogus (possibly tear-down)
+            // target. Hold until the first report lands.
+            if view.is_unknown() {
+                continue;
+            }
             let n = view.active.max(1);
             // The baseline reads the *scraped* (lagging) latency.
             let observed = metrics

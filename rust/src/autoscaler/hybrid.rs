@@ -36,6 +36,16 @@ pub fn blend_targets(confidence: f64, proactive: u32, reactive: u32, n_max: u32)
     (t.round() as u32).clamp(1, n_max.max(1))
 }
 
+/// ISSUE 7 staleness discount on the blend weight: a view of age 0 keeps
+/// the plane's confidence untouched (factor exactly 1.0, so the zero-lag
+/// path is bit-identical); trust then falls linearly to 0 at
+/// `max_view_age` — a model inversion computed from old λ/N telemetry is
+/// no better than the reactive signal, however healthy the law itself.
+#[inline]
+pub fn staleness_discount(age: f64, max_view_age: f64) -> f64 {
+    (1.0 - age / max_view_age).clamp(0.0, 1.0)
+}
+
 struct Managed {
     key: DeploymentKey,
     /// τ_m — both the inversion budget and the reactive ratio target.
@@ -52,6 +62,9 @@ pub struct HybridScaler {
     rho_low: f64,
     /// How long ρ must stay below ρ_low before scaling in [s].
     scale_in_delay: f64,
+    /// View age at which the proactive side of the blend is fully
+    /// distrusted (`metrics.max_view_age`).
+    max_view_age: f64,
 }
 
 impl HybridScaler {
@@ -79,6 +92,7 @@ impl HybridScaler {
             predictor,
             rho_low: cfg.slo.rho_low,
             scale_in_delay: 30.0,
+            max_view_age: cfg.metrics.max_view_age,
         }
     }
 
@@ -106,6 +120,11 @@ impl Autoscaler for HybridScaler {
         for m in &mut self.managed {
             let lambda = lambda.get(m.key.model).copied().unwrap_or(0.0);
             let view = state.view(m.key);
+            // ISSUE 7: nothing ever heard from this pool on this tier —
+            // hold rather than scale on the zeroed placeholder.
+            if view.is_unknown() {
+                continue;
+            }
             let n = view.active.max(1);
 
             // Proactive: invert the current law; pin at n_max when even
@@ -121,11 +140,19 @@ impl Autoscaler for HybridScaler {
                 .scraped(&observed_p95_metric(m.key), now)
                 .map(|(p95, _)| ((n as f64 * p95 / m.tau).ceil() as u32).clamp(1, m.n_max));
 
+            // ISSUE 7: discount the plane's trust by how stale the view
+            // feeding the inversion is — the scaler shifts reactive as
+            // replication lag (or a partition) ages its telemetry. At
+            // age 0 the factor is exactly 1.0: bit-identical blend.
+            let discount = staleness_discount(state.age(m.key, now), self.max_view_age);
             let blended = match reactive {
                 None => proactive,
-                Some(r) => {
-                    blend_targets(self.predictor.confidence(m.key), proactive, r, m.n_max)
-                }
+                Some(r) => blend_targets(
+                    self.predictor.confidence(m.key) * discount,
+                    proactive,
+                    r,
+                    m.n_max,
+                ),
             };
 
             // Scale-in hysteresis — the same shared rule PM-HPA applies.
@@ -290,6 +317,59 @@ mod tests {
             "blend never moved toward reactive: {drifted_target} !> {confident_target}"
         );
         assert!(drifted_target <= n_max as f64);
+    }
+
+    #[test]
+    fn staleness_discount_shape() {
+        assert_eq!(staleness_discount(0.0, 5.0), 1.0); // exact: bit-identity
+        assert!((staleness_discount(2.5, 5.0) - 0.5).abs() < 1e-12);
+        assert_eq!(staleness_discount(5.0, 5.0), 0.0);
+        assert_eq!(staleness_discount(100.0, 5.0), 0.0);
+        assert_eq!(staleness_discount(f64::INFINITY, 5.0), 0.0);
+    }
+
+    #[test]
+    fn stale_view_shifts_blend_toward_reactive() {
+        // Static plane (confidence pinned at 1.0), screaming reactive
+        // signal: with a FRESH view the scraped latency cannot move the
+        // target off the model inversion; once the same view has aged,
+        // the staleness discount lets the reactive signal pull it up.
+        let (cfg, mut s, _, mut metrics, key) = setup(false);
+        let tau = cfg.slo_budget(key.model);
+        let v = ReplicaView { active: 2, ready: 2, desired: 2, rho: 0.8, queue_depth: 0 };
+
+        // Fresh (age 0 at now = 0): pure proactive despite the scrape.
+        let mut fresh = ControlState::new();
+        fresh.update_at(key, v, 0.0);
+        metrics.set(&observed_p95_metric(key), 6.0 * tau, 0.0);
+        metrics.scrape(0.0);
+        s.publish(0.0, &fresh, &mut metrics, &lam(&cfg, key.model, 1.0));
+        let fresh_target = desired(&metrics, key).unwrap();
+
+        // Same view read max_view_age/2 later: discount 0.5 blends in
+        // the (much higher) reactive ratio target.
+        let later = cfg.metrics.max_view_age * 0.5;
+        let mut s2 = HybridScaler::new(&cfg, &[key]);
+        let mut m2 = MetricRegistry::new();
+        let mut stale = ControlState::new();
+        stale.update_at(key, v, 0.0);
+        m2.set(&observed_p95_metric(key), 6.0 * tau, later);
+        m2.scrape(later);
+        s2.publish(later, &stale, &mut m2, &lam(&cfg, key.model, 1.0));
+        let stale_target = desired(&m2, key).unwrap();
+
+        assert!(
+            stale_target > fresh_target,
+            "staleness never shifted the blend: {stale_target} !> {fresh_target}"
+        );
+    }
+
+    #[test]
+    fn unreported_pool_publishes_nothing() {
+        let (cfg, mut s, _, mut metrics, key) = setup(false);
+        let empty = ControlState::new();
+        s.publish(0.0, &empty, &mut metrics, &lam(&cfg, key.model, 4.0));
+        assert_eq!(desired(&metrics, key), None);
     }
 
     #[test]

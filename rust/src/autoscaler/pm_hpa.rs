@@ -81,6 +81,13 @@ impl Autoscaler for PmHpa {
         for m in &mut self.managed {
             let lambda = lambda.get(m.key.model).copied().unwrap_or(0.0);
             let view = state.view(m.key);
+            // ISSUE 7: a pool this tier has never heard from (cross-tier,
+            // still inside the replication lag or partitioned away) gives
+            // nothing to scale on — acting on the zeroed placeholder
+            // would publish a tear-down target. Hold until it reports.
+            if view.is_unknown() {
+                continue;
+            }
             // Proactive target: minimal N with predicted g ≤ τ. If even
             // n_max cannot meet τ we still pin the pool at n_max (the
             // router's φ-offload handles the residual).
@@ -153,6 +160,18 @@ mod tests {
         let mut l = vec![0.0; cfg.models.len()];
         l[model] = v;
         l
+    }
+
+    #[test]
+    fn unreported_pool_publishes_nothing() {
+        // ISSUE 7: before the first (possibly lagged) report arrives the
+        // view is the explicit UNKNOWN placeholder — scaling on it would
+        // publish desired = 0 and tear the pool down.
+        let (cfg, mut hpa, _, mut metrics) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let empty = ControlState::new();
+        hpa.publish(0.0, &empty, &mut metrics, &lam(&cfg, m, 4.0));
+        assert_eq!(metrics.latest(&metric_name(&cfg)), None);
     }
 
     #[test]

@@ -60,6 +60,8 @@ pub enum Tier {
 }
 
 impl Tier {
+    pub const ALL: [Tier; 2] = [Tier::Edge, Tier::Cloud];
+
     pub fn name(self) -> &'static str {
         match self {
             Tier::Edge => "edge",
@@ -72,6 +74,15 @@ impl Tier {
             "edge" => Some(Tier::Edge),
             "cloud" => Some(Tier::Cloud),
             _ => None,
+        }
+    }
+
+    /// Dense index for per-tier tables (metric stores, lag overrides).
+    #[inline]
+    pub fn index(self) -> usize {
+        match self {
+            Tier::Edge => 0,
+            Tier::Cloud => 1,
         }
     }
 }
@@ -318,6 +329,91 @@ impl Default for EnginePolicy {
     }
 }
 
+/// How a tier's metric store reconciles the cross-tier updates that
+/// queued up while a partition had propagation suspended (ISSUE 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeRule {
+    /// Replay the backlog in source-timestamp order on heal; the entry
+    /// with the greatest source timestamp wins per pool (deterministic
+    /// last-writer-wins, the mergeable-KV shape).
+    LastWriterWins,
+    /// Discard everything buffered during the partition on heal; the view
+    /// stays at its pre-partition snapshot until fresh post-heal
+    /// publishes replicate over.
+    DropStale,
+}
+
+impl MergeRule {
+    pub fn name(self) -> &'static str {
+        match self {
+            MergeRule::LastWriterWins => "last-writer-wins",
+            MergeRule::DropStale => "drop-stale",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "last-writer-wins" => Some(MergeRule::LastWriterWins),
+            "drop-stale" => Some(MergeRule::DropStale),
+            _ => None,
+        }
+    }
+}
+
+/// Metric-plane knobs (ISSUE 7): how fast pool telemetry replicates
+/// across tiers, and how consumers degrade when it goes stale. With
+/// `replication_lag = 0` (and no per-tier override raising it) and no
+/// partition fault in the scenario, the plane collapses to the single
+/// instantaneous global store and every consumer is bit-identical to the
+/// pre-metric-plane behaviour.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsPolicy {
+    /// Cross-tier metric replication lag [s]: an update published by one
+    /// tier becomes visible in the other tier's view this much later.
+    /// Same-tier pools are always read live. 0 = instantaneous.
+    pub replication_lag: f64,
+    /// Optional override of the lag for updates *arriving at* the edge
+    /// tier's view (e.g. a thin downlink). `None` = use `replication_lag`.
+    pub edge_lag: Option<f64>,
+    /// Optional override of the lag for updates arriving at the cloud
+    /// tier's view. `None` = use `replication_lag`.
+    pub cloud_lag: Option<f64>,
+    /// Trust horizon [s]: beyond this view age the router stops trusting
+    /// cross-tier offload targets (falls back to home routing), the
+    /// hedged policy stops duplicating onto them, deadline-shed widens
+    /// its admission estimate instead of shedding on stale ρ, and the
+    /// hybrid scaler's confidence discount has reached zero.
+    pub max_view_age: f64,
+    /// Reconciliation rule applied when a partition heals.
+    pub merge: MergeRule,
+}
+
+impl Default for MetricsPolicy {
+    fn default() -> Self {
+        Self {
+            replication_lag: 0.0,
+            edge_lag: None,
+            cloud_lag: None,
+            // Comfortably above the 1 s control cadence (a healthy
+            // replicated view is at most lag + 1 s old at a read), so
+            // degradation only engages under genuine staleness.
+            max_view_age: 5.0,
+            merge: MergeRule::LastWriterWins,
+        }
+    }
+}
+
+impl MetricsPolicy {
+    /// Effective replication lag for updates arriving at `tier` [s].
+    #[inline]
+    pub fn lag_for(&self, tier: Tier) -> f64 {
+        match tier {
+            Tier::Edge => self.edge_lag.unwrap_or(self.replication_lag),
+            Tier::Cloud => self.cloud_lag.unwrap_or(self.replication_lag),
+        }
+    }
+}
+
 /// Root configuration.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -328,6 +424,7 @@ pub struct Config {
     pub tail: TailPolicy,
     pub prediction: PredictionPolicy,
     pub engine: EnginePolicy,
+    pub metrics: MetricsPolicy,
 }
 
 impl Default for Config {
@@ -391,6 +488,7 @@ impl Default for Config {
             tail: TailPolicy::default(),
             prediction: PredictionPolicy::default(),
             engine: EnginePolicy::default(),
+            metrics: MetricsPolicy::default(),
         }
     }
 }
@@ -501,6 +599,28 @@ impl Config {
             "engine.hybrid_guard must be >= 0 seconds (got {})",
             self.engine.hybrid_guard
         );
+        anyhow::ensure!(
+            self.metrics.replication_lag.is_finite() && self.metrics.replication_lag >= 0.0,
+            "metrics.replication_lag must be >= 0 seconds (got {})",
+            self.metrics.replication_lag
+        );
+        if let Some(l) = self.metrics.edge_lag {
+            anyhow::ensure!(
+                l.is_finite() && l >= 0.0,
+                "metrics.edge_lag must be >= 0 seconds (got {l})"
+            );
+        }
+        if let Some(l) = self.metrics.cloud_lag {
+            anyhow::ensure!(
+                l.is_finite() && l >= 0.0,
+                "metrics.cloud_lag must be >= 0 seconds (got {l})"
+            );
+        }
+        anyhow::ensure!(
+            self.metrics.max_view_age.is_finite() && self.metrics.max_view_age > 0.0,
+            "metrics.max_view_age must be > 0 seconds (got {})",
+            self.metrics.max_view_age
+        );
         let mut names: Vec<&str> = self.models.iter().map(|m| m.name.as_str()).collect();
         names.sort_unstable();
         names.dedup();
@@ -580,6 +700,7 @@ impl Config {
             tail,
             prediction,
             engine,
+            metrics,
         } = self;
         h.write_usize(models.len());
         for m in models {
@@ -696,6 +817,28 @@ impl Config {
         for x in [bucket_width, fluid_rho_max, hybrid_tolerance, hybrid_guard] {
             h.write_u64(x.to_bits());
         }
+        let MetricsPolicy {
+            replication_lag,
+            edge_lag,
+            cloud_lag,
+            max_view_age,
+            merge,
+        } = metrics;
+        h.write_u64(replication_lag.to_bits());
+        for o in [edge_lag, cloud_lag] {
+            match o {
+                Some(l) => {
+                    h.write_u8(1);
+                    h.write_u64(l.to_bits());
+                }
+                None => h.write_u8(0),
+            }
+        }
+        h.write_u64(max_view_age.to_bits());
+        h.write_u8(match merge {
+            MergeRule::LastWriterWins => 0,
+            MergeRule::DropStale => 1,
+        });
     }
 }
 
@@ -855,6 +998,59 @@ mod tests {
         c.engine.hybrid_guard = f64::NAN;
         let err = c.validate().unwrap_err().to_string();
         assert!(err.contains("hybrid_guard"), "unclear error: {err}");
+    }
+
+    #[test]
+    fn metrics_defaults_are_instantaneous_and_valid() {
+        let c = Config::default();
+        assert_eq!(
+            c.metrics.replication_lag, 0.0,
+            "metric plane must default to instantaneous propagation"
+        );
+        assert_eq!(c.metrics.edge_lag, None);
+        assert_eq!(c.metrics.cloud_lag, None);
+        assert!(c.metrics.max_view_age > 0.0);
+        assert_eq!(c.metrics.merge, MergeRule::LastWriterWins);
+        c.validate().unwrap();
+        // The per-tier override resolves through the global knob.
+        let mut m = MetricsPolicy::default();
+        m.replication_lag = 2.0;
+        assert_eq!(m.lag_for(Tier::Edge), 2.0);
+        assert_eq!(m.lag_for(Tier::Cloud), 2.0);
+        m.edge_lag = Some(0.5);
+        assert_eq!(m.lag_for(Tier::Edge), 0.5);
+        assert_eq!(m.lag_for(Tier::Cloud), 2.0);
+        assert_eq!(MergeRule::from_name("last-writer-wins"), Some(MergeRule::LastWriterWins));
+        assert_eq!(MergeRule::from_name("drop-stale"), Some(MergeRule::DropStale));
+        assert_eq!(MergeRule::from_name("merge-hard"), None);
+    }
+
+    #[test]
+    fn rejects_bad_metrics_knobs() {
+        let mut c = Config::default();
+        c.metrics.replication_lag = -0.5;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics.replication_lag"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.metrics.replication_lag = f64::NAN;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics.replication_lag"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.metrics.edge_lag = Some(-1.0);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics.edge_lag"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.metrics.cloud_lag = Some(f64::INFINITY);
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics.cloud_lag"), "unclear error: {err}");
+
+        let mut c = Config::default();
+        c.metrics.max_view_age = 0.0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("metrics.max_view_age"), "unclear error: {err}");
     }
 
     #[test]

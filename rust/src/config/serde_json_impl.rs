@@ -4,8 +4,8 @@
 
 use super::{
     parse_trace, ArrivalKind, ClusterPolicy, Config, EngineMode, EnginePolicy, FaultSpec,
-    InstanceSpec, ModelProfile, PredictionPolicy, QualityClass, ScenarioConfig, SloPolicy,
-    TailPolicy, Tier,
+    InstanceSpec, MergeRule, MetricsPolicy, ModelProfile, PredictionPolicy, QualityClass,
+    ScenarioConfig, SloPolicy, TailPolicy, Tier,
 };
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -250,6 +250,55 @@ impl EnginePolicy {
         o.insert("fluid_rho_max".into(), Value::Num(self.fluid_rho_max));
         o.insert("hybrid_tolerance".into(), Value::Num(self.hybrid_tolerance));
         o.insert("hybrid_guard".into(), Value::Num(self.hybrid_guard));
+        Value::Obj(o)
+    }
+}
+
+impl MetricsPolicy {
+    fn from_json(v: &Value, base: MetricsPolicy) -> anyhow::Result<Self> {
+        // Per-tier overrides are optional: absent (or null) = use the
+        // global `replication_lag`.
+        let opt_lag = |key: &str, base: Option<f64>| -> anyhow::Result<Option<f64>> {
+            match v.get(key) {
+                None => Ok(base),
+                Some(Value::Null) => Ok(None),
+                Some(x) => Ok(Some(x.as_f64().ok_or_else(|| {
+                    anyhow::anyhow!("metrics.{key}: expected a number (or null)")
+                })?)),
+            }
+        };
+        Ok(MetricsPolicy {
+            replication_lag: num(v, "replication_lag", base.replication_lag)?,
+            edge_lag: opt_lag("edge_lag", base.edge_lag)?,
+            cloud_lag: opt_lag("cloud_lag", base.cloud_lag)?,
+            max_view_age: num(v, "max_view_age", base.max_view_age)?,
+            merge: match v.get("merge") {
+                None => base.merge,
+                Some(x) => {
+                    let s = x
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("metrics.merge: expected a string"))?;
+                    MergeRule::from_name(s).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "metrics.merge: expected 'last-writer-wins' or 'drop-stale', got '{s}'"
+                        )
+                    })?
+                }
+            },
+        })
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("replication_lag".into(), Value::Num(self.replication_lag));
+        if let Some(l) = self.edge_lag {
+            o.insert("edge_lag".into(), Value::Num(l));
+        }
+        if let Some(l) = self.cloud_lag {
+            o.insert("cloud_lag".into(), Value::Num(l));
+        }
+        o.insert("max_view_age".into(), Value::Num(self.max_view_age));
+        o.insert("merge".into(), Value::Str(self.merge.name().into()));
         Value::Obj(o)
     }
 }
@@ -679,6 +728,10 @@ impl Config {
             None => base.engine,
             Some(e) => EnginePolicy::from_json(e, EnginePolicy::default())?,
         };
+        let metrics = match v.get("metrics") {
+            None => base.metrics,
+            Some(m) => MetricsPolicy::from_json(m, MetricsPolicy::default())?,
+        };
         Ok(Config {
             models,
             instances,
@@ -687,6 +740,7 @@ impl Config {
             tail,
             prediction,
             engine,
+            metrics,
         })
     }
 
@@ -706,6 +760,7 @@ impl Config {
         o.insert("tail".into(), self.tail.to_json());
         o.insert("prediction".into(), self.prediction.to_json());
         o.insert("engine".into(), self.engine.to_json());
+        o.insert("metrics".into(), self.metrics.to_json());
         json::to_string(&Value::Obj(o))
     }
 }
@@ -770,5 +825,45 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("engine.mode"), "unclear error: {err}");
+    }
+
+    #[test]
+    fn metrics_partial_override_and_roundtrip() {
+        let c = Config::from_json_str(
+            r#"{"metrics": {"replication_lag": 1.0, "cloud_lag": 0.25, "merge": "drop-stale"}}"#,
+        )
+        .unwrap();
+        assert_eq!(c.metrics.replication_lag, 1.0);
+        assert_eq!(c.metrics.cloud_lag, Some(0.25));
+        assert_eq!(c.metrics.merge, MergeRule::DropStale);
+        // Untouched knobs keep their defaults; the absent edge override
+        // resolves to the global lag.
+        assert_eq!(c.metrics.edge_lag, None);
+        assert_eq!(c.metrics.lag_for(Tier::Edge), 1.0);
+        assert_eq!(c.metrics.lag_for(Tier::Cloud), 0.25);
+        assert_eq!(c.metrics.max_view_age, MetricsPolicy::default().max_view_age);
+        let back = Config::from_json_str(&c.to_json_string()).unwrap();
+        assert_eq!(back.metrics, c.metrics);
+        // Explicit null clears an override back to the global lag.
+        let cleared =
+            Config::from_json_str(r#"{"metrics": {"replication_lag": 2.0, "edge_lag": null}}"#)
+                .unwrap();
+        assert_eq!(cleared.metrics.edge_lag, None);
+        assert_eq!(cleared.metrics.lag_for(Tier::Edge), 2.0);
+        // Defaults omit the section entirely and stay instantaneous.
+        let d = Config::from_json_str("{}").unwrap();
+        assert_eq!(d.metrics, MetricsPolicy::default());
+    }
+
+    #[test]
+    fn metrics_rejects_unknown_merge() {
+        let err = Config::from_json_str(r#"{"metrics": {"merge": "merge-hard"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("metrics.merge"), "unclear error: {err}");
+        let err = Config::from_json_str(r#"{"metrics": {"edge_lag": "soon"}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("metrics.edge_lag"), "unclear error: {err}");
     }
 }

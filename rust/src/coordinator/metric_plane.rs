@@ -1,0 +1,322 @@
+//! Per-tier metric plane with replication lag (ISSUE 7).
+//!
+//! The pre-metric-plane coordinator kept ONE instantaneous
+//! [`ControlState`] that every consumer read; real edge–cloud
+//! deployments propagate telemetry over the same unreliable links the
+//! data path uses, so a controller on one tier sees the other tier's
+//! pools *late* — or not at all while a partition is open.
+//!
+//! The plane keeps one [`ControlState`] per [`Tier`]. A pool update
+//! published from tier S is applied to S's store immediately and to the
+//! other tier's store after that tier's replication lag
+//! (`metrics.replication_lag`, per-tier overridable). While a partition
+//! window is open, cross-tier propagation is fully suspended; on heal
+//! the queued updates are reconciled deterministically per
+//! [`MergeRule`]: last-writer-wins drains them in source-timestamp
+//! order, drop-stale discards everything queued during the outage and
+//! waits for fresh reports.
+//!
+//! **Zero-lag fast path:** when both tier lags are 0 and the scenario
+//! has no partition faults, the plane collapses to a single store
+//! written through the legacy instantaneous [`ControlState::update`]
+//! path — every consumer reads exactly what the pre-plane global
+//! snapshot would have held, which is what makes the knob-inertness
+//! (bit-identity) test in `tests/metric_staleness.rs` hold structurally
+//! rather than by luck.
+
+use std::collections::VecDeque;
+
+use crate::cluster::DeploymentKey;
+use crate::config::{Config, MergeRule, Tier};
+use crate::coordinator::state::{ControlState, ReplicaView};
+
+/// One cross-tier update waiting out its replication lag.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    /// Simulation time at which the receiving tier may apply it.
+    deliver_at: f64,
+    /// When the producing tier measured it (becomes the view's stamp).
+    src_ts: f64,
+    key: DeploymentKey,
+    view: ReplicaView,
+}
+
+/// Per-tier lagged stores plus the in-flight replication queues.
+#[derive(Debug)]
+pub struct MetricPlane {
+    /// Single-store fast path: both lags zero and no partitions possible.
+    uniform: bool,
+    /// Indexed by `Tier::index()`; in uniform mode only `[0]` is used.
+    stores: [ControlState; 2],
+    /// In-flight cross-tier updates per receiving tier (FIFO by
+    /// `deliver_at`; enqueue order equals `src_ts` order because the
+    /// per-tier lag is constant, so FIFO drain IS last-writer-wins).
+    pending: [VecDeque<Pending>; 2],
+    /// Receiving-side replication lag per tier.
+    lags: [f64; 2],
+    merge: MergeRule,
+    /// Home tier of each instance index (from `Config::instances`).
+    tier_of: Vec<Tier>,
+    /// Whether the last `advance` saw an open partition window.
+    partitioned: bool,
+}
+
+impl MetricPlane {
+    /// Build for a catalogue. `has_partitions` is whether the scenario
+    /// can ever open a partition window; without one (and with zero
+    /// lags) the plane runs the uniform single-store fast path.
+    pub fn new(cfg: &Config, has_partitions: bool) -> Self {
+        let lags = [
+            cfg.metrics.lag_for(Tier::Edge),
+            cfg.metrics.lag_for(Tier::Cloud),
+        ];
+        let uniform = lags == [0.0, 0.0] && !has_partitions;
+        let dims = (cfg.models.len(), cfg.instances.len());
+        MetricPlane {
+            uniform,
+            stores: [
+                ControlState::with_dims(dims.0, dims.1),
+                ControlState::with_dims(dims.0, dims.1),
+            ],
+            pending: [VecDeque::new(), VecDeque::new()],
+            lags,
+            merge: cfg.metrics.merge,
+            tier_of: cfg.instances.iter().map(|i| i.tier).collect(),
+            partitioned: false,
+        }
+    }
+
+    /// The `ControlState` a consumer observing from `tier` reads.
+    #[inline]
+    pub fn local(&self, tier: Tier) -> &ControlState {
+        if self.uniform {
+            &self.stores[0]
+        } else {
+            &self.stores[tier.index()]
+        }
+    }
+
+    /// Whether the plane is on the single-store fast path.
+    #[inline]
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Deliver lagged updates that have matured by `now`, and track
+    /// partition state. Call BEFORE `publish` in a refresh cycle so a
+    /// window that opens at `now` suspends this cycle's cross-tier
+    /// propagation too.
+    pub fn advance(&mut self, now: f64, partition_open: bool) {
+        if self.uniform {
+            return;
+        }
+        if self.partitioned && !partition_open {
+            // Heal: reconcile what queued up during the outage.
+            if self.merge == MergeRule::DropStale {
+                self.pending[0].clear();
+                self.pending[1].clear();
+            }
+        }
+        self.partitioned = partition_open;
+        if partition_open {
+            return; // propagation suspended
+        }
+        for t in 0..2 {
+            while self.pending[t]
+                .front()
+                .is_some_and(|p| p.deliver_at <= now)
+            {
+                let p = self.pending[t].pop_front().unwrap();
+                self.stores[t].update_at(p.key, p.view, p.src_ts);
+            }
+        }
+    }
+
+    /// Publish one pool's view, measured at `now` by its home tier.
+    /// Applied to the home tier's store immediately; replicated to the
+    /// other tier after its lag (never while partitioned).
+    pub fn publish(&mut self, key: DeploymentKey, view: ReplicaView, now: f64) {
+        if self.uniform {
+            // Legacy instantaneous store: always-fresh stamp, age 0.
+            self.stores[0].update(key, view);
+            return;
+        }
+        let src = self.tier_of.get(key.instance).copied().unwrap_or(Tier::Edge);
+        self.stores[src.index()].update_at(key, view, now);
+        let dst = match src {
+            Tier::Edge => Tier::Cloud,
+            Tier::Cloud => Tier::Edge,
+        };
+        let lag = self.lags[dst.index()];
+        if lag == 0.0 && !self.partitioned {
+            self.stores[dst.index()].update_at(key, view, now);
+        } else {
+            self.pending[dst.index()].push_back(Pending {
+                deliver_at: now + lag,
+                src_ts: now,
+                key,
+                view,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MetricsPolicy;
+
+    fn key(instance: usize) -> DeploymentKey {
+        DeploymentKey { model: 0, instance }
+    }
+
+    fn view(active: u32) -> ReplicaView {
+        ReplicaView {
+            active,
+            ready: active,
+            desired: active.max(1),
+            rho: 0.0,
+            queue_depth: 0,
+        }
+    }
+
+    fn plane_with(metrics: MetricsPolicy, has_partitions: bool) -> MetricPlane {
+        let mut cfg = Config::default();
+        cfg.metrics = metrics;
+        MetricPlane::new(&cfg, has_partitions)
+    }
+
+    /// Default catalogue: instance 0 is Edge, instance 2 is Cloud.
+    /// Assert that so the tests below exercise a real cross-tier path.
+    #[test]
+    fn default_catalogue_spans_tiers() {
+        let cfg = Config::default();
+        assert_eq!(cfg.instances[0].tier, Tier::Edge);
+        assert!(cfg.instances.iter().any(|i| i.tier == Tier::Cloud));
+    }
+
+    #[test]
+    fn uniform_fast_path_is_one_instantaneous_store() {
+        let mut p = plane_with(MetricsPolicy::default(), false);
+        assert!(p.is_uniform());
+        p.advance(0.0, false);
+        p.publish(key(0), view(3), 0.0);
+        // Both tier reads see the same store, always fresh.
+        for t in Tier::ALL {
+            assert_eq!(p.local(t).view(key(0)).active, 3);
+            assert_eq!(p.local(t).age(key(0), 1e6), 0.0);
+        }
+        assert!(std::ptr::eq(p.local(Tier::Edge), p.local(Tier::Cloud)));
+    }
+
+    #[test]
+    fn possible_partitions_disable_the_fast_path_even_at_zero_lag() {
+        let p = plane_with(MetricsPolicy::default(), true);
+        assert!(!p.is_uniform());
+    }
+
+    #[test]
+    fn cross_tier_updates_arrive_after_the_lag() {
+        let mut m = MetricsPolicy::default();
+        m.replication_lag = 2.0;
+        let mut p = plane_with(m, false);
+        let cloud = key(2); // cloud-tier instance in the default catalogue
+        p.advance(10.0, false);
+        p.publish(cloud, view(4), 10.0);
+        // Home (cloud) tier sees it live, stamped at the source time.
+        assert_eq!(p.local(Tier::Cloud).view(cloud).active, 4);
+        assert_eq!(p.local(Tier::Cloud).age(cloud, 10.0), 0.0);
+        // Edge still has no information.
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        // Not yet matured at now = 11.9...
+        p.advance(11.9, false);
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        // ...delivered at now >= 12, aged from the SOURCE timestamp.
+        p.advance(12.0, false);
+        assert_eq!(p.local(Tier::Edge).view(cloud).active, 4);
+        assert_eq!(p.local(Tier::Edge).age(cloud, 12.0), 2.0);
+    }
+
+    #[test]
+    fn per_tier_override_beats_the_global_lag() {
+        let mut m = MetricsPolicy::default();
+        m.replication_lag = 5.0;
+        m.edge_lag = Some(1.0); // edge RECEIVES cross-tier news after 1 s
+        let mut p = plane_with(m, false);
+        let cloud = key(2);
+        let edge = key(0);
+        p.advance(0.0, false);
+        p.publish(cloud, view(2), 0.0);
+        p.publish(edge, view(6), 0.0);
+        p.advance(1.0, false);
+        // Edge's 1 s override has matured the cloud pool's view...
+        assert_eq!(p.local(Tier::Edge).view(cloud).active, 2);
+        // ...but cloud still waits on the 5 s global lag for edge news.
+        assert!(p.local(Tier::Cloud).view(edge).is_unknown());
+        p.advance(5.0, false);
+        assert_eq!(p.local(Tier::Cloud).view(edge).active, 6);
+    }
+
+    #[test]
+    fn partition_suspends_propagation_even_at_zero_lag() {
+        let mut p = plane_with(MetricsPolicy::default(), true);
+        let cloud = key(2);
+        p.advance(0.0, true); // window already open
+        p.publish(cloud, view(3), 0.0);
+        assert_eq!(p.local(Tier::Cloud).view(cloud).active, 3);
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        // Still suspended while the window stays open.
+        p.advance(50.0, true);
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+    }
+
+    #[test]
+    fn heal_merge_is_last_writer_wins_by_source_timestamp() {
+        let mut p = plane_with(MetricsPolicy::default(), true);
+        let cloud = key(2);
+        p.advance(0.0, true);
+        p.publish(cloud, view(1), 0.0);
+        p.publish(cloud, view(2), 5.0);
+        p.publish(cloud, view(9), 8.0); // last writer
+        p.advance(9.0, true);
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        // Heal: the queued updates drain in src_ts order; the final
+        // state is the newest report, stamped at ITS source time.
+        p.advance(10.0, false);
+        assert_eq!(p.local(Tier::Edge).view(cloud).active, 9);
+        assert_eq!(p.local(Tier::Edge).age(cloud, 10.0), 2.0);
+    }
+
+    #[test]
+    fn heal_merge_drop_stale_discards_the_backlog() {
+        let mut m = MetricsPolicy::default();
+        m.merge = MergeRule::DropStale;
+        let mut p = plane_with(m, true);
+        let cloud = key(2);
+        p.advance(0.0, true);
+        p.publish(cloud, view(7), 0.0);
+        // Heal: everything queued during the outage is dropped...
+        p.advance(10.0, false);
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        // ...and only a fresh post-heal report repopulates the view.
+        p.publish(cloud, view(5), 10.0);
+        p.advance(10.0, false);
+        assert_eq!(p.local(Tier::Edge).view(cloud).active, 5);
+    }
+
+    #[test]
+    fn reopened_window_keeps_suspension_and_backlog_order() {
+        let mut m = MetricsPolicy::default();
+        m.replication_lag = 1.0;
+        let mut p = plane_with(m, true);
+        let cloud = key(2);
+        p.advance(0.0, false);
+        p.publish(cloud, view(1), 0.0); // matures at 1.0
+        p.advance(0.5, true); // window opens before delivery
+        p.advance(2.0, true); // matured, but suspended
+        assert!(p.local(Tier::Edge).view(cloud).is_unknown());
+        p.publish(cloud, view(4), 2.0);
+        p.advance(3.0, false); // heal → LWW drain
+        assert_eq!(p.local(Tier::Edge).view(cloud).active, 4);
+    }
+}

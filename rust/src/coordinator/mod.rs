@@ -5,18 +5,24 @@
 //!   (per-request offload on instantaneous breach, EWMA-driven scale-out /
 //!   fractional bulk offload, feasible-set + argmin replica selection);
 //! * [`offload`] — upstream-tier selection and the φ-fraction splitter;
-//! * [`state`] — shared in-memory control state snapshotting replica pools.
+//! * [`state`] — shared in-memory control state snapshotting replica pools;
+//! * [`metric_plane`] — per-tier lagged views of that state (ISSUE 7):
+//!   same-tier pools live, cross-tier pools after a replication lag,
+//!   propagation suspended during partitions with a deterministic merge
+//!   on heal.
 //!
 //! Everything here is plain single-threaded state: the DES drives it
 //! directly, and the tokio serving path wraps it in a mutex — routing
 //! decisions are microsecond-scale, so one lock is never contended at
 //! robot request rates.
 
+pub mod metric_plane;
 pub mod offload;
 pub mod queues;
 pub mod router;
 pub mod state;
 
+pub use metric_plane::MetricPlane;
 pub use queues::{MultiQueue, QueuedRequest};
 pub use router::{home_map, Decision, RouteReason, Router};
 pub use state::{ControlState, ReplicaView};

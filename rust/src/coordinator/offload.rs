@@ -15,13 +15,22 @@ use crate::latency_model::Predictor;
 /// Predictions (and the per-pod service rate μ̂ in the headroom fallback)
 /// go through the shared prediction plane, so an online-recalibrated
 /// upstream estimate steers deflection the same as routing.
+///
+/// Degradation ladder (ISSUE 7): a candidate whose view is older than
+/// `metrics.max_view_age` at `now` — including never-reported pools,
+/// whose age is infinite — cannot be trusted as an offload target and is
+/// skipped; if that empties the candidate set the caller home-routes.
+/// With the instantaneous store every view has age 0, so this filter is
+/// inert.
 pub fn pick_upstream(
     cfg: &Config,
     predictor: &Predictor,
     state: &ControlState,
     from: DeploymentKey,
     lambda: f64,
+    now: f64,
 ) -> Option<DeploymentKey> {
+    let max_age = cfg.metrics.max_view_age;
     let mut best: Option<(f64, DeploymentKey)> = None;
     let mut fallback: Option<(f64, DeploymentKey)> = None;
     for (i, spec) in cfg.instances.iter().enumerate() {
@@ -32,6 +41,9 @@ pub fn pick_upstream(
             model: from.model,
             instance: i,
         };
+        if state.age(key, now) > max_age {
+            continue;
+        }
         let view = state.view(key);
         let g = predictor.g_lambda(key, lambda, view.active.max(1));
         if g.is_finite() {
@@ -128,7 +140,7 @@ mod tests {
         let (cfg, predictor, state) = setup();
         let (m, _) = cfg.model_by_name("yolov5m").unwrap();
         let from = DeploymentKey { model: m, instance: 0 };
-        let up = pick_upstream(&cfg, &predictor, &state, from, 3.0).unwrap();
+        let up = pick_upstream(&cfg, &predictor, &state, from, 3.0, 0.0).unwrap();
         assert_eq!(up.instance, 1); // the cloud tier
         assert_eq!(up.model, m);
     }
@@ -137,7 +149,7 @@ mod tests {
     fn upstream_excludes_origin() {
         let (cfg, predictor, state) = setup();
         let from = DeploymentKey { model: 1, instance: 1 };
-        let up = pick_upstream(&cfg, &predictor, &state, from, 1.0).unwrap();
+        let up = pick_upstream(&cfg, &predictor, &state, from, 1.0, 0.0).unwrap();
         assert_ne!(up.instance, 1);
     }
 
@@ -159,8 +171,34 @@ mod tests {
             );
         }
         let from = DeploymentKey { model: m, instance: 0 };
-        let up = pick_upstream(&cfg, &predictor, &state, from, 100.0);
+        let up = pick_upstream(&cfg, &predictor, &state, from, 100.0, 0.0);
         assert_eq!(up.unwrap().instance, 1); // still lands on cloud
+    }
+
+    #[test]
+    fn stale_or_unknown_targets_are_not_trusted() {
+        let (cfg, predictor, _) = setup();
+        let (m, _) = cfg.model_by_name("yolov5m").unwrap();
+        let from = DeploymentKey { model: m, instance: 0 };
+        // Never-reported candidates (infinite age) yield no target at all:
+        // the caller must home-route rather than deflect blind.
+        let empty = ControlState::new();
+        assert_eq!(pick_upstream(&cfg, &predictor, &empty, from, 3.0, 0.0), None);
+        // A candidate whose view aged past max_view_age is skipped too.
+        let mut stale = ControlState::new();
+        for i in 0..cfg.instances.len() {
+            let key = DeploymentKey { model: m, instance: i };
+            stale.update_at(
+                key,
+                ReplicaView { active: 2, ready: 2, desired: 2, rho: 0.2, queue_depth: 0 },
+                0.0,
+            );
+        }
+        let late = cfg.metrics.max_view_age + 1.0;
+        assert_eq!(pick_upstream(&cfg, &predictor, &stale, from, 3.0, late), None);
+        // At the boundary (age == max_view_age) the view is still trusted.
+        let up = pick_upstream(&cfg, &predictor, &stale, from, 3.0, cfg.metrics.max_view_age);
+        assert!(up.is_some());
     }
 
     #[test]

@@ -229,7 +229,7 @@ impl Router {
 
         // 4. Instantaneous breach → protect THIS request: offload now.
         if g_inst > tau {
-            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda) {
+            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda, now) {
                 let uview = state.view(up);
                 let predicted = self.predict(up, lambda, uview.active.max(1));
                 // Even when deflecting, keep the slow loop informed (6–9).
@@ -249,7 +249,7 @@ impl Router {
 
         // Fractional bulk offload: this request may fall in the φ share.
         if phi > 0.0 && self.telemetry[model].splitter.should_offload(phi) {
-            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda) {
+            if let Some(up) = pick_upstream(&self.cfg, &self.predictor, state, home, lambda, now) {
                 let uview = state.view(up);
                 return Decision {
                     target: up,
@@ -273,6 +273,13 @@ impl Router {
             let v = state.view(key);
             if v.ready == 0 && i != home.instance {
                 continue; // no warm pool there
+            }
+            // ISSUE 7 degradation ladder: a non-home pool whose view aged
+            // past max_view_age (or never reported: infinite age) is not a
+            // trustworthy target — fall back towards home routing. Inert
+            // at age 0, i.e. whenever the store is instantaneous.
+            if i != home.instance && state.age(key, now) > self.cfg.metrics.max_view_age {
+                continue;
             }
             let g = self.predict(key, lambda, v.active.max(1));
             if g <= tau {
@@ -300,7 +307,7 @@ impl Router {
             None => {
                 // No replica meets the budget → offload upstream
                 // (§IV-B step v fallback).
-                let up = pick_upstream(&self.cfg, &self.predictor, state, home, lambda)
+                let up = pick_upstream(&self.cfg, &self.predictor, state, home, lambda, now)
                     .unwrap_or(home);
                 let uview = state.view(up);
                 Decision {
@@ -527,6 +534,39 @@ mod tests {
                     assert!(t >= d * 0.98, "table must stay conservative");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn stale_cross_tier_views_force_home_routing() {
+        // ISSUE 7 degradation ladder, last rung: when every cross-tier
+        // view has aged past metrics.max_view_age, the router must stop
+        // deflecting and serve from home — even under a burst that would
+        // normally trigger instant offload.
+        let mut r = router();
+        let m = yolo(&r);
+        let home = r.home(m);
+        let mut s = ControlState::new();
+        // Home is live (legacy fresh write), every other pool ancient.
+        s.update(
+            home,
+            ReplicaView { active: 1, ready: 1, desired: 1, rho: 0.9, queue_depth: 0 },
+        );
+        for i in 0..r.cfg.instances.len() {
+            let key = DeploymentKey { model: m, instance: i };
+            if key != home {
+                s.update_at(
+                    key,
+                    ReplicaView { active: 2, ready: 2, desired: 2, rho: 0.1, queue_depth: 0 },
+                    0.0,
+                );
+            }
+        }
+        let late = r.cfg.metrics.max_view_age + 100.0;
+        for k in 0..12 {
+            let d = r.route(m, late + k as f64 * 0.05, &s);
+            assert_eq!(d.target, home, "stale views must home-route");
+            assert!(!d.offloaded);
         }
     }
 

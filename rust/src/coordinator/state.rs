@@ -7,6 +7,15 @@
 //! decision lives in this struct, updated on every request, no external
 //! store on the path.
 //!
+//! Since the metric plane (ISSUE 7) there is one `ControlState` per tier,
+//! kept by [`super::MetricPlane`]: same-tier pools are written live,
+//! cross-tier pools arrive after a replication lag. Each entry therefore
+//! carries the *source timestamp* of the update that produced it, so
+//! consumers can ask [`ControlState::age`] how stale what they are about
+//! to act on is. A pool that has never reported is explicitly
+//! [`ReplicaView::UNKNOWN`] (zero capacity, infinite age) — it must not
+//! look like a healthy single-replica pool to the router.
+//!
 //! Storage is a flat `Vec` indexed by (model, instance) — a routing
 //! decision reads it ~6 times, so this is hot-path state (§Perf: the
 //! HashMap version cost ~40 ns per read; the flat read is ~1 ns).
@@ -28,15 +37,25 @@ pub struct ReplicaView {
     pub queue_depth: usize,
 }
 
-impl Default for ReplicaView {
-    fn default() -> Self {
-        ReplicaView {
-            active: 1,
-            ready: 1,
-            desired: 1,
-            rho: 0.0,
-            queue_depth: 0,
-        }
+impl ReplicaView {
+    /// The explicit never-reported state: zero capacity, nothing ready.
+    /// Consumers must treat it as "no information", not as a healthy
+    /// idle pool (the old `Default` claimed `active: 1, ready: 1`, which
+    /// made unreported pools look routable).
+    pub const UNKNOWN: ReplicaView = ReplicaView {
+        active: 0,
+        ready: 0,
+        desired: 0,
+        rho: 0.0,
+        queue_depth: 0,
+    };
+
+    /// Whether this is the never-reported placeholder. A real pool always
+    /// has `desired >= 1` (the cluster never scales to zero), so the
+    /// all-zero pattern is unambiguous.
+    #[inline]
+    pub fn is_unknown(&self) -> bool {
+        self.active == 0 && self.ready == 0 && self.desired == 0
     }
 }
 
@@ -48,6 +67,12 @@ pub struct ControlState {
     n_instances: usize,
     /// Row-major (model-major) flat grid; `None` = never updated.
     views: Vec<Option<ReplicaView>>,
+    /// Source timestamp of each entry (when the producing tier measured
+    /// it, not when it arrived here). `NEG_INFINITY` = never updated;
+    /// `INFINITY` = written through the legacy [`ControlState::update`]
+    /// path, which models an instantaneous store and is therefore always
+    /// fresh (`age` clamps to 0).
+    stamps: Vec<f64>,
 }
 
 impl ControlState {
@@ -61,6 +86,7 @@ impl ControlState {
             n_models,
             n_instances,
             views: vec![None; n_models * n_instances],
+            stamps: vec![f64::NEG_INFINITY; n_models * n_instances],
         }
     }
 
@@ -80,18 +106,30 @@ impl ControlState {
             return;
         }
         let mut views = vec![None; n_models * n_instances];
+        let mut stamps = vec![f64::NEG_INFINITY; n_models * n_instances];
         for m in 0..self.n_models {
             for i in 0..self.n_instances {
                 views[m * n_instances + i] = self.views[m * self.n_instances + i];
+                stamps[m * n_instances + i] = self.stamps[m * self.n_instances + i];
             }
         }
         self.n_models = n_models;
         self.n_instances = n_instances;
         self.views = views;
+        self.stamps = stamps;
     }
 
+    /// Legacy instantaneous write: the entry is considered always fresh
+    /// (age 0). The metric plane uses [`ControlState::update_at`] instead.
     #[inline]
     pub fn update(&mut self, key: DeploymentKey, view: ReplicaView) {
+        self.update_at(key, view, f64::INFINITY);
+    }
+
+    /// Write one pool's view, recording the source timestamp at which the
+    /// producing tier measured it.
+    #[inline]
+    pub fn update_at(&mut self, key: DeploymentKey, view: ReplicaView, src_ts: f64) {
         // Hot path (per-arrival refresh): a pre-sized grid (`with_dims`)
         // never grows, so this is one bounds check + one flat write.
         if self.idx(key).is_none() {
@@ -99,14 +137,34 @@ impl ControlState {
         }
         let idx = key.model * self.n_instances + key.instance;
         self.views[idx] = Some(view);
+        self.stamps[idx] = src_ts;
     }
 
-    /// Read a pool's view; unknown pools report the single-replica default.
+    /// Read a pool's view; never-reported pools are [`ReplicaView::UNKNOWN`].
     #[inline]
     pub fn view(&self, key: DeploymentKey) -> ReplicaView {
         self.idx(key)
             .and_then(|k| self.views[k])
-            .unwrap_or_default()
+            .unwrap_or(ReplicaView::UNKNOWN)
+    }
+
+    /// Source timestamp of a pool's entry, if it has ever reported.
+    #[inline]
+    pub fn source_ts(&self, key: DeploymentKey) -> Option<f64> {
+        self.idx(key)
+            .filter(|&k| self.views[k].is_some())
+            .map(|k| self.stamps[k])
+    }
+
+    /// How stale the pool's entry is at `now` [s]: 0 for live/legacy
+    /// entries, `now - src_ts` for replicated ones, `INFINITY` for pools
+    /// that have never reported. Never negative.
+    #[inline]
+    pub fn age(&self, key: DeploymentKey, now: f64) -> f64 {
+        match self.source_ts(key) {
+            Some(ts) => (now - ts).max(0.0),
+            None => f64::INFINITY,
+        }
     }
 
     pub fn contains(&self, key: DeploymentKey) -> bool {
@@ -129,15 +187,34 @@ impl ControlState {
 mod tests {
     use super::*;
 
+    fn view(active: u32) -> ReplicaView {
+        ReplicaView {
+            active,
+            ready: active,
+            desired: active.max(1),
+            rho: 0.0,
+            queue_depth: 0,
+        }
+    }
+
     #[test]
-    fn default_view_single_replica() {
+    fn unreported_pool_is_explicitly_unknown() {
+        // ISSUE 7 satellite: a never-reported pool must not look like a
+        // healthy single-replica pool (`active: 1, ready: 1`); it reports
+        // zero capacity, flags itself, and has infinite age.
         let s = ControlState::new();
-        let v = s.view(DeploymentKey {
-            model: 0,
-            instance: 0,
-        });
-        assert_eq!(v.active, 1);
-        assert_eq!(v.rho, 0.0);
+        let k = DeploymentKey { model: 0, instance: 0 };
+        let v = s.view(k);
+        assert_eq!(v, ReplicaView::UNKNOWN);
+        assert!(v.is_unknown());
+        assert_eq!(v.active, 0);
+        assert_eq!(v.ready, 0);
+        assert_eq!(s.age(k, 10.0), f64::INFINITY);
+        assert_eq!(s.source_ts(k), None);
+        // A real (reported) pool never matches the unknown pattern:
+        // desired >= 1 always holds cluster-side.
+        assert!(!view(1).is_unknown());
+        assert!(!view(0).is_unknown()); // desired clamps to 1
     }
 
     #[test]
@@ -161,17 +238,36 @@ mod tests {
         assert_eq!(v.active, 4);
         assert_eq!(v.ready, 3);
         assert_eq!(v.queue_depth, 2);
+        assert!(!v.is_unknown());
+        // Legacy writes model the instantaneous store: always fresh.
+        assert_eq!(s.age(k, 1e9), 0.0);
     }
 
     #[test]
-    fn grows_preserving_entries() {
+    fn stamped_updates_age_and_never_go_negative() {
+        let mut s = ControlState::with_dims(1, 2);
+        let k = DeploymentKey { model: 0, instance: 1 };
+        s.update_at(k, view(2), 40.0);
+        assert_eq!(s.source_ts(k), Some(40.0));
+        assert_eq!(s.age(k, 41.5), 1.5);
+        // A reader slightly behind the source clock clamps to 0.
+        assert_eq!(s.age(k, 39.0), 0.0);
+        // A newer write replaces the stamp.
+        s.update_at(k, view(3), 50.0);
+        assert_eq!(s.age(k, 50.0), 0.0);
+        assert_eq!(s.view(k).active, 3);
+    }
+
+    #[test]
+    fn grows_preserving_entries_and_stamps() {
         let mut s = ControlState::new();
         let k1 = DeploymentKey { model: 0, instance: 0 };
         let k2 = DeploymentKey { model: 2, instance: 3 };
-        s.update(k1, ReplicaView { active: 7, ..Default::default() });
-        s.update(k2, ReplicaView { active: 9, ..Default::default() });
+        s.update_at(k1, view(7), 12.0);
+        s.update(k2, view(9));
         assert_eq!(s.view(k1).active, 7);
         assert_eq!(s.view(k2).active, 9);
+        assert_eq!(s.source_ts(k1), Some(12.0), "stamp lost in regrowth");
         assert!(s.contains(k1) && s.contains(k2));
         assert!(!s.contains(DeploymentKey { model: 1, instance: 1 }));
         assert_eq!(s.keys().count(), 2);
@@ -181,7 +277,7 @@ mod tests {
     fn with_dims_presized() {
         let mut s = ControlState::with_dims(3, 2);
         let k = DeploymentKey { model: 2, instance: 1 };
-        s.update(k, ReplicaView { active: 5, ..Default::default() });
+        s.update(k, view(5));
         assert_eq!(s.view(k).active, 5);
     }
 }

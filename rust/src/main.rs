@@ -31,7 +31,7 @@ COMMANDS:
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
   repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|
-              pareto|scenarios|drift|all>
+              pareto|scenarios|drift|staleness|all>
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
                                                  (table6q: per-quality-lane P99;
@@ -43,7 +43,10 @@ COMMANDS:
                                                   failure/partition/fail-slow
                                                   faults, all six policies;
                                                   drift: frozen vs online
-                                                  prediction under fail-slow)
+                                                  prediction under fail-slow;
+                                                  staleness: replication lag ×
+                                                  partition — metric-plane
+                                                  degradation ladder)
 ";
 
 fn main() {
@@ -211,6 +214,7 @@ fn run() -> anyhow::Result<()> {
                     "pareto" => println!("{}", report::pareto(&cfg, &runner)),
                     "scenarios" => println!("{}", report::scenarios(&cfg, &runner)),
                     "drift" => println!("{}", report::drift(&cfg, &runner)),
+                    "staleness" => println!("{}", report::staleness(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
                 }
                 Ok(())
@@ -218,7 +222,7 @@ fn run() -> anyhow::Result<()> {
             if id == "all" {
                 for id in [
                     "table2", "table3", "table4", "fig2", "fig3", "fig4", "fig7", "fig8",
-                    "table6", "table6q", "pareto", "scenarios", "drift",
+                    "table6", "table6q", "pareto", "scenarios", "drift", "staleness",
                 ] {
                     print_one(id)?;
                     println!();

@@ -1038,6 +1038,143 @@ pub fn million_robot_scenario(seed: u64, smoke: bool) -> ScenarioConfig {
     s
 }
 
+// ------------------------------------------------------------- staleness
+
+/// Offered load of the staleness sweep [req/s] — bursty on one home
+/// replica, the regime where the router *wants* cross-tier offload and
+/// every stale view costs (or saves) real tail latency.
+const STALENESS_LAMBDA: f64 = 5.0;
+/// Sweep duration [s] — shorter than `RUN_DURATION`; the grid is 4 lags
+/// × 2 fault arms × 4 policies wide.
+const STALENESS_DURATION: f64 = 180.0;
+/// Replication lags swept [s]: instantaneous (the pre-plane engine,
+/// bit-identical by the inertness test), sub-control-tick, one control
+/// tick, and twice `metrics.max_view_age` (cross-tier views never
+/// trusted — the degradation ladder's bottom rung).
+pub const STALENESS_LAGS: [f64; 4] = [0.0, 0.1, 1.0, 10.0];
+/// The faulted arm's partition window: [start, start+duration) [s].
+const STALENESS_PARTITION_AT: f64 = 60.0;
+const STALENESS_PARTITION_FOR: f64 = 60.0;
+
+/// Staleness-sweep policies: the offload router, the two scalers that
+/// read (confidence-discounted) views, and the stale-ρ admission case.
+const STALENESS_POLICIES: [Policy; 4] = [
+    Policy::LaImr,
+    Policy::Hybrid,
+    Policy::Baseline,
+    Policy::DeadlineShed,
+];
+
+/// The staleness scenario: bursty overload on a 1-replica home pool,
+/// optionally with a mid-run tier partition (the PR-4 fault the metric
+/// plane must also survive: propagation suspends, then merges on heal).
+pub fn staleness_scenario(seed: u64, duration: f64, partitioned: bool) -> ScenarioConfig {
+    let mut s = ScenarioConfig::bursty(STALENESS_LAMBDA, seed)
+        .with_duration(duration, 0.0)
+        .with_replicas(1);
+    if partitioned {
+        s = s.with_fault(FaultSpec::TierPartition {
+            start: STALENESS_PARTITION_AT,
+            duration: STALENESS_PARTITION_FOR,
+        });
+    }
+    s.name = format!(
+        "staleness-{}-{seed}",
+        if partitioned { "partition" } else { "clean" }
+    );
+    s
+}
+
+/// One (lag, fault arm, policy) outcome of the staleness sweep.
+pub struct StalenessRow {
+    /// Replication lag [s] this row ran under.
+    pub lag: f64,
+    /// "clean" or "partition".
+    pub fault: &'static str,
+    pub policy: String,
+    /// P99 across seeds (per-seed P99s summarised).
+    pub p99: Summary,
+    /// Goodput against the default deadline contract across seeds.
+    pub goodput: Summary,
+    /// Mean share of completions served off-home.
+    pub offload: f64,
+    /// Mean share of requests refused at admission.
+    pub shed: f64,
+}
+
+/// `repro staleness` data: replication lag × fault arm × policies. Each
+/// lag carries its own `Config` (the memo key spans every `metrics.*`
+/// knob), mirroring the drift sweep's layout.
+pub fn staleness_data(
+    cfg: &Config,
+    duration: f64,
+    trials: &[u64],
+    runner: &Runner,
+) -> Vec<StalenessRow> {
+    let yardstick = cfg.deadline_by_lane();
+    let mut rows = Vec::new();
+    for &lag in &STALENESS_LAGS {
+        let mut cfg_l = cfg.clone();
+        cfg_l.metrics.replication_lag = lag;
+        for (fault, partitioned) in [("clean", false), ("partition", true)] {
+            for policy in STALENESS_POLICIES {
+                let cells: Vec<Cell> = trials
+                    .iter()
+                    .map(|&seed| Cell::new(staleness_scenario(seed, duration, partitioned), policy))
+                    .collect();
+                let results = runner.run(&cfg_l, &cells);
+                let p99s: Vec<f64> = results.iter().map(|r| r.summary().p99).collect();
+                let goodputs: Vec<f64> = results.iter().map(|r| r.goodput(yardstick)).collect();
+                let n = results.len() as f64;
+                rows.push(StalenessRow {
+                    lag,
+                    fault,
+                    policy: policy.name().into(),
+                    p99: Summary::from(&p99s),
+                    goodput: Summary::from(&goodputs),
+                    offload: results.iter().map(|r| r.offload_share()).sum::<f64>() / n,
+                    shed: results.iter().map(|r| r.shed_share()).sum::<f64>() / n,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// `repro staleness`: the ISSUE 7 acceptance sweep — how gracefully each
+/// controller degrades as its cross-tier views age. Watch the lag=0 rows
+/// (the pre-plane behaviour, bit-identical by the inertness test), the
+/// offload column collapsing once lag outruns `metrics.max_view_age`,
+/// and the partition arm where propagation suspends outright mid-run.
+pub fn staleness(cfg: &Config, runner: &Runner) -> String {
+    let trials = &TRIALS[..3];
+    let data = staleness_data(cfg, STALENESS_DURATION, trials, runner);
+    let rows: Vec<Vec<String>> = data
+        .iter()
+        .map(|r| {
+            vec![
+                format!("{}", r.lag),
+                r.fault.into(),
+                r.policy.clone(),
+                format!("{:.3}±{:.3}", r.p99.mean, r.p99.std),
+                format!("{:.1}%", 100.0 * r.goodput.mean),
+                format!("{:.1}%", 100.0 * r.offload),
+                format!("{:.1}%", 100.0 * r.shed),
+            ]
+        })
+        .collect();
+    format!(
+        "Staleness — replication lag × fault arm (λ={STALENESS_LAMBDA} bursty on 1 home replica, partition [{STALENESS_PARTITION_AT}s, {}s), {} seeds; max_view_age={}s)\n{}",
+        STALENESS_PARTITION_AT + STALENESS_PARTITION_FOR,
+        trials.len(),
+        cfg.metrics.max_view_age,
+        render_table(
+            &["lag [s]", "fault", "policy", "P99 [s]", "goodput", "offload", "shed"],
+            &rows
+        )
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1124,6 +1261,31 @@ mod tests {
                 .map(|r| r.mode)
                 .collect();
             assert_eq!(modes, ["frozen", "online"], "{:?} modes wrong", p);
+        }
+    }
+
+    #[test]
+    fn staleness_rows_cover_lags_faults_and_policies() {
+        // Short slice: every (lag, fault, policy) triple present with
+        // sane stats; the zero-lag bit-identity and conservation claims
+        // live in tests/metric_staleness.rs and tests/engine_invariants.rs.
+        let data = staleness_data(&cfg(), 60.0, &TRIALS[..1], &Runner::new());
+        assert_eq!(
+            data.len(),
+            STALENESS_LAGS.len() * 2 * STALENESS_POLICIES.len()
+        );
+        for r in &data {
+            assert!(r.p99.mean > 0.0, "lag={} {} {} degenerate P99", r.lag, r.fault, r.policy);
+            assert!((0.0..=1.0).contains(&r.goodput.mean));
+            assert!((0.0..=1.0).contains(&r.offload));
+            if r.policy != "deadline-shed" {
+                assert_eq!(r.shed, 0.0, "{} shed without a shed policy", r.policy);
+            }
+        }
+        // Every lag ran both arms for every policy.
+        for &lag in &STALENESS_LAGS {
+            let n = data.iter().filter(|r| r.lag == lag).count();
+            assert_eq!(n, 2 * STALENESS_POLICIES.len(), "lag {lag} rows missing");
         }
     }
 

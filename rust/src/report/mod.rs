@@ -12,6 +12,7 @@
 //!   fig7/8 + table6 — LA-IMR vs baseline/hedged/hybrid across λ = 1..6
 //!   table6q — per-quality-lane P99 under mixed traffic (ROADMAP item)
 //!   drift   — frozen vs online prediction under fail-slow (ISSUE 5)
+//!   staleness — replication lag × partition, metric-plane degradation (ISSUE 7)
 //!
 //! Sweeps share cells (Table VI and Figs 7/8 reuse the same λ × seed ×
 //! policy grid); hand every function the *same* `Runner` so its result

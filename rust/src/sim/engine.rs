@@ -83,9 +83,9 @@
 
 use crate::autoscaler::Autoscaler;
 use crate::cluster::{Deployment, DeploymentKey, HpaController, MetricRegistry};
-use crate::config::{Config, EngineMode, FaultSpec, QualityClass, ScenarioConfig};
+use crate::config::{Config, EngineMode, FaultSpec, QualityClass, ScenarioConfig, Tier};
 use crate::coordinator::state::ReplicaView;
-use crate::coordinator::{home_map, ControlState, MultiQueue, QueuedRequest};
+use crate::coordinator::{home_map, MetricPlane, MultiQueue, QueuedRequest};
 use crate::latency_model::{LatencyModel, Predictor};
 use crate::rng::Rng;
 use crate::sim::components::{
@@ -185,9 +185,13 @@ pub struct Simulation {
     autoscaler: Option<Box<dyn Autoscaler>>,
     hpa: HpaController,
     faults: Box<dyn FaultInjector>,
-    /// Tier-partition windows [(start, end)]: while one is open,
+    /// Tier-partition windows [(start, end)], sorted by start and merged
+    /// where overlapping (see [`merge_windows`]): while one is open,
     /// cross-tier dispatch targets are coerced back home (the offload /
-    /// hedge path is severed; work queues locally).
+    /// hedge path is severed; work queues locally) and the metric plane
+    /// suspends cross-tier propagation. The sorted-disjoint form is what
+    /// lets [`Simulation::partition_active`] binary-search instead of
+    /// scanning every window per cross-tier dispatch (ISSUE 7 satellite).
     partitions: Vec<(f64, f64)>,
     /// Pools in dense model-major order: pool of ⟨m, i⟩ sits at
     /// `m * n_instances + i` — no map on the per-event path.
@@ -200,7 +204,13 @@ pub struct Simulation {
     /// scan).
     model_by_quality: [Option<usize>; 3],
     metrics: MetricRegistry,
-    state: ControlState,
+    /// ISSUE 7 metric plane: per-tier `ControlState` views. Policies
+    /// observe from the edge (the robot-facing front door), autoscalers
+    /// from the cloud (the centralised control plane); each sees
+    /// same-tier pools live and cross-tier pools after the configured
+    /// replication lag. With zero lag and no partition faults this is
+    /// one instantaneous store — bit-identical to the pre-plane engine.
+    plane: MetricPlane,
     events: EventQueue,
     rng: Rng,
     // per-request bookkeeping, all dense
@@ -351,6 +361,12 @@ impl Simulation {
         let predictor = policy.predictor();
         let predictor_online = predictor.as_ref().map(|p| p.online()).unwrap_or(false);
 
+        // Sorted + merged once here so partition_active can binary-search,
+        // and so the metric plane knows whether partitions can ever open
+        // (if not, and lags are zero, it collapses to one live store).
+        let partitions = merge_windows(partition_windows(scenario));
+        let plane = MetricPlane::new(cfg, !partitions.is_empty());
+
         Simulation {
             cfg: cfg.clone(),
             scenario: scenario.clone(),
@@ -360,13 +376,13 @@ impl Simulation {
             autoscaler,
             hpa: HpaController::new(cfg.cluster.hpa_interval),
             faults: fault_injector_for(scenario),
-            partitions: partition_windows(scenario),
+            partitions,
             deps,
             n_instances,
             svc_models,
             model_by_quality,
             metrics: MetricRegistry::new(),
-            state: ControlState::with_dims(n_models, n_instances),
+            plane,
             events: EventQueue::new(),
             rng: Rng::new(scenario.seed ^ 0xD15EA5E),
             req_state: Vec::new(),
@@ -414,26 +430,34 @@ impl Simulation {
         }
     }
 
-    /// Refresh the router-visible control state from cluster truth. The
-    /// state grid is pre-sized to the catalogue, so this re-fills slots
-    /// in place — no insertion or growth on the per-arrival path.
+    /// Refresh the metric plane from cluster truth. Each pool's view is
+    /// *published* (not written): the home tier sees it live, the other
+    /// tier only after the configured replication lag — and not at all
+    /// while a partition window is open. The stores are pre-sized to the
+    /// catalogue, so this re-fills slots in place — no insertion or
+    /// growth on the per-arrival path.
+    ///
+    /// Ordering: matured replications are delivered *before* this
+    /// cycle's publishes, so a window opening exactly at `now` suspends
+    /// this cycle's cross-tier propagation too.
     fn refresh_state(&mut self, now: SimTime) {
+        let partition_open = !self.partitions.is_empty() && self.partition_active(now);
+        self.plane.advance(now, partition_open);
         for (k, d) in self.deps.iter_mut().enumerate() {
             let lambda = d.rate.rate(now);
             let n = d.dep.active_count().max(1);
             // deps and svc_models share the dense pool layout, so slot k
             // is this pool's own (model, instance) law.
             let rho = self.svc_models[k].rho(lambda, n);
-            self.state.update(
-                d.dep.key,
-                ReplicaView {
-                    active: d.dep.active_count(),
-                    ready: d.dep.ready_count(now),
-                    desired: d.dep.desired,
-                    rho,
-                    queue_depth: d.queue.len(),
-                },
-            );
+            let key = d.dep.key;
+            let view = ReplicaView {
+                active: d.dep.active_count(),
+                ready: d.dep.ready_count(now),
+                desired: d.dep.desired,
+                rho,
+                queue_depth: d.queue.len(),
+            };
+            self.plane.publish(key, view, now);
         }
     }
 
@@ -617,10 +641,14 @@ impl Simulation {
         }
     }
 
-    /// Whether a tier-partition window is open at `now`.
+    /// Whether a tier-partition window is open at `now`. Windows are
+    /// sorted and disjoint (merged at construction), so only the last
+    /// window starting at or before `now` can contain it — O(log n)
+    /// per cross-tier dispatch instead of a full scan (ISSUE 7
+    /// satellite; see [`window_active`] for the search itself).
     #[inline]
     fn partition_active(&self, now: SimTime) -> bool {
-        self.partitions.iter().any(|&(s, e)| now >= s && now < e)
+        window_active(&self.partitions, now)
     }
 
     /// Register a dispatched copy's token against its request.
@@ -827,7 +855,9 @@ impl Simulation {
         if self.policy_needs_state {
             self.refresh_state(now);
         }
-        let verdict = self.policy.admit(model, now, &self.state, &mut self.metrics);
+        let verdict = self
+            .policy
+            .admit(model, now, self.plane.local(Tier::Edge), &mut self.metrics);
         let mut dispatch = match verdict {
             Verdict::Run(d) => d,
             Verdict::Shed { reason, predicted } => {
@@ -1259,7 +1289,7 @@ impl Simulation {
             // The policy exports its λ signal (PM-HPA's predictive input;
             // reactive policies publish zeros and read scraped latency).
             let lambda = self.policy.lambda_signal(self.cfg.models.len());
-            scaler.publish(now, &self.state, &mut self.metrics, &lambda);
+            scaler.publish(now, self.plane.local(Tier::Cloud), &mut self.metrics, &lambda);
         }
         // Progress pod lifecycles every control tick.
         for k in 0..self.deps.len() {
@@ -1300,6 +1330,32 @@ impl Simulation {
             );
         }
     }
+}
+
+/// Sort fault windows by start and merge any that overlap or touch, so
+/// the result is sorted *and* pairwise disjoint. That normal form is
+/// what makes the binary search in [`window_active`] sound: at most one
+/// window can contain a given instant, and it is the last one starting
+/// at or before it.
+fn merge_windows(mut windows: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
+    windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut merged: Vec<(f64, f64)> = Vec::with_capacity(windows.len());
+    for (s, e) in windows {
+        match merged.last_mut() {
+            Some(last) if s <= last.1 => last.1 = last.1.max(e),
+            _ => merged.push((s, e)),
+        }
+    }
+    merged
+}
+
+/// Is `now` inside any of the sorted, disjoint half-open windows
+/// `[start, end)`? O(log n) — the calling convention is that `windows`
+/// came out of [`merge_windows`].
+#[inline]
+fn window_active(windows: &[(f64, f64)], now: f64) -> bool {
+    let idx = windows.partition_point(|&(s, _)| s <= now);
+    idx > 0 && now < windows[idx - 1].1
 }
 
 #[cfg(test)]
@@ -1757,5 +1813,99 @@ mod tests {
         ids.sort_unstable();
         ids.dedup();
         assert_eq!(ids.len(), n, "crash recovery double-counted a request");
+    }
+
+    #[test]
+    fn partition_active_binary_search_matches_linear_scan() {
+        // ISSUE 7 satellite: the merged-window binary search must agree
+        // with the old per-dispatch linear scan on the *raw* windows —
+        // including overlapping, nested, and touching ones — at every
+        // probe instant (boundaries included: windows are [start, end)).
+        let mut rng = crate::rng::Rng::new(0x5EED_7);
+        for trial in 0..200 {
+            let n = rng.below(8); // 0..=7 windows, 0 exercises "no faults"
+            let mut raw = Vec::with_capacity(n);
+            for _ in 0..n {
+                let s = rng.range(0.0, 100.0);
+                let e = s + rng.range(0.0, 40.0);
+                raw.push((s, e));
+            }
+            let merged = merge_windows(raw.clone());
+            // Merged form is sorted and pairwise disjoint.
+            for w in merged.windows(2) {
+                assert!(w[0].1 < w[1].0, "not disjoint after merge: {w:?}");
+            }
+            // Probe random instants plus every raw boundary (the exact
+            // start/end points are where off-by-ones would hide).
+            let mut probes: Vec<f64> = (0..50).map(|_| rng.range(-10.0, 150.0)).collect();
+            for &(s, e) in &raw {
+                probes.extend([s, e, s - 1e-9, e - 1e-9]);
+            }
+            for t in probes {
+                let linear = raw.iter().any(|&(s, e)| t >= s && t < e);
+                assert_eq!(
+                    window_active(&merged, t),
+                    linear,
+                    "trial {trial}: disagree at t={t} for raw={raw:?} merged={merged:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replication_lag_changes_behaviour_under_offload_pressure() {
+        // The plane is live in the engine, not decorative: an overloaded
+        // home pool that LA-IMR wants to offload must behave differently
+        // when every cross-tier view is 10 s stale vs instantaneous.
+        let scen = ScenarioConfig::bursty(5.0, 131)
+            .with_duration(180.0, 10.0)
+            .with_replicas(1);
+        let live = Simulation::new(&cfg(), &scen, Policy::LaImr, Architecture::Microservice)
+            .run();
+        let mut lag_cfg = cfg();
+        lag_cfg.metrics.replication_lag = 10.0;
+        let lagged = Simulation::new(&lag_cfg, &scen, Policy::LaImr, Architecture::Microservice)
+            .run();
+        // Same arrivals either way; staleness only degrades routing.
+        assert_eq!(live.generated, lagged.generated, "same arrival stream");
+        assert!(
+            live.offload_share() > 0.0,
+            "control never offloaded — the comparison is vacuous"
+        );
+        assert!(
+            lagged.offload_share() < live.offload_share()
+                || lagged.summary().p99 != live.summary().p99,
+            "10 s replication lag was behaviourally inert (offload {} vs {})",
+            lagged.offload_share(),
+            live.offload_share()
+        );
+        // Degraded, not broken: conservation still holds.
+        assert_eq!(lagged.completed.len() + lagged.unfinished, lagged.generated);
+        assert!(lagged.tail.copies_balanced(), "ledger: {:?}", lagged.tail);
+    }
+
+    #[test]
+    fn stale_views_beyond_max_age_force_home_routing() {
+        // Degradation ladder, bottom rung: with the cross-tier views
+        // older than metrics.max_view_age for the whole run, the router
+        // must stop trusting offload targets entirely — zero offload —
+        // while the same run with live views offloads freely.
+        let scen = ScenarioConfig::bursty(5.0, 137)
+            .with_duration(180.0, 0.0)
+            .with_replicas(1);
+        let mut stale_cfg = cfg();
+        stale_cfg.metrics.replication_lag = 1e9; // never delivered
+        let stale = Simulation::new(&stale_cfg, &scen, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert_eq!(
+            stale.offload_share(),
+            0.0,
+            "offloaded onto a view that never replicated"
+        );
+        assert_eq!(stale.completed.len() + stale.unfinished, stale.generated);
+        assert!(stale.tail.copies_balanced(), "ledger: {:?}", stale.tail);
+        let live = Simulation::new(&cfg(), &scen, Policy::LaImr, Architecture::Microservice)
+            .run();
+        assert!(live.offload_share() > 0.0, "control never offloaded");
     }
 }

@@ -458,6 +458,9 @@ pub struct HedgedPolicy {
     admits: SlidingRate,
     /// Hedged admissions in the budget window (the numerator).
     hedges: SlidingRate,
+    /// ISSUE 7: alternatives whose view aged past this are not hedge
+    /// targets — a duplicate aimed by stale telemetry wastes the budget.
+    max_view_age: f64,
 }
 
 impl HedgedPolicy {
@@ -473,6 +476,7 @@ impl HedgedPolicy {
             budget: cfg.tail.hedge_budget,
             admits: SlidingRate::new(cfg.tail.budget_window),
             hedges: SlidingRate::new(cfg.tail.budget_window),
+            max_view_age: cfg.metrics.max_view_age,
         }
     }
 
@@ -542,7 +546,10 @@ impl ControlPolicy for HedgedPolicy {
                 }
                 let key = DeploymentKey { model, instance: i };
                 let view = state.view(key);
-                if view.ready == 0 {
+                // Skip cold pools and pools whose view aged past
+                // max_view_age (never-reported = infinite age): hedging
+                // on stale telemetry spends budget blind. Inert at age 0.
+                if view.ready == 0 || state.age(key, now) > self.max_view_age {
                     continue;
                 }
                 let g = self.predictor.g_lambda(key, lambda, view.active.max(1));
@@ -580,6 +587,9 @@ pub struct DeadlineShedPolicy {
     deadlines: Vec<f64>,
     /// Per-model sliding arrival rate (same window as the LA-IMR router).
     rates: Vec<SlidingRate>,
+    /// ISSUE 7: beyond this view age the admission estimate is widened
+    /// (up to 2×) instead of shedding on stale ρ/backlog numbers.
+    max_view_age: f64,
 }
 
 impl DeadlineShedPolicy {
@@ -591,6 +601,7 @@ impl DeadlineShedPolicy {
             rates: (0..cfg.models.len())
                 .map(|_| SlidingRate::new(cfg.slo.rate_window))
                 .collect(),
+            max_view_age: cfg.metrics.max_view_age,
         }
     }
 }
@@ -640,8 +651,16 @@ impl ControlPolicy for DeadlineShedPolicy {
         // FIFO backlog ahead of this request, drained by the ready pods.
         let wait = view.queue_depth as f64 * svc / view.ready.max(1) as f64;
         let predicted = wait + svc + self.predictor.rtt(home);
-        if predicted > self.deadlines[model] {
-            let reason = if view.rho >= 1.0 {
+        // ISSUE 7 graceful degradation: the backlog/ρ numbers above may
+        // be stale. Rather than refuse robots on old telemetry, widen
+        // the admission deadline with view age — linearly up to 2× at
+        // twice max_view_age — and never classify "unstable" from a
+        // stale ρ. At age 0 the slack clamps to exactly 1 (inert).
+        let age = state.age(home, now);
+        let fresh = age <= self.max_view_age;
+        let slack = (age / self.max_view_age).clamp(1.0, 2.0);
+        if predicted > self.deadlines[model] * slack {
+            let reason = if fresh && view.rho >= 1.0 {
                 ShedReason::Unstable
             } else {
                 ShedReason::DeadlineBreach
@@ -895,6 +914,88 @@ mod tests {
                 assert!(predicted > cfg.deadline(1), "predicted={predicted}");
             }
             v => panic!("hopeless admission ran: {v:?}"),
+        }
+    }
+
+    #[test]
+    fn hedged_never_duplicates_onto_stale_views() {
+        // Same overload as hedged_burst_launches_duplicate, but every
+        // alternative pool's view is ancient: the budget must not be
+        // spent aiming duplicates with dead telemetry.
+        let cfg = Config::default();
+        let mut p = HedgedPolicy::new(&cfg);
+        let home = home_map(&cfg)[1];
+        let mut state = ControlState::new();
+        state.update(
+            home,
+            ReplicaView { active: 1, ready: 1, desired: 1, rho: 0.9, queue_depth: 0 },
+        );
+        for i in 0..cfg.instances.len() {
+            let key = DeploymentKey { model: 1, instance: i };
+            if key != home {
+                state.update_at(
+                    key,
+                    ReplicaView { active: 4, ready: 4, desired: 4, rho: 0.2, queue_depth: 0 },
+                    0.0,
+                );
+            }
+        }
+        let late = cfg.metrics.max_view_age + 100.0;
+        let mut metrics = MetricRegistry::new();
+        for k in 0..12 {
+            let d = p
+                .admit(1, late + k as f64 * 0.05, &state, &mut metrics)
+                .dispatch()
+                .unwrap();
+            assert_eq!(d.hedge, None, "hedged onto a stale view");
+            assert_eq!(d.target, home);
+        }
+    }
+
+    #[test]
+    fn deadline_shed_widens_admission_on_stale_views() {
+        // ISSUE 7: the same backlog that sheds under a fresh view is
+        // admitted (deadline widened up to 2×) when the view is stale —
+        // and when a stale view still sheds, ρ never upgrades the reason
+        // to Unstable.
+        let cfg = Config::default();
+        let home = home_map(&cfg)[1];
+        let late = 100.0; // far beyond max_view_age for the stale stamps
+        let verdict = |depth: usize, stale: bool, rho: f64| {
+            let mut p = DeadlineShedPolicy::new(&cfg);
+            let mut metrics = MetricRegistry::new();
+            let mut s = ControlState::new();
+            let v = ReplicaView { active: 1, ready: 1, desired: 1, rho, queue_depth: depth };
+            if stale {
+                s.update_at(home, v, 0.0); // age = 100 s ≫ max_view_age
+            } else {
+                s.update(home, v); // instantaneous: age 0
+            }
+            p.admit(1, late, &s, &mut metrics)
+        };
+        // Smallest backlog the FRESH view refuses.
+        let thresh = (0..2000)
+            .find(|&d| verdict(d, false, 0.8).dispatch().is_none())
+            .expect("deep backlog must shed under a fresh view");
+        // The stale view widens the estimate and still admits it.
+        assert!(
+            verdict(thresh, true, 0.8).dispatch().is_some(),
+            "stale view must widen admission at the fresh threshold"
+        );
+        // The widening is bounded (≤ 2×): a hopeless backlog sheds even
+        // on a stale view, and reports DeadlineBreach, never Unstable.
+        match verdict(4 * thresh + 100, true, 1.2) {
+            Verdict::Shed { reason, .. } => assert_eq!(
+                reason,
+                ShedReason::DeadlineBreach,
+                "stale ρ must not classify as Unstable"
+            ),
+            v => panic!("unbounded widening admitted a hopeless backlog: {v:?}"),
+        }
+        // Fresh + saturated still reports Unstable (unchanged behaviour).
+        match verdict(4 * thresh + 100, false, 1.2) {
+            Verdict::Shed { reason, .. } => assert_eq!(reason, ShedReason::Unstable),
+            v => panic!("fresh hopeless backlog ran: {v:?}"),
         }
     }
 

@@ -429,6 +429,49 @@ fn cancellation_regression_on_burst() {
 }
 
 #[test]
+fn conservation_under_every_staleness_and_fault_shape() {
+    // ISSUE 7 matrix: every staleness configuration × the PR-4 fault
+    // shapes × every policy. Stale views may only change *routing and
+    // scaling decisions* — the request and copy laws must hold exactly
+    // whether a view is live, lagged past max_view_age, suspended behind
+    // a partition, or merged (either rule) on heal.
+    let lags = [0.0, 0.1, 1.0, 10.0];
+    let mut staleness_cfgs: Vec<(String, Config)> = lags
+        .iter()
+        .map(|&lag| {
+            let mut cfg = Config::default();
+            cfg.metrics.replication_lag = lag;
+            (format!("lag={lag}"), cfg)
+        })
+        .collect();
+    // Asymmetric per-tier overrides + the non-default merge rule.
+    let mut skewed = Config::default();
+    skewed.metrics.replication_lag = 5.0;
+    skewed.metrics.edge_lag = Some(0.5);
+    skewed.metrics.cloud_lag = Some(2.0);
+    skewed.metrics.max_view_age = 1.0;
+    skewed.metrics.merge = la_imr::config::MergeRule::DropStale;
+    staleness_cfgs.push(("skewed+drop-stale".into(), skewed));
+    let mut faults = fault_shapes();
+    faults.push(("clean", vec![]));
+    for (cname, cfg) in &staleness_cfgs {
+        cfg.validate().unwrap_or_else(|e| panic!("{cname}: {e}"));
+        for (fname, fault) in &faults {
+            let mut scenario = ScenarioConfig::bursty(4.0, 7)
+                .with_duration(90.0, 0.0)
+                .with_replicas(2);
+            scenario.name = format!("bursty+{fname}+{cname}");
+            scenario.faults = fault.clone();
+            for policy in Policy::ALL {
+                let r = Simulation::new(cfg, &scenario, policy, Architecture::Microservice)
+                    .run();
+                assert_conserved(&r, &format!("{} / {:?}", scenario.name, policy));
+            }
+        }
+    }
+}
+
+#[test]
 fn shedding_bounds_the_backlog() {
     // Sustained overload on a frozen-at-1 start: unshed policies carry a
     // divergent backlog to the horizon; deadline-shed must convert that

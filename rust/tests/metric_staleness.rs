@@ -1,0 +1,143 @@
+//! Metric-plane staleness gates (ISSUE 7).
+//!
+//! Three contracts on the per-tier lagged view plane:
+//!
+//! * **knob inertness** — with `replication_lag = 0` and no partition
+//!   faults, the plane collapses to one live store and every policy's
+//!   trajectory is bit-identical to the pre-plane engine, whatever the
+//!   other `metrics.*` knobs say;
+//! * **merge determinism** — healing a partition replays the backlog by
+//!   source timestamp (or drops it, under `drop-stale`), and the whole
+//!   run is reproducible bit-for-bit;
+//! * **graceful degradation** — lag is behaviourally real (it changes
+//!   trajectories) but never breaks the conservation laws.
+
+use la_imr::config::{Config, FaultSpec, MergeRule, ScenarioConfig};
+use la_imr::sim::{Architecture, Policy, SimResult, Simulation};
+
+/// Bursty overload on one home replica — the regime where the router
+/// offloads, the hedger duplicates, and the scalers react, so any
+/// behavioural difference from the metrics knobs would surface.
+fn pressure_scenario(seed: u64) -> ScenarioConfig {
+    ScenarioConfig::bursty(5.0, seed)
+        .with_duration(150.0, 0.0)
+        .with_replicas(1)
+}
+
+fn run(cfg: &Config, scenario: &ScenarioConfig, policy: Policy) -> SimResult {
+    Simulation::new(cfg, scenario, policy, Architecture::Microservice).run()
+}
+
+/// Bit-level trajectory equality: same arrivals, same per-request
+/// latency series, same ledger, same scaling history, same event count.
+fn assert_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.generated, b.generated, "{ctx}: arrival streams differ");
+    assert_eq!(a.events, b.events, "{ctx}: event counts differ");
+    assert_eq!(a.latencies(), b.latencies(), "{ctx}: latency series differ");
+    assert_eq!(a.tail, b.tail, "{ctx}: tail ledgers differ");
+    assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed series differ");
+    assert_eq!(a.unfinished, b.unfinished, "{ctx}: residuals differ");
+    assert_eq!(a.scale_outs, b.scale_outs, "{ctx}: scale-outs differ");
+    assert_eq!(a.scale_ins, b.scale_ins, "{ctx}: scale-ins differ");
+    assert_eq!(a.crashes, b.crashes, "{ctx}: crash counts differ");
+    let ids = |r: &SimResult| r.completed.iter().map(|c| c.id).collect::<Vec<_>>();
+    assert_eq!(ids(a), ids(b), "{ctx}: completion order differs");
+}
+
+#[test]
+fn zero_lag_knob_inertness_across_all_policies() {
+    // The acceptance gate: at lag 0 with no partitions, every other
+    // metrics.* knob (view-age ceiling, merge rule, explicit zero
+    // per-tier overrides) must be invisible — the plane runs its
+    // single-store fast path and each of the six policies retraces the
+    // pre-plane trajectory bit for bit.
+    let base = Config::default();
+    let mut twisted = Config::default();
+    twisted.metrics.replication_lag = 0.0;
+    twisted.metrics.edge_lag = Some(0.0);
+    twisted.metrics.cloud_lag = Some(0.0);
+    twisted.metrics.max_view_age = 123.0;
+    twisted.metrics.merge = MergeRule::DropStale;
+    twisted.validate().expect("twisted config must be legal");
+    for policy in Policy::ALL {
+        let scenario = pressure_scenario(0x57A1E);
+        let a = run(&base, &scenario, policy);
+        let b = run(&twisted, &scenario, policy);
+        assert_identical(&a, &b, &format!("{policy:?}"));
+    }
+}
+
+#[test]
+fn merge_on_heal_is_deterministic() {
+    // Lag > 0 AND a mid-run partition: the backlog accumulates while the
+    // window is open and merges on heal. Both merge rules must be fully
+    // reproducible — same seed, same trajectory, run after run.
+    for merge in [MergeRule::LastWriterWins, MergeRule::DropStale] {
+        let mut cfg = Config::default();
+        cfg.metrics.replication_lag = 1.0;
+        cfg.metrics.merge = merge;
+        let scenario = pressure_scenario(0x4EA1).with_fault(FaultSpec::TierPartition {
+            start: 40.0,
+            duration: 30.0,
+        });
+        for policy in [Policy::LaImr, Policy::Hybrid, Policy::DeadlineShed] {
+            let a = run(&cfg, &scenario, policy);
+            let b = run(&cfg, &scenario, policy);
+            assert_identical(&a, &b, &format!("{merge:?} {policy:?}"));
+            // Degraded, never broken.
+            assert_eq!(
+                a.completed.len() + a.tail.shed as usize + a.unfinished,
+                a.generated,
+                "{merge:?} {policy:?}: conservation"
+            );
+            assert!(a.tail.copies_balanced(), "{merge:?} {policy:?}: ledger");
+        }
+    }
+}
+
+#[test]
+fn replication_lag_is_behaviourally_real() {
+    // The counterpart of inertness: once the lag outruns max_view_age,
+    // the router must stop trusting cross-tier targets — offload dies —
+    // while the zero-lag run on the same arrivals offloads freely.
+    let live_cfg = Config::default();
+    let mut stale_cfg = Config::default();
+    stale_cfg.metrics.replication_lag = 10.0; // 2x max_view_age
+    stale_cfg.validate().expect("lagged config must be legal");
+    let scenario = pressure_scenario(0xBADA6E);
+    let live = run(&live_cfg, &scenario, Policy::LaImr);
+    let stale = run(&stale_cfg, &scenario, Policy::LaImr);
+    assert_eq!(live.generated, stale.generated, "same arrival stream");
+    assert!(live.offload_share() > 0.0, "control never offloaded");
+    assert_eq!(
+        stale.offload_share(),
+        0.0,
+        "offloaded onto views older than max_view_age"
+    );
+    assert_eq!(
+        stale.completed.len() + stale.tail.shed as usize + stale.unfinished,
+        stale.generated,
+        "stale run broke conservation"
+    );
+    assert!(stale.tail.copies_balanced(), "stale run ledger: {:?}", stale.tail);
+}
+
+#[test]
+fn per_tier_override_beats_global_lag_end_to_end() {
+    // edge_lag = Some(0) with a huge global lag: policies observe from
+    // the edge, and the *edge* pools they need for offload targets are
+    // cross-tier only if they live on the cloud tier. Overriding the
+    // cloud feed to zero while the global lag says "never" must restore
+    // offload — proving lag_for() is resolved per tier inside the engine.
+    let mut cfg = Config::default();
+    cfg.metrics.replication_lag = 1e6;
+    cfg.metrics.edge_lag = Some(0.0); // cloud→edge feed: live
+    cfg.metrics.cloud_lag = Some(0.0); // edge→cloud feed: live
+    cfg.validate().expect("override config must be legal");
+    let scenario = pressure_scenario(0x0FF10AD);
+    let r = run(&cfg, &scenario, Policy::LaImr);
+    assert!(
+        r.offload_share() > 0.0,
+        "zero per-tier overrides did not beat the global lag"
+    );
+}

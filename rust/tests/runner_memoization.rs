@@ -272,6 +272,70 @@ fn engine_knobs_change_cache_keys() {
 }
 
 #[test]
+fn metrics_knobs_change_cache_keys() {
+    // ISSUE 7 satellite: every `metrics.*` knob must reach the memo key,
+    // so a zero-lag and a lagged sweep — or two merge rules — can never
+    // collide in `SimCache`. The exhaustive destructure in
+    // `Config::hash_content` makes *adding* a knob without hashing it a
+    // compile error; this pins each knob's runtime behaviour.
+    use la_imr::config::MergeRule;
+    let cell = grid().remove(0);
+    let base = cell.cache_key(&cfg());
+
+    let mut lag = cfg();
+    lag.metrics.replication_lag = 2.0;
+    assert_ne!(base, cell.cache_key(&lag), "metrics.replication_lag not keyed");
+
+    let mut edge = cfg();
+    edge.metrics.edge_lag = Some(0.5);
+    assert_ne!(base, cell.cache_key(&edge), "metrics.edge_lag not keyed");
+
+    // An explicit Some(0.0) override resolves to the same lag as the
+    // default None — but it is a different config and must key apart
+    // (the Option tag byte is hashed, not just the resolved value).
+    let mut edge_zero = cfg();
+    edge_zero.metrics.edge_lag = Some(0.0);
+    assert_ne!(base, cell.cache_key(&edge_zero), "edge_lag Some(0) collides with None");
+
+    let mut cloud = cfg();
+    cloud.metrics.cloud_lag = Some(1.5);
+    assert_ne!(base, cell.cache_key(&cloud), "metrics.cloud_lag not keyed");
+
+    let mut age = cfg();
+    age.metrics.max_view_age = 2.0;
+    assert_ne!(base, cell.cache_key(&age), "metrics.max_view_age not keyed");
+
+    let mut merge = cfg();
+    merge.metrics.merge = MergeRule::DropStale;
+    assert_ne!(base, cell.cache_key(&merge), "metrics.merge not keyed");
+
+    // Equal knobs, equal key.
+    assert_eq!(base, cell.cache_key(&cfg()));
+
+    // Behaviourally: a live and a stale run of the same overload cell
+    // through one cached runner must not cross-pollinate — past
+    // max_view_age the stale run can never offload, whichever result the
+    // cache computed first.
+    let runner = Runner::serial();
+    let pressured = Cell::new(
+        ScenarioConfig::bursty(5.0, 5)
+            .with_duration(90.0, 0.0)
+            .with_replicas(1),
+        Policy::LaImr,
+    );
+    let live = runner.run(&cfg(), &[pressured.clone()]);
+    let mut stale_cfg = cfg();
+    stale_cfg.metrics.replication_lag = 100.0;
+    let stale = runner.run(&stale_cfg, &[pressured]);
+    assert!(live[0].offload_share() > 0.0, "overload never offloaded");
+    assert_eq!(
+        stale[0].offload_share(),
+        0.0,
+        "stale result served from the live cache entry"
+    );
+}
+
+#[test]
 fn hybrid_policy_has_its_own_cache_key() {
     // The new sixth policy must key distinctly from every other policy on
     // the same scenario (the policy discriminant byte covers it).
