@@ -1,0 +1,357 @@
+//! Declarative scenario documents (ISSUE 8): a versioned top-level JSON
+//! wrapper around [`ScenarioConfig`] that adds a `name`, an optional
+//! *expectations* block (declarative post-run assertions, evaluated by
+//! `sim::expect`), an optional policy scope, and a canonical SHA-256
+//! content hash — so every committed scenario file under
+//! `examples/scenarios/` doubles as a self-checking, replayable test
+//! artifact instead of code.
+//!
+//! The document is data only; nothing here touches the engine. Predicate
+//! *evaluation* lives in `sim::expect` (it needs `SimResult`), and the
+//! replayable event-log emitter in `sim::event_log` hashes the canonical
+//! document JSON into its header.
+
+use super::ScenarioConfig;
+use crate::util::sha256::sha256_hex;
+
+/// Current scenario-document schema version. Bump on breaking changes;
+/// the parser rejects anything else by name so old tooling fails loudly.
+pub const SCENARIO_DOC_VERSION: u64 = 1;
+
+/// One declarative post-run assertion, checked against the `SimResult`
+/// of a run of the owning document's scenario. Thresholds are authored
+/// in the file; the predicate names below are the JSON `kind` strings.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expectation {
+    /// `p99-max`: post-warmup P99 latency must be ≤ `seconds`.
+    P99Max { seconds: f64 },
+    /// `goodput-min`: within-deadline completion share must be ≥ `share`.
+    GoodputMin { share: f64 },
+    /// `shed-share-max`: shed share of post-warmup work must be ≤ `share`.
+    ShedShareMax { share: f64 },
+    /// `completed-min`: at least `count` post-warmup completions.
+    CompletedMin { count: u64 },
+    /// `conservation`: the copy ledger must balance (every admitted copy
+    /// reaches exactly one terminal bucket) — the PR-3 conservation law.
+    Conservation,
+    /// `recovery-by`: requests *arriving* at or after `after` seconds
+    /// (i.e. once a fault has cleared) must see P99 latency ≤ `p99_max`.
+    /// Fails if nothing arrived in the window — an empty window means the
+    /// scenario cannot demonstrate the recovery it claims.
+    RecoveryBy { after: f64, p99_max: f64 },
+}
+
+impl Expectation {
+    /// JSON `kind` string of this predicate.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Expectation::P99Max { .. } => "p99-max",
+            Expectation::GoodputMin { .. } => "goodput-min",
+            Expectation::ShedShareMax { .. } => "shed-share-max",
+            Expectation::CompletedMin { .. } => "completed-min",
+            Expectation::Conservation => "conservation",
+            Expectation::RecoveryBy { .. } => "recovery-by",
+        }
+    }
+
+    /// Structural validation of the thresholds; `k` is the index inside
+    /// the document's `expectations` array (for the error message).
+    pub fn validate(&self, k: usize) -> anyhow::Result<()> {
+        match self {
+            Expectation::P99Max { seconds } => anyhow::ensure!(
+                seconds.is_finite() && *seconds >= 0.0,
+                "expectations[{k}] p99-max: seconds must be >= 0 (got {seconds})"
+            ),
+            Expectation::GoodputMin { share } => anyhow::ensure!(
+                share.is_finite() && (0.0..=1.0).contains(share),
+                "expectations[{k}] goodput-min: share must be in [0, 1] (got {share})"
+            ),
+            Expectation::ShedShareMax { share } => anyhow::ensure!(
+                share.is_finite() && (0.0..=1.0).contains(share),
+                "expectations[{k}] shed-share-max: share must be in [0, 1] (got {share})"
+            ),
+            Expectation::CompletedMin { .. } | Expectation::Conservation => {}
+            Expectation::RecoveryBy { after, p99_max } => {
+                anyhow::ensure!(
+                    after.is_finite() && *after >= 0.0,
+                    "expectations[{k}] recovery-by: after must be >= 0 seconds (got {after})"
+                );
+                anyhow::ensure!(
+                    p99_max.is_finite() && *p99_max >= 0.0,
+                    "expectations[{k}] recovery-by: p99_max must be >= 0 seconds (got {p99_max})"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Feed the predicate into a hasher (memo-key convention: exhaustive
+    /// match, floats by bit pattern).
+    pub fn hash_content<H: std::hash::Hasher>(&self, h: &mut H) {
+        match self {
+            Expectation::P99Max { seconds } => {
+                h.write_u8(0);
+                h.write_u64(seconds.to_bits());
+            }
+            Expectation::GoodputMin { share } => {
+                h.write_u8(1);
+                h.write_u64(share.to_bits());
+            }
+            Expectation::ShedShareMax { share } => {
+                h.write_u8(2);
+                h.write_u64(share.to_bits());
+            }
+            Expectation::CompletedMin { count } => {
+                h.write_u8(3);
+                h.write_u64(*count);
+            }
+            Expectation::Conservation => h.write_u8(4),
+            Expectation::RecoveryBy { after, p99_max } => {
+                h.write_u8(5);
+                h.write_u64(after.to_bits());
+                h.write_u64(p99_max.to_bits());
+            }
+        }
+    }
+}
+
+/// A versioned scenario file: the simulation inputs plus the contract a
+/// run of them must satisfy. The document's `name` lands in
+/// `scenario.name` (and therefore in `SimResult::scenario_name`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioDocument {
+    /// Schema version — always [`SCENARIO_DOC_VERSION`] after parsing.
+    pub version: u64,
+    /// The wrapped simulation scenario (carries the document name).
+    pub scenario: ScenarioConfig,
+    /// Policy names the expectations apply to; empty = every policy.
+    /// Stored as strings so the config layer stays below `sim` — callers
+    /// that run policies resolve them via `Policy::from_name`.
+    pub policies: Vec<String>,
+    /// Declarative post-run assertions (may be empty).
+    pub expectations: Vec<Expectation>,
+}
+
+impl ScenarioDocument {
+    /// Wrap a bare scenario with no expectations (e.g. to hash or log a
+    /// CLI-constructed run in the same replayable format as a file).
+    pub fn new(scenario: ScenarioConfig) -> Self {
+        ScenarioDocument {
+            version: SCENARIO_DOC_VERSION,
+            scenario,
+            policies: Vec::new(),
+            expectations: Vec::new(),
+        }
+    }
+
+    /// Document name (= scenario name).
+    pub fn name(&self) -> &str {
+        &self.scenario.name
+    }
+
+    /// Whether this document's expectations apply to runs under the
+    /// given policy (empty scope = all policies).
+    pub fn applies_to(&self, policy_name: &str) -> bool {
+        self.policies.is_empty() || self.policies.iter().any(|p| p == policy_name)
+    }
+
+    /// Structural validation: supported version, non-empty name, valid
+    /// scenario, valid thresholds, non-empty policy names.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.version == SCENARIO_DOC_VERSION,
+            "unsupported scenario document version {} (this build reads version {})",
+            self.version,
+            SCENARIO_DOC_VERSION
+        );
+        anyhow::ensure!(
+            !self.scenario.name.trim().is_empty(),
+            "scenario document needs a non-empty name"
+        );
+        self.scenario.validate()?;
+        for (k, p) in self.policies.iter().enumerate() {
+            anyhow::ensure!(
+                !p.trim().is_empty(),
+                "policies[{k}]: policy name must be non-empty"
+            );
+        }
+        for (k, e) in self.expectations.iter().enumerate() {
+            e.validate(k)?;
+        }
+        Ok(())
+    }
+
+    /// Canonical content hash: SHA-256 over the canonical JSON rendering
+    /// (`to_json_string`), so formatting/key-order variations of the same
+    /// document hash identically. This is the fingerprint the event-log
+    /// header records (‖ seed ‖ policy) to make results replayable.
+    pub fn content_hash(&self) -> String {
+        sha256_hex(self.to_json_string().as_bytes())
+    }
+
+    /// Feed every field into `h` (memo-key convention: exhaustive
+    /// destructure, so an unhashed new field fails to compile). Note the
+    /// *scenario* sub-hash alone keys the simulation memo cache —
+    /// expectations and policy scope are post-run contracts and must not
+    /// fragment result caching (locked by a memo-key test).
+    pub fn hash_content<H: std::hash::Hasher>(&self, h: &mut H) {
+        let ScenarioDocument {
+            version,
+            scenario,
+            policies,
+            expectations,
+        } = self;
+        h.write_u64(*version);
+        scenario.hash_content(h);
+        h.write_usize(policies.len());
+        for p in policies {
+            h.write(p.as_bytes());
+            h.write_u8(0xFF);
+        }
+        h.write_usize(expectations.len());
+        for e in expectations {
+            e.hash_content(h);
+        }
+    }
+
+    /// Load every `*.json` scenario document in `dir`, sorted by file
+    /// name (so catalog ordering is the directory listing, not inode
+    /// order). Returns `(file_name, document)` pairs; errors name the
+    /// offending file.
+    pub fn load_dir(dir: &std::path::Path) -> anyhow::Result<Vec<(String, ScenarioDocument)>> {
+        let entries = std::fs::read_dir(dir)
+            .map_err(|e| anyhow::anyhow!("scenario dir {}: {e}", dir.display()))?;
+        let mut files: Vec<std::path::PathBuf> = entries
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| anyhow::anyhow!("scenario dir {}: {e}", dir.display()))?
+            .into_iter()
+            .map(|d| d.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "json"))
+            .collect();
+        files.sort();
+        let mut out = Vec::with_capacity(files.len());
+        for path in files {
+            let file = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("<non-utf8>")
+                .to_string();
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow::anyhow!("scenario file {file}: {e}"))?;
+            let doc = ScenarioDocument::from_json_str(&text)
+                .map_err(|e| anyhow::anyhow!("scenario file {file}: {e}"))?;
+            out.push((file, doc));
+        }
+        anyhow::ensure!(
+            !out.is_empty(),
+            "scenario dir {}: no *.json scenario files found",
+            dir.display()
+        );
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wrap_and_validate() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.validate().unwrap();
+        assert_eq!(doc.name(), "poisson-4");
+        assert_eq!(doc.version, SCENARIO_DOC_VERSION);
+        assert!(doc.applies_to("la-imr") && doc.applies_to("static"));
+    }
+
+    #[test]
+    fn policy_scope_filters() {
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.policies = vec!["la-imr".into(), "hybrid".into()];
+        assert!(doc.applies_to("la-imr"));
+        assert!(doc.applies_to("hybrid"));
+        assert!(!doc.applies_to("static"));
+    }
+
+    #[test]
+    fn version_and_threshold_validation() {
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.version = 2;
+        let err = doc.validate().unwrap_err().to_string();
+        assert!(err.contains("version 2"), "unclear error: {err}");
+
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.expectations = vec![Expectation::GoodputMin { share: 1.5 }];
+        let err = doc.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("expectations[0]") && err.contains("goodput-min"),
+            "unclear error: {err}"
+        );
+
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.expectations = vec![
+            Expectation::Conservation,
+            Expectation::RecoveryBy {
+                after: -1.0,
+                p99_max: 2.0,
+            },
+        ];
+        let err = doc.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("expectations[1]") && err.contains("recovery-by"),
+            "unclear error: {err}"
+        );
+
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.scenario.name = "  ".into();
+        assert!(doc.validate().unwrap_err().to_string().contains("name"));
+    }
+
+    #[test]
+    fn expectations_do_not_touch_scenario_memo_key() {
+        // The sim memo cache is keyed on the *scenario* hash; adding an
+        // expectation must not invalidate cached results, while the
+        // document hash must see it.
+        fn doc_hash(d: &ScenarioDocument) -> u64 {
+            use std::hash::Hasher;
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            d.hash_content(&mut h);
+            h.finish()
+        }
+        fn scen_hash(d: &ScenarioDocument) -> u64 {
+            use std::hash::Hasher;
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            d.scenario.hash_content(&mut h);
+            h.finish()
+        }
+        let plain = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let mut with_exp = plain.clone();
+        with_exp.expectations = vec![Expectation::P99Max { seconds: 30.0 }];
+        assert_eq!(scen_hash(&plain), scen_hash(&with_exp));
+        assert_ne!(doc_hash(&plain), doc_hash(&with_exp));
+
+        // Every predicate variant feeds the document hash distinctly.
+        let variants = [
+            Expectation::P99Max { seconds: 1.0 },
+            Expectation::GoodputMin { share: 0.5 },
+            Expectation::ShedShareMax { share: 0.5 },
+            Expectation::CompletedMin { count: 10 },
+            Expectation::Conservation,
+            Expectation::RecoveryBy {
+                after: 1.0,
+                p99_max: 1.0,
+            },
+        ];
+        let mut hashes: Vec<u64> = variants
+            .iter()
+            .map(|e| {
+                let mut d = plain.clone();
+                d.expectations = vec![e.clone()];
+                doc_hash(&d)
+            })
+            .collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), variants.len(), "predicate hash collision");
+    }
+}

@@ -3,8 +3,10 @@
 //! exactly; everything is overridable from a JSON file (`laimr --config`)
 //! parsed by the in-tree parser (`util::json`).
 
+mod document;
 mod scenario;
 mod serde_json_impl;
+pub use document::{Expectation, ScenarioDocument, SCENARIO_DOC_VERSION};
 pub use scenario::{parse_trace, ArrivalKind, FaultSpec, ScenarioConfig};
 
 /// Quality lanes of the multi-queue scheduler (§IV-A).

@@ -104,7 +104,10 @@ pub enum FaultSpec {
 /// line (1-indexed).
 pub fn parse_trace(text: &str) -> anyhow::Result<Vec<f64>> {
     let mut out = Vec::new();
-    let mut prev = 0.0f64;
+    // None until the first data line: seeding with 0.0 made the sorted
+    // check silently double as a sign check on line 1 and report a
+    // phantom "after 0" pair instead of the real offending entries.
+    let mut prev: Option<f64> = None;
     for (k, raw) in text.lines().enumerate() {
         let line = raw.trim();
         if line.is_empty() || line.starts_with('#') {
@@ -118,18 +121,20 @@ pub fn parse_trace(text: &str) -> anyhow::Result<Vec<f64>> {
             t.is_finite() && t >= 0.0,
             "trace line {n}: negative or non-finite timestamp {t}"
         );
-        anyhow::ensure!(
-            t >= prev,
-            "trace line {n}: timestamps not sorted ({t} after {prev})"
-        );
-        prev = t;
+        if let Some(p) = prev {
+            anyhow::ensure!(
+                t >= p,
+                "trace line {n}: timestamps not sorted ({t} after {p})"
+            );
+        }
+        prev = Some(t);
         out.push(t);
     }
     Ok(out)
 }
 
 /// One simulation scenario.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioConfig {
     pub name: String,
     pub arrivals: ArrivalKind,
@@ -315,6 +320,14 @@ impl ScenarioConfig {
         anyhow::ensure!(
             self.quality_mix.iter().all(|x| x.is_finite() && *x >= 0.0),
             "quality_mix entries must be >= 0 (got {:?})",
+            self.quality_mix
+        );
+        // `mix()` normalises by the sum; an all-zero mix has no
+        // well-defined lane shares, so refuse it here instead of
+        // silently substituting a default downstream.
+        anyhow::ensure!(
+            self.quality_mix.iter().sum::<f64>() > 0.0,
+            "quality_mix must have a positive sum (got {:?})",
             self.quality_mix
         );
         anyhow::ensure!(
@@ -748,6 +761,22 @@ mod tests {
     }
 
     #[test]
+    fn all_zero_quality_mix_rejected() {
+        // Regression: validate() used to accept [0, 0, 0] even though no
+        // lane shares can be derived from it; it now names the knob.
+        let mut s = ScenarioConfig::default();
+        s.quality_mix = [0.0, 0.0, 0.0];
+        let err = s.validate().unwrap_err().to_string();
+        assert!(
+            err.contains("quality_mix") && err.contains("positive sum"),
+            "unclear error: {err}"
+        );
+        // Any positive entry restores validity.
+        s.quality_mix = [0.0, 1e-6, 0.0];
+        s.validate().unwrap();
+    }
+
+    #[test]
     fn steps_mean_rate() {
         let s = ScenarioConfig {
             arrivals: ArrivalKind::Steps {
@@ -879,5 +908,24 @@ mod tests {
 
         let err = parse_trace("0.1\nnot-a-time\n").unwrap_err().to_string();
         assert!(err.contains("line 2"), "unclear error: {err}");
+    }
+
+    #[test]
+    fn trace_parser_first_pair_reported_correctly() {
+        // Regression: `prev` used to seed at 0.0, so the "not sorted"
+        // error named a phantom 0 instead of the real predecessor, and
+        // the first data line was implicitly compared against 0.0.
+        let err = parse_trace("# header\n\n2.0\n1.0\n").unwrap_err().to_string();
+        assert!(
+            err.contains("line 4") && err.contains("(1 after 2)"),
+            "should blame the real pair on the right line: {err}"
+        );
+
+        // A lone first data line is only checked for sign/finiteness —
+        // never against a synthetic previous timestamp.
+        assert_eq!(parse_trace("# c\n0.0\n").unwrap(), vec![0.0]);
+        assert_eq!(parse_trace("5.0\n").unwrap(), vec![5.0]);
+        // Equal consecutive timestamps (simultaneous arrivals) stay legal.
+        assert_eq!(parse_trace("1.0\n1.0\n").unwrap(), vec![1.0, 1.0]);
     }
 }

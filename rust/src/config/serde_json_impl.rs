@@ -3,9 +3,10 @@
 //! rest keep their paper defaults.
 
 use super::{
-    parse_trace, ArrivalKind, ClusterPolicy, Config, EngineMode, EnginePolicy, FaultSpec,
-    InstanceSpec, MergeRule, MetricsPolicy, ModelProfile, PredictionPolicy, QualityClass,
-    ScenarioConfig, SloPolicy, TailPolicy, Tier,
+    parse_trace, ArrivalKind, ClusterPolicy, Config, EngineMode, EnginePolicy, Expectation,
+    FaultSpec, InstanceSpec, MergeRule, MetricsPolicy, ModelProfile, PredictionPolicy,
+    QualityClass, ScenarioConfig, ScenarioDocument, SloPolicy, TailPolicy, Tier,
+    SCENARIO_DOC_VERSION,
 };
 use crate::util::json::{self, Value};
 use std::collections::BTreeMap;
@@ -571,6 +572,12 @@ impl ScenarioConfig {
     /// round-trips are always exact).
     pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
         let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json_value(&v)
+    }
+
+    /// Value-level parser (shared with the `ScenarioDocument` wrapper,
+    /// whose `scenario` sub-object carries exactly this shape).
+    pub(crate) fn from_json_value(v: &Value) -> anyhow::Result<Self> {
         let base = ScenarioConfig::default();
         let s = ScenarioConfig {
             name: match v.get("name") {
@@ -648,6 +655,12 @@ impl ScenarioConfig {
 
     /// Serialise to pretty JSON (round-trips through `from_json_str`).
     pub fn to_json_string(&self) -> String {
+        json::to_string(&self.to_json_value())
+    }
+
+    /// Value-level serialiser (shared with the `ScenarioDocument`
+    /// wrapper).
+    pub(crate) fn to_json_value(&self) -> Value {
         let mut o = BTreeMap::new();
         o.insert("name".into(), Value::Str(self.name.clone()));
         o.insert("arrivals".into(), self.arrivals.to_json());
@@ -681,6 +694,174 @@ impl ScenarioConfig {
                 Value::Arr(self.faults.iter().map(|f| f.to_json()).collect()),
             );
         }
+        Value::Obj(o)
+    }
+}
+
+impl Expectation {
+    fn from_json(v: &Value) -> anyhow::Result<Self> {
+        let kind = req_str(v, "kind")?;
+        match kind.as_str() {
+            "p99-max" => Ok(Expectation::P99Max {
+                seconds: req_num(v, "seconds")?,
+            }),
+            "goodput-min" => Ok(Expectation::GoodputMin {
+                share: req_num(v, "share")?,
+            }),
+            "shed-share-max" => Ok(Expectation::ShedShareMax {
+                share: req_num(v, "share")?,
+            }),
+            "completed-min" => Ok(Expectation::CompletedMin {
+                count: v.get("count").and_then(|x| x.as_u64()).ok_or_else(|| {
+                    anyhow::anyhow!("completed-min: expected a non-negative integer 'count'")
+                })?,
+            }),
+            "conservation" => Ok(Expectation::Conservation),
+            "recovery-by" => Ok(Expectation::RecoveryBy {
+                after: req_num(v, "after")?,
+                p99_max: req_num(v, "p99_max")?,
+            }),
+            other => anyhow::bail!(
+                "unknown expectation kind '{other}' (known: p99-max, goodput-min, \
+                 shed-share-max, completed-min, conservation, recovery-by)"
+            ),
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = BTreeMap::new();
+        o.insert("kind".into(), Value::Str(self.kind().into()));
+        match self {
+            Expectation::P99Max { seconds } => {
+                o.insert("seconds".into(), Value::Num(*seconds));
+            }
+            Expectation::GoodputMin { share } | Expectation::ShedShareMax { share } => {
+                o.insert("share".into(), Value::Num(*share));
+            }
+            Expectation::CompletedMin { count } => {
+                o.insert("count".into(), Value::Num(*count as f64));
+            }
+            Expectation::Conservation => {}
+            Expectation::RecoveryBy { after, p99_max } => {
+                o.insert("after".into(), Value::Num(*after));
+                o.insert("p99_max".into(), Value::Num(*p99_max));
+            }
+        }
+        Value::Obj(o)
+    }
+}
+
+impl ScenarioDocument {
+    /// Parse a versioned scenario document. The top-level `name` (when
+    /// present) overrides the nested scenario's name; an optional
+    /// `sha256` field is verified against the canonical content hash so
+    /// a stamped file detects tampering. Validates before returning.
+    pub fn from_json_str(text: &str) -> anyhow::Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = v.get("version").and_then(|x| x.as_u64()).ok_or_else(|| {
+            anyhow::anyhow!("scenario document: missing integer field 'version'")
+        })?;
+        anyhow::ensure!(
+            version == SCENARIO_DOC_VERSION,
+            "unsupported scenario document version {version} (this build reads version {})",
+            SCENARIO_DOC_VERSION
+        );
+        let mut scenario = match v.get("scenario") {
+            None => ScenarioConfig::default(),
+            Some(s) => ScenarioConfig::from_json_value(s)
+                .map_err(|e| anyhow::anyhow!("scenario: {e}"))?,
+        };
+        if let Some(n) = v.get("name") {
+            scenario.name = n
+                .as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("name: expected a string"))?;
+        }
+        let policies = match v.get("policies") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("policies: expected an array of strings"))?
+                .iter()
+                .enumerate()
+                .map(|(k, p)| {
+                    p.as_str()
+                        .map(|s| s.to_string())
+                        .ok_or_else(|| anyhow::anyhow!("policies[{k}]: expected a string"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        let expectations = match v.get("expectations") {
+            None => Vec::new(),
+            Some(arr) => arr
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("expectations: expected an array"))?
+                .iter()
+                .enumerate()
+                .map(|(k, e)| {
+                    Expectation::from_json(e)
+                        .map_err(|e| anyhow::anyhow!("expectations[{k}]: {e}"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?,
+        };
+        let doc = ScenarioDocument {
+            version,
+            scenario,
+            policies,
+            expectations,
+        };
+        doc.validate()?;
+        if let Some(x) = v.get("sha256") {
+            let want = x
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("sha256: expected a hex string"))?;
+            let got = doc.content_hash();
+            anyhow::ensure!(
+                want == got,
+                "scenario document sha256 mismatch: file claims {want}, canonical content \
+                 hashes to {got} (document edited without restamping?)"
+            );
+        }
+        Ok(doc)
+    }
+
+    /// Canonical JSON rendering — the byte stream `content_hash()`
+    /// digests. The optional `sha256` stamp is deliberately *not* part of
+    /// the canonical form, so stamping a file does not change its hash.
+    pub fn to_json_string(&self) -> String {
+        let mut o = BTreeMap::new();
+        o.insert("version".into(), Value::Num(self.version as f64));
+        o.insert("name".into(), Value::Str(self.scenario.name.clone()));
+        o.insert("scenario".into(), self.scenario.to_json_value());
+        if !self.policies.is_empty() {
+            o.insert(
+                "policies".into(),
+                Value::Arr(
+                    self.policies
+                        .iter()
+                        .map(|p| Value::Str(p.clone()))
+                        .collect(),
+                ),
+            );
+        }
+        if !self.expectations.is_empty() {
+            o.insert(
+                "expectations".into(),
+                Value::Arr(self.expectations.iter().map(|e| e.to_json()).collect()),
+            );
+        }
+        json::to_string(&Value::Obj(o))
+    }
+
+    /// Like `to_json_string`, plus a `sha256` stamp of the canonical
+    /// content — a stamped file round-trips through the tamper check in
+    /// `from_json_str`.
+    pub fn to_stamped_json_string(&self) -> String {
+        let mut o = match json::parse(&self.to_json_string()) {
+            Ok(Value::Obj(o)) => o,
+            _ => unreachable!("canonical document form is always a JSON object"),
+        };
+        o.insert("sha256".into(), Value::Str(self.content_hash()));
         json::to_string(&Value::Obj(o))
     }
 }
@@ -853,6 +1034,98 @@ mod tests {
         // Defaults omit the section entirely and stay instantaneous.
         let d = Config::from_json_str("{}").unwrap();
         assert_eq!(d.metrics, MetricsPolicy::default());
+    }
+
+    #[test]
+    fn scenario_document_roundtrip_and_hash_stability() {
+        let mut doc = ScenarioDocument::new(ScenarioConfig::bursty(4.0, 101));
+        doc.policies = vec!["la-imr".into()];
+        doc.expectations = vec![
+            Expectation::Conservation,
+            Expectation::P99Max { seconds: 180.0 },
+            Expectation::RecoveryBy {
+                after: 100.0,
+                p99_max: 180.0,
+            },
+        ];
+        let text = doc.to_json_string();
+        let back = ScenarioDocument::from_json_str(&text).unwrap();
+        assert_eq!(back, doc);
+        // The canonical hash is formatting-insensitive: reparsing a
+        // whitespace-mangled rendering hashes identically.
+        let mangled = text.replace('\n', " ").replace("  ", " ");
+        let back2 = ScenarioDocument::from_json_str(&mangled).unwrap();
+        assert_eq!(back2.content_hash(), doc.content_hash());
+        // ...and any semantic change moves it.
+        let mut other = doc.clone();
+        other.scenario.seed = 102;
+        assert_ne!(other.content_hash(), doc.content_hash());
+    }
+
+    #[test]
+    fn scenario_document_stamp_verifies_and_detects_tampering() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let stamped = doc.to_stamped_json_string();
+        // Stamping does not change the canonical hash, and the stamp
+        // itself verifies on re-parse.
+        let back = ScenarioDocument::from_json_str(&stamped).unwrap();
+        assert_eq!(back.content_hash(), doc.content_hash());
+        // Editing the document without restamping is rejected by name.
+        let tampered = stamped.replace("\"seed\": 7", "\"seed\": 8");
+        assert_ne!(tampered, stamped, "edit must hit the rendered seed");
+        let err = ScenarioDocument::from_json_str(&tampered)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("sha256 mismatch"), "unclear error: {err}");
+    }
+
+    #[test]
+    fn scenario_document_rejections() {
+        for (bad, needle) in [
+            (r#"{"name": "x"}"#, "version"),
+            (r#"{"version": 9, "name": "x"}"#, "version 9"),
+            (r#"{"version": 1, "name": ""}"#, "name"),
+            (
+                r#"{"version": 1, "name": "x", "policies": [3]}"#,
+                "policies[0]",
+            ),
+            (
+                r#"{"version": 1, "name": "x", "expectations": [{"kind": "p999-max"}]}"#,
+                "unknown expectation kind",
+            ),
+            (
+                r#"{"version": 1, "name": "x", "expectations": [{"kind": "goodput-min", "share": 2.0}]}"#,
+                "goodput-min",
+            ),
+            (
+                r#"{"version": 1, "name": "x", "expectations": [{"kind": "completed-min"}]}"#,
+                "completed-min",
+            ),
+            (
+                r#"{"version": 1, "name": "x", "scenario": {"quality_mix": [0, 0, 0]}}"#,
+                "quality_mix",
+            ),
+        ] {
+            let err = ScenarioDocument::from_json_str(bad).unwrap_err().to_string();
+            assert!(err.contains(needle), "'{bad}' should mention '{needle}': {err}");
+        }
+    }
+
+    #[test]
+    fn scenario_document_name_override_and_defaults() {
+        // Top-level name wins over the nested scenario's.
+        let doc = ScenarioDocument::from_json_str(
+            r#"{"version": 1, "name": "renamed", "scenario": {"name": "inner", "duration": 10, "warmup": 0}}"#,
+        )
+        .unwrap();
+        assert_eq!(doc.name(), "renamed");
+        assert_eq!(doc.scenario.duration, 10.0);
+        // Absent scenario block = full defaults under the given name.
+        let bare = ScenarioDocument::from_json_str(r#"{"version": 1, "name": "just-a-name"}"#)
+            .unwrap();
+        assert_eq!(bare.scenario.duration, ScenarioConfig::default().duration);
+        assert_eq!(bare.name(), "just-a-name");
+        assert!(bare.expectations.is_empty() && bare.policies.is_empty());
     }
 
     #[test]

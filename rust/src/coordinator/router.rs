@@ -76,7 +76,7 @@ pub fn home_map(cfg: &Config) -> Vec<DeploymentKey> {
                 .instances
                 .iter()
                 .enumerate()
-                .min_by(|(_, a), (_, b)| a.cost.partial_cmp(&b.cost).unwrap())
+                .min_by(|(_, a), (_, b)| a.cost.total_cmp(&b.cost))
                 .map(|(i, _)| i)
                 .unwrap_or(0);
             // Precision-class models home on the cloud tier.

@@ -7,10 +7,12 @@
 //!   plan       — capacity planning (Eq. 23) for a traffic mix
 //!   repro      — regenerate a paper table/figure (or `all`)
 
-use la_imr::config::{Config, QualityClass, ScenarioConfig};
+use la_imr::config::{Config, QualityClass, ScenarioConfig, ScenarioDocument};
 use la_imr::planner::{plan_capacity, TaskClass};
 use la_imr::report;
-use la_imr::sim::{Architecture, Policy, Runner, Simulation};
+use la_imr::sim::{
+    evaluate_document, event_log, Architecture, Policy, Runner, Simulation,
+};
 use la_imr::util::cli::Args;
 use std::path::{Path, PathBuf};
 
@@ -24,14 +26,26 @@ COMMANDS:
   simulate   --lambda L --policy P --bursty B    run one DES scenario
              --duration S --replicas N --seed K  (P: la-imr|baseline|static|
              [--mtbf S] [--online B]             hedged|deadline-shed|hybrid);
-                                                 --mtbf: pod-crash faults;
-                                                 --online: enable the online
+             [--scenario-file F.json]            --mtbf: pod-crash faults;
+             [--event-log OUT.log]               --online: enable the online
                                                  prediction plane (drift
-                                                 recalibration)
+                                                 recalibration);
+                                                 --scenario-file: run a
+                                                 declarative scenario document
+                                                 (see examples/scenarios/) and
+                                                 evaluate its expectations;
+                                                 --event-log: write a replayable
+                                                 event log whose header hashes
+                                                 SHA-256(document ‖ seed ‖
+                                                 policy)
   calibrate  [--threads T]                       fit α,β,γ (Fig 2)
   plan       --lambda L [--slo S]                capacity planning (Eq. 23)
   repro      <table2|table3|table4|fig2|fig3|fig4|fig7|fig8|table6|table6q|
               pareto|scenarios|drift|staleness|all>
+             [--dir DIR]                         scenarios only: load every
+                                                 *.json scenario document in
+                                                 DIR instead of the embedded
+                                                 catalog
              [--threads T]                       sweep worker count
                                                  (default: all cores; 1 = serial)
                                                  (table6q: per-quality-lane P99;
@@ -99,17 +113,32 @@ fn run() -> anyhow::Result<()> {
             let replicas = args.get_u32("replicas", 2).map_err(anyhow::Error::msg)?;
             let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
             let mtbf = args.get_f64("mtbf", 0.0).map_err(anyhow::Error::msg)?;
-            let mut scenario = if bursty {
-                ScenarioConfig::bursty(lambda, seed)
-            } else {
-                ScenarioConfig::poisson(lambda, seed)
-            }
-            .with_duration(duration, (duration / 10.0).min(30.0))
-            .with_replicas(replicas);
-            if mtbf > 0.0 {
-                scenario = scenario.with_faults(mtbf);
-            }
-            let r = Simulation::new(&cfg, &scenario, policy, Architecture::Microservice).run();
+            // A scenario file replaces the ad-hoc workload flags: the
+            // document carries the whole scenario (plus expectations).
+            let scenario_file = args.get("scenario-file").cloned();
+            let doc = match &scenario_file {
+                Some(path) => {
+                    let text = std::fs::read_to_string(path)
+                        .map_err(|e| anyhow::anyhow!("scenario file {path}: {e}"))?;
+                    ScenarioDocument::from_json_str(&text)
+                        .map_err(|e| anyhow::anyhow!("scenario file {path}: {e}"))?
+                }
+                None => {
+                    let mut scenario = if bursty {
+                        ScenarioConfig::bursty(lambda, seed)
+                    } else {
+                        ScenarioConfig::poisson(lambda, seed)
+                    }
+                    .with_duration(duration, (duration / 10.0).min(30.0))
+                    .with_replicas(replicas);
+                    if mtbf > 0.0 {
+                        scenario = scenario.with_faults(mtbf);
+                    }
+                    ScenarioDocument::new(scenario)
+                }
+            };
+            let r =
+                Simulation::new(&cfg, &doc.scenario, policy, Architecture::Microservice).run();
             let s = r.summary();
             println!("scenario   : {} ({})", r.scenario_name, r.policy_name);
             println!(
@@ -146,6 +175,38 @@ fn run() -> anyhow::Result<()> {
             }
             if r.crashes > 0 {
                 println!("faults     : {} pod crashes injected", r.crashes);
+            }
+            if !doc.expectations.is_empty() {
+                let label = scenario_file.as_deref().unwrap_or("<inline>");
+                if doc.applies_to(&r.policy_name) {
+                    let fails = evaluate_document(&doc, label, &r, cfg.deadline_by_lane());
+                    if fails.is_empty() {
+                        println!(
+                            "expect     : {} expectation(s) satisfied",
+                            doc.expectations.len()
+                        );
+                    } else {
+                        for f in &fails {
+                            println!("expect     : FAIL {f}");
+                        }
+                        anyhow::bail!("{} expectation(s) failed", fails.len());
+                    }
+                } else {
+                    println!(
+                        "expect     : skipped ({} not in the document's policy scope)",
+                        r.policy_name
+                    );
+                }
+            }
+            if let Some(out) = args.get("event-log") {
+                let log = event_log::render_event_log(&doc, &r.policy_name, &r);
+                std::fs::write(out, &log)
+                    .map_err(|e| anyhow::anyhow!("event log {out}: {e}"))?;
+                println!(
+                    "event log  : {out} ({} events, sha256 {})",
+                    r.completed.len() + r.shed.len(),
+                    event_log::header_hash(&log).unwrap_or("?")
+                );
             }
             Ok(())
         }
@@ -212,7 +273,13 @@ fn run() -> anyhow::Result<()> {
                     "table6" => println!("{}", report::table6(&cfg, &runner)),
                     "table6q" => println!("{}", report::table6_lanes(&cfg, &runner)),
                     "pareto" => println!("{}", report::pareto(&cfg, &runner)),
-                    "scenarios" => println!("{}", report::scenarios(&cfg, &runner)),
+                    "scenarios" => match args.get("dir") {
+                        Some(dir) => {
+                            let docs = ScenarioDocument::load_dir(Path::new(dir))?;
+                            println!("{}", report::scenarios_report(&cfg, &runner, &docs));
+                        }
+                        None => println!("{}", report::scenarios(&cfg, &runner)),
+                    },
                     "drift" => println!("{}", report::drift(&cfg, &runner)),
                     "staleness" => println!("{}", report::staleness(&cfg, &runner)),
                     other => anyhow::bail!("unknown experiment id {other}"),
@@ -280,7 +347,7 @@ fn serve(
         let (robot, &at) = match next_at
             .iter()
             .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .min_by(|a, b| a.1.total_cmp(b.1))
         {
             Some(x) => x,
             None => break,

@@ -6,7 +6,8 @@
 //! CLI (or set `LAIMR_THREADS`) to pin the worker count.
 
 use crate::config::{
-    ArrivalKind, Config, FaultSpec, InstanceSpec, QualityClass, ScenarioConfig, Tier,
+    ArrivalKind, Config, FaultSpec, InstanceSpec, QualityClass, ScenarioConfig,
+    ScenarioDocument, Tier,
 };
 use crate::latency_model::{fit_anchored, paper_table4_samples, CalibrationSample};
 use crate::sim::{Architecture, Cell, Policy, Runner};
@@ -54,7 +55,7 @@ pub fn table2(cfg: &Config, artifacts: Option<&std::path::Path>) -> String {
                 let _ = model.infer(&img).ok()?;
                 let mut ts: Vec<f64> =
                     (0..5).filter_map(|_| model.time_one(&img).ok()).collect();
-                ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                ts.sort_by(f64::total_cmp);
                 ts.get(ts.len() / 2).copied()
             })
             .map(|t| format!("{:.4}", t))
@@ -754,11 +755,80 @@ pub fn sawtooth_trace() -> Vec<f64> {
     out
 }
 
+/// The committed scenario documents behind `repro scenarios` (ISSUE 8):
+/// the catalog lives as data under `examples/scenarios/`, embedded at
+/// compile time so the binary needs no working directory — and the same
+/// bytes parse through the generic `--dir` loader.
+pub const CATALOG_FILES: [(&str, &str); 9] = [
+    (
+        "01-poisson.json",
+        include_str!("../../../examples/scenarios/01-poisson.json"),
+    ),
+    (
+        "02-bursty.json",
+        include_str!("../../../examples/scenarios/02-bursty.json"),
+    ),
+    (
+        "03-diurnal.json",
+        include_str!("../../../examples/scenarios/03-diurnal.json"),
+    ),
+    (
+        "04-mmpp.json",
+        include_str!("../../../examples/scenarios/04-mmpp.json"),
+    ),
+    (
+        "05-trace-sawtooth.json",
+        include_str!("../../../examples/scenarios/05-trace-sawtooth.json"),
+    ),
+    (
+        "06-bursty-crashes.json",
+        include_str!("../../../examples/scenarios/06-bursty-crashes.json"),
+    ),
+    (
+        "07-bursty-rack-failure.json",
+        include_str!("../../../examples/scenarios/07-bursty-rack-failure.json"),
+    ),
+    (
+        "08-bursty-partition.json",
+        include_str!("../../../examples/scenarios/08-bursty-partition.json"),
+    ),
+    (
+        "09-bursty-fail-slow.json",
+        include_str!("../../../examples/scenarios/09-bursty-fail-slow.json"),
+    ),
+];
+
+/// Parse the embedded catalog files into `(file name, document)` pairs.
+/// A malformed embedded file is a build-artifact bug, so this panics
+/// with the file name rather than threading a Result everywhere.
+pub fn scenario_catalog_docs() -> Vec<(String, ScenarioDocument)> {
+    CATALOG_FILES
+        .iter()
+        .map(|(file, text)| {
+            let doc = ScenarioDocument::from_json_str(text)
+                .unwrap_or_else(|e| panic!("embedded scenario {file}: {e}"));
+            ((*file).to_string(), doc)
+        })
+        .collect()
+}
+
 /// The named scenario catalog behind `repro scenarios` (ROADMAP "new
 /// arrival shapes" / "new fault shapes"): every arrival family at the
 /// same mean rate, then each fault shape riding on the bursty arrivals
-/// where tails actually bite.
+/// where tails actually bite. Since ISSUE 8 this is a thin loader over
+/// the committed files, re-seeded to `seed`; the constructors survive as
+/// [`scenario_catalog_builtin`], the bit-identity reference.
 pub fn scenario_catalog(seed: u64) -> Vec<ScenarioConfig> {
+    scenario_catalog_docs()
+        .into_iter()
+        .map(|(_, doc)| doc.scenario.with_seed(seed))
+        .collect()
+}
+
+/// The constructor-built catalog the committed files were ported from.
+/// Kept as the reference the files must stay bit-identical to (locked
+/// by `catalog_files_bit_identical_to_builtin`).
+pub fn scenario_catalog_builtin(seed: u64) -> Vec<ScenarioConfig> {
     let lam = CATALOG_LAMBDA;
     let base = |s: ScenarioConfig| s.with_duration(CATALOG_DURATION, 20.0).with_replicas(2);
     let named = |mut s: ScenarioConfig, name: &str| {
@@ -809,13 +879,31 @@ pub fn scenario_catalog(seed: u64) -> Vec<ScenarioConfig> {
 
 /// `repro scenarios`: the full workload-diversity catalog × all six
 /// policies — per-scenario P99, goodput against the default deadline
-/// contract, shed share, and fault telemetry in one table.
+/// contract, shed share, and fault telemetry in one table, plus the
+/// verdict of every in-scope declarative expectation (ISSUE 8).
 pub fn scenarios(cfg: &Config, runner: &Runner) -> String {
-    let catalog = scenario_catalog(TRIALS[0]);
+    let docs: Vec<(String, ScenarioDocument)> = scenario_catalog_docs()
+        .into_iter()
+        .map(|(file, mut doc)| {
+            doc.scenario = doc.scenario.with_seed(TRIALS[0]);
+            (file, doc)
+        })
+        .collect();
+    scenarios_report(cfg, runner, &docs)
+}
+
+/// Run every document × all policies and render the catalog table +
+/// expectation verdicts. Shared by `repro scenarios` (embedded catalog)
+/// and `repro scenarios --dir` (any directory of scenario files).
+pub fn scenarios_report(
+    cfg: &Config,
+    runner: &Runner,
+    docs: &[(String, ScenarioDocument)],
+) -> String {
     let mut cells = Vec::new();
-    for s in &catalog {
+    for (_, doc) in docs {
         for policy in Policy::ALL {
-            cells.push(Cell::new(s.clone(), policy));
+            cells.push(Cell::new(doc.scenario.clone(), policy));
         }
     }
     let results = runner.run(cfg, &cells);
@@ -834,17 +922,38 @@ pub fn scenarios(cfg: &Config, runner: &Runner) -> String {
             ]
         })
         .collect();
+    // Evaluate each document's expectations against its in-scope runs
+    // (the runner returns results in cell order: docs × Policy::ALL).
+    let mut checked = 0usize;
+    let mut failures = Vec::new();
+    for ((file, doc), chunk) in docs.iter().zip(results.chunks(Policy::ALL.len())) {
+        for r in chunk {
+            if doc.applies_to(&r.policy_name) {
+                checked += doc.expectations.len();
+                failures.extend(crate::sim::evaluate_document(doc, file, r, yardstick));
+            }
+        }
+    }
+    let verdict = if failures.is_empty() {
+        format!("expectations: {checked} checked, all satisfied")
+    } else {
+        let mut s = format!("expectations: {} of {checked} FAILED", failures.len());
+        for f in &failures {
+            s.push_str(&format!("\n  FAIL {f}"));
+        }
+        s
+    };
     format!(
-        "Scenario catalog — {} scenarios × {} policies (λ̄={CATALOG_LAMBDA}, {}s each)\n{}",
-        catalog.len(),
+        "Scenario catalog — {} scenarios × {} policies\n{}\n{}",
+        docs.len(),
         Policy::ALL.len(),
-        CATALOG_DURATION,
         render_table(
             &[
                 "scenario", "policy", "P99 [s]", "goodput", "shed", "completed", "crashes",
             ],
             &rows
-        )
+        ),
+        verdict
     )
 }
 
@@ -1367,6 +1476,36 @@ mod tests {
                 s.mean_rate()
             );
         }
+    }
+
+    #[test]
+    fn catalog_files_bit_identical_to_builtin() {
+        // The committed files are the catalog now; the constructors are
+        // the reference. Any drift (a retuned constant, an edited file)
+        // must fail here, with the canonical regeneration text attached.
+        let from_files = scenario_catalog(TRIALS[0]);
+        let builtin = scenario_catalog_builtin(TRIALS[0]);
+        assert_eq!(from_files.len(), builtin.len(), "catalog length drifted");
+        use std::hash::Hasher;
+        let memo_key = |s: &ScenarioConfig| {
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            s.hash_content(&mut h);
+            h.finish()
+        };
+        for (f, b) in from_files.iter().zip(&builtin) {
+            assert!(
+                f == b,
+                "catalog file for '{}' drifted from the builtin constructor;\n\
+                 parsed:  {f:?}\n\
+                 builtin: {b:?}\n\
+                 regenerate the file's scenario block from this canonical form:\n{}",
+                b.name,
+                b.to_json_string()
+            );
+            assert_eq!(memo_key(f), memo_key(b), "{}: memo key drifted", b.name);
+        }
+        // The loader really re-seeds every entry.
+        assert!(scenario_catalog(5).iter().all(|s| s.seed == 5));
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub fn postprocess(output: &[f32], num_classes: usize, threshold: f32) -> Vec<De
         let (class, &score) = row[4..]
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .expect("num_classes > 0");
         if score >= threshold {
             dets.push(Detection {
@@ -39,7 +39,7 @@ pub fn postprocess(output: &[f32], num_classes: usize, threshold: f32) -> Vec<De
             });
         }
     }
-    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap());
+    dets.sort_by(|a, b| b.score.total_cmp(&a.score));
     dets
 }
 

@@ -343,7 +343,7 @@ impl Simulation {
         let dominant_q = match mix
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| a.1.total_cmp(b.1))
             .map(|(k, _)| k)
             .unwrap_or(1)
         {
@@ -1338,7 +1338,7 @@ impl Simulation {
 /// window can contain a given instant, and it is the last one starting
 /// at or before it.
 fn merge_windows(mut windows: Vec<(f64, f64)>) -> Vec<(f64, f64)> {
-    windows.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    windows.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
     let mut merged: Vec<(f64, f64)> = Vec::with_capacity(windows.len());
     for (s, e) in windows {
         match merged.last_mut() {

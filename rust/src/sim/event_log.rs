@@ -1,0 +1,210 @@
+//! Replayable event logs (ISSUE 8): an opt-in, line-oriented rendering
+//! of a run's terminal events whose header records
+//! SHA-256(canonical scenario document ‖ seed ‖ policy).
+//!
+//! The simulator is deterministic — a `SimResult` is a pure function of
+//! (config, scenario, policy) — so the *inputs'* fingerprint is the
+//! replay contract: anyone holding the scenario file can recompute the
+//! header hash, re-run, and diff the logs byte for byte. Timestamps are
+//! written as raw IEEE-754 bit patterns (`{:016x}`), not decimal, so
+//! "byte-identical" and "bit-identical" mean the same thing and no
+//! float-formatting subtlety can smuggle a difference through.
+
+use crate::config::ScenarioDocument;
+use crate::sim::SimResult;
+use crate::util::sha256::{hex, Sha256};
+use std::fmt::Write as _;
+
+/// Log format version tag (first line of every log).
+pub const EVENT_LOG_VERSION: &str = "laimr-event-log v1";
+
+/// The replay fingerprint: SHA-256 over the canonical document JSON,
+/// the seed, and the policy name, 0xFF-delimited (same convention as
+/// the memo keys — no two fields can collide by concatenation).
+pub fn replay_hash(doc_json: &str, seed: u64, policy: &str) -> String {
+    let mut h = Sha256::new();
+    h.update(doc_json.as_bytes());
+    h.update(&[0xFF]);
+    h.update(&seed.to_le_bytes());
+    h.update(&[0xFF]);
+    h.update(policy.as_bytes());
+    hex(&h.finish())
+}
+
+/// Render a run as a replayable event log. The header binds the log to
+/// its inputs via [`replay_hash`]; the body lists every post-warm-up
+/// completion (`C`) and shed (`S`) with bit-exact timestamps.
+pub fn render_event_log(doc: &ScenarioDocument, policy: &str, r: &SimResult) -> String {
+    let doc_json = doc.to_json_string();
+    let hash = replay_hash(&doc_json, doc.scenario.seed, policy);
+    let mut out = String::new();
+    let _ = writeln!(out, "# {EVENT_LOG_VERSION}");
+    let _ = writeln!(out, "# sha256: {hash}");
+    let _ = writeln!(out, "# scenario: {}", doc.name());
+    let _ = writeln!(out, "# policy: {policy}");
+    let _ = writeln!(out, "# seed: {}", doc.scenario.seed);
+    let _ = writeln!(
+        out,
+        "# completed: {} shed: {}",
+        r.completed.len(),
+        r.shed.len()
+    );
+    for c in &r.completed {
+        let _ = writeln!(
+            out,
+            "C {} {:016x} {:016x} {} {}",
+            c.id,
+            c.arrived.to_bits(),
+            c.finished.to_bits(),
+            c.quality.name(),
+            u8::from(c.offloaded)
+        );
+    }
+    for s in &r.shed {
+        let _ = writeln!(
+            out,
+            "S {} {:016x} {} {} {:016x}",
+            s.id,
+            s.at.to_bits(),
+            s.quality.name(),
+            s.reason.name(),
+            s.predicted.to_bits()
+        );
+    }
+    out
+}
+
+/// Extract the header hash of a rendered log, if well-formed.
+pub fn header_hash(log: &str) -> Option<&str> {
+    let mut lines = log.lines();
+    let first = lines.next()?;
+    if first != format!("# {EVENT_LOG_VERSION}") {
+        return None;
+    }
+    lines.next()?.strip_prefix("# sha256: ")
+}
+
+/// Verify that a log claims the fingerprint its inputs actually hash
+/// to — i.e. the log really belongs to (document, seed, policy).
+pub fn verify_event_log(log: &str, doc: &ScenarioDocument, policy: &str) -> anyhow::Result<()> {
+    let claimed = header_hash(log).ok_or_else(|| {
+        anyhow::anyhow!("event log header missing '# {EVENT_LOG_VERSION}' / '# sha256:' lines")
+    })?;
+    let want = replay_hash(&doc.to_json_string(), doc.scenario.seed, policy);
+    anyhow::ensure!(
+        claimed == want,
+        "event log hash mismatch: log claims {claimed}, inputs hash to {want} \
+         (different document, seed, or policy?)"
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{QualityClass, ScenarioConfig};
+    use crate::sim::policy::ShedReason;
+    use crate::sim::result::{CompletedRequest, ShedRecord, TailCounters};
+    use crate::util::sha256::sha256_hex;
+
+    fn mk() -> SimResult {
+        SimResult {
+            scenario_name: "poisson-4".into(),
+            policy_name: "la-imr".into(),
+            completed: vec![
+                CompletedRequest {
+                    id: 3,
+                    arrived: 1.25,
+                    finished: 1.5,
+                    quality: QualityClass::LowLatency,
+                    offloaded: false,
+                },
+                CompletedRequest {
+                    id: 4,
+                    arrived: 2.0,
+                    finished: 2.125,
+                    quality: QualityClass::Precise,
+                    offloaded: true,
+                },
+            ],
+            generated: 3,
+            unfinished: 0,
+            unfinished_post_warmup: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            peak_replicas: 1,
+            mean_replicas: 1.0,
+            crashes: 0,
+            events: 0,
+            shed: vec![ShedRecord {
+                id: 5,
+                at: 2.5,
+                quality: QualityClass::Balanced,
+                reason: ShedReason::DeadlineBreach,
+                predicted: 9.75,
+            }],
+            tail: TailCounters::default(),
+            fluid_batched: 0,
+            cache: Default::default(),
+        }
+    }
+
+    #[test]
+    fn render_is_deterministic_and_verifies() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let r = mk();
+        let log1 = render_event_log(&doc, "la-imr", &r);
+        let log2 = render_event_log(&doc, "la-imr", &r);
+        assert_eq!(log1, log2, "rendering must be byte-deterministic");
+        verify_event_log(&log1, &doc, "la-imr").unwrap();
+        // Header hash is recomputable from the inputs alone.
+        assert_eq!(
+            header_hash(&log1).unwrap(),
+            replay_hash(&doc.to_json_string(), 7, "la-imr")
+        );
+    }
+
+    #[test]
+    fn body_lines_are_bit_exact() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let log = render_event_log(&doc, "la-imr", &mk());
+        let expect_c = format!(
+            "C 3 {:016x} {:016x} low-latency 0",
+            1.25f64.to_bits(),
+            1.5f64.to_bits()
+        );
+        assert!(log.lines().any(|l| l == expect_c), "missing: {expect_c}\n{log}");
+        let expect_s = format!(
+            "S 5 {:016x} balanced deadline-breach {:016x}",
+            2.5f64.to_bits(),
+            9.75f64.to_bits()
+        );
+        assert!(log.lines().any(|l| l == expect_s), "missing: {expect_s}\n{log}");
+        assert!(log.lines().any(|l| l == "# completed: 2 shed: 1"));
+    }
+
+    #[test]
+    fn hash_binds_document_seed_and_policy() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let json = doc.to_json_string();
+        let base = replay_hash(&json, 7, "la-imr");
+        assert_ne!(base, replay_hash(&json, 8, "la-imr"), "seed must bind");
+        assert_ne!(base, replay_hash(&json, 7, "static"), "policy must bind");
+        let other = ScenarioDocument::new(ScenarioConfig::poisson(5.0, 7)).to_json_string();
+        assert_ne!(base, replay_hash(&other, 7, "la-imr"), "document must bind");
+        // Delimiters prevent concatenation collisions with one-shot hashing.
+        assert_ne!(base, sha256_hex(format!("{json}7la-imr").as_bytes()));
+    }
+
+    #[test]
+    fn verify_rejects_wrong_inputs_and_malformed_logs() {
+        let doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        let log = render_event_log(&doc, "la-imr", &mk());
+        let err = verify_event_log(&log, &doc, "static").unwrap_err().to_string();
+        assert!(err.contains("hash mismatch"), "unclear: {err}");
+        let err = verify_event_log("not a log", &doc, "la-imr")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("header missing"), "unclear: {err}");
+    }
+}

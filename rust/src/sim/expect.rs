@@ -1,0 +1,312 @@
+//! Expectation evaluation (ISSUE 8): checks a scenario document's
+//! declarative post-run assertions against the [`SimResult`] of a run.
+//!
+//! The predicates themselves are data ([`crate::config::Expectation`],
+//! authored in the scenario file); this module is the only place that
+//! knows how to read them off a result. Failures carry the scenario
+//! *file* name, the scenario, the policy, and the predicate kind, so a
+//! red CI line points straight at the committed artifact that broke.
+
+use crate::config::{Expectation, ScenarioDocument};
+use crate::sim::SimResult;
+use crate::telemetry::Summary;
+use std::fmt;
+
+/// One violated expectation, with everything needed to find and rerun it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExpectationFailure {
+    /// Scenario file the expectation was authored in (e.g.
+    /// `01-poisson.json`), or a caller-chosen label for in-memory docs.
+    pub file: String,
+    /// Scenario name (= `SimResult::scenario_name`).
+    pub scenario: String,
+    /// Policy the failing run used.
+    pub policy: String,
+    /// Predicate kind string (`p99-max`, `conservation`, ...).
+    pub kind: &'static str,
+    /// Human-readable observed-vs-expected detail.
+    pub message: String,
+}
+
+impl fmt::Display for ExpectationFailure {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: expectation '{}' failed for scenario '{}' under policy '{}': {}",
+            self.file, self.kind, self.scenario, self.policy, self.message
+        )
+    }
+}
+
+/// Check one predicate against a result. `deadline_by_lane` is the
+/// goodput yardstick (per-quality hard deadlines from the `Config`).
+/// Returns the observed-vs-expected message on violation.
+pub fn check_expectation(
+    e: &Expectation,
+    r: &SimResult,
+    deadline_by_lane: [f64; 3],
+) -> Result<(), String> {
+    match e {
+        Expectation::P99Max { seconds } => {
+            let p99 = r.summary().p99;
+            if p99 <= *seconds {
+                Ok(())
+            } else {
+                Err(format!("p99 {p99} s exceeds limit {seconds} s"))
+            }
+        }
+        Expectation::GoodputMin { share } => {
+            let g = r.goodput(deadline_by_lane);
+            if g >= *share {
+                Ok(())
+            } else {
+                Err(format!("goodput {g} below minimum {share}"))
+            }
+        }
+        Expectation::ShedShareMax { share } => {
+            let s = r.shed_share();
+            if s <= *share {
+                Ok(())
+            } else {
+                Err(format!("shed share {s} exceeds limit {share}"))
+            }
+        }
+        Expectation::CompletedMin { count } => {
+            let n = r.completed.len() as u64;
+            if n >= *count {
+                Ok(())
+            } else {
+                Err(format!("{n} completions, expected at least {count}"))
+            }
+        }
+        Expectation::Conservation => {
+            if r.tail.copies_balanced() {
+                Ok(())
+            } else {
+                Err(format!(
+                    "copy ledger does not balance: enqueued {} vs terminal {}",
+                    r.tail.copies_enqueued,
+                    r.tail.wins
+                        + r.tail.losers_finished
+                        + r.tail.cancelled
+                        + r.tail.stale_dropped
+                        + r.tail.crash_tombstoned
+                        + r.tail.residual_copies
+                ))
+            }
+        }
+        Expectation::RecoveryBy { after, p99_max } => {
+            // Only completions *arriving* once the fault window should
+            // have cleared count — earlier arrivals are allowed to be
+            // slow; the contract is about the recovered steady state.
+            let window: Vec<f64> = r
+                .completed
+                .iter()
+                .filter(|c| c.arrived >= *after)
+                .map(|c| c.latency())
+                .collect();
+            if window.is_empty() {
+                return Err(format!(
+                    "no completions arrived after t = {after} s — \
+                     recovery cannot be demonstrated"
+                ));
+            }
+            let p99 = Summary::from(&window).p99;
+            if p99 <= *p99_max {
+                Ok(())
+            } else {
+                Err(format!(
+                    "post-{after} s arrivals have p99 {p99} s, limit {p99_max} s"
+                ))
+            }
+        }
+    }
+}
+
+/// Evaluate every expectation of `doc` that applies to `r`'s policy.
+/// `file` labels the source artifact in failure messages. Returns the
+/// violations (empty = contract satisfied or out of policy scope).
+pub fn evaluate_document(
+    doc: &ScenarioDocument,
+    file: &str,
+    r: &SimResult,
+    deadline_by_lane: [f64; 3],
+) -> Vec<ExpectationFailure> {
+    if !doc.applies_to(&r.policy_name) {
+        return Vec::new();
+    }
+    doc.expectations
+        .iter()
+        .filter_map(|e| {
+            check_expectation(e, r, deadline_by_lane)
+                .err()
+                .map(|message| ExpectationFailure {
+                    file: file.to_string(),
+                    scenario: r.scenario_name.clone(),
+                    policy: r.policy_name.clone(),
+                    kind: e.kind(),
+                    message,
+                })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{QualityClass, ScenarioConfig};
+    use crate::sim::policy::ShedReason;
+    use crate::sim::result::{CompletedRequest, ShedRecord, TailCounters};
+
+    /// Crafted result: completions with the given (arrived, finished)
+    /// pairs, no sheds, balanced ledger.
+    fn mk(pairs: &[(f64, f64)]) -> SimResult {
+        SimResult {
+            scenario_name: "crafted".into(),
+            policy_name: "la-imr".into(),
+            completed: pairs
+                .iter()
+                .enumerate()
+                .map(|(k, &(arrived, finished))| CompletedRequest {
+                    id: k as u64,
+                    arrived,
+                    finished,
+                    quality: QualityClass::Balanced,
+                    offloaded: false,
+                })
+                .collect(),
+            generated: pairs.len(),
+            unfinished: 0,
+            unfinished_post_warmup: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            peak_replicas: 1,
+            mean_replicas: 1.0,
+            crashes: 0,
+            events: 0,
+            shed: Vec::new(),
+            tail: TailCounters {
+                copies_enqueued: pairs.len() as u64,
+                wins: pairs.len() as u64,
+                ..Default::default()
+            },
+            fluid_batched: 0,
+            cache: Default::default(),
+        }
+    }
+
+    const LANES: [f64; 3] = [5.0, 5.0, 5.0];
+
+    #[test]
+    fn p99_max_passes_and_fails() {
+        let r = mk(&[(0.0, 1.0), (0.0, 2.0)]);
+        assert!(check_expectation(&Expectation::P99Max { seconds: 3.0 }, &r, LANES).is_ok());
+        let err =
+            check_expectation(&Expectation::P99Max { seconds: 1.5 }, &r, LANES).unwrap_err();
+        assert!(err.contains("exceeds limit 1.5"), "unclear: {err}");
+    }
+
+    #[test]
+    fn goodput_min_passes_and_fails() {
+        // Latencies 1 s and 9 s against a 5 s deadline: goodput 0.5.
+        let r = mk(&[(0.0, 1.0), (0.0, 9.0)]);
+        assert!(
+            check_expectation(&Expectation::GoodputMin { share: 0.5 }, &r, LANES).is_ok()
+        );
+        let err = check_expectation(&Expectation::GoodputMin { share: 0.9 }, &r, LANES)
+            .unwrap_err();
+        assert!(err.contains("goodput 0.5"), "unclear: {err}");
+    }
+
+    #[test]
+    fn shed_share_max_passes_and_fails() {
+        let mut r = mk(&[(0.0, 1.0), (0.0, 1.0), (0.0, 1.0)]);
+        r.generated = 4;
+        r.tail.shed = 1;
+        r.shed.push(ShedRecord {
+            id: 9,
+            at: 0.5,
+            quality: QualityClass::Balanced,
+            reason: ShedReason::DeadlineBreach,
+            predicted: 12.0,
+        });
+        // shed_share = 1/4.
+        assert!(
+            check_expectation(&Expectation::ShedShareMax { share: 0.25 }, &r, LANES).is_ok()
+        );
+        let err = check_expectation(&Expectation::ShedShareMax { share: 0.1 }, &r, LANES)
+            .unwrap_err();
+        assert!(err.contains("shed share 0.25"), "unclear: {err}");
+    }
+
+    #[test]
+    fn completed_min_passes_and_fails() {
+        let r = mk(&[(0.0, 1.0), (0.0, 1.0)]);
+        assert!(check_expectation(&Expectation::CompletedMin { count: 2 }, &r, LANES).is_ok());
+        let err = check_expectation(&Expectation::CompletedMin { count: 3 }, &r, LANES)
+            .unwrap_err();
+        assert!(err.contains("2 completions"), "unclear: {err}");
+    }
+
+    #[test]
+    fn conservation_passes_and_fails() {
+        let r = mk(&[(0.0, 1.0)]);
+        assert!(check_expectation(&Expectation::Conservation, &r, LANES).is_ok());
+        let mut bad = mk(&[(0.0, 1.0)]);
+        bad.tail.copies_enqueued += 1; // one copy vanished
+        let err = check_expectation(&Expectation::Conservation, &bad, LANES).unwrap_err();
+        assert!(err.contains("does not balance"), "unclear: {err}");
+    }
+
+    #[test]
+    fn recovery_by_passes_fails_and_flags_empty_window() {
+        // Slow before t=10, fast after — the recovery shape.
+        let r = mk(&[(5.0, 25.0), (12.0, 13.0), (14.0, 15.5)]);
+        let ok = Expectation::RecoveryBy {
+            after: 10.0,
+            p99_max: 2.0,
+        };
+        assert!(check_expectation(&ok, &r, LANES).is_ok());
+        // Tighten the bound below the post-recovery p99 (1.5 s): fails.
+        let tight = Expectation::RecoveryBy {
+            after: 10.0,
+            p99_max: 1.0,
+        };
+        let err = check_expectation(&tight, &r, LANES).unwrap_err();
+        assert!(err.contains("post-10"), "unclear: {err}");
+        // Nothing arrives after t=100: explicit failure, not a vacuous pass.
+        let empty = Expectation::RecoveryBy {
+            after: 100.0,
+            p99_max: 60.0,
+        };
+        let err = check_expectation(&empty, &r, LANES).unwrap_err();
+        assert!(err.contains("no completions arrived"), "unclear: {err}");
+    }
+
+    #[test]
+    fn document_evaluation_scopes_and_names_the_file() {
+        let mut doc = ScenarioDocument::new(ScenarioConfig::poisson(4.0, 7));
+        doc.expectations = vec![
+            Expectation::Conservation,
+            Expectation::CompletedMin { count: 100 },
+        ];
+        let r = mk(&[(0.0, 1.0)]); // policy "la-imr", 1 completion
+
+        // In scope: the completed-min predicate fails and the failure
+        // names file + predicate + scenario + policy.
+        let fails = evaluate_document(&doc, "01-poisson.json", &r, LANES);
+        assert_eq!(fails.len(), 1);
+        assert_eq!(fails[0].kind, "completed-min");
+        let line = fails[0].to_string();
+        assert!(
+            line.contains("01-poisson.json")
+                && line.contains("completed-min")
+                && line.contains("la-imr"),
+            "unclear failure line: {line}"
+        );
+
+        // Out of policy scope: no failures at all.
+        doc.policies = vec!["static".into()];
+        assert!(evaluate_document(&doc, "01-poisson.json", &r, LANES).is_empty());
+    }
+}

@@ -12,11 +12,17 @@
 //! * [`components`] — composable scenario pieces (cadences, faults);
 //! * [`engine`] — the policy-free event loop (dense-index hot path);
 //! * [`runner`] — the sharded multi-seed experiment runner with result
-//!   memoization (`SimCache`).
+//!   memoization (`SimCache`);
+//! * [`expect`] — evaluates a scenario document's declarative
+//!   expectations against a [`SimResult`] (ISSUE 8);
+//! * [`event_log`] — the opt-in replayable event-log emitter whose
+//!   header hashes (document ‖ seed ‖ policy) (ISSUE 8).
 
 pub mod components;
 mod engine;
+pub mod event_log;
 mod events;
+pub mod expect;
 pub mod policy;
 mod result;
 pub mod runner;
@@ -26,6 +32,8 @@ pub use components::{
     FaultInjector, NoFaults,
 };
 pub use engine::{Architecture, Simulation};
+pub use event_log::{render_event_log, replay_hash, verify_event_log};
+pub use expect::{check_expectation, evaluate_document, ExpectationFailure};
 pub use events::{Event, EventQueue, TimedEvent};
 pub use policy::{
     BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, HybridPolicy,

@@ -26,7 +26,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     percentile_sorted(&v, p)
 }
 
@@ -61,7 +61,7 @@ pub struct Summary {
 impl Summary {
     pub fn from(xs: &[f64]) -> Self {
         let mut v = xs.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         Self::from_sorted(&v)
     }
 
@@ -108,7 +108,7 @@ pub struct BoxStats {
 /// Tukey box stats over a latency series.
 pub fn box_stats(xs: &[f64]) -> BoxStats {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     box_stats_sorted(&v)
 }
 
@@ -218,10 +218,23 @@ mod tests {
     fn sorted_fast_paths_match_unsorted() {
         let xs = [4.0, 1.0, 3.0, 2.0, 9.0, 0.5];
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(f64::total_cmp);
         assert_eq!(Summary::from(&xs), Summary::from_sorted(&sorted));
         assert_eq!(box_stats(&xs), box_stats_sorted(&sorted));
         assert_eq!(Summary::from(&[]), Summary::from_sorted(&[]));
+    }
+
+    #[test]
+    fn nan_input_no_longer_panics() {
+        // Regression (ISSUE 8): these sorts used partial_cmp(..).unwrap(),
+        // which panicked the moment a backend produced a NaN timing.
+        // total_cmp orders NaN after every number, so the finite
+        // percentiles stay meaningful.
+        let xs = [3.0, f64::NAN, 1.0];
+        let _ = Summary::from(&xs);
+        let _ = box_stats(&xs);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert!((percentile(&xs, 50.0) - 3.0).abs() < 1e-12);
     }
 
     #[test]

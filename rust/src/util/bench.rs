@@ -75,7 +75,7 @@ pub fn bench<F: FnMut()>(name: &str, samples: usize, mut f: F) -> Measurement {
         }
         per_op.push(t0.elapsed().as_nanos() as f64 / batch as f64);
     }
-    per_op.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    per_op.sort_by(f64::total_cmp);
     let mean = per_op.iter().sum::<f64>() / per_op.len() as f64;
     let idx = |q: f64| ((per_op.len() - 1) as f64 * q).round() as usize;
     let m = Measurement {

@@ -7,3 +7,4 @@
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod sha256;

@@ -199,7 +199,7 @@ fn materialise_times(scenario: &ScenarioConfig, rng: &mut Rng) -> Vec<SimTime> {
             }
         }
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(f64::total_cmp);
     times
 }
 
@@ -422,7 +422,7 @@ fn fill(
             });
             // (time, generation order) == the stable sort of the
             // materialised member list.
-            due.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap().then(x.1.cmp(&y.1)));
+            due.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
             out.extend(due.iter().map(|d| d.0));
             *src_done && pending.is_empty()
         }

@@ -303,6 +303,10 @@ fn scenario_partial_override_and_rejections() {
             "strictly increasing",
         ),
         (r#"{"quality_mix": [0.5, -0.1, 0.6]}"#, "quality_mix"),
+        // ISSUE 8 satellite: an all-zero mix parses but has no derivable
+        // lane shares — rejected naming the knob, not silently defaulted
+        // downstream by `mix()`.
+        (r#"{"quality_mix": [0, 0, 0]}"#, "quality_mix"),
         (r#"{"initial_replicas": 2.9}"#, "initial_replicas"),
         // ISSUE 4 arrival shapes: out-of-range knobs must name the knob.
         (
@@ -383,6 +387,17 @@ fn trace_file_errors_name_the_offending_line() {
     // NaN/inf are data errors too, not silent NaN timestamps downstream.
     let err = parse_trace("0.5\nnan\n").unwrap_err().to_string();
     assert!(err.contains("line 2"), "unclear error: {err}");
+    // ISSUE 8 satellite: the parser used to seed its "previous
+    // timestamp" with 0.0, so the first real out-of-order pair was
+    // reported against a phantom t=0 instead of the actual values.
+    let err = parse_trace("# header\n2.0\n1.0\n").unwrap_err().to_string();
+    assert!(
+        err.contains("line 3") && err.contains("1 after 2"),
+        "first real pair must be named, not a phantom t=0: {err}"
+    );
+    // A trace whose first entry is large is fine — no phantom ordering
+    // check against an implicit 0.
+    assert_eq!(parse_trace("100.0\n101.5\n").unwrap(), vec![100.0, 101.5]);
 }
 
 #[test]

@@ -1,0 +1,162 @@
+//! End-to-end contract for the ISSUE 8 scenario-file subsystem: the
+//! committed `examples/scenarios/*.json` documents load through
+//! `ScenarioDocument::load_dir`, every shipped expectation holds when
+//! its scenario actually runs under its scoped policies, and the
+//! opt-in event log replays bit-for-bit (same document ‖ seed ‖ policy
+//! → same bytes, with the header hash binding the log to its inputs).
+
+use la_imr::config::{Config, ScenarioDocument};
+use la_imr::sim::{evaluate_document, event_log, Architecture, Policy, Simulation};
+use std::path::Path;
+
+/// Integration tests run with cwd = `rust/`, the same vantage point as
+/// `trace_from_file_loads_once_and_serialises_inline`.
+const SCENARIO_DIR: &str = "../examples/scenarios";
+
+fn load_all() -> Vec<(String, ScenarioDocument)> {
+    ScenarioDocument::load_dir(Path::new(SCENARIO_DIR)).expect("committed scenario dir must load")
+}
+
+#[test]
+fn committed_scenario_dir_loads_sorted_and_valid() {
+    let docs = load_all();
+    let files: Vec<&str> = docs.iter().map(|(f, _)| f.as_str()).collect();
+    // The 9-scenario catalog plus the drift / staleness / million-robot
+    // repro scenarios, in file-name order (load_dir's contract).
+    assert_eq!(
+        files,
+        [
+            "01-poisson.json",
+            "02-bursty.json",
+            "03-diurnal.json",
+            "04-mmpp.json",
+            "05-trace-sawtooth.json",
+            "06-bursty-crashes.json",
+            "07-bursty-rack-failure.json",
+            "08-bursty-partition.json",
+            "09-bursty-fail-slow.json",
+            "drift-failslow.json",
+            "million-robot-smoke.json",
+            "staleness-clean.json",
+            "staleness-partition.json",
+        ],
+        "committed scenario set drifted"
+    );
+    let mut names = std::collections::HashSet::new();
+    for (file, doc) in &docs {
+        doc.validate().unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert!(
+            names.insert(doc.name().to_string()),
+            "{file}: duplicate scenario name '{}'",
+            doc.name()
+        );
+        // Every committed file ships a self-checking contract (at least
+        // the conservation law), not just knobs.
+        assert!(!doc.expectations.is_empty(), "{file}: no expectations");
+        // Round trip through the canonical form is lossless and keeps
+        // the content hash (the replay fingerprint's foundation) fixed.
+        let back = ScenarioDocument::from_json_str(&doc.to_json_string())
+            .unwrap_or_else(|e| panic!("{file}: re-parse failed: {e}"));
+        assert_eq!(&back, doc, "{file}: canonical round trip drifted");
+        assert_eq!(back.content_hash(), doc.content_hash(), "{file}: hash drifted");
+    }
+}
+
+#[test]
+fn load_dir_rejects_missing_and_empty_dirs() {
+    let err = ScenarioDocument::load_dir(Path::new("no/such/dir"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no/such/dir"), "unclear error: {err}");
+
+    let empty = Path::new("target/empty-scenario-dir");
+    std::fs::create_dir_all(empty).unwrap();
+    let err = ScenarioDocument::load_dir(empty).unwrap_err().to_string();
+    assert!(
+        err.contains("no *.json"),
+        "empty dir must be an explicit error: {err}"
+    );
+}
+
+/// Every shipped expectation holds on a real run: this is the
+/// self-checking layer the PR title promises — a red line here names
+/// the file and the predicate that broke.
+#[test]
+fn shipped_expectations_hold_when_scenarios_run() {
+    let cfg = Config::default();
+    let yardstick = cfg.deadline_by_lane();
+    let mut checked = 0usize;
+    for (file, doc) in &load_all() {
+        let policies: Vec<Policy> = if doc.policies.is_empty() {
+            Policy::ALL.to_vec()
+        } else {
+            doc.policies
+                .iter()
+                .map(|p| Policy::from_name(p).unwrap_or_else(|| panic!("{file}: bad policy {p}")))
+                .collect()
+        };
+        for policy in policies {
+            let r = Simulation::new(&cfg, &doc.scenario, policy, Architecture::Microservice).run();
+            assert_eq!(r.scenario_name, doc.name(), "{file}: name mismatch");
+            let failures = evaluate_document(doc, file, &r, yardstick);
+            checked += doc.expectations.len();
+            assert!(
+                failures.is_empty(),
+                "shipped expectations violated:\n{}",
+                failures
+                    .iter()
+                    .map(|f| format!("  {f}"))
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            );
+        }
+    }
+    assert!(checked >= 13, "suspiciously few expectations ran: {checked}");
+}
+
+/// The replay contract end to end: run → emit log → the header hash is
+/// recomputable from (document, seed, policy) alone → an independent
+/// re-run reproduces the log byte for byte.
+#[test]
+fn event_log_replays_bit_for_bit() {
+    let docs = load_all();
+    let (file, doc) = docs
+        .iter()
+        .find(|(f, _)| f == "01-poisson.json")
+        .expect("catalog head scenario present");
+    let cfg = Config::default();
+
+    let run =
+        || Simulation::new(&cfg, &doc.scenario, Policy::LaImr, Architecture::Microservice).run();
+    let r1 = run();
+    let log1 = event_log::render_event_log(doc, &r1.policy_name, &r1);
+
+    // The header binds the log to its inputs, and anyone holding the
+    // scenario file can recompute the fingerprint without running.
+    let want = event_log::replay_hash(&doc.to_json_string(), doc.scenario.seed, "la-imr");
+    assert_eq!(
+        event_log::header_hash(&log1),
+        Some(want.as_str()),
+        "{file}: header hash is not the documented function of the inputs"
+    );
+    event_log::verify_event_log(&log1, doc, "la-imr").unwrap();
+    let counts = format!("# completed: {} shed: {}", r1.completed.len(), r1.shed.len());
+    assert!(
+        log1.lines().any(|l| l == counts),
+        "log header miscounts events"
+    );
+    assert!(!r1.completed.is_empty(), "{file}: a run with no events proves nothing");
+
+    // Replay: a fresh simulation from the same document is the same log,
+    // byte for byte (timestamps are raw IEEE-754 bits, so this is also
+    // bit-for-bit).
+    let r2 = run();
+    let log2 = event_log::render_event_log(doc, &r2.policy_name, &r2);
+    assert_eq!(log1, log2, "{file}: replay diverged");
+
+    // The binding is real: a different seed or policy refuses the log.
+    let mut other = doc.clone();
+    other.scenario.seed += 1;
+    assert!(event_log::verify_event_log(&log1, &other, "la-imr").is_err());
+    assert!(event_log::verify_event_log(&log1, doc, "static").is_err());
+}
