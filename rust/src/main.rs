@@ -6,15 +6,21 @@
 //!   calibrate  — fit (α, β, γ) from simulated measurements (Fig 2)
 //!   plan       — capacity planning (Eq. 23) for a traffic mix
 //!   repro      — regenerate a paper table/figure (or `all`)
+//!   sweep      — cross-process experiment fabric (coordinator/worker)
+//!
+//! Every subcommand declares the flags it accepts and rejects leftovers
+//! by name (ISSUE 9) — `--thread 8` errors instead of silently running
+//! single-threaded.
 
 use la_imr::config::{Config, QualityClass, ScenarioConfig, ScenarioDocument};
 use la_imr::planner::{plan_capacity, TaskClass};
 use la_imr::report;
 use la_imr::sim::{
-    evaluate_document, event_log, Architecture, Policy, Runner, Simulation,
+    evaluate_document, event_log, fabric, Architecture, Policy, Runner, Simulation,
 };
 use la_imr::util::cli::Args;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 const USAGE: &str = "\
 laimr — LA-IMR: latency-aware predictive in-memory routing & proactive autoscaling
@@ -61,6 +67,30 @@ COMMANDS:
                                                   staleness: replication lag ×
                                                   partition — metric-plane
                                                   degradation ladder)
+  sweep      [--dir DIR] [--policies P1,P2|all]   cross-process experiment
+             [--seeds S1,S2,...] [--workers N]    fabric: plan the scenarios ×
+             [--timeout-s S] [--seed K]           seeds × policies grid, fan
+             [--arch microservice|monolithic]     cells to `sweep --worker`
+                                                  child processes over
+                                                  line-delimited JSON, merge
+                                                  per-cell results into one
+                                                  table. Cells are keyed by
+                                                  SHA-256 over canonical
+                                                  content (stable across
+                                                  machines and binaries —
+                                                  never DefaultHasher);
+                                                  a crashed/stalled worker
+                                                  fails only its cell and is
+                                                  respawned. --dir: scenario
+                                                  documents (default: embedded
+                                                  catalog re-seeded with
+                                                  --seed); --timeout-s:
+                                                  per-cell timeout (default
+                                                  120)
+             --worker                             worker mode (internal):
+                                                  config then cell frames on
+                                                  stdin, one result frame per
+                                                  line on stdout
 ";
 
 fn main() {
@@ -85,21 +115,38 @@ fn run() -> anyhow::Result<()> {
         return Ok(());
     };
 
-    // Sweep worker count for runner-backed commands (0 = auto).
+    // Sweep worker count for runner-backed commands (0 = auto). A bad
+    // LAIMR_THREADS is an error here, not a silent fallback (ISSUE 9).
     let runner = match args.get_u64("threads", 0).map_err(anyhow::Error::msg)? {
-        0 => Runner::new(),
+        0 => Runner::try_new().map_err(anyhow::Error::msg)?,
         n => Runner::with_threads(n as usize),
     };
 
     match cmd {
-        "serve" => serve(
-            &cfg,
-            &artifacts,
-            args.get_usize("robots", 5).map_err(anyhow::Error::msg)?,
-            args.get_f64("fps", 0.5).map_err(anyhow::Error::msg)?,
-            args.get_f64("duration", 20.0).map_err(anyhow::Error::msg)?,
-        ),
+        "serve" => {
+            args.reject_unknown(&["robots", "fps", "duration"])
+                .map_err(anyhow::Error::msg)?;
+            serve(
+                &cfg,
+                &artifacts,
+                args.get_usize("robots", 5).map_err(anyhow::Error::msg)?,
+                args.get_f64("fps", 0.5).map_err(anyhow::Error::msg)?,
+                args.get_f64("duration", 20.0).map_err(anyhow::Error::msg)?,
+            )
+        }
         "simulate" => {
+            args.reject_unknown(&[
+                "lambda",
+                "policy",
+                "bursty",
+                "duration",
+                "replicas",
+                "seed",
+                "mtbf",
+                "scenario-file",
+                "event-log",
+            ])
+            .map_err(anyhow::Error::msg)?;
             let lambda = args.get_f64("lambda", 4.0).map_err(anyhow::Error::msg)?;
             let policy = match Policy::from_name(args.get_str("policy", "la-imr")) {
                 Some(p) => p,
@@ -211,10 +258,13 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "calibrate" => {
+            args.reject_unknown(&[]).map_err(anyhow::Error::msg)?;
             println!("{}", report::fig2(&cfg, &runner));
             Ok(())
         }
         "plan" => {
+            args.reject_unknown(&["lambda", "slo"])
+                .map_err(anyhow::Error::msg)?;
             let lambda = args.get_f64("lambda", 4.0).map_err(anyhow::Error::msg)?;
             let (m, _) = cfg.model_by_name("yolov5m").expect("yolov5m in catalogue");
             let tau = match args.get("slo") {
@@ -254,6 +304,7 @@ fn run() -> anyhow::Result<()> {
             Ok(())
         }
         "repro" => {
+            args.reject_unknown(&["dir"]).map_err(anyhow::Error::msg)?;
             let id = args
                 .positional()
                 .get(1)
@@ -296,6 +347,89 @@ fn run() -> anyhow::Result<()> {
                 }
             } else {
                 print_one(id)?;
+            }
+            Ok(())
+        }
+        "sweep" => {
+            args.reject_unknown(&[
+                "worker",
+                "chaos",
+                "dir",
+                "policies",
+                "seeds",
+                "seed",
+                "workers",
+                "timeout-s",
+                "arch",
+            ])
+            .map_err(anyhow::Error::msg)?;
+            // Worker mode: config then cell frames on stdin, one result
+            // frame per line on stdout. `--chaos MODE:SCENARIO` is the
+            // test-only fault hook (see tests/fabric.rs).
+            if args.get_bool("worker", false).map_err(anyhow::Error::msg)? {
+                let chaos = args.get("chaos").map(fabric::parse_chaos).transpose()?;
+                return fabric::run_worker(
+                    std::io::stdin().lock(),
+                    std::io::stdout().lock(),
+                    chaos,
+                );
+            }
+            // Coordinator: plan the grid, fan cells to workers, merge.
+            let seed = args.get_u64("seed", 42).map_err(anyhow::Error::msg)?;
+            let scenarios: Vec<ScenarioConfig> = match args.get("dir") {
+                Some(dir) => ScenarioDocument::load_dir(Path::new(dir))?
+                    .into_iter()
+                    .map(|(_, doc)| doc.scenario)
+                    .collect(),
+                None => report::scenario_catalog(seed),
+            };
+            let policies: Vec<Policy> = match args.get_str("policies", "all") {
+                "all" => Policy::ALL.to_vec(),
+                csv => csv
+                    .split(',')
+                    .map(|p| {
+                        Policy::from_name(p.trim()).ok_or_else(|| {
+                            anyhow::anyhow!(
+                                "--policies: unknown policy '{}' (la-imr|baseline|static|\
+                                 hedged|deadline-shed|hybrid|all)",
+                                p.trim()
+                            )
+                        })
+                    })
+                    .collect::<Result<_, _>>()?,
+            };
+            let seeds: Vec<u64> = match args.get("seeds") {
+                None => Vec::new(),
+                Some(csv) => csv
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<u64>().map_err(|_| {
+                            anyhow::anyhow!("--seeds: expected an integer, got '{}'", s.trim())
+                        })
+                    })
+                    .collect::<Result<_, _>>()?,
+            };
+            let mut cells = fabric::plan_cells(&scenarios, &policies, &seeds);
+            if let Some(a) = args.get("arch") {
+                let arch = Architecture::from_name(a).ok_or_else(|| {
+                    anyhow::anyhow!("--arch: expected microservice|monolithic, got '{a}'")
+                })?;
+                for c in &mut cells {
+                    c.arch = arch;
+                }
+            }
+            let workers = args.get_usize("workers", 2).map_err(anyhow::Error::msg)?;
+            let timeout = args.get_f64("timeout-s", 120.0).map_err(anyhow::Error::msg)?;
+            if !timeout.is_finite() || timeout <= 0.0 {
+                anyhow::bail!("--timeout-s: expected a positive number of seconds");
+            }
+            let opts = fabric::FabricOptions::local(workers)?
+                .with_timeout(Duration::from_secs_f64(timeout));
+            let outcomes = fabric::Fabric::new(opts).run(&cfg, &cells);
+            print!("{}", report::fabric_sweep_report(&cfg, &cells, &outcomes));
+            let failed = outcomes.iter().filter(|o| o.is_err()).count();
+            if failed > 0 {
+                anyhow::bail!("{failed} of {} cells failed", cells.len());
             }
             Ok(())
         }

@@ -1,0 +1,136 @@
+//! Fabric sweep ingest (ISSUE 9): merge per-cell outcomes from the
+//! cross-process fabric into the same aligned text tables the
+//! single-process repro sweeps print — grouped (scenario × policy),
+//! averaged over seeds, with every failed cell listed by name (a
+//! partial table is always *visibly* partial, never silent).
+
+use crate::config::Config;
+use crate::report::render_table;
+use crate::sim::runner::Cell;
+use crate::sim::{FabricError, SimResult};
+use std::collections::BTreeMap;
+
+/// Render the merged sweep table plus a named-failure trailer.
+/// `outcomes` must be index-aligned with `cells` (the fabric's output
+/// contract).
+pub fn fabric_sweep_report(
+    cfg: &Config,
+    cells: &[Cell],
+    outcomes: &[Result<SimResult, FabricError>],
+) -> String {
+    assert_eq!(
+        cells.len(),
+        outcomes.len(),
+        "outcomes must align with cells"
+    );
+    let deadlines = cfg.deadline_by_lane();
+    let mut groups: BTreeMap<(String, String), Vec<&SimResult>> = BTreeMap::new();
+    let mut failures: Vec<&FabricError> = Vec::new();
+    for (cell, out) in cells.iter().zip(outcomes) {
+        match out {
+            Ok(r) => groups
+                .entry((cell.scenario.name.clone(), cell.policy.name().to_string()))
+                .or_default()
+                .push(r),
+            Err(e) => failures.push(e),
+        }
+    }
+    let rows: Vec<Vec<String>> = groups
+        .iter()
+        .map(|((scenario, policy), results)| {
+            let n = results.len() as f64;
+            let mean = results.iter().map(|r| r.summary().mean).sum::<f64>() / n;
+            let p99 = results.iter().map(|r| r.summary().p99).sum::<f64>() / n;
+            let goodput = results.iter().map(|r| r.goodput(deadlines)).sum::<f64>() / n;
+            let shed = results.iter().map(|r| r.shed_share()).sum::<f64>() / n;
+            let completed: usize = results.iter().map(|r| r.completed.len()).sum();
+            vec![
+                scenario.clone(),
+                policy.clone(),
+                format!("{}", results.len()),
+                format!("{completed}"),
+                format!("{mean:.3}"),
+                format!("{p99:.3}"),
+                format!("{:.1}", 100.0 * goodput),
+                format!("{:.1}", 100.0 * shed),
+            ]
+        })
+        .collect();
+    let mut out = String::new();
+    out.push_str("Fabric sweep — per (scenario × policy), averaged over seeds\n");
+    out.push_str(&render_table(
+        &[
+            "scenario", "policy", "cells", "completed", "mean[s]", "P99[s]", "goodput%",
+            "shed%",
+        ],
+        &rows,
+    ));
+    if failures.is_empty() {
+        out.push_str(&format!("\n{} cell(s), all completed\n", cells.len()));
+    } else {
+        out.push_str(&format!(
+            "\nFAILED cells ({} of {}):\n",
+            failures.len(),
+            cells.len()
+        ));
+        for f in &failures {
+            out.push_str(&format!("  {f}\n"));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ScenarioConfig;
+    use crate::sim::Policy;
+
+    #[test]
+    fn merges_results_and_names_failures() {
+        let cfg = Config::default();
+        let ok_cell = Cell::new(
+            ScenarioConfig::bursty(3.0, 1)
+                .with_duration(40.0, 5.0)
+                .with_replicas(2),
+            Policy::Static,
+        );
+        let bad_cell = Cell::new(ScenarioConfig::bursty(3.0, 2), Policy::LaImr);
+        let r = ok_cell.run(&cfg);
+        let cells = vec![ok_cell, bad_cell.clone()];
+        let outcomes = vec![
+            Ok(r),
+            Err(FabricError {
+                scenario: bad_cell.scenario.name.clone(),
+                policy: "la-imr".into(),
+                seed: 2,
+                cause: "worker exited mid-cell".into(),
+            }),
+        ];
+        let text = fabric_sweep_report(&cfg, &cells, &outcomes);
+        assert!(text.contains("static"), "missing policy row: {text}");
+        assert!(
+            text.contains("FAILED cells (1 of 2)"),
+            "failures not counted: {text}"
+        );
+        assert!(
+            text.contains("worker exited mid-cell"),
+            "failure cause not listed: {text}"
+        );
+        assert!(text.contains("seed=2"), "offender not named: {text}");
+    }
+
+    #[test]
+    fn all_completed_trailer() {
+        let cfg = Config::default();
+        let cell = Cell::new(
+            ScenarioConfig::bursty(3.0, 1)
+                .with_duration(40.0, 5.0)
+                .with_replicas(2),
+            Policy::Baseline,
+        );
+        let r = cell.run(&cfg);
+        let text = fabric_sweep_report(&cfg, std::slice::from_ref(&cell), &[Ok(r)]);
+        assert!(text.contains("all completed"), "{text}");
+    }
+}

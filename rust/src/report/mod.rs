@@ -19,7 +19,9 @@
 //! memo (`sim::SimCache`) computes each distinct cell once per session.
 
 mod experiments;
+mod fabric;
 pub use experiments::*;
+pub use fabric::fabric_sweep_report;
 
 /// Render a simple aligned text table.
 pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {

@@ -110,6 +110,24 @@ pub enum Architecture {
     Monolithic,
 }
 
+impl Architecture {
+    /// Stable wire/key tag (fabric protocol + SHA-256 content keys).
+    pub fn name(self) -> &'static str {
+        match self {
+            Architecture::Microservice => "microservice",
+            Architecture::Monolithic => "monolithic",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "microservice" => Some(Architecture::Microservice),
+            "monolithic" => Some(Architecture::Monolithic),
+            _ => None,
+        }
+    }
+}
+
 /// Lognormal service-noise σ (log-space). Calibrated so the idle-load
 /// latency spread matches Table IV's small standard errors.
 const SERVICE_SIGMA: f64 = 0.05;

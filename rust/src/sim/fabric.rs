@@ -1,0 +1,1118 @@
+//! Cross-process experiment fabric (ISSUE 9): plan → fan out → merge
+//! for sweeps too big for one process.
+//!
+//! The single-process sharded [`Runner`](crate::sim::Runner) tops out at
+//! one machine's cores *and* one address space; the 10k-cell sensitivity
+//! grids the ROADMAP names (hedge budget × deadline × drift half-life)
+//! need neither shared memory nor shared anything — a cell is a pure
+//! function of `(config, scenario, policy, arch)`. The fabric exploits
+//! exactly that purity:
+//!
+//! * **Plan** — [`plan_cells`] builds the variants × scenarios × seeds
+//!   grid (AgentLab-style cell planning).
+//! * **Fan out** — [`Fabric::run`] spawns `laimr sweep --worker` child
+//!   processes and streams cells to them over a line-delimited JSON
+//!   protocol (one frame per line; floats travel as raw IEEE-754 bit
+//!   patterns, the event-log convention, so a result re-materialises
+//!   bit-identically on the coordinator).
+//! * **Merge** — per-cell outcomes come back in input order;
+//!   `report::fabric_sweep_report` folds them into analysis tables.
+//!
+//! Robustness contract: a worker that crashes, emits garbage, truncates
+//! a frame, or stalls past the per-cell timeout fails *that cell* with a
+//! named error and is respawned; completed cells are never discarded and
+//! the coordinator never hangs. An engine panic inside a worker is
+//! caught per cell ([`runner::run_cell_caught`]) and comes back as a
+//! named error frame without killing the worker at all.
+//!
+//! Key stability: cross-process memoization must NOT use
+//! [`Cell::cache_key`] — its `DefaultHasher` output is unspecified
+//! across binaries (see `runner.rs`). The fabric keys every cell with
+//! [`content_key`]: SHA-256 over the canonical config JSON, canonical
+//! scenario JSON, policy name, and architecture name, 0xFF-delimited
+//! (the same convention as `event_log::replay_hash`). Equal keys mean
+//! bit-identical results on any machine, any binary, forever.
+
+use crate::config::{Config, QualityClass, ScenarioConfig};
+use crate::sim::policy::ShedReason;
+use crate::sim::result::{CompletedRequest, ShedRecord, TailCounters};
+use crate::sim::runner::{self, Cell};
+use crate::sim::{Architecture, Policy, SimResult};
+use crate::util::json::{self, Value};
+use crate::util::sha256::{hex, Sha256};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc;
+use std::sync::Mutex;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Content keys
+// ---------------------------------------------------------------------------
+
+/// Cross-process memo key: SHA-256 over canonical content, 0xFF-delimited.
+/// Unlike `Cell::cache_key` (DefaultHasher — unspecified across
+/// binaries), this key may be persisted, compared across machines, and
+/// used to dedup cells between coordinator and workers.
+pub fn content_key(cfg: &Config, cell: &Cell) -> String {
+    let mut h = Sha256::new();
+    h.update(cfg.to_json_string().as_bytes());
+    h.update(&[0xFF]);
+    h.update(cell.scenario.to_json_string().as_bytes());
+    h.update(&[0xFF]);
+    h.update(cell.policy.name().as_bytes());
+    h.update(&[0xFF]);
+    h.update(cell.arch.name().as_bytes());
+    hex(&h.finish())
+}
+
+// ---------------------------------------------------------------------------
+// Planning
+// ---------------------------------------------------------------------------
+
+/// Plan the variants × scenarios × seeds grid: every scenario re-seeded
+/// with every seed, crossed with every policy. Scenario-major, then
+/// seed, then policy — the same nesting the report sweeps use. An empty
+/// seed list keeps each scenario's own seed.
+pub fn plan_cells(
+    scenarios: &[ScenarioConfig],
+    policies: &[Policy],
+    seeds: &[u64],
+) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for s in scenarios {
+        let seeds: Vec<u64> = if seeds.is_empty() {
+            vec![s.seed]
+        } else {
+            seeds.to_vec()
+        };
+        for seed in seeds {
+            for &p in policies {
+                cells.push(Cell::new(s.clone().with_seed(seed), p));
+            }
+        }
+    }
+    cells
+}
+
+// ---------------------------------------------------------------------------
+// Bit-exact SimResult serde
+// ---------------------------------------------------------------------------
+//
+// Floats travel as raw IEEE-754 bit patterns ("{:016x}"), the event-log
+// convention: byte-identical frames mean bit-identical results and no
+// decimal-formatting subtlety can smuggle a difference through (it also
+// round-trips NaN/inf exactly). u64 counters that may exceed 2^53 ride
+// as decimal strings, same as scenario seeds.
+
+fn f64_to_value(x: f64) -> Value {
+    Value::Str(format!("{:016x}", x.to_bits()))
+}
+
+fn value_to_f64(v: Option<&Value>, field: &str) -> anyhow::Result<f64> {
+    let s = v
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("result frame: missing/non-string float '{field}'"))?;
+    let bits = u64::from_str_radix(s, 16)
+        .map_err(|_| anyhow::anyhow!("result frame: '{field}' is not a hex bit pattern: {s}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+fn u64_to_value(x: u64) -> Value {
+    if x < (1u64 << 53) {
+        Value::Num(x as f64)
+    } else {
+        Value::Str(x.to_string())
+    }
+}
+
+fn value_to_u64(v: Option<&Value>, field: &str) -> anyhow::Result<u64> {
+    let v = v.ok_or_else(|| anyhow::anyhow!("result frame: missing field '{field}'"))?;
+    match v {
+        Value::Num(_) => v
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("result frame: '{field}' is not a u64")),
+        Value::Str(s) => s
+            .parse()
+            .map_err(|_| anyhow::anyhow!("result frame: '{field}' is not a u64: {s}")),
+        _ => anyhow::bail!("result frame: '{field}' is not a u64"),
+    }
+}
+
+fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(
+        fields
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect::<BTreeMap<_, _>>(),
+    )
+}
+
+/// Serialise a result for the wire. Everything the report layer reads is
+/// carried; the lazy stats cache is rebuilt on the coordinator.
+pub fn result_to_json(r: &SimResult) -> Value {
+    let completed: Vec<Value> = r
+        .completed
+        .iter()
+        .map(|c| {
+            obj(vec![
+                ("id", u64_to_value(c.id)),
+                ("arrived", f64_to_value(c.arrived)),
+                ("finished", f64_to_value(c.finished)),
+                ("quality", Value::Str(c.quality.name().to_string())),
+                ("offloaded", Value::Bool(c.offloaded)),
+            ])
+        })
+        .collect();
+    let shed: Vec<Value> = r
+        .shed
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("id", u64_to_value(s.id)),
+                ("at", f64_to_value(s.at)),
+                ("quality", Value::Str(s.quality.name().to_string())),
+                ("reason", Value::Str(s.reason.name().to_string())),
+                ("predicted", f64_to_value(s.predicted)),
+            ])
+        })
+        .collect();
+    let t = &r.tail;
+    let tail = obj(vec![
+        ("copies_enqueued", u64_to_value(t.copies_enqueued)),
+        ("hedges_launched", u64_to_value(t.hedges_launched)),
+        ("shed", u64_to_value(t.shed)),
+        ("wins", u64_to_value(t.wins)),
+        ("losers_finished", u64_to_value(t.losers_finished)),
+        ("cancelled", u64_to_value(t.cancelled)),
+        ("stale_dropped", u64_to_value(t.stale_dropped)),
+        ("crash_tombstoned", u64_to_value(t.crash_tombstoned)),
+        ("residual_copies", u64_to_value(t.residual_copies)),
+        ("busy_time", f64_to_value(t.busy_time)),
+        ("wasted_time", f64_to_value(t.wasted_time)),
+    ]);
+    obj(vec![
+        ("scenario_name", Value::Str(r.scenario_name.clone())),
+        ("policy_name", Value::Str(r.policy_name.clone())),
+        ("completed", Value::Arr(completed)),
+        ("generated", u64_to_value(r.generated as u64)),
+        ("unfinished", u64_to_value(r.unfinished as u64)),
+        (
+            "unfinished_post_warmup",
+            u64_to_value(r.unfinished_post_warmup as u64),
+        ),
+        ("scale_outs", u64_to_value(r.scale_outs)),
+        ("scale_ins", u64_to_value(r.scale_ins)),
+        ("peak_replicas", u64_to_value(r.peak_replicas as u64)),
+        ("mean_replicas", f64_to_value(r.mean_replicas)),
+        ("crashes", u64_to_value(r.crashes)),
+        ("events", u64_to_value(r.events)),
+        ("shed", Value::Arr(shed)),
+        ("tail", tail),
+        ("fluid_batched", u64_to_value(r.fluid_batched)),
+    ])
+}
+
+/// Re-materialise a wire result, bit-identical to the worker's run.
+pub fn result_from_json(v: &Value) -> anyhow::Result<SimResult> {
+    let get = |k: &str| v.get(k);
+    let str_field = |k: &str| -> anyhow::Result<String> {
+        get(k)
+            .and_then(|x| x.as_str())
+            .map(str::to_string)
+            .ok_or_else(|| anyhow::anyhow!("result frame: missing/non-string '{k}'"))
+    };
+    let quality = |v: &Value, ctx: &str| -> anyhow::Result<QualityClass> {
+        v.get("quality")
+            .and_then(|q| q.as_str())
+            .and_then(QualityClass::from_name)
+            .ok_or_else(|| anyhow::anyhow!("result frame: bad quality in {ctx}"))
+    };
+    let completed = get("completed")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("result frame: missing 'completed' array"))?
+        .iter()
+        .map(|c| -> anyhow::Result<CompletedRequest> {
+            Ok(CompletedRequest {
+                id: value_to_u64(c.get("id"), "completed.id")?,
+                arrived: value_to_f64(c.get("arrived"), "completed.arrived")?,
+                finished: value_to_f64(c.get("finished"), "completed.finished")?,
+                quality: quality(c, "completed")?,
+                offloaded: c
+                    .get("offloaded")
+                    .and_then(|b| b.as_bool())
+                    .ok_or_else(|| anyhow::anyhow!("result frame: bad 'offloaded'"))?,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let shed = get("shed")
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("result frame: missing 'shed' array"))?
+        .iter()
+        .map(|s| -> anyhow::Result<ShedRecord> {
+            let reason = s
+                .get("reason")
+                .and_then(|r| r.as_str())
+                .and_then(ShedReason::from_name)
+                .ok_or_else(|| anyhow::anyhow!("result frame: bad shed reason"))?;
+            Ok(ShedRecord {
+                id: value_to_u64(s.get("id"), "shed.id")?,
+                at: value_to_f64(s.get("at"), "shed.at")?,
+                quality: quality(s, "shed")?,
+                reason,
+                predicted: value_to_f64(s.get("predicted"), "shed.predicted")?,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let t = get("tail").ok_or_else(|| anyhow::anyhow!("result frame: missing 'tail'"))?;
+    let tail = TailCounters {
+        copies_enqueued: value_to_u64(t.get("copies_enqueued"), "tail.copies_enqueued")?,
+        hedges_launched: value_to_u64(t.get("hedges_launched"), "tail.hedges_launched")?,
+        shed: value_to_u64(t.get("shed"), "tail.shed")?,
+        wins: value_to_u64(t.get("wins"), "tail.wins")?,
+        losers_finished: value_to_u64(t.get("losers_finished"), "tail.losers_finished")?,
+        cancelled: value_to_u64(t.get("cancelled"), "tail.cancelled")?,
+        stale_dropped: value_to_u64(t.get("stale_dropped"), "tail.stale_dropped")?,
+        crash_tombstoned: value_to_u64(t.get("crash_tombstoned"), "tail.crash_tombstoned")?,
+        residual_copies: value_to_u64(t.get("residual_copies"), "tail.residual_copies")?,
+        busy_time: value_to_f64(t.get("busy_time"), "tail.busy_time")?,
+        wasted_time: value_to_f64(t.get("wasted_time"), "tail.wasted_time")?,
+    };
+    Ok(SimResult {
+        scenario_name: str_field("scenario_name")?,
+        policy_name: str_field("policy_name")?,
+        completed,
+        generated: value_to_u64(get("generated"), "generated")? as usize,
+        unfinished: value_to_u64(get("unfinished"), "unfinished")? as usize,
+        unfinished_post_warmup: value_to_u64(
+            get("unfinished_post_warmup"),
+            "unfinished_post_warmup",
+        )? as usize,
+        scale_outs: value_to_u64(get("scale_outs"), "scale_outs")?,
+        scale_ins: value_to_u64(get("scale_ins"), "scale_ins")?,
+        peak_replicas: value_to_u64(get("peak_replicas"), "peak_replicas")? as u32,
+        mean_replicas: value_to_f64(get("mean_replicas"), "mean_replicas")?,
+        crashes: value_to_u64(get("crashes"), "crashes")?,
+        events: value_to_u64(get("events"), "events")?,
+        shed,
+        tail,
+        fluid_batched: value_to_u64(get("fluid_batched"), "fluid_batched")?,
+        cache: Default::default(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Wire frames
+// ---------------------------------------------------------------------------
+
+/// Request frame the coordinator writes (one line).
+fn request_frame(id: u64, key: &str, cell: &Cell) -> String {
+    json::to_compact_string(&obj(vec![
+        ("id", u64_to_value(id)),
+        ("key", Value::Str(key.to_string())),
+        ("scenario", cell.scenario.to_json_value()),
+        ("policy", Value::Str(cell.policy.name().to_string())),
+        ("arch", Value::Str(cell.arch.name().to_string())),
+    ]))
+}
+
+fn parse_request(line: &str) -> anyhow::Result<(u64, String, Cell)> {
+    let v = json::parse(line).map_err(|e| anyhow::anyhow!("request frame: {e}"))?;
+    let id = value_to_u64(v.get("id"), "id")?;
+    let key = v
+        .get("key")
+        .and_then(|k| k.as_str())
+        .ok_or_else(|| anyhow::anyhow!("request frame: missing 'key'"))?
+        .to_string();
+    let scenario = ScenarioConfig::from_json_value(
+        v.get("scenario")
+            .ok_or_else(|| anyhow::anyhow!("request frame: missing 'scenario'"))?,
+    )?;
+    let policy = v
+        .get("policy")
+        .and_then(|p| p.as_str())
+        .and_then(Policy::from_name)
+        .ok_or_else(|| anyhow::anyhow!("request frame: missing/unknown 'policy'"))?;
+    let arch = v
+        .get("arch")
+        .and_then(|a| a.as_str())
+        .and_then(Architecture::from_name)
+        .ok_or_else(|| anyhow::anyhow!("request frame: missing/unknown 'arch'"))?;
+    Ok((id, key, Cell::new(scenario, policy).with_arch(arch)))
+}
+
+/// Response frame a worker writes (one line): result or named error.
+fn response_frame(id: u64, key: &str, outcome: &Result<SimResult, String>) -> String {
+    let mut fields = vec![
+        ("id", u64_to_value(id)),
+        ("key", Value::Str(key.to_string())),
+    ];
+    match outcome {
+        Ok(r) => fields.push(("result", result_to_json(r))),
+        Err(e) => fields.push(("error", Value::Str(e.clone()))),
+    }
+    json::to_compact_string(&obj(fields))
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// Test-only fault injection for the protocol-robustness suite: make the
+/// worker misbehave when it receives a cell for the named scenario.
+/// Selected with the hidden `--chaos MODE:SCENARIO` worker flag; never
+/// set in production use.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ChaosMode {
+    /// `exit(3)` without responding — a crashed worker.
+    Crash,
+    /// Emit a non-JSON line instead of the response.
+    Garbage,
+    /// Emit a truncated frame (no trailing newline) and exit — a worker
+    /// that died mid-write.
+    Truncate,
+    /// Never respond — a stalled worker (exercises the per-cell timeout).
+    Stall,
+}
+
+/// Parse `MODE:SCENARIO` (e.g. `crash:bursty-3`).
+pub fn parse_chaos(spec: &str) -> anyhow::Result<(ChaosMode, String)> {
+    let (mode, scenario) = spec
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("--chaos: expected MODE:SCENARIO, got '{spec}'"))?;
+    let mode = match mode {
+        "crash" => ChaosMode::Crash,
+        "garbage" => ChaosMode::Garbage,
+        "truncate" => ChaosMode::Truncate,
+        "stall" => ChaosMode::Stall,
+        other => anyhow::bail!("--chaos: unknown mode '{other}' (crash|garbage|truncate|stall)"),
+    };
+    Ok((mode, scenario.to_string()))
+}
+
+/// Worker loop: first line in is the canonical config JSON, then one
+/// request frame per line; one response frame per line out, flushed per
+/// cell. An engine panic is caught per cell and answered as an error
+/// frame — the worker itself survives. Returns when stdin closes.
+pub fn run_worker<R: BufRead, W: Write>(
+    input: R,
+    mut output: W,
+    chaos: Option<(ChaosMode, String)>,
+) -> anyhow::Result<()> {
+    let mut lines = input.lines();
+    let Some(first) = lines.next() else {
+        return Ok(());
+    };
+    let cfg = Config::from_json_str(first?.trim())
+        .map_err(|e| anyhow::anyhow!("worker config frame: {e}"))?;
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let (id, key, cell) = match parse_request(&line) {
+            Ok(req) => req,
+            Err(e) => {
+                // Unparseable request: answer with id 0 so the
+                // coordinator sees a named protocol error, not silence.
+                writeln!(output, "{}", response_frame(0, "", &Err(e.to_string())))?;
+                output.flush()?;
+                continue;
+            }
+        };
+        if let Some((mode, scenario)) = &chaos {
+            if *scenario == cell.scenario.name {
+                match mode {
+                    ChaosMode::Crash => std::process::exit(3),
+                    ChaosMode::Garbage => {
+                        writeln!(output, "!! chaos: this line is not JSON")?;
+                        output.flush()?;
+                        continue;
+                    }
+                    ChaosMode::Truncate => {
+                        let frame = response_frame(id, &key, &Err("unused".into()));
+                        write!(output, "{}", &frame[..frame.len() / 2])?;
+                        output.flush()?;
+                        std::process::exit(0);
+                    }
+                    ChaosMode::Stall => loop {
+                        std::thread::sleep(Duration::from_secs(3600));
+                    },
+                }
+            }
+        }
+        let outcome = runner::run_cell_caught(&cell, &cfg).map_err(|f| f.to_string());
+        writeln!(output, "{}", response_frame(id, &key, &outcome))?;
+        output.flush()?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+/// One cell's failure at process scope: the offender's identity plus the
+/// named cause ("worker exited…", "timed out…", "worker replied…").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricError {
+    pub scenario: String,
+    pub policy: String,
+    pub seed: u64,
+    pub cause: String,
+}
+
+impl std::fmt::Display for FabricError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cell scenario={} policy={} seed={} failed: {}",
+            self.scenario, self.policy, self.seed, self.cause
+        )
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+/// Fabric configuration.
+#[derive(Debug, Clone)]
+pub struct FabricOptions {
+    /// Worker processes (≥ 1).
+    pub workers: usize,
+    /// Per-cell wall-clock timeout; a worker past it is killed and
+    /// respawned, failing only that cell.
+    pub timeout: Duration,
+    /// Respawn budget per worker slot; once exhausted the slot retires
+    /// (remaining cells drain to the other slots, or fail by name if
+    /// every slot retired — never a hang).
+    pub max_respawns: usize,
+    /// argv of the worker process (`[binary, "sweep", "--worker", …]`).
+    pub worker_cmd: Vec<String>,
+}
+
+impl FabricOptions {
+    /// Workers are `<current exe> sweep --worker`.
+    pub fn local(workers: usize) -> anyhow::Result<Self> {
+        let exe = std::env::current_exe()
+            .map_err(|e| anyhow::anyhow!("cannot locate own binary for workers: {e}"))?;
+        Ok(Self::with_command(
+            workers,
+            vec![
+                exe.to_string_lossy().into_owned(),
+                "sweep".into(),
+                "--worker".into(),
+            ],
+        ))
+    }
+
+    /// Explicit worker argv (tests point this at `CARGO_BIN_EXE_laimr`,
+    /// optionally with a `--chaos` spec appended).
+    pub fn with_command(workers: usize, worker_cmd: Vec<String>) -> Self {
+        FabricOptions {
+            workers: workers.max(1),
+            timeout: Duration::from_secs(120),
+            max_respawns: 32,
+            worker_cmd,
+        }
+    }
+
+    pub fn with_timeout(mut self, timeout: Duration) -> Self {
+        self.timeout = timeout;
+        self
+    }
+}
+
+/// A live worker process: piped stdin plus a reader thread that streams
+/// stdout lines into a channel (so the coordinator can wait with a
+/// timeout; the channel disconnects on worker exit).
+struct WorkerHandle {
+    child: Child,
+    stdin: ChildStdin,
+    rx: mpsc::Receiver<String>,
+}
+
+impl WorkerHandle {
+    fn spawn(cmd: &[String], cfg_line: &str) -> anyhow::Result<Self> {
+        anyhow::ensure!(!cmd.is_empty(), "fabric: empty worker command");
+        let mut child = Command::new(&cmd[0])
+            .args(&cmd[1..])
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .map_err(|e| anyhow::anyhow!("fabric: cannot spawn worker {:?}: {e}", cmd[0]))?;
+        let mut stdin = child.stdin.take().expect("piped stdin");
+        let stdout = child.stdout.take().expect("piped stdout");
+        let (tx, rx) = mpsc::channel();
+        std::thread::spawn(move || {
+            for line in BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => {
+                        if tx.send(l).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }
+            // Dropping tx disconnects the channel: worker EOF.
+        });
+        writeln!(stdin, "{cfg_line}")
+            .and_then(|()| stdin.flush())
+            .map_err(|e| anyhow::anyhow!("fabric: worker rejected config frame: {e}"))?;
+        Ok(WorkerHandle { child, stdin, rx })
+    }
+
+    /// Kill and reap. On a worker that already exited, `kill` is a
+    /// no-op and `wait` returns immediately — safe in both roles.
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// The coordinator: fans cells to worker processes, merges outcomes.
+#[derive(Debug)]
+pub struct Fabric {
+    opts: FabricOptions,
+}
+
+impl Fabric {
+    pub fn new(opts: FabricOptions) -> Self {
+        Fabric { opts }
+    }
+
+    /// Run every cell, returning per-cell outcomes in input order.
+    /// Duplicate cells (equal [`content_key`]) are dispatched once and
+    /// fanned back to every slot — the cross-process memo. Never hangs:
+    /// every cell ends in a result or a named [`FabricError`].
+    pub fn run(
+        &self,
+        cfg: &Config,
+        cells: &[Cell],
+    ) -> Vec<Result<SimResult, FabricError>> {
+        if cells.is_empty() {
+            return Vec::new();
+        }
+        let cfg_line = json::to_compact_string(
+            &json::parse(&cfg.to_json_string()).expect("canonical config JSON parses"),
+        );
+        let keys: Vec<String> = cells.iter().map(|c| content_key(cfg, c)).collect();
+        // Dedup: first index per key computes; repeats fan out after.
+        let mut first_for_key: HashMap<&str, usize> = HashMap::new();
+        let mut work: Vec<usize> = Vec::new();
+        for (i, k) in keys.iter().enumerate() {
+            if !first_for_key.contains_key(k.as_str()) {
+                first_for_key.insert(k, i);
+                work.push(i);
+            }
+        }
+        let slots: Mutex<Vec<Option<Result<SimResult, FabricError>>>> =
+            Mutex::new(vec![None; cells.len()]);
+        let queue: Mutex<std::collections::VecDeque<usize>> =
+            Mutex::new(work.iter().copied().collect());
+        let n_workers = self.opts.workers.min(work.len()).max(1);
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| {
+                    self.worker_slot(&cfg_line, cells, &keys, &queue, &slots)
+                });
+            }
+        });
+        let mut slots = slots.into_inner().expect("fabric slots poisoned");
+        // Fan computed outcomes out to duplicate cells; fail anything a
+        // retired fleet left behind (never silently absent).
+        for i in 0..cells.len() {
+            if slots[i].is_some() {
+                continue;
+            }
+            let rep = first_for_key[keys[i].as_str()];
+            let outcome = if rep != i {
+                slots[rep].clone()
+            } else {
+                None
+            };
+            slots[i] = Some(outcome.flatten_none(&cells[i]));
+        }
+        slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+    }
+
+    /// One coordinator thread driving one (respawnable) worker process:
+    /// pop a cell, send it, wait for its response with the per-cell
+    /// timeout. Any worker misbehaviour fails only the in-flight cell.
+    fn worker_slot(
+        &self,
+        cfg_line: &str,
+        cells: &[Cell],
+        keys: &[String],
+        queue: &Mutex<std::collections::VecDeque<usize>>,
+        slots: &Mutex<Vec<Option<Result<SimResult, FabricError>>>>,
+    ) {
+        let mut respawns_left = self.opts.max_respawns;
+        let mut worker: Option<WorkerHandle> = None;
+        loop {
+            let Some(i) = queue.lock().expect("fabric queue poisoned").pop_front() else {
+                break;
+            };
+            let cell = &cells[i];
+            // (Re)spawn on demand.
+            if worker.is_none() {
+                match WorkerHandle::spawn(&self.opts.worker_cmd, cfg_line) {
+                    Ok(w) => worker = Some(w),
+                    Err(e) => {
+                        store(slots, i, Err(fabric_error(cell, e.to_string())));
+                        // A slot that cannot spawn at all retires; the
+                        // queue drains to the other slots (or the
+                        // post-pass fails the leftovers by name).
+                        break;
+                    }
+                }
+            }
+            let w = worker.as_mut().expect("worker spawned");
+            let frame = request_frame(i as u64, &keys[i], cell);
+            if let Err(e) = writeln!(w.stdin, "{frame}").and_then(|()| w.stdin.flush()) {
+                store(
+                    slots,
+                    i,
+                    Err(fabric_error(cell, format!("worker exited (stdin: {e})"))),
+                );
+                worker.take().expect("live worker").kill();
+                respawns_left = match respawns_left.checked_sub(1) {
+                    Some(n) => n,
+                    None => break,
+                };
+                continue;
+            }
+            match w.rx.recv_timeout(self.opts.timeout) {
+                Ok(line) => {
+                    // ingest stores the outcome; `true` means protocol
+                    // desync (garbage / wrong id / bad result frame) —
+                    // the worker's state is unknown, so replace it.
+                    if self.ingest_response(cell, i, &keys[i], &line, slots) {
+                        worker.take().expect("live worker").kill();
+                        respawns_left = match respawns_left.checked_sub(1) {
+                            Some(n) => n,
+                            None => break,
+                        };
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    store(
+                        slots,
+                        i,
+                        Err(fabric_error(
+                            cell,
+                            format!(
+                                "timed out after {:.1}s (worker killed and respawned)",
+                                self.opts.timeout.as_secs_f64()
+                            ),
+                        )),
+                    );
+                    worker.take().expect("live worker").kill();
+                    respawns_left = match respawns_left.checked_sub(1) {
+                        Some(n) => n,
+                        None => break,
+                    };
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    store(
+                        slots,
+                        i,
+                        Err(fabric_error(
+                            cell,
+                            "worker exited mid-cell (stdout closed before responding)".into(),
+                        )),
+                    );
+                    worker.take().expect("live worker").kill();
+                    respawns_left = match respawns_left.checked_sub(1) {
+                        Some(n) => n,
+                        None => break,
+                    };
+                }
+            }
+        }
+        if let Some(w) = worker.take() {
+            w.kill();
+        }
+    }
+
+    /// Parse one response line for cell `i`, storing the outcome.
+    /// Returns `true` when the worker must be replaced (protocol
+    /// desync: garbage, wrong id, key mismatch, or an unparseable
+    /// result frame — its stream state is no longer trustworthy).
+    fn ingest_response(
+        &self,
+        cell: &Cell,
+        i: usize,
+        key: &str,
+        line: &str,
+        slots: &Mutex<Vec<Option<Result<SimResult, FabricError>>>>,
+    ) -> bool {
+        let v = match json::parse(line) {
+            Ok(v) => v,
+            Err(e) => {
+                store(
+                    slots,
+                    i,
+                    Err(fabric_error(
+                        cell,
+                        format!(
+                            "worker replied with garbage (not JSON: {e}); line: {:?}",
+                            truncate_for_log(line)
+                        ),
+                    )),
+                );
+                return true;
+            }
+        };
+        let id = v.get("id").and_then(|x| x.as_u64());
+        if id != Some(i as u64) {
+            store(
+                slots,
+                i,
+                Err(fabric_error(
+                    cell,
+                    format!("protocol desync: worker answered cell {id:?}, expected {i}"),
+                )),
+            );
+            return true;
+        }
+        if let Some(err) = v.get("error").and_then(|e| e.as_str()) {
+            // A named per-cell error (e.g. an engine panic the worker
+            // caught). The worker itself is healthy — no respawn.
+            store(slots, i, Err(fabric_error(cell, err.to_string())));
+            return false;
+        }
+        let frame_key = v.get("key").and_then(|k| k.as_str()).unwrap_or("");
+        if frame_key != key {
+            store(
+                slots,
+                i,
+                Err(fabric_error(
+                    cell,
+                    format!("content-key mismatch: worker echoed {frame_key}, expected {key}"),
+                )),
+            );
+            return true;
+        }
+        match v
+            .get("result")
+            .ok_or_else(|| anyhow::anyhow!("response frame: missing 'result'"))
+            .and_then(result_from_json)
+        {
+            Ok(r) => {
+                store(slots, i, Ok(r));
+                false
+            }
+            Err(e) => {
+                store(slots, i, Err(fabric_error(cell, e.to_string())));
+                true
+            }
+        }
+    }
+}
+
+fn fabric_error(cell: &Cell, cause: String) -> FabricError {
+    FabricError {
+        scenario: cell.scenario.name.clone(),
+        policy: cell.policy.name().to_string(),
+        seed: cell.scenario.seed,
+        cause,
+    }
+}
+
+fn store(
+    slots: &Mutex<Vec<Option<Result<SimResult, FabricError>>>>,
+    i: usize,
+    outcome: Result<SimResult, FabricError>,
+) {
+    slots.lock().expect("fabric slots poisoned")[i] = Some(outcome);
+}
+
+fn truncate_for_log(line: &str) -> String {
+    let mut s: String = line.chars().take(80).collect();
+    if s.len() < line.len() {
+        s.push('…');
+    }
+    s
+}
+
+/// `Option<Result<…>>` → `Result<…>`: a `None` left behind by a retired
+/// worker fleet becomes a named failure, never a silent gap.
+trait FlattenNone {
+    fn flatten_none(self, cell: &Cell) -> Result<SimResult, FabricError>;
+}
+
+impl FlattenNone for Option<Result<SimResult, FabricError>> {
+    fn flatten_none(self, cell: &Cell) -> Result<SimResult, FabricError> {
+        self.unwrap_or_else(|| {
+            Err(fabric_error(
+                cell,
+                "no worker available (respawn budget exhausted before this cell ran)".into(),
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_result() -> SimResult {
+        SimResult {
+            scenario_name: "wire-test".into(),
+            policy_name: "la-imr".into(),
+            completed: vec![
+                CompletedRequest {
+                    id: 3,
+                    arrived: 0.1 + 0.2, // deliberately non-representable sum
+                    finished: 1.0 / 3.0,
+                    quality: QualityClass::LowLatency,
+                    offloaded: true,
+                },
+                CompletedRequest {
+                    id: 1 << 60, // beyond 2^53: string-carried u64
+                    arrived: f64::MIN_POSITIVE,
+                    finished: 1e308,
+                    quality: QualityClass::Precise,
+                    offloaded: false,
+                },
+            ],
+            generated: 5,
+            unfinished: 1,
+            unfinished_post_warmup: 1,
+            scale_outs: 2,
+            scale_ins: 1,
+            peak_replicas: 4,
+            mean_replicas: 2.5000000000000004,
+            crashes: 1,
+            events: (1 << 53) + 1, // not exactly representable as f64
+            shed: vec![ShedRecord {
+                id: 9,
+                at: 2.5,
+                quality: QualityClass::Balanced,
+                reason: ShedReason::Unstable,
+                predicted: 0.30000000000000004,
+            }],
+            tail: TailCounters {
+                copies_enqueued: 7,
+                hedges_launched: 2,
+                shed: 1,
+                wins: 4,
+                losers_finished: 1,
+                cancelled: 1,
+                stale_dropped: 0,
+                crash_tombstoned: 1,
+                residual_copies: 0,
+                busy_time: 1.1,
+                wasted_time: 0.1 * 3.0,
+            },
+            fluid_batched: 0,
+            cache: Default::default(),
+        }
+    }
+
+    #[test]
+    fn result_serde_is_bit_exact() {
+        let r = sample_result();
+        let line = json::to_compact_string(&result_to_json(&r));
+        assert!(!line.contains('\n'), "frames are one line");
+        let back = result_from_json(&json::parse(&line).unwrap()).unwrap();
+        assert_eq!(back.scenario_name, r.scenario_name);
+        assert_eq!(back.policy_name, r.policy_name);
+        assert_eq!(back.completed.len(), r.completed.len());
+        for (a, b) in r.completed.iter().zip(&back.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrived.to_bits(), b.arrived.to_bits(), "bit-exact floats");
+            assert_eq!(a.finished.to_bits(), b.finished.to_bits());
+            assert_eq!(a.quality, b.quality);
+            assert_eq!(a.offloaded, b.offloaded);
+        }
+        assert_eq!(back.generated, r.generated);
+        assert_eq!(back.events, r.events, "u64 beyond 2^53 must survive");
+        assert_eq!(back.shed.len(), 1);
+        assert_eq!(back.shed[0].reason, ShedReason::Unstable);
+        assert_eq!(
+            back.shed[0].predicted.to_bits(),
+            r.shed[0].predicted.to_bits()
+        );
+        assert_eq!(back.tail, r.tail);
+        assert_eq!(
+            back.mean_replicas.to_bits(),
+            r.mean_replicas.to_bits()
+        );
+    }
+
+    #[test]
+    fn float_wire_form_handles_specials() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, -0.0, 0.0] {
+            let v = f64_to_value(x);
+            let back = value_to_f64(Some(&v), "x").unwrap();
+            assert_eq!(back.to_bits(), x.to_bits(), "{x} must round-trip by bits");
+        }
+    }
+
+    #[test]
+    fn content_key_is_sha256_over_canonical_content() {
+        let cfg = Config::default();
+        let cell = Cell::new(ScenarioConfig::bursty(3.0, 7), Policy::LaImr);
+        let key = content_key(&cfg, &cell);
+        assert_eq!(key.len(), 64, "SHA-256 hex digest");
+        // Recompute from first principles: the key is the in-tree
+        // SHA-256 over the 0xFF-delimited canonical fields — no
+        // DefaultHasher anywhere near it.
+        let mut h = Sha256::new();
+        h.update(cfg.to_json_string().as_bytes());
+        h.update(&[0xFF]);
+        h.update(cell.scenario.to_json_string().as_bytes());
+        h.update(&[0xFF]);
+        h.update(b"la-imr");
+        h.update(&[0xFF]);
+        h.update(b"microservice");
+        assert_eq!(key, hex(&h.finish()));
+        // Stable across calls, sensitive to every component.
+        assert_eq!(key, content_key(&cfg, &cell));
+        let mut other = cell.clone();
+        other.policy = Policy::Static;
+        assert_ne!(key, content_key(&cfg, &other), "policy must bind");
+        let mut other = cell.clone();
+        other.arch = Architecture::Monolithic;
+        assert_ne!(key, content_key(&cfg, &other), "arch must bind");
+        let mut other = cell.clone();
+        other.scenario.seed ^= 1;
+        assert_ne!(key, content_key(&cfg, &other), "seed must bind");
+        let mut cfg2 = cfg.clone();
+        cfg2.slo.gamma += 0.01;
+        assert_ne!(key, content_key(&cfg2, &cell), "config must bind");
+    }
+
+    #[test]
+    fn plan_cells_builds_the_full_grid() {
+        let scenarios = vec![
+            ScenarioConfig::bursty(3.0, 1),
+            ScenarioConfig::poisson(4.0, 1),
+        ];
+        let policies = [Policy::LaImr, Policy::Static, Policy::Hedged];
+        let seeds = [101, 102];
+        let cells = plan_cells(&scenarios, &policies, &seeds);
+        assert_eq!(cells.len(), 2 * 2 * 3);
+        // Scenario-major, then seed, then policy; seeds overridden.
+        assert_eq!(cells[0].scenario.seed, 101);
+        assert_eq!(cells[0].policy, Policy::LaImr);
+        assert_eq!(cells[2].policy, Policy::Hedged);
+        assert_eq!(cells[3].scenario.seed, 102);
+        assert_eq!(cells[6].scenario.name, cells[6 + 3].scenario.name);
+        // Empty seed list keeps each scenario's own seed.
+        let kept = plan_cells(&scenarios, &policies, &[]);
+        assert_eq!(kept.len(), 2 * 3);
+        assert_eq!(kept[0].scenario.seed, 1);
+    }
+
+    #[test]
+    fn request_frames_round_trip() {
+        let cell = Cell::new(
+            ScenarioConfig::bursty(3.0, 7).with_duration(60.0, 5.0),
+            Policy::DeadlineShed,
+        )
+        .with_arch(Architecture::Monolithic);
+        let cfg = Config::default();
+        let key = content_key(&cfg, &cell);
+        let line = request_frame(42, &key, &cell);
+        assert!(!line.contains('\n'));
+        let (id, key2, cell2) = parse_request(&line).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(key2, key);
+        assert_eq!(cell2.policy, Policy::DeadlineShed);
+        assert_eq!(cell2.arch, Architecture::Monolithic);
+        assert_eq!(cell2.scenario.seed, 7);
+        assert_eq!(cell2.scenario.name, cell.scenario.name);
+        // The re-materialised scenario is canonical-identical, so the
+        // worker-side content key matches the coordinator's.
+        assert_eq!(
+            cell.scenario.to_json_string(),
+            cell2.scenario.to_json_string()
+        );
+    }
+
+    #[test]
+    fn chaos_spec_parses() {
+        let (mode, s) = parse_chaos("crash:bursty-3").unwrap();
+        assert_eq!(mode, ChaosMode::Crash, "{s}");
+        assert_eq!(s, "bursty-3");
+        assert!(parse_chaos("explode").is_err());
+        assert!(parse_chaos("meltdown:x").is_err());
+    }
+
+    #[test]
+    fn worker_loop_runs_cells_in_memory() {
+        // The worker loop is pure stdin/stdout logic — drive it with
+        // in-memory buffers (no process spawn in unit tests).
+        let cfg = Config::default();
+        let cell = Cell::new(
+            ScenarioConfig::bursty(3.0, 11)
+                .with_duration(40.0, 5.0)
+                .with_replicas(2),
+            Policy::Static,
+        );
+        let key = content_key(&cfg, &cell);
+        let mut input = json::to_compact_string(
+            &json::parse(&cfg.to_json_string()).unwrap(),
+        );
+        input.push('\n');
+        input.push_str(&request_frame(0, &key, &cell));
+        input.push('\n');
+        let mut out: Vec<u8> = Vec::new();
+        run_worker(std::io::Cursor::new(input.into_bytes()), &mut out, None).unwrap();
+        let reply = String::from_utf8(out).unwrap();
+        let v = json::parse(reply.trim()).unwrap();
+        assert_eq!(v.get("id").and_then(|x| x.as_u64()), Some(0));
+        assert_eq!(v.get("key").and_then(|x| x.as_str()), Some(key.as_str()));
+        let r = result_from_json(v.get("result").unwrap()).unwrap();
+        // Bit-identical to running the cell in-process.
+        let local = cell.run(&cfg);
+        assert_eq!(r.latencies(), local.latencies());
+        assert_eq!(r.events, local.events);
+        assert_eq!(r.tail, local.tail);
+    }
+
+    #[test]
+    fn worker_answers_engine_panics_as_error_frames() {
+        // A poisoned cell (no Precise model + all-Precise mix) panics in
+        // the engine; the worker must answer a named error frame and
+        // stay alive for the next cell.
+        let mut cfg = Config::default();
+        cfg.models.retain(|m| m.quality != QualityClass::Precise);
+        let mut bad = ScenarioConfig::bursty(3.0, 6)
+            .with_duration(40.0, 5.0)
+            .with_replicas(2);
+        bad.name = "poisoned".into();
+        bad.quality_mix = [0.0, 0.0, 1.0];
+        let good = ScenarioConfig::bursty(3.0, 5)
+            .with_duration(40.0, 5.0)
+            .with_replicas(2);
+        let bad_cell = Cell::new(bad, Policy::Static);
+        let good_cell = Cell::new(good, Policy::Static);
+        let mut input = json::to_compact_string(
+            &json::parse(&cfg.to_json_string()).unwrap(),
+        );
+        input.push('\n');
+        input.push_str(&request_frame(0, &content_key(&cfg, &bad_cell), &bad_cell));
+        input.push('\n');
+        input.push_str(&request_frame(1, &content_key(&cfg, &good_cell), &good_cell));
+        input.push('\n');
+        let mut out: Vec<u8> = Vec::new();
+        run_worker(std::io::Cursor::new(input.into_bytes()), &mut out, None).unwrap();
+        let reply = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = reply.lines().collect();
+        assert_eq!(lines.len(), 2, "worker must survive the panic: {reply}");
+        let first = json::parse(lines[0]).unwrap();
+        let err = first.get("error").and_then(|e| e.as_str()).unwrap();
+        assert!(
+            err.contains("poisoned") && err.contains("seed=6"),
+            "offender not named: {err}"
+        );
+        let second = json::parse(lines[1]).unwrap();
+        assert!(second.get("result").is_some(), "next cell must still run");
+    }
+}

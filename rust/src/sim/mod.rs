@@ -16,13 +16,18 @@
 //! * [`expect`] — evaluates a scenario document's declarative
 //!   expectations against a [`SimResult`] (ISSUE 8);
 //! * [`event_log`] — the opt-in replayable event-log emitter whose
-//!   header hashes (document ‖ seed ‖ policy) (ISSUE 8).
+//!   header hashes (document ‖ seed ‖ policy) (ISSUE 8);
+//! * [`fabric`] — the cross-process experiment fabric: plan cells, fan
+//!   them to `laimr sweep --worker` children over line-delimited JSON,
+//!   merge per-cell outcomes, SHA-256 content-keyed memoization
+//!   (ISSUE 9).
 
 pub mod components;
 mod engine;
 pub mod event_log;
 mod events;
 pub mod expect;
+pub mod fabric;
 pub mod policy;
 mod result;
 pub mod runner;
@@ -35,9 +40,10 @@ pub use engine::{Architecture, Simulation};
 pub use event_log::{render_event_log, replay_hash, verify_event_log};
 pub use expect::{check_expectation, evaluate_document, ExpectationFailure};
 pub use events::{Event, EventQueue, TimedEvent};
+pub use fabric::{content_key, plan_cells, Fabric, FabricError, FabricOptions};
 pub use policy::{
     BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, HybridPolicy,
     LaImrPolicy, Policy, ShedReason, StaticPolicy, Verdict,
 };
 pub use result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
-pub use runner::{Cell, Runner, SimCache};
+pub use runner::{Cell, CellFailure, Runner, SimCache};

@@ -84,6 +84,14 @@ impl ShedReason {
             ShedReason::Unstable => "unstable",
         }
     }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s {
+            "deadline-breach" => Some(ShedReason::DeadlineBreach),
+            "unstable" => Some(ShedReason::Unstable),
+            _ => None,
+        }
+    }
 }
 
 /// Admission decision: run the request somewhere (possibly duplicated),

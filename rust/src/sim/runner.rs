@@ -118,16 +118,81 @@ impl SimCache {
     }
 }
 
+/// Parse a `LAIMR_THREADS` value: a positive integer, or an error naming
+/// the variable and the offending value. Garbage or `0` used to be
+/// silently swallowed (`.ok()…filter()`), so a misconfigured CI pin fell
+/// back to auto-parallelism without a trace — now it is a hard error.
+fn parse_threads_value(v: &str) -> Result<usize, String> {
+    match v.trim().parse::<usize>() {
+        Ok(n) if n >= 1 => Ok(n),
+        Ok(_) => Err(format!(
+            "LAIMR_THREADS={v}: thread count must be >= 1 (unset the variable for auto)"
+        )),
+        Err(_) => Err(format!(
+            "LAIMR_THREADS={v}: expected a positive integer thread count"
+        )),
+    }
+}
+
 /// `LAIMR_THREADS` override, read once per process (the env lookup was
 /// previously paid on every `Runner::new()`).
-fn env_threads() -> Option<usize> {
-    static CACHED: OnceLock<Option<usize>> = OnceLock::new();
-    *CACHED.get_or_init(|| {
-        std::env::var("LAIMR_THREADS")
-            .ok()
-            .and_then(|v| v.trim().parse::<usize>().ok())
-            .filter(|&n| n >= 1)
-    })
+fn env_threads() -> Result<Option<usize>, String> {
+    static CACHED: OnceLock<Result<Option<usize>, String>> = OnceLock::new();
+    CACHED
+        .get_or_init(|| match std::env::var("LAIMR_THREADS") {
+            Err(_) => Ok(None),
+            Ok(v) => parse_threads_value(&v).map(Some),
+        })
+        .clone()
+}
+
+/// One cell died: the offender's identity plus the panic payload. The
+/// sweep itself survives — `Runner::run_outcomes` returns this in the
+/// dead cell's slot with every other result intact (the fabric applies
+/// the same contract at process scope).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellFailure {
+    pub scenario: String,
+    pub seed: u64,
+    pub policy: String,
+    pub panic: String,
+}
+
+impl std::fmt::Display for CellFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "cell scenario={} policy={} seed={} panicked: {}",
+            self.scenario, self.policy, self.seed, self.panic
+        )
+    }
+}
+
+impl std::error::Error for CellFailure {}
+
+/// Convert a `catch_unwind` payload into a named `CellFailure`.
+fn cell_failure(cell: &Cell, payload: Box<dyn std::any::Any + Send>) -> CellFailure {
+    let panic = if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    CellFailure {
+        scenario: cell.scenario.name.clone(),
+        seed: cell.scenario.seed,
+        policy: cell.policy.name().to_string(),
+        panic,
+    }
+}
+
+/// Run one cell with the panic boundary: a panicking simulation fails
+/// only its own slot. `AssertUnwindSafe` is sound here — a cell is a
+/// pure function of its inputs and nothing observes partial state.
+pub(crate) fn run_cell_caught(cell: &Cell, cfg: &Config) -> Result<SimResult, CellFailure> {
+    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| cell.run(cfg)))
+        .map_err(|payload| cell_failure(cell, payload))
 }
 
 /// Work-stealing-ish sharded runner: workers pop cells off a shared
@@ -147,17 +212,27 @@ impl Default for Runner {
 
 impl Runner {
     /// Auto-sized: `LAIMR_THREADS` env override, else all available
-    /// cores. Memoization enabled.
-    pub fn new() -> Self {
-        let threads = env_threads().unwrap_or_else(|| {
-            std::thread::available_parallelism()
+    /// cores. Memoization enabled. A malformed `LAIMR_THREADS` (garbage
+    /// or `0`) is an error naming the variable and value — it must not
+    /// silently change the schedule.
+    pub fn try_new() -> Result<Self, String> {
+        let threads = match env_threads()? {
+            Some(n) => n,
+            None => std::thread::available_parallelism()
                 .map(|n| n.get())
-                .unwrap_or(1)
-        });
-        Runner {
+                .unwrap_or(1),
+        };
+        Ok(Runner {
             threads,
             cache: Some(Arc::new(SimCache::new())),
-        }
+        })
+    }
+
+    /// Infallible variant of [`Runner::try_new`] for contexts with no
+    /// error channel; panics with the same named message on a malformed
+    /// `LAIMR_THREADS`.
+    pub fn new() -> Self {
+        Self::try_new().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// One worker — the reference schedule for determinism checks.
@@ -199,8 +274,26 @@ impl Runner {
         self.cache.as_ref().map(|c| c.len())
     }
 
-    /// Run every cell and return results in input order.
+    /// Run every cell and return results in input order. A panicking
+    /// cell re-panics here, but with the offender's scenario/policy/seed
+    /// in the message — callers who want the surviving results instead
+    /// use [`Runner::run_outcomes`].
     pub fn run(&self, cfg: &Config, cells: &[Cell]) -> Vec<SimResult> {
+        self.run_outcomes(cfg, cells)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|f| panic!("{f}")))
+            .collect()
+    }
+
+    /// Run every cell, returning per-cell outcomes in input order. One
+    /// panicking cell fails only its own slot (as a [`CellFailure`]
+    /// naming scenario/policy/seed); every other cell's result survives.
+    /// Failures are never memoized — a retried sweep recomputes them.
+    pub fn run_outcomes(
+        &self,
+        cfg: &Config,
+        cells: &[Cell],
+    ) -> Vec<Result<SimResult, CellFailure>> {
         match &self.cache {
             None => {
                 let work: Vec<usize> = (0..cells.len()).collect();
@@ -210,10 +303,11 @@ impl Runner {
             }
             Some(cache) => {
                 let keys: Vec<u64> = cells.iter().map(|c| c.cache_key(cfg)).collect();
-                let mut slots: Vec<Option<SimResult>> =
-                    keys.iter().map(|&k| cache.get(k)).collect();
+                let mut slots: Vec<Option<Result<SimResult, CellFailure>>> =
+                    keys.iter().map(|&k| cache.get(k).map(Ok)).collect();
                 // First occurrence of each still-missing key computes;
-                // intra-batch repeats resolve from the cache afterwards.
+                // intra-batch repeats resolve from the batch afterwards
+                // (failed cells never enter the long-lived cache).
                 let mut claimed: HashSet<u64> = HashSet::new();
                 let mut work: Vec<usize> = Vec::new();
                 for (i, &k) in keys.iter().enumerate() {
@@ -221,8 +315,12 @@ impl Runner {
                         work.push(i);
                     }
                 }
+                let mut batch: HashMap<u64, Result<SimResult, CellFailure>> = HashMap::new();
                 for (i, r) in self.compute(cfg, cells, &work) {
-                    cache.insert(keys[i], &r);
+                    if let Ok(ok) = &r {
+                        cache.insert(keys[i], ok);
+                    }
+                    batch.insert(keys[i], r.clone());
                     slots[i] = Some(r);
                 }
                 slots
@@ -230,42 +328,57 @@ impl Runner {
                     .enumerate()
                     .map(|(i, s)| match s {
                         Some(r) => r,
-                        None => cache.get(keys[i]).expect("repeat cell was computed"),
+                        None => batch
+                            .get(&keys[i])
+                            .cloned()
+                            .expect("repeat cell was computed"),
                     })
                     .collect()
             }
         }
     }
 
-    /// Compute the given cell indices, returning `(index, result)` pairs
+    /// Compute the given cell indices, returning `(index, outcome)` pairs
     /// (unordered). Parallel workers drain a shared atomic cursor and
-    /// accumulate locally — disjoint writes, no per-slot lock.
-    fn compute(&self, cfg: &Config, cells: &[Cell], work: &[usize]) -> Vec<(usize, SimResult)> {
+    /// accumulate locally — disjoint writes, no per-slot lock. Each cell
+    /// runs inside a panic boundary, so `h.join()` below can only fail on
+    /// a panic *outside* the cell body (a runner bug, not a cell bug).
+    #[allow(clippy::type_complexity)]
+    fn compute(
+        &self,
+        cfg: &Config,
+        cells: &[Cell],
+        work: &[usize],
+    ) -> Vec<(usize, Result<SimResult, CellFailure>)> {
         if self.threads == 1 || work.len() < 2 {
-            return work.iter().map(|&i| (i, cells[i].run(cfg))).collect();
+            return work
+                .iter()
+                .map(|&i| (i, run_cell_caught(&cells[i], cfg)))
+                .collect();
         }
         let next = AtomicUsize::new(0);
         let workers = self.threads.min(work.len());
-        let mut out: Vec<(usize, SimResult)> = Vec::with_capacity(work.len());
+        let mut out: Vec<(usize, Result<SimResult, CellFailure>)> =
+            Vec::with_capacity(work.len());
         std::thread::scope(|scope| {
             let handles: Vec<_> = (0..workers)
                 .map(|_| {
                     scope.spawn(|| {
-                        let mut local: Vec<(usize, SimResult)> = Vec::new();
+                        let mut local: Vec<(usize, Result<SimResult, CellFailure>)> = Vec::new();
                         loop {
                             let k = next.fetch_add(1, Ordering::Relaxed);
                             if k >= work.len() {
                                 break;
                             }
                             let i = work[k];
-                            local.push((i, cells[i].run(cfg)));
+                            local.push((i, run_cell_caught(&cells[i], cfg)));
                         }
                         local
                     })
                 })
                 .collect();
             for h in handles {
-                out.extend(h.join().expect("runner worker panicked"));
+                out.extend(h.join().expect("runner worker panicked outside a cell"));
             }
         });
         out
@@ -371,6 +484,76 @@ mod tests {
         assert_ne!(base, cell2.cache_key(&cfg), "seed change must change key");
         // Same inputs, same key (stable across hasher instances).
         assert_eq!(base, cell.cache_key(&cfg));
+    }
+
+    #[test]
+    fn laimr_threads_rejects_zero_and_garbage() {
+        // Regression (ISSUE 9): `LAIMR_THREADS=0` and garbage used to be
+        // silently swallowed, falling back to auto-parallelism. The
+        // parser must now error, naming the variable and the value.
+        let err = parse_threads_value("0").unwrap_err();
+        assert!(
+            err.contains("LAIMR_THREADS=0") && err.contains(">= 1"),
+            "error must name variable and value: {err}"
+        );
+        let err = parse_threads_value("lots").unwrap_err();
+        assert!(
+            err.contains("LAIMR_THREADS=lots") && err.contains("positive integer"),
+            "error must name variable and value: {err}"
+        );
+        assert_eq!(parse_threads_value(" 8 "), Ok(8));
+        assert_eq!(parse_threads_value("1"), Ok(1));
+    }
+
+    /// A config with no Precise-lane model plus an all-Precise arrival
+    /// mix: the engine panics on the first such arrival ("model for
+    /// quality") — a genuinely poisoned cell reachable through the
+    /// public API.
+    fn poisoned_setup() -> (Config, Vec<Cell>) {
+        use crate::config::QualityClass;
+        let mut cfg = Config::default();
+        cfg.models.retain(|m| m.quality != QualityClass::Precise);
+        let good = ScenarioConfig::bursty(3.0, 5)
+            .with_duration(40.0, 5.0)
+            .with_replicas(2);
+        let mut bad = ScenarioConfig::bursty(3.0, 6)
+            .with_duration(40.0, 5.0)
+            .with_replicas(2);
+        bad.name = "poisoned".into();
+        bad.quality_mix = [0.0, 0.0, 1.0];
+        let cells = vec![
+            Cell::new(good.clone(), Policy::LaImr),
+            Cell::new(bad, Policy::Static),
+            Cell::new(good, Policy::Baseline),
+        ];
+        (cfg, cells)
+    }
+
+    #[test]
+    fn panicking_cell_fails_only_its_slot() {
+        // Regression (ISSUE 9): one panicking cell used to abort the
+        // whole sweep via `join().expect("runner worker panicked")`,
+        // discarding every completed result with no offender named.
+        let (cfg, cells) = poisoned_setup();
+        let out = Runner::with_threads(2).run_outcomes(&cfg, &cells);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].is_ok() && out[2].is_ok(), "healthy cells must survive");
+        let err = out[1].as_ref().unwrap_err();
+        assert_eq!(err.scenario, "poisoned");
+        assert_eq!(err.policy, "static");
+        assert_eq!(err.seed, 6);
+        let msg = err.to_string();
+        assert!(
+            msg.contains("poisoned") && msg.contains("static") && msg.contains("seed=6"),
+            "offender not named: {msg}"
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "cell scenario=poisoned policy=static seed=6 panicked")]
+    fn run_names_the_offending_cell_on_panic() {
+        let (cfg, cells) = poisoned_setup();
+        let _ = Runner::serial().run(&cfg, &cells);
     }
 
     #[test]

@@ -1,20 +1,40 @@
 //! Tiny CLI argument parser: `--flag value`, `--flag=value`, boolean
 //! switches, positionals, and generated usage text.
+//!
+//! Misconfiguration is an error, not a shrug (ISSUE 9): a flag given
+//! twice fails at parse time, and [`Args::reject_unknown`] fails on any
+//! flag that no getter consumed — so `--thread 8` can never silently
+//! run a sweep single-threaded because the real flag is `--threads`.
 
-use std::collections::HashMap;
+use std::cell::RefCell;
+use std::collections::{HashMap, HashSet};
 
-/// Parsed arguments.
+/// Parsed arguments. Getters record every flag name they look up (hit
+/// or miss) so [`Args::reject_unknown`] can flag the leftovers — and
+/// suggest the nearest queried/allowed name for a likely typo.
 #[derive(Debug, Default)]
 pub struct Args {
     flags: HashMap<String, String>,
     positional: Vec<String>,
+    consumed: RefCell<HashSet<String>>,
 }
 
 impl Args {
     /// Parse from an iterator of raw arguments (without argv[0]).
+    /// A repeated flag is an error: the old behaviour silently kept the
+    /// last value, so `--seed 1 … --seed 2` ran a different experiment
+    /// than the command line appeared to say.
     pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, String> = HashMap::new();
         let mut positional = Vec::new();
+        let mut insert = |flags: &mut HashMap<String, String>, k: String, v: String| {
+            if flags.insert(k.clone(), v).is_some() {
+                return Err(format!(
+                    "--{k} given more than once (each flag may appear once)"
+                ));
+            }
+            Ok(())
+        };
         let mut it = raw.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(name) = a.strip_prefix("--") {
@@ -24,23 +44,27 @@ impl Args {
                     break;
                 }
                 if let Some((k, v)) = name.split_once('=') {
-                    flags.insert(k.to_string(), v.to_string());
+                    insert(&mut flags, k.to_string(), v.to_string())?;
                 } else if it
                     .peek()
                     .map(|n| !n.starts_with("--"))
                     .unwrap_or(false)
                 {
                     let v = it.next().unwrap();
-                    flags.insert(name.to_string(), v);
+                    insert(&mut flags, name.to_string(), v)?;
                 } else {
                     // Boolean switch.
-                    flags.insert(name.to_string(), "true".to_string());
+                    insert(&mut flags, name.to_string(), "true".to_string())?;
                 }
             } else {
                 positional.push(a);
             }
         }
-        Ok(Args { flags, positional })
+        Ok(Args {
+            flags,
+            positional,
+            consumed: RefCell::new(HashSet::new()),
+        })
     }
 
     pub fn from_env() -> Result<Self, String> {
@@ -52,6 +76,7 @@ impl Args {
     }
 
     pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
         self.flags.get(name).map(|s| s.as_str())
     }
 
@@ -93,6 +118,58 @@ impl Args {
     pub fn get_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
+
+    /// Error on every flag that was neither consumed by a getter nor
+    /// listed in `also_allowed` — the unrecognized flag is named, with a
+    /// did-you-mean suggestion when a known name is within edit
+    /// distance 2. Call once per subcommand, after its flags are read
+    /// (or with the subcommand's full flag list up front).
+    pub fn reject_unknown(&self, also_allowed: &[&str]) -> Result<(), String> {
+        let consumed = self.consumed.borrow();
+        let known: Vec<&str> = consumed
+            .iter()
+            .map(|s| s.as_str())
+            .chain(also_allowed.iter().copied())
+            .collect();
+        let mut unknown: Vec<&String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(k.as_str()) && !also_allowed.contains(&k.as_str()))
+            .collect();
+        unknown.sort();
+        let Some(first) = unknown.first() else {
+            return Ok(());
+        };
+        let suggestion = known
+            .iter()
+            .map(|k| (edit_distance(first, k), *k))
+            .filter(|&(d, _)| d <= 2)
+            .min()
+            .map(|(_, k)| format!(" (did you mean --{k}?)"))
+            .unwrap_or_default();
+        Err(format!("unrecognized flag --{first}{suggestion}"))
+    }
+
+    /// All parsed flag names (wire-protocol callers that forward flags).
+    pub fn flag_names(&self) -> Vec<&str> {
+        self.flags.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+/// Levenshtein distance, small-string implementation (flag names).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -143,5 +220,65 @@ mod tests {
     fn double_dash_terminates() {
         let a = parse(&["--x", "1", "--", "--not-a-flag"]);
         assert_eq!(a.positional(), &["--not-a-flag"]);
+        a.get("x");
+        a.reject_unknown(&[]).unwrap();
+    }
+
+    #[test]
+    fn misspelled_flag_is_an_error() {
+        // Regression (ISSUE 9): `laimr repro table6 --thread 8` used to
+        // run single-threaded with no warning — the typo was silently
+        // ignored. It must now error, naming the flag and suggesting
+        // the real one.
+        let a = parse(&["repro", "table6", "--thread", "8"]);
+        // The program reads the flags it knows about...
+        assert_eq!(a.get_u64("threads", 0).unwrap(), 0);
+        // ...and the leftover typo is rejected by name.
+        let err = a.reject_unknown(&[]).unwrap_err();
+        assert!(err.contains("--thread"), "flag not named: {err}");
+        assert!(
+            err.contains("did you mean --threads"),
+            "no suggestion: {err}"
+        );
+    }
+
+    #[test]
+    fn unknown_flag_without_near_miss_still_named() {
+        let a = parse(&["--frobnicate", "1"]);
+        a.get("threads");
+        let err = a.reject_unknown(&[]).unwrap_err();
+        assert!(err.contains("--frobnicate"), "flag not named: {err}");
+    }
+
+    #[test]
+    fn allowed_list_counts_as_consumed() {
+        let a = parse(&["--dir", "scenarios"]);
+        a.reject_unknown(&["dir"]).unwrap();
+    }
+
+    #[test]
+    fn duplicate_flag_is_an_error() {
+        // Regression (ISSUE 9): a repeated flag used to silently keep
+        // the last value.
+        let err = Args::parse(
+            ["--seed", "1", "--seed", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap_err();
+        assert!(err.contains("--seed"), "flag not named: {err}");
+        assert!(err.contains("more than once"), "cause unclear: {err}");
+        // `--flag=v` and `--flag v` forms collide too.
+        let err = Args::parse(
+            ["--seed=1", "--seed", "2"].iter().map(|s| s.to_string()),
+        )
+        .unwrap_err();
+        assert!(err.contains("--seed"), "flag not named: {err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("thread", "threads"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 }

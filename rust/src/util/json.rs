@@ -388,6 +388,53 @@ pub fn to_string(v: &Value) -> String {
     out
 }
 
+fn write_compact(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+        Value::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 9e15 {
+                out.push_str(&format!("{}", *n as i64));
+            } else {
+                out.push_str(&format!("{n}"));
+            }
+        }
+        Value::Str(s) => escape(s, out),
+        Value::Arr(items) => {
+            out.push('[');
+            for (k, item) in items.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                write_compact(item, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(map) => {
+            out.push('{');
+            for (k, (key, item)) in map.iter().enumerate() {
+                if k > 0 {
+                    out.push(',');
+                }
+                escape(key, out);
+                out.push(':');
+                write_compact(item, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// One-line rendering (no interior newlines) for line-delimited wire
+/// protocols — the experiment fabric frames one JSON value per line.
+/// Numbers format exactly as in [`to_string`], so a value round-trips
+/// identically through either form.
+pub fn to_compact_string(v: &Value) -> String {
+    let mut out = String::new();
+    write_compact(v, &mut out);
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,6 +465,17 @@ mod tests {
         let v = parse(src).unwrap();
         let text = to_string(&v);
         assert_eq!(parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_single_line_and_roundtrips() {
+        let src = r#"{"a": [1, 2.5, -3e2], "b": "x\n\"y\"", "c": true, "d": null, "e": {}}"#;
+        let v = parse(src).unwrap();
+        let line = to_compact_string(&v);
+        assert!(!line.contains('\n'), "compact form must be one line: {line}");
+        assert_eq!(parse(&line).unwrap(), v, "compact form must round-trip");
+        // The escaped newline inside the string stays escaped.
+        assert!(line.contains("\\n"));
     }
 
     #[test]

@@ -1,0 +1,307 @@
+//! Cross-process experiment fabric contract (ISSUE 9).
+//!
+//! Three guarantees, each proven against the *real* `laimr` binary
+//! (`CARGO_BIN_EXE_laimr`), not an in-process stand-in:
+//!
+//! 1. **Bit-identity** — serial runner == in-process parallel runner ==
+//!    multi-process fabric, over a ≥3-scenario × 3-policy × 3-seed grid
+//!    with ≥2 worker processes. Floats compare by bit pattern.
+//! 2. **Fault isolation** — a worker that crashes, emits garbage,
+//!    truncates a frame, or stalls past the timeout fails only its own
+//!    cell with a named error; every other cell's result is intact and
+//!    the sweep never hangs or silently drops rows.
+//! 3. **Key discipline** — cross-process memo keys are SHA-256 over
+//!    canonical content (stable across machines/binaries), never
+//!    `DefaultHasher` output.
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::sim::{content_key, plan_cells, Cell, Fabric, FabricOptions, Policy, Runner};
+use la_imr::util::sha256::{hex, Sha256};
+use std::time::Duration;
+
+fn worker_cmd(extra: &[&str]) -> Vec<String> {
+    let mut cmd = vec![
+        env!("CARGO_BIN_EXE_laimr").to_string(),
+        "sweep".to_string(),
+        "--worker".to_string(),
+    ];
+    cmd.extend(extra.iter().map(|s| s.to_string()));
+    cmd
+}
+
+/// The acceptance grid: 3 scenarios × 3 policies × 3 seeds = 27 cells.
+fn grid() -> Vec<Cell> {
+    let mut a = ScenarioConfig::bursty(3.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    a.name = "grid-a".into();
+    let mut b = ScenarioConfig::poisson(2.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    b.name = "grid-b".into();
+    let mut c = ScenarioConfig::bursty(4.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(3);
+    c.name = "grid-c".into();
+    plan_cells(
+        &[a, b, c],
+        &[Policy::LaImr, Policy::Static, Policy::Hedged],
+        &[101, 102, 103],
+    )
+}
+
+fn assert_bit_identical(a: &la_imr::sim::SimResult, b: &la_imr::sim::SimResult, ctx: &str) {
+    assert_eq!(a.generated, b.generated, "{ctx}: generated");
+    assert_eq!(a.unfinished, b.unfinished, "{ctx}: unfinished");
+    assert_eq!(a.events, b.events, "{ctx}: event count");
+    assert_eq!(a.crashes, b.crashes, "{ctx}: crashes");
+    assert_eq!(a.scale_outs, b.scale_outs, "{ctx}: scale_outs");
+    assert_eq!(a.scale_ins, b.scale_ins, "{ctx}: scale_ins");
+    assert_eq!(a.peak_replicas, b.peak_replicas, "{ctx}: peak replicas");
+    assert_eq!(
+        a.mean_replicas.to_bits(),
+        b.mean_replicas.to_bits(),
+        "{ctx}: mean_replicas must match by bit pattern"
+    );
+    assert_eq!(a.tail, b.tail, "{ctx}: tail counters");
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: completions");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{ctx}: completion id");
+        assert_eq!(
+            x.arrived.to_bits(),
+            y.arrived.to_bits(),
+            "{ctx}: arrival time bits"
+        );
+        assert_eq!(
+            x.finished.to_bits(),
+            y.finished.to_bits(),
+            "{ctx}: finish time bits"
+        );
+        assert_eq!(x.quality, y.quality, "{ctx}: quality lane");
+        assert_eq!(x.offloaded, y.offloaded, "{ctx}: offload flag");
+    }
+    assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed records");
+    for (x, y) in a.shed.iter().zip(&b.shed) {
+        assert_eq!(x.id, y.id, "{ctx}: shed id");
+        assert_eq!(x.at.to_bits(), y.at.to_bits(), "{ctx}: shed time bits");
+        assert_eq!(x.reason, y.reason, "{ctx}: shed reason");
+        assert_eq!(
+            x.predicted.to_bits(),
+            y.predicted.to_bits(),
+            "{ctx}: shed prediction bits"
+        );
+    }
+}
+
+/// Acceptance (a): the three execution planes agree bit-for-bit.
+#[test]
+fn serial_parallel_and_multiprocess_agree_bit_for_bit() {
+    let cfg = Config::default();
+    let cells = grid();
+    assert!(cells.len() >= 27, "grid must cover 3×3×3");
+
+    let serial = Runner::serial().run(&cfg, &cells);
+    let parallel = Runner::with_threads(4).run(&cfg, &cells);
+    let fabric = Fabric::new(FabricOptions::with_command(2, worker_cmd(&[])))
+        .run(&cfg, &cells);
+
+    assert_eq!(fabric.len(), cells.len());
+    for (k, ((s, p), f)) in serial.iter().zip(&parallel).zip(&fabric).enumerate() {
+        let cell = &cells[k];
+        let ctx = format!(
+            "cell {k} (scenario={} policy={} seed={})",
+            cell.scenario.name,
+            cell.policy.name(),
+            cell.scenario.seed
+        );
+        let f = f
+            .as_ref()
+            .unwrap_or_else(|e| panic!("{ctx}: fabric failed a healthy cell: {e}"));
+        assert_bit_identical(s, p, &format!("{ctx} serial vs parallel"));
+        assert_bit_identical(s, f, &format!("{ctx} serial vs multi-process"));
+    }
+}
+
+/// Acceptance (c): the cross-process memo key is SHA-256 over canonical
+/// content — recomputable from first principles outside the fabric, 64
+/// lowercase hex chars, sensitive to every cell component. (The
+/// in-process `Cell::cache_key` DefaultHasher value is unspecified
+/// across binaries and must never appear on the wire; see runner.rs.)
+#[test]
+fn memo_keys_are_sha256_content_keys() {
+    let cfg = Config::default();
+    let cells = grid();
+    let mut seen = std::collections::HashSet::new();
+    for cell in &cells {
+        let key = content_key(&cfg, cell);
+        assert_eq!(key.len(), 64, "SHA-256 hex digest length");
+        assert!(
+            key.chars().all(|c| c.is_ascii_hexdigit() && !c.is_ascii_uppercase()),
+            "digest must be lowercase hex: {key}"
+        );
+        let mut h = Sha256::new();
+        h.update(cfg.to_json_string().as_bytes());
+        h.update(&[0xFF]);
+        h.update(cell.scenario.to_json_string().as_bytes());
+        h.update(&[0xFF]);
+        h.update(cell.policy.name().as_bytes());
+        h.update(&[0xFF]);
+        h.update(cell.arch.name().as_bytes());
+        assert_eq!(key, hex(&h.finish()), "key must be the content digest");
+        seen.insert(key);
+    }
+    assert_eq!(seen.len(), cells.len(), "distinct cells → distinct keys");
+}
+
+/// Duplicate cells (same content key) are computed once and fanned out:
+/// both slots carry bit-identical results.
+#[test]
+fn duplicate_cells_share_one_computation() {
+    let cfg = Config::default();
+    let mut s = ScenarioConfig::bursty(3.0, 9)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    s.name = "dup".into();
+    let cell = Cell::new(s, Policy::Static);
+    let cells = vec![cell.clone(), cell.clone(), cell];
+    let out = Fabric::new(FabricOptions::with_command(2, worker_cmd(&[])))
+        .run(&cfg, &cells);
+    assert_eq!(out.len(), 3);
+    let first = out[0].as_ref().expect("dup cell must complete");
+    for (k, o) in out.iter().enumerate().skip(1) {
+        let r = o.as_ref().expect("fanned duplicate must complete");
+        assert_bit_identical(first, r, &format!("duplicate slot {k}"));
+    }
+}
+
+/// Fault-isolation grid: scenario "victim" triggers the worker's chaos
+/// hook; "bystander-1/2" must come through untouched.
+fn chaos_grid() -> Vec<Cell> {
+    let mut victim = ScenarioConfig::bursty(3.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    victim.name = "victim".into();
+    let mut b1 = ScenarioConfig::poisson(2.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    b1.name = "bystander-1".into();
+    let mut b2 = ScenarioConfig::bursty(4.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    b2.name = "bystander-2".into();
+    plan_cells(
+        &[victim, b1, b2],
+        &[Policy::LaImr, Policy::Static],
+        &[201, 202],
+    )
+}
+
+/// Run a chaos sweep and check the isolation contract: every victim
+/// cell fails with a named error containing `expect_cause`; every
+/// bystander cell matches the serial reference bit-for-bit.
+fn assert_chaos_isolated(mode: &str, expect_cause: &str, timeout: Option<Duration>) {
+    let cfg = Config::default();
+    let cells = chaos_grid();
+    let reference: Vec<_> = Runner::serial().run(
+        &cfg,
+        &cells
+            .iter()
+            .filter(|c| c.scenario.name != "victim")
+            .cloned()
+            .collect::<Vec<_>>(),
+    );
+    let mut opts =
+        FabricOptions::with_command(2, worker_cmd(&["--chaos", &format!("{mode}:victim")]));
+    if let Some(t) = timeout {
+        opts = opts.with_timeout(t);
+    }
+    let out = Fabric::new(opts).run(&cfg, &cells);
+    assert_eq!(out.len(), cells.len(), "{mode}: no silently dropped rows");
+    let mut refs = reference.iter();
+    let mut victims = 0;
+    for (cell, o) in cells.iter().zip(&out) {
+        if cell.scenario.name == "victim" {
+            victims += 1;
+            let e = match o {
+                Err(e) => e,
+                Ok(_) => panic!("{mode}: victim cell unexpectedly succeeded"),
+            };
+            assert_eq!(e.scenario, "victim", "{mode}: offender scenario named");
+            assert_eq!(e.seed, cell.scenario.seed, "{mode}: offender seed named");
+            assert_eq!(
+                e.policy,
+                cell.policy.name(),
+                "{mode}: offender policy named"
+            );
+            assert!(
+                e.cause.contains(expect_cause),
+                "{mode}: cause '{}' should mention '{expect_cause}'",
+                e.cause
+            );
+        } else {
+            let r = o.as_ref().unwrap_or_else(|e| {
+                panic!("{mode}: bystander cell must be intact, got: {e}")
+            });
+            let s = refs.next().expect("reference aligned");
+            assert_bit_identical(s, r, &format!("{mode}: bystander {}", cell.scenario.name));
+        }
+    }
+    assert_eq!(victims, 4, "{mode}: chaos grid shape changed");
+}
+
+/// Acceptance (b): a crashed worker fails only its cell; the fabric
+/// respawns and completes everything else.
+#[test]
+fn crashed_worker_fails_only_its_cell() {
+    assert_chaos_isolated("crash", "worker exited", None);
+}
+
+/// Garbage on stdout → named error for the in-flight cell, worker
+/// replaced, sweep completes.
+#[test]
+fn garbage_worker_fails_only_its_cell() {
+    assert_chaos_isolated("garbage", "garbage", None);
+}
+
+/// A frame truncated mid-line (worker died mid-write) parses as
+/// garbage, never as a silent partial result.
+#[test]
+fn truncated_frame_fails_only_its_cell() {
+    assert_chaos_isolated("truncate", "garbage", None);
+}
+
+/// A stalled worker trips the per-cell timeout: the cell gets a named
+/// timeout error, the worker is killed and respawned, and the sweep
+/// finishes instead of hanging.
+#[test]
+fn stalled_worker_times_out_and_is_respawned() {
+    assert_chaos_isolated("stall", "timed out", Some(Duration::from_secs(2)));
+}
+
+/// A worker binary that exits instantly (stdin closed / spawn-level
+/// failure) retires its slot; every cell still ends in a *named* error —
+/// the sweep returns, it does not hang, and nothing is silently absent.
+#[test]
+fn dead_worker_command_never_hangs() {
+    let cfg = Config::default();
+    let mut s = ScenarioConfig::bursty(3.0, 3)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    s.name = "doomed".into();
+    let cells = plan_cells(&[s], &[Policy::Static, Policy::LaImr], &[7]);
+    // `true` exits immediately without reading stdin.
+    let opts = FabricOptions::with_command(2, vec!["true".to_string()])
+        .with_timeout(Duration::from_secs(5));
+    let out = Fabric::new(opts).run(&cfg, &cells);
+    assert_eq!(out.len(), cells.len());
+    for (cell, o) in cells.iter().zip(&out) {
+        let e = match o {
+            Err(e) => e,
+            Ok(_) => panic!("a no-op worker cannot produce results"),
+        };
+        assert_eq!(e.scenario, "doomed");
+        assert_eq!(e.seed, 7);
+        assert_eq!(e.policy, cell.policy.name());
+        assert!(!e.cause.is_empty(), "cause must be named");
+    }
+}
