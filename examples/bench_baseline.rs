@@ -8,7 +8,7 @@
 //!   cargo run --release --example bench_baseline -- --smoke     # CI
 //!   cargo run --release --example bench_baseline -- --out path.json
 //!
-//! Four measurements:
+//! Five measurements:
 //!   * `cold_single_pass` — one λ=6 bursty LA-IMR simulation: simulated
 //!     events drained per wall-second (the dense-index engine path);
 //!   * `sweep_cold` — a λ×seed×policy grid with memoization disabled:
@@ -20,12 +20,18 @@
 //!     scenario (smoke: ~60k) under `engine.mode = des` vs `hybrid`,
 //!     reporting per-mode wall time, request throughput, how many
 //!     completions the fluid fast path batched, and the process peak
-//!     RSS (the chunk-streamed arrival front end bounds it).
+//!     RSS (the chunk-streamed arrival front end bounds it);
+//!   * `store_sweep` — the ISSUE 10 warm-start yardstick: the same grid
+//!     against an empty persistent store (cold: computes + writes) then
+//!     from a fresh runner and fresh store handle (warm: loads only),
+//!     reporting the cold/warm wall times, the speedup, and the hit
+//!     rate — with zero computes and bit-identity asserted.
 
 use la_imr::config::{Config, EngineMode, ScenarioConfig};
 use la_imr::report::{million_robot_config, million_robot_scenario};
-use la_imr::sim::{Architecture, Cell, Policy, Runner, Simulation};
+use la_imr::sim::{Architecture, Cell, Policy, ResultStore, Runner, Simulation};
 use la_imr::util::bench::{bench_once, peak_rss_bytes};
+use std::sync::Arc;
 use std::time::{SystemTime, UNIX_EPOCH};
 
 fn arg_value(name: &str) -> Option<String> {
@@ -162,12 +168,50 @@ fn main() {
         peak_rss_mb.map_or_else(|| "n/a".into(), |mb| format!("{mb:.0} MiB")),
     );
 
+    // 5) Persistent-store warm start (ISSUE 10): the same grid against an
+    //    empty store (cold), then from a fresh runner *and* a fresh store
+    //    handle — the shape of a new process warm-starting off disk. The
+    //    fresh handle's tally proves the warm pass computed nothing.
+    let store_dir = std::env::temp_dir().join(format!(
+        "laimr-bench-store-{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let cold_store = Arc::new(ResultStore::open(&store_dir).expect("open bench store"));
+    let store_cold_runner = Runner::new().with_store(Arc::clone(&cold_store));
+    let (store_cold_results, store_cold_dt) = bench_once(
+        &format!("store sweep cold: {} cells, empty store", cells.len()),
+        || store_cold_runner.run(&cfg, &cells),
+    );
+    let warm_store = Arc::new(ResultStore::open(&store_dir).expect("open bench store"));
+    let store_warm_runner = Runner::new().with_store(Arc::clone(&warm_store));
+    let (store_warm_results, store_warm_dt) = bench_once(
+        &format!("store sweep warm: {} cells, fresh runner + handle", cells.len()),
+        || store_warm_runner.run(&cfg, &cells),
+    );
+    let warm_tally = warm_store.tally();
+    assert_eq!(warm_tally.writes, 0, "warm store sweep must compute nothing");
+    let warm_hit_rate = warm_tally.hits as f64 / cells.len() as f64;
+    for (k, (a, b)) in store_cold_results.iter().zip(&store_warm_results).enumerate() {
+        assert_eq!(
+            a.latencies(),
+            b.latencies(),
+            "store-warmed cell {k} diverged from cold run"
+        );
+    }
+    let store_speedup = store_cold_dt / store_warm_dt.max(1e-9);
+    println!(
+        "  cold {:.3}s → warm {:.3}s ({:.2}x; {} hits, 0 computes, bit-identical ✓)\n",
+        store_cold_dt, store_warm_dt, store_speedup, warm_tally.hits
+    );
+    let _ = std::fs::remove_dir_all(&store_dir);
+
     let timestamp = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| d.as_secs())
         .unwrap_or(0);
     let json = format!(
-        "{{\n  \"schema\": \"la-imr-bench/1\",\n  \"unix_time\": {timestamp},\n  \"mode\": \"{mode}\",\n  \"workers\": {workers},\n  \"cell_duration_s\": {duration},\n  \"cold_single_pass\": {{\n    \"events\": {events},\n    \"wall_s\": {cold_dt:.4},\n    \"events_per_sec\": {eps:.0}\n  }},\n  \"sweep_cold\": {{\n    \"cells\": {n_cells},\n    \"wall_s\": {sweep_cold_dt:.4},\n    \"cells_per_sec\": {cps:.3}\n  }},\n  \"sweep_repeated\": {{\n    \"cells\": {n_rep},\n    \"wall_s_no_cache\": {rep_cold_dt:.4},\n    \"wall_s_memoized\": {rep_memo_dt:.4},\n    \"memo_speedup\": {memo_speedup:.2}\n  }},\n  \"million_robot\": {{\n    \"scenario\": \"{mr_name}\",\n    \"requests\": {mr_requests},\n    \"des\": {{\n      \"wall_s\": {mr_des_dt:.4},\n      \"events\": {mr_des_events},\n      \"requests_per_sec\": {mr_des_rps:.0}\n    }},\n    \"hybrid\": {{\n      \"wall_s\": {mr_hyb_dt:.4},\n      \"events\": {mr_hyb_events},\n      \"fluid_batched\": {mr_fluid},\n      \"requests_per_sec\": {mr_hyb_rps:.0}\n    }},\n    \"hybrid_speedup\": {mr_speedup:.2},\n    \"peak_rss_mb\": {mr_rss}\n  }}\n}}\n",
+        "{{\n  \"schema\": \"la-imr-bench/1\",\n  \"unix_time\": {timestamp},\n  \"mode\": \"{mode}\",\n  \"workers\": {workers},\n  \"cell_duration_s\": {duration},\n  \"cold_single_pass\": {{\n    \"events\": {events},\n    \"wall_s\": {cold_dt:.4},\n    \"events_per_sec\": {eps:.0}\n  }},\n  \"sweep_cold\": {{\n    \"cells\": {n_cells},\n    \"wall_s\": {sweep_cold_dt:.4},\n    \"cells_per_sec\": {cps:.3}\n  }},\n  \"sweep_repeated\": {{\n    \"cells\": {n_rep},\n    \"wall_s_no_cache\": {rep_cold_dt:.4},\n    \"wall_s_memoized\": {rep_memo_dt:.4},\n    \"memo_speedup\": {memo_speedup:.2}\n  }},\n  \"store_sweep\": {{\n    \"cells\": {n_cells},\n    \"wall_s_cold\": {store_cold_dt:.4},\n    \"wall_s_warm\": {store_warm_dt:.4},\n    \"warm_speedup\": {store_speedup:.2},\n    \"warm_hit_rate\": {warm_hit_rate:.3}\n  }},\n  \"million_robot\": {{\n    \"scenario\": \"{mr_name}\",\n    \"requests\": {mr_requests},\n    \"des\": {{\n      \"wall_s\": {mr_des_dt:.4},\n      \"events\": {mr_des_events},\n      \"requests_per_sec\": {mr_des_rps:.0}\n    }},\n    \"hybrid\": {{\n      \"wall_s\": {mr_hyb_dt:.4},\n      \"events\": {mr_hyb_events},\n      \"fluid_batched\": {mr_fluid},\n      \"requests_per_sec\": {mr_hyb_rps:.0}\n    }},\n    \"hybrid_speedup\": {mr_speedup:.2},\n    \"peak_rss_mb\": {mr_rss}\n  }}\n}}\n",
         mode = if smoke { "smoke" } else { "full" },
         workers = runner_threads,
         events = r.events,

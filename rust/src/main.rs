@@ -7,6 +7,7 @@
 //!   plan       — capacity planning (Eq. 23) for a traffic mix
 //!   repro      — regenerate a paper table/figure (or `all`)
 //!   sweep      — cross-process experiment fabric (coordinator/worker)
+//!   cache      — persistent result store: stats / verify / gc
 //!
 //! Every subcommand declares the flags it accepts and rejects leftovers
 //! by name (ISSUE 9) — `--thread 8` errors instead of silently running
@@ -16,16 +17,23 @@ use la_imr::config::{Config, QualityClass, ScenarioConfig, ScenarioDocument};
 use la_imr::planner::{plan_capacity, TaskClass};
 use la_imr::report;
 use la_imr::sim::{
-    evaluate_document, event_log, fabric, Architecture, Policy, Runner, Simulation,
+    evaluate_document, event_log, fabric, Architecture, Policy, ResultStore, Runner, Simulation,
 };
 use la_imr::util::cli::Args;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 const USAGE: &str = "\
 laimr — LA-IMR: latency-aware predictive in-memory routing & proactive autoscaling
 
-USAGE: laimr [--config cfg.json] [--artifacts DIR] <command> [flags]
+USAGE: laimr [--config cfg.json] [--artifacts DIR] [--cache-dir DIR] <command> [flags]
+
+  --cache-dir DIR (or LAIMR_CACHE_DIR): opt-in persistent result store.
+  Simulation cells are memoized on disk under their SHA-256 content key,
+  so an unchanged sweep re-run — even in a new process or session —
+  computes nothing. Corrupt/stale entries are detected, skipped, and
+  rewritten; results are bit-identical with or without the store.
 
 COMMANDS:
   serve      --robots N --fps F --duration S     serve real PJRT inference
@@ -71,7 +79,7 @@ COMMANDS:
              [--seeds S1,S2,...] [--workers N]    fabric: plan the scenarios ×
              [--timeout-s S] [--seed K]           seeds × policies grid, fan
              [--arch microservice|monolithic]     cells to `sweep --worker`
-                                                  child processes over
+             [--frame-format json|binary]         child processes over
                                                   line-delimited JSON, merge
                                                   per-cell results into one
                                                   table. Cells are keyed by
@@ -86,11 +94,27 @@ COMMANDS:
                                                   catalog re-seeded with
                                                   --seed); --timeout-s:
                                                   per-cell timeout (default
-                                                  120)
+                                                  120); --frame-format binary:
+                                                  compact base64 result
+                                                  payloads (bit-identical,
+                                                  fewer bytes); with
+                                                  --cache-dir the coordinator
+                                                  loads cells from the store
+                                                  before dispatch and writes
+                                                  computed cells back
              --worker                             worker mode (internal):
                                                   config then cell frames on
                                                   stdin, one result frame per
                                                   line on stdout
+  cache      <stats|verify|gc>                    persistent result store ops
+                                                  (needs --cache-dir or
+                                                  LAIMR_CACHE_DIR): stats =
+                                                  entry count + bytes; verify
+                                                  = read-only end-to-end audit
+                                                  (exits non-zero on corrupt
+                                                  entries); gc = remove
+                                                  corrupt entries + orphaned
+                                                  tmp files
 ";
 
 fn main() {
@@ -115,11 +139,28 @@ fn run() -> anyhow::Result<()> {
         return Ok(());
     };
 
+    // Persistent result store (ISSUE 10): `--cache-dir` wins, else a
+    // non-empty `LAIMR_CACHE_DIR`. Opt-in — absent means exactly the
+    // store-free behaviour (same results, same memo keys).
+    let cache_dir: Option<PathBuf> = match args.get("cache-dir") {
+        Some(dir) => Some(PathBuf::from(dir)),
+        None => std::env::var("LAIMR_CACHE_DIR")
+            .ok()
+            .filter(|v| !v.is_empty())
+            .map(PathBuf::from),
+    };
+
     // Sweep worker count for runner-backed commands (0 = auto). A bad
     // LAIMR_THREADS is an error here, not a silent fallback (ISSUE 9).
     let runner = match args.get_u64("threads", 0).map_err(anyhow::Error::msg)? {
         0 => Runner::try_new().map_err(anyhow::Error::msg)?,
         n => Runner::with_threads(n as usize),
+    };
+    // Attach the disk tier to every runner-backed command (repro,
+    // calibrate): their sweeps then warm-start across processes too.
+    let runner = match &cache_dir {
+        Some(dir) => runner.with_store(Arc::new(ResultStore::open(dir)?)),
+        None => runner,
     };
 
     match cmd {
@@ -361,17 +402,24 @@ fn run() -> anyhow::Result<()> {
                 "workers",
                 "timeout-s",
                 "arch",
+                "frame-format",
             ])
             .map_err(anyhow::Error::msg)?;
+            let format_name = args.get_str("frame-format", "json");
+            let format = fabric::FrameFormat::from_name(format_name).ok_or_else(|| {
+                anyhow::anyhow!("--frame-format: expected json|binary, got '{format_name}'")
+            })?;
             // Worker mode: config then cell frames on stdin, one result
             // frame per line on stdout. `--chaos MODE:SCENARIO` is the
-            // test-only fault hook (see tests/fabric.rs).
+            // test-only fault hook (see tests/fabric.rs); the frame
+            // format arrives on argv from the coordinator.
             if args.get_bool("worker", false).map_err(anyhow::Error::msg)? {
                 let chaos = args.get("chaos").map(fabric::parse_chaos).transpose()?;
                 return fabric::run_worker(
                     std::io::stdin().lock(),
                     std::io::stdout().lock(),
                     chaos,
+                    format,
                 );
             }
             // Coordinator: plan the grid, fan cells to workers, merge.
@@ -423,13 +471,74 @@ fn run() -> anyhow::Result<()> {
             if !timeout.is_finite() || timeout <= 0.0 {
                 anyhow::bail!("--timeout-s: expected a positive number of seconds");
             }
-            let opts = fabric::FabricOptions::local(workers)?
-                .with_timeout(Duration::from_secs_f64(timeout));
-            let outcomes = fabric::Fabric::new(opts).run(&cfg, &cells);
+            let mut opts = fabric::FabricOptions::local(workers)?
+                .with_timeout(Duration::from_secs_f64(timeout))
+                .with_frame_format(format);
+            if let Some(dir) = &cache_dir {
+                opts = opts.with_store(Arc::new(ResultStore::open(dir)?));
+            }
+            let (outcomes, stats) = fabric::Fabric::new(opts).run_with_stats(&cfg, &cells);
             print!("{}", report::fabric_sweep_report(&cfg, &cells, &outcomes));
+            if cache_dir.is_some() {
+                // Store accounting goes to stderr: stdout must stay
+                // byte-identical between cold and warm runs (the
+                // ISSUE-10 warm-start gate diffs it).
+                eprintln!(
+                    "store: {} hit(s), {} computed, {} written",
+                    stats.store_hits, stats.dispatched, stats.store_writes
+                );
+            }
             let failed = outcomes.iter().filter(|o| o.is_err()).count();
             if failed > 0 {
                 anyhow::bail!("{failed} of {} cells failed", cells.len());
+            }
+            Ok(())
+        }
+        "cache" => {
+            args.reject_unknown(&[]).map_err(anyhow::Error::msg)?;
+            let verb = args
+                .positional()
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("stats");
+            let Some(dir) = &cache_dir else {
+                anyhow::bail!(
+                    "cache: no store configured — pass --cache-dir DIR or set LAIMR_CACHE_DIR"
+                );
+            };
+            let store = ResultStore::open(dir)?;
+            match verb {
+                "stats" => {
+                    let (entries, bytes) = store.disk_stats()?;
+                    println!("store      : {}", dir.display());
+                    println!("entries    : {entries}");
+                    println!("bytes      : {bytes}");
+                }
+                "verify" => {
+                    let audit = store.verify()?;
+                    println!("store      : {}", dir.display());
+                    println!("ok         : {}", audit.ok);
+                    for (file, reason) in &audit.corrupt {
+                        println!("corrupt    : {file}: {reason}");
+                    }
+                    if !audit.corrupt.is_empty() {
+                        anyhow::bail!(
+                            "{} corrupt entr{} (run `laimr cache gc`)",
+                            audit.corrupt.len(),
+                            if audit.corrupt.len() == 1 { "y" } else { "ies" }
+                        );
+                    }
+                }
+                "gc" => {
+                    let gc = store.gc()?;
+                    println!("store      : {}", dir.display());
+                    println!("kept       : {}", gc.kept);
+                    println!(
+                        "removed    : {} corrupt, {} orphaned tmp",
+                        gc.removed_corrupt, gc.removed_tmp
+                    );
+                }
+                other => anyhow::bail!("cache: unknown verb '{other}' (stats|verify|gc)"),
             }
             Ok(())
         }

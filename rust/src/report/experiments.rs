@@ -383,7 +383,7 @@ pub fn head_to_head(
                     let s = r.summary();
                     v95.push(s.p95);
                     p99s[pi].push(s.p99);
-                    alls[pi].extend(r.latencies());
+                    alls[pi].extend(r.completed.iter().map(|c| c.latency()));
                 }
             }
             HeadToHead {

@@ -37,14 +37,16 @@ use crate::config::{Config, QualityClass, ScenarioConfig};
 use crate::sim::policy::ShedReason;
 use crate::sim::result::{CompletedRequest, ShedRecord, TailCounters};
 use crate::sim::runner::{self, Cell};
+use crate::sim::store::{ResultStore, StoreLookup};
 use crate::sim::{Architecture, Policy, SimResult};
+use crate::util::codec;
 use crate::util::json::{self, Value};
 use crate::util::sha256::{hex, Sha256};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, Write};
 use std::process::{Child, ChildStdin, Command, Stdio};
 use std::sync::mpsc;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 // ---------------------------------------------------------------------------
@@ -54,10 +56,20 @@ use std::time::Duration;
 /// Cross-process memo key: SHA-256 over canonical content, 0xFF-delimited.
 /// Unlike `Cell::cache_key` (DefaultHasher — unspecified across
 /// binaries), this key may be persisted, compared across machines, and
-/// used to dedup cells between coordinator and workers.
+/// used to dedup cells between coordinator and workers. It is also the
+/// file name in the persistent [`ResultStore`] (ISSUE 10).
 pub fn content_key(cfg: &Config, cell: &Cell) -> String {
+    content_key_with_cfg_json(&cfg.to_json_string(), cell)
+}
+
+/// [`content_key`] with the canonical config JSON pre-serialised — the
+/// config is invariant across a sweep, so batch callers (the runner's
+/// disk tier, the fabric coordinator) serialise it once instead of once
+/// per cell. Must be fed exactly `cfg.to_json_string()` to produce the
+/// same keys.
+pub fn content_key_with_cfg_json(cfg_json: &str, cell: &Cell) -> String {
     let mut h = Sha256::new();
-    h.update(cfg.to_json_string().as_bytes());
+    h.update(cfg_json.as_bytes());
     h.update(&[0xFF]);
     h.update(cell.scenario.to_json_string().as_bytes());
     h.update(&[0xFF]);
@@ -342,14 +354,55 @@ fn parse_request(line: &str) -> anyhow::Result<(u64, String, Cell)> {
     Ok((id, key, Cell::new(scenario, policy).with_arch(arch)))
 }
 
+/// How a worker encodes result payloads (ISSUE 10). Either way the frame
+/// itself stays a one-line JSON envelope — id/key/error handling, chaos
+/// injection, and the respawn machinery are format-agnostic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FrameFormat {
+    /// `"result"`: the PR-9 field-wise JSON encoding (hex-bit floats).
+    #[default]
+    Json,
+    /// `"result_b64"`: the compact binary codec, base64-armoured. Same
+    /// bit-exactness contract, a fraction of the bytes per completion.
+    Binary,
+}
+
+impl FrameFormat {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameFormat::Json => "json",
+            FrameFormat::Binary => "binary",
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "json" => Some(FrameFormat::Json),
+            "binary" => Some(FrameFormat::Binary),
+            _ => None,
+        }
+    }
+}
+
 /// Response frame a worker writes (one line): result or named error.
-fn response_frame(id: u64, key: &str, outcome: &Result<SimResult, String>) -> String {
+fn response_frame(
+    id: u64,
+    key: &str,
+    outcome: &Result<SimResult, String>,
+    format: FrameFormat,
+) -> String {
     let mut fields = vec![
         ("id", u64_to_value(id)),
         ("key", Value::Str(key.to_string())),
     ];
     match outcome {
-        Ok(r) => fields.push(("result", result_to_json(r))),
+        Ok(r) => match format {
+            FrameFormat::Json => fields.push(("result", result_to_json(r))),
+            FrameFormat::Binary => fields.push((
+                "result_b64",
+                Value::Str(codec::b64_encode(&codec::encode_result(r))),
+            )),
+        },
         Err(e) => fields.push(("error", Value::Str(e.clone()))),
     }
     json::to_compact_string(&obj(fields))
@@ -399,6 +452,7 @@ pub fn run_worker<R: BufRead, W: Write>(
     input: R,
     mut output: W,
     chaos: Option<(ChaosMode, String)>,
+    format: FrameFormat,
 ) -> anyhow::Result<()> {
     let mut lines = input.lines();
     let Some(first) = lines.next() else {
@@ -416,7 +470,11 @@ pub fn run_worker<R: BufRead, W: Write>(
             Err(e) => {
                 // Unparseable request: answer with id 0 so the
                 // coordinator sees a named protocol error, not silence.
-                writeln!(output, "{}", response_frame(0, "", &Err(e.to_string())))?;
+                writeln!(
+                    output,
+                    "{}",
+                    response_frame(0, "", &Err(e.to_string()), format)
+                )?;
                 output.flush()?;
                 continue;
             }
@@ -431,7 +489,7 @@ pub fn run_worker<R: BufRead, W: Write>(
                         continue;
                     }
                     ChaosMode::Truncate => {
-                        let frame = response_frame(id, &key, &Err("unused".into()));
+                        let frame = response_frame(id, &key, &Err("unused".into()), format);
                         write!(output, "{}", &frame[..frame.len() / 2])?;
                         output.flush()?;
                         std::process::exit(0);
@@ -443,7 +501,7 @@ pub fn run_worker<R: BufRead, W: Write>(
             }
         }
         let outcome = runner::run_cell_caught(&cell, &cfg).map_err(|f| f.to_string());
-        writeln!(output, "{}", response_frame(id, &key, &outcome))?;
+        writeln!(output, "{}", response_frame(id, &key, &outcome, format))?;
         output.flush()?;
     }
     Ok(())
@@ -489,6 +547,14 @@ pub struct FabricOptions {
     pub max_respawns: usize,
     /// argv of the worker process (`[binary, "sweep", "--worker", …]`).
     pub worker_cmd: Vec<String>,
+    /// Result payload encoding on the worker wire (ISSUE 10). The
+    /// coordinator owns the choice: it appends `--frame-format binary`
+    /// to the worker argv so both ends agree by construction.
+    pub frame_format: FrameFormat,
+    /// Persistent result store (ISSUE 10): the coordinator probes it
+    /// before fanning cells to workers and writes computed results back,
+    /// so a warm re-run of an unchanged grid dispatches zero cells.
+    pub store: Option<Arc<ResultStore>>,
 }
 
 impl FabricOptions {
@@ -514,11 +580,26 @@ impl FabricOptions {
             timeout: Duration::from_secs(120),
             max_respawns: 32,
             worker_cmd,
+            frame_format: FrameFormat::default(),
+            store: None,
         }
     }
 
     pub fn with_timeout(mut self, timeout: Duration) -> Self {
         self.timeout = timeout;
+        self
+    }
+
+    /// Select the worker result-payload encoding (default JSON).
+    pub fn with_frame_format(mut self, format: FrameFormat) -> Self {
+        self.frame_format = format;
+        self
+    }
+
+    /// Attach a persistent [`ResultStore`] the coordinator consults
+    /// before dispatch and writes back into after the sweep.
+    pub fn with_store(mut self, store: Arc<ResultStore>) -> Self {
+        self.store = Some(store);
         self
     }
 }
@@ -572,6 +653,19 @@ impl WorkerHandle {
     }
 }
 
+/// What a fabric sweep actually did (ISSUE 10): how many unique cells
+/// went to worker processes vs. loaded from the persistent store. The
+/// warm-start gate asserts `dispatched == 0` on an unchanged grid.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FabricStats {
+    /// Unique cells sent to worker processes (computed).
+    pub dispatched: usize,
+    /// Unique cells satisfied by the persistent store before dispatch.
+    pub store_hits: usize,
+    /// Computed results written back to the store.
+    pub store_writes: usize,
+}
+
 /// The coordinator: fans cells to worker processes, merges outcomes.
 #[derive(Debug)]
 pub struct Fabric {
@@ -592,35 +686,91 @@ impl Fabric {
         cfg: &Config,
         cells: &[Cell],
     ) -> Vec<Result<SimResult, FabricError>> {
+        self.run_with_stats(cfg, cells).0
+    }
+
+    /// [`Fabric::run`] plus a [`FabricStats`] accounting of store hits
+    /// vs. dispatched computes.
+    pub fn run_with_stats(
+        &self,
+        cfg: &Config,
+        cells: &[Cell],
+    ) -> (Vec<Result<SimResult, FabricError>>, FabricStats) {
+        let mut stats = FabricStats::default();
         if cells.is_empty() {
-            return Vec::new();
+            return (Vec::new(), stats);
         }
+        let cfg_json = cfg.to_json_string();
         let cfg_line = json::to_compact_string(
-            &json::parse(&cfg.to_json_string()).expect("canonical config JSON parses"),
+            &json::parse(&cfg_json).expect("canonical config JSON parses"),
         );
-        let keys: Vec<String> = cells.iter().map(|c| content_key(cfg, c)).collect();
+        let keys: Vec<String> = cells
+            .iter()
+            .map(|c| content_key_with_cfg_json(&cfg_json, c))
+            .collect();
         // Dedup: first index per key computes; repeats fan out after.
         let mut first_for_key: HashMap<&str, usize> = HashMap::new();
-        let mut work: Vec<usize> = Vec::new();
+        let mut unique: Vec<usize> = Vec::new();
         for (i, k) in keys.iter().enumerate() {
             if !first_for_key.contains_key(k.as_str()) {
                 first_for_key.insert(k, i);
-                work.push(i);
+                unique.push(i);
             }
         }
+        let mut slots_init: Vec<Option<Result<SimResult, FabricError>>> =
+            vec![None; cells.len()];
+        // Persistent tier (ISSUE 10): satisfy unique cells from the
+        // store *before* spawning anything. Miss and Corrupt both fall
+        // through to dispatch (a corrupt entry was already removed; the
+        // write-back below replaces it).
+        let mut work: Vec<usize> = Vec::new();
+        if let Some(store) = &self.opts.store {
+            for &i in &unique {
+                match store.load(&keys[i]) {
+                    StoreLookup::Hit(r) => {
+                        slots_init[i] = Some(Ok(r));
+                        stats.store_hits += 1;
+                    }
+                    StoreLookup::Miss | StoreLookup::Corrupt(_) => work.push(i),
+                }
+            }
+        } else {
+            work = unique;
+        }
+        stats.dispatched = work.len();
+        // The coordinator owns the frame format: workers inherit it via
+        // argv, so both ends agree by construction.
+        let mut worker_cmd = self.opts.worker_cmd.clone();
+        if self.opts.frame_format == FrameFormat::Binary {
+            worker_cmd.push("--frame-format".into());
+            worker_cmd.push("binary".into());
+        }
         let slots: Mutex<Vec<Option<Result<SimResult, FabricError>>>> =
-            Mutex::new(vec![None; cells.len()]);
+            Mutex::new(slots_init);
         let queue: Mutex<std::collections::VecDeque<usize>> =
             Mutex::new(work.iter().copied().collect());
-        let n_workers = self.opts.workers.min(work.len()).max(1);
-        std::thread::scope(|scope| {
-            for _ in 0..n_workers {
-                scope.spawn(|| {
-                    self.worker_slot(&cfg_line, cells, &keys, &queue, &slots)
-                });
-            }
-        });
+        if !work.is_empty() {
+            let n_workers = self.opts.workers.min(work.len()).max(1);
+            std::thread::scope(|scope| {
+                for _ in 0..n_workers {
+                    scope.spawn(|| {
+                        self.worker_slot(&worker_cmd, &cfg_line, cells, &keys, &queue, &slots)
+                    });
+                }
+            });
+        }
         let mut slots = slots.into_inner().expect("fabric slots poisoned");
+        // Write computed results back to the store (best-effort: a full
+        // disk never fails a sweep that has the results in memory).
+        if let Some(store) = &self.opts.store {
+            for &i in &work {
+                if let Some(Ok(r)) = &slots[i] {
+                    if store.save(&keys[i], r).is_ok() {
+                        stats.store_writes += 1;
+                    }
+                }
+            }
+        }
         // Fan computed outcomes out to duplicate cells; fail anything a
         // retired fleet left behind (never silently absent).
         for i in 0..cells.len() {
@@ -635,7 +785,11 @@ impl Fabric {
             };
             slots[i] = Some(outcome.flatten_none(&cells[i]));
         }
-        slots.into_iter().map(|s| s.expect("every slot filled")).collect()
+        let outcomes = slots
+            .into_iter()
+            .map(|s| s.expect("every slot filled"))
+            .collect();
+        (outcomes, stats)
     }
 
     /// One coordinator thread driving one (respawnable) worker process:
@@ -643,6 +797,7 @@ impl Fabric {
     /// timeout. Any worker misbehaviour fails only the in-flight cell.
     fn worker_slot(
         &self,
+        worker_cmd: &[String],
         cfg_line: &str,
         cells: &[Cell],
         keys: &[String],
@@ -658,7 +813,7 @@ impl Fabric {
             let cell = &cells[i];
             // (Re)spawn on demand.
             if worker.is_none() {
-                match WorkerHandle::spawn(&self.opts.worker_cmd, cfg_line) {
+                match WorkerHandle::spawn(worker_cmd, cfg_line) {
                     Ok(w) => worker = Some(w),
                     Err(e) => {
                         store(slots, i, Err(fabric_error(cell, e.to_string())));
@@ -796,11 +951,18 @@ impl Fabric {
             );
             return true;
         }
-        match v
-            .get("result")
-            .ok_or_else(|| anyhow::anyhow!("response frame: missing 'result'"))
-            .and_then(result_from_json)
-        {
+        // Either payload encoding is accepted regardless of the
+        // requested format — the envelope names which one is present.
+        let decoded = if let Some(b64) = v.get("result_b64").and_then(|x| x.as_str()) {
+            codec::b64_decode(b64)
+                .and_then(|bytes| codec::decode_result(&bytes))
+                .map_err(|e| anyhow::anyhow!("response frame: binary payload: {e}"))
+        } else {
+            v.get("result")
+                .ok_or_else(|| anyhow::anyhow!("response frame: missing 'result'"))
+                .and_then(result_from_json)
+        };
+        match decoded {
             Ok(r) => {
                 store(slots, i, Ok(r));
                 false
@@ -1063,7 +1225,13 @@ mod tests {
         input.push_str(&request_frame(0, &key, &cell));
         input.push('\n');
         let mut out: Vec<u8> = Vec::new();
-        run_worker(std::io::Cursor::new(input.into_bytes()), &mut out, None).unwrap();
+        run_worker(
+            std::io::Cursor::new(input.into_bytes()),
+            &mut out,
+            None,
+            FrameFormat::Json,
+        )
+        .unwrap();
         let reply = String::from_utf8(out).unwrap();
         let v = json::parse(reply.trim()).unwrap();
         assert_eq!(v.get("id").and_then(|x| x.as_u64()), Some(0));
@@ -1074,6 +1242,72 @@ mod tests {
         assert_eq!(r.latencies(), local.latencies());
         assert_eq!(r.events, local.events);
         assert_eq!(r.tail, local.tail);
+    }
+
+    #[test]
+    fn binary_worker_frames_are_bit_identical_to_json() {
+        // Same cell through both frame formats: the base64 binary
+        // payload must re-materialise bit-identically to the JSON one
+        // (the in-memory differential half of the ISSUE-10 codec gate;
+        // the process-level half lives in tests/fabric.rs).
+        let cfg = Config::default();
+        let cell = Cell::new(
+            ScenarioConfig::bursty(3.0, 11)
+                .with_duration(40.0, 5.0)
+                .with_replicas(2),
+            Policy::Hedged,
+        );
+        let key = content_key(&cfg, &cell);
+        let mut input = json::to_compact_string(
+            &json::parse(&cfg.to_json_string()).unwrap(),
+        );
+        input.push('\n');
+        input.push_str(&request_frame(0, &key, &cell));
+        input.push('\n');
+        let mut json_out: Vec<u8> = Vec::new();
+        run_worker(
+            std::io::Cursor::new(input.clone().into_bytes()),
+            &mut json_out,
+            None,
+            FrameFormat::Json,
+        )
+        .unwrap();
+        let mut bin_out: Vec<u8> = Vec::new();
+        run_worker(
+            std::io::Cursor::new(input.into_bytes()),
+            &mut bin_out,
+            None,
+            FrameFormat::Binary,
+        )
+        .unwrap();
+        let jv = json::parse(String::from_utf8(json_out).unwrap().trim()).unwrap();
+        let bv = json::parse(String::from_utf8(bin_out).unwrap().trim()).unwrap();
+        assert!(bv.get("result").is_none(), "binary frame carries no JSON result");
+        let b64 = bv.get("result_b64").and_then(|x| x.as_str()).unwrap();
+        let from_bin =
+            codec::decode_result(&codec::b64_decode(b64).unwrap()).unwrap();
+        let from_json = result_from_json(jv.get("result").unwrap()).unwrap();
+        assert_eq!(from_bin.completed.len(), from_json.completed.len());
+        for (a, b) in from_bin.completed.iter().zip(&from_json.completed) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.arrived.to_bits(), b.arrived.to_bits());
+            assert_eq!(a.finished.to_bits(), b.finished.to_bits());
+            assert_eq!(a.quality, b.quality);
+            assert_eq!(a.offloaded, b.offloaded);
+        }
+        assert_eq!(from_bin.tail, from_json.tail);
+        assert_eq!(from_bin.events, from_json.events);
+        assert_eq!(
+            from_bin.mean_replicas.to_bits(),
+            from_json.mean_replicas.to_bits()
+        );
+        // And the binary payload is the byte-leaner wire form.
+        let json_len = json::to_compact_string(jv.get("result").unwrap()).len();
+        assert!(
+            b64.len() < json_len,
+            "binary payload ({}) not smaller than JSON ({json_len})",
+            b64.len()
+        );
     }
 
     #[test]
@@ -1102,7 +1336,13 @@ mod tests {
         input.push_str(&request_frame(1, &content_key(&cfg, &good_cell), &good_cell));
         input.push('\n');
         let mut out: Vec<u8> = Vec::new();
-        run_worker(std::io::Cursor::new(input.into_bytes()), &mut out, None).unwrap();
+        run_worker(
+            std::io::Cursor::new(input.into_bytes()),
+            &mut out,
+            None,
+            FrameFormat::Json,
+        )
+        .unwrap();
         let reply = String::from_utf8(out).unwrap();
         let lines: Vec<&str> = reply.lines().collect();
         assert_eq!(lines.len(), 2, "worker must survive the panic: {reply}");

@@ -20,7 +20,9 @@
 //! * [`fabric`] — the cross-process experiment fabric: plan cells, fan
 //!   them to `laimr sweep --worker` children over line-delimited JSON,
 //!   merge per-cell outcomes, SHA-256 content-keyed memoization
-//!   (ISSUE 9).
+//!   (ISSUE 9);
+//! * [`store`] — the persistent content-addressed result store backing
+//!   warm-start sweeps across sessions and processes (ISSUE 10).
 
 pub mod components;
 mod engine;
@@ -31,6 +33,7 @@ pub mod fabric;
 pub mod policy;
 mod result;
 pub mod runner;
+pub mod store;
 
 pub use components::{
     fault_injector_for, partition_windows, seed_fault_events, CadencePlan, ExpPodCrashes,
@@ -40,10 +43,14 @@ pub use engine::{Architecture, Simulation};
 pub use event_log::{render_event_log, replay_hash, verify_event_log};
 pub use expect::{check_expectation, evaluate_document, ExpectationFailure};
 pub use events::{Event, EventQueue, TimedEvent};
-pub use fabric::{content_key, plan_cells, Fabric, FabricError, FabricOptions};
+pub use fabric::{
+    content_key, content_key_with_cfg_json, plan_cells, Fabric, FabricError, FabricOptions,
+    FabricStats, FrameFormat,
+};
 pub use policy::{
     BaselinePolicy, ControlPolicy, DeadlineShedPolicy, Dispatch, HedgedPolicy, HybridPolicy,
     LaImrPolicy, Policy, ShedReason, StaticPolicy, Verdict,
 };
 pub use result::{CompletedRequest, ShedRecord, SimResult, TailCounters};
 pub use runner::{Cell, CellFailure, Runner, SimCache};
+pub use store::{GcReport, ResultStore, StoreLookup, StoreTally, VerifyReport};

@@ -12,7 +12,7 @@ use crate::config::QualityClass;
 use crate::sim::policy::ShedReason;
 use crate::telemetry::{box_stats_sorted, BoxStats, Summary};
 use crate::SimTime;
-use std::cell::OnceCell;
+use std::sync::OnceLock;
 
 /// One finished request.
 #[derive(Debug, Clone, Copy)]
@@ -91,13 +91,16 @@ impl TailCounters {
 }
 
 /// Lazily-built derived statistics (sorted series + per-lane partitions).
-/// Cloning a result carries any already-computed caches along.
+/// Cloning a result carries any already-computed caches along. `OnceLock`
+/// (not `OnceCell`) so a `SimResult` is `Sync` and a single memoized
+/// `Arc<SimResult>` can be shared across runner threads without cloning
+/// the completion vectors (ISSUE 10 zero-copy memo tier).
 #[derive(Debug, Clone, Default)]
 pub(crate) struct StatsCache {
-    sorted: OnceCell<Vec<f64>>,
+    sorted: OnceLock<Vec<f64>>,
     /// Per-quality-lane latencies (completion order, then sorted), indexed
     /// by `QualityClass::priority()`.
-    lanes: OnceCell<[Vec<f64>; 3]>,
+    lanes: OnceLock<[Vec<f64>; 3]>,
 }
 
 /// Aggregated outcome of one simulation run.
@@ -376,5 +379,16 @@ mod tests {
         let c = r.clone();
         assert_eq!(c.summary(), s1);
         assert_eq!(c.sorted_latencies(), r.sorted_latencies());
+    }
+
+    #[test]
+    fn sim_result_is_send_and_sync() {
+        // The zero-copy memo tier shares one `Arc<SimResult>` across
+        // runner threads; that requires `SimResult: Send + Sync`, which
+        // in turn pins `StatsCache` to `OnceLock` (a regression to
+        // `OnceCell` fails this at compile time).
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SimResult>();
+        assert_send_sync::<std::sync::Arc<SimResult>>();
     }
 }

@@ -15,14 +15,23 @@
 //! `hash(cfg, scenario, policy, arch)` — the scenario hash covers the
 //! seed, and the config hash covers every `engine` knob (mode, calendar
 //! bucket width, fluid envelope), so `des` and `hybrid` runs can never
-//! cross-pollinate the cache — to its `SimResult`. Because a cell is a
-//! pure function of that key, a hit returns a clone that is
-//! bit-identical to the cold run (enforced by
+//! cross-pollinate the cache — to its `Arc<SimResult>`. Because a cell
+//! is a pure function of that key, a hit returns a shared handle on the
+//! *same* result — zero-copy: no re-clone of the completion vectors
+//! (ISSUE 10) — that is bit-identical to the cold run (enforced by
 //! `tests/runner_memoization.rs`). The paper sweeps share many cells
 //! (Table VI and Figs 7/8 reuse the same λ × seed × policy grid), so a
 //! cache-bearing `Runner` computes them once per `repro all`.
+//!
+//! Below the in-memory tier sits the optional persistent
+//! [`ResultStore`] (ISSUE 10, [`Runner::with_store`]): memory misses
+//! probe the disk store under the cross-binary-stable
+//! `fabric::content_key` before computing, and freshly computed results
+//! are written back best-effort — so a re-run of an unchanged sweep in a
+//! *new process* computes nothing.
 
 use crate::config::{Config, ScenarioConfig};
+use crate::sim::store::{ResultStore, StoreLookup};
 use crate::sim::{Architecture, Policy, SimResult, Simulation};
 use std::collections::hash_map::DefaultHasher;
 use std::collections::{HashMap, HashSet};
@@ -83,12 +92,15 @@ impl Cell {
     }
 }
 
-/// Shared result memo: cache key → `SimResult`. Thread-safe; hits clone
-/// the stored result (clones are bit-identical — same latency series,
-/// same counters).
+/// Shared result memo: cache key → `Arc<SimResult>`. Thread-safe; a hit
+/// bumps a refcount instead of deep-cloning the stored result (ISSUE 10
+/// zero-copy tier — at million-robot scale a single completion vector is
+/// multi-MB, and the old clone-per-hit dominated warm sweeps). The
+/// shared handle is bit-identical to the cold run by construction: it
+/// *is* the cold run's result.
 #[derive(Debug, Default)]
 pub struct SimCache {
-    map: Mutex<HashMap<u64, SimResult>>,
+    map: Mutex<HashMap<u64, Arc<SimResult>>>,
 }
 
 impl SimCache {
@@ -105,16 +117,16 @@ impl SimCache {
         self.len() == 0
     }
 
-    fn get(&self, key: u64) -> Option<SimResult> {
+    fn get(&self, key: u64) -> Option<Arc<SimResult>> {
         self.map.lock().expect("sim cache poisoned").get(&key).cloned()
     }
 
-    fn insert(&self, key: u64, result: &SimResult) {
+    fn insert(&self, key: u64, result: &Arc<SimResult>) {
         self.map
             .lock()
             .expect("sim cache poisoned")
             .entry(key)
-            .or_insert_with(|| result.clone());
+            .or_insert_with(|| Arc::clone(result));
     }
 }
 
@@ -202,6 +214,10 @@ pub(crate) fn run_cell_caught(cell: &Cell, cfg: &Config) -> Result<SimResult, Ce
 pub struct Runner {
     threads: usize,
     cache: Option<Arc<SimCache>>,
+    /// Persistent tier below the in-memory memo (ISSUE 10). Consulted on
+    /// memory misses and written back on computes; rides the memo tier,
+    /// so [`Runner::without_cache`] disables it too.
+    store: Option<Arc<ResultStore>>,
 }
 
 impl Default for Runner {
@@ -225,6 +241,7 @@ impl Runner {
         Ok(Runner {
             threads,
             cache: Some(Arc::new(SimCache::new())),
+            store: None,
         })
     }
 
@@ -240,6 +257,7 @@ impl Runner {
         Runner {
             threads: 1,
             cache: Some(Arc::new(SimCache::new())),
+            store: None,
         }
     }
 
@@ -248,20 +266,33 @@ impl Runner {
         Runner {
             threads: threads.max(1),
             cache: Some(Arc::new(SimCache::new())),
+            store: None,
         }
     }
 
     /// Disable result memoization: every cell is computed, repeats and
     /// all — the cold-path reference the memoization tests compare
-    /// against.
+    /// against. Also detaches any persistent store (the disk tier rides
+    /// the memo tier).
     pub fn without_cache(mut self) -> Self {
         self.cache = None;
+        self.store = None;
         self
     }
 
     /// Share an existing cache (e.g. across several report sweeps).
     pub fn with_cache(mut self, cache: Arc<SimCache>) -> Self {
         self.cache = Some(cache);
+        self
+    }
+
+    /// Attach a persistent [`ResultStore`] below the in-memory memo
+    /// (ISSUE 10): memory misses probe the store under the
+    /// cross-binary-stable `content_key`, and computed results are
+    /// written back best-effort (a failed write never fails the sweep).
+    /// No-op while the memo cache is disabled.
+    pub fn with_store(mut self, store: Arc<ResultStore>) -> Self {
+        self.store = Some(store);
         self
     }
 
@@ -274,11 +305,12 @@ impl Runner {
         self.cache.as_ref().map(|c| c.len())
     }
 
-    /// Run every cell and return results in input order. A panicking
+    /// Run every cell and return results in input order (shared handles:
+    /// repeats of one cell all point at the same allocation). A panicking
     /// cell re-panics here, but with the offender's scenario/policy/seed
     /// in the message — callers who want the surviving results instead
     /// use [`Runner::run_outcomes`].
-    pub fn run(&self, cfg: &Config, cells: &[Cell]) -> Vec<SimResult> {
+    pub fn run(&self, cfg: &Config, cells: &[Cell]) -> Vec<Arc<SimResult>> {
         self.run_outcomes(cfg, cells)
             .into_iter()
             .map(|r| r.unwrap_or_else(|f| panic!("{f}")))
@@ -288,23 +320,59 @@ impl Runner {
     /// Run every cell, returning per-cell outcomes in input order. One
     /// panicking cell fails only its own slot (as a [`CellFailure`]
     /// naming scenario/policy/seed); every other cell's result survives.
-    /// Failures are never memoized — a retried sweep recomputes them.
+    /// Failures are never memoized and never persisted — a retried sweep
+    /// recomputes them.
     pub fn run_outcomes(
         &self,
         cfg: &Config,
         cells: &[Cell],
-    ) -> Vec<Result<SimResult, CellFailure>> {
+    ) -> Vec<Result<Arc<SimResult>, CellFailure>> {
         match &self.cache {
             None => {
                 let work: Vec<usize> = (0..cells.len()).collect();
                 let mut computed = self.compute(cfg, cells, &work);
                 computed.sort_unstable_by_key(|pair| pair.0);
-                computed.into_iter().map(|(_, r)| r).collect()
+                computed
+                    .into_iter()
+                    .map(|(_, r)| r.map(Arc::new))
+                    .collect()
             }
             Some(cache) => {
                 let keys: Vec<u64> = cells.iter().map(|c| c.cache_key(cfg)).collect();
-                let mut slots: Vec<Option<Result<SimResult, CellFailure>>> =
+                let mut slots: Vec<Option<Result<Arc<SimResult>, CellFailure>>> =
                     keys.iter().map(|&k| cache.get(k).map(Ok)).collect();
+                // Disk tier (ISSUE 10): probe the persistent store for
+                // cells the memory tier missed. One probe per distinct
+                // key; a verified hit seeds the memory tier so the rest
+                // of the process stays zero-copy. Miss and Corrupt both
+                // fall through to compute (the store already removed a
+                // corrupt entry; the write-back below replaces it).
+                let cfg_json: Option<String> =
+                    self.store.as_ref().map(|_| cfg.to_json_string());
+                if let (Some(store), Some(cfg_json)) = (&self.store, cfg_json.as_deref()) {
+                    let mut probed: HashMap<u64, Option<Arc<SimResult>>> = HashMap::new();
+                    for i in 0..cells.len() {
+                        if slots[i].is_some() {
+                            continue;
+                        }
+                        let hit = probed
+                            .entry(keys[i])
+                            .or_insert_with(|| {
+                                let ck = crate::sim::fabric::content_key_with_cfg_json(
+                                    cfg_json, &cells[i],
+                                );
+                                match store.load(&ck) {
+                                    StoreLookup::Hit(r) => Some(Arc::new(r)),
+                                    StoreLookup::Miss | StoreLookup::Corrupt(_) => None,
+                                }
+                            })
+                            .clone();
+                        if let Some(r) = hit {
+                            cache.insert(keys[i], &r);
+                            slots[i] = Some(Ok(r));
+                        }
+                    }
+                }
                 // First occurrence of each still-missing key computes;
                 // intra-batch repeats resolve from the batch afterwards
                 // (failed cells never enter the long-lived cache).
@@ -315,10 +383,23 @@ impl Runner {
                         work.push(i);
                     }
                 }
-                let mut batch: HashMap<u64, Result<SimResult, CellFailure>> = HashMap::new();
+                let mut batch: HashMap<u64, Result<Arc<SimResult>, CellFailure>> =
+                    HashMap::new();
                 for (i, r) in self.compute(cfg, cells, &work) {
+                    let r = r.map(Arc::new);
                     if let Ok(ok) = &r {
                         cache.insert(keys[i], ok);
+                        if let (Some(store), Some(cfg_json)) =
+                            (&self.store, cfg_json.as_deref())
+                        {
+                            // Best-effort write-back: a full disk or
+                            // read-only store must not fail a sweep that
+                            // already has the result in memory.
+                            let ck = crate::sim::fabric::content_key_with_cfg_json(
+                                cfg_json, &cells[i],
+                            );
+                            let _ = store.save(&ck, ok);
+                        }
                     }
                     batch.insert(keys[i], r.clone());
                     slots[i] = Some(r);
@@ -566,5 +647,79 @@ mod tests {
         assert_eq!(runner.cache_len(), Some(1), "repeat cells re-computed");
         assert_eq!(results[0].latencies(), results[1].latencies());
         assert_eq!(results[1].latencies(), results[2].latencies());
+    }
+
+    #[test]
+    fn memo_hits_share_one_allocation() {
+        // The zero-copy contract (ISSUE 10): a cache hit is the *same*
+        // `Arc<SimResult>` as the cold run, not a deep clone of the
+        // completion vectors.
+        let cfg = Config::default();
+        let one = grid(&[13]).remove(0);
+        let runner = Runner::serial();
+        let first = runner.run(&cfg, std::slice::from_ref(&one));
+        let second = runner.run(&cfg, std::slice::from_ref(&one));
+        assert!(
+            Arc::ptr_eq(&first[0], &second[0]),
+            "cache hit must return the shared allocation, not a clone"
+        );
+        // Intra-batch repeats share it too.
+        let both = runner.run(&cfg, &[one.clone(), one]);
+        assert!(Arc::ptr_eq(&both[0], &both[1]));
+        assert!(Arc::ptr_eq(&both[0], &first[0]));
+    }
+
+    #[test]
+    fn disk_store_warm_start_computes_nothing() {
+        let cfg = Config::default();
+        let cells = grid(&[11]);
+        let dir = std::env::temp_dir().join(format!(
+            "laimr-runner-store-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        let cold = Runner::serial().with_store(Arc::clone(&store)).run(&cfg, &cells);
+        assert_eq!(
+            store.tally().writes,
+            cells.len() as u64,
+            "every cold cell persisted"
+        );
+        // A *fresh* handle (fresh process, in effect): every cell loads
+        // from disk, nothing computes — computed cells would write.
+        let store2 = Arc::new(ResultStore::open(&dir).unwrap());
+        let warm = Runner::serial()
+            .with_store(Arc::clone(&store2))
+            .run(&cfg, &cells);
+        let t = store2.tally();
+        assert_eq!(t.hits, cells.len() as u64, "warm run loads every cell");
+        assert_eq!(t.writes, 0, "warm run computes nothing");
+        assert_eq!(t.corrupt, 0);
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.latencies(), b.latencies());
+            assert_eq!(a.events, b.events);
+            assert_eq!(a.tail, b.tail);
+            assert_eq!(a.generated, b.generated);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn without_cache_also_detaches_the_store() {
+        let cfg = Config::default();
+        let cells = grid(&[17]);
+        let dir = std::env::temp_dir().join(format!(
+            "laimr-runner-nostore-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        let _ = Runner::serial()
+            .with_store(Arc::clone(&store))
+            .without_cache()
+            .run(&cfg, &cells);
+        assert_eq!(store.tally().writes, 0, "cold-path reference must not persist");
+        assert_eq!(store.disk_stats().unwrap().0, 0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

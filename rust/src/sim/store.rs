@@ -1,0 +1,538 @@
+//! Persistent content-addressed result store (ISSUE 10).
+//!
+//! On-disk tier of the two-level memoization stack: entries are keyed by
+//! [`crate::sim::fabric::content_key`] — the SHA-256 over canonical cell
+//! content that is stable across binaries, processes, and sessions
+//! (never `Cell::cache_key`'s `DefaultHasher`, whose output is
+//! unspecified across builds). A warm sweep over an unchanged
+//! (config × scenario × policy × seed) grid loads every cell from disk
+//! and computes nothing.
+//!
+//! Durability contract:
+//! * **Atomic writes.** Entries land via tmp-file + `rename` in the same
+//!   directory, so a concurrent reader never observes a torn write and
+//!   two writers racing the same key resolve to one complete entry
+//!   (identical content ⇒ last-writer-wins is byte-identical).
+//! * **Self-verifying entries.** Each file embeds its format version,
+//!   its own content key, the payload length, and a SHA-256 of the
+//!   payload. A truncated, bit-flipped, misfiled, or stale-format entry
+//!   is *diagnosed* ([`StoreLookup::Corrupt`]), removed best-effort, and
+//!   the cell transparently recomputed and rewritten — a bad entry can
+//!   cost one recompute, never a panic, never a poisoned sweep.
+//! * **Failures never persist.** Only `Ok` results are written; a cell
+//!   that crashed or timed out is retried from scratch next run.
+
+use std::fs;
+use std::io::{self, ErrorKind};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::sim::SimResult;
+use crate::util::codec;
+use crate::util::sha256::{hex, Sha256};
+
+/// Entry-file magic: 7 bytes of name + 1 version byte. Bumping the
+/// version makes old entries read as "unknown store format version" —
+/// skipped and rewritten, never misparsed.
+const STORE_MAGIC: &[u8; 8] = b"LAIMRST1";
+/// magic(8) + content key(32) + payload_len(8) + payload sha256(32).
+const HEADER_LEN: usize = 8 + 32 + 8 + 32;
+/// Store entries live as `<64-hex-content-key>.laimr`.
+const ENTRY_EXT: &str = "laimr";
+
+/// Monotonic per-process suffix so concurrent writers in one process
+/// never collide on a tmp name (cross-process uniqueness comes from the
+/// pid component).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Outcome of a store probe for one content key.
+#[derive(Debug)]
+pub enum StoreLookup {
+    /// A verified entry: payload hash matched, codec decoded cleanly.
+    Hit(SimResult),
+    /// No entry on disk.
+    Miss,
+    /// An entry existed but failed verification (reason named). The bad
+    /// file has already been removed best-effort; the caller recomputes.
+    Corrupt(String),
+}
+
+/// Snapshot of one handle's lookup/write counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreTally {
+    pub hits: u64,
+    pub misses: u64,
+    pub corrupt: u64,
+    pub writes: u64,
+}
+
+/// Result of a read-only [`ResultStore::verify`] audit.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    /// Entries that passed full verification.
+    pub ok: usize,
+    /// `(file name, reason)` for every entry that failed.
+    pub corrupt: Vec<(String, String)>,
+}
+
+/// Result of a [`ResultStore::gc`] pass.
+#[derive(Debug, Default)]
+pub struct GcReport {
+    /// Corrupt entries removed.
+    pub removed_corrupt: usize,
+    /// Orphaned `*.tmp` files (from interrupted writes) removed.
+    pub removed_tmp: usize,
+    /// Verified entries left in place.
+    pub kept: usize,
+}
+
+/// Handle on one store directory. Cheap to clone via `Arc`; counters are
+/// per-handle (a fresh handle on a warm directory starts at zero, which
+/// is what the warm-start gates assert against).
+#[derive(Debug)]
+pub struct ResultStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    corrupt: AtomicU64,
+    writes: AtomicU64,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)
+            .map_err(|e| anyhow::anyhow!("cache dir {}: {e}", dir.display()))?;
+        Ok(ResultStore {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            corrupt: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+        })
+    }
+
+    /// The store's root directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Probe the store for `key` (a 64-hex `content_key`). Never panics
+    /// and never returns an unverified result: anything short of a full
+    /// header + key + hash + codec match is [`StoreLookup::Corrupt`].
+    pub fn load(&self, key: &str) -> StoreLookup {
+        let Some(path) = self.entry_path(key) else {
+            self.corrupt.fetch_add(1, Ordering::Relaxed);
+            return StoreLookup::Corrupt(format!("malformed content key '{key}'"));
+        };
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == ErrorKind::NotFound => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return StoreLookup::Miss;
+            }
+            Err(e) => {
+                // Unreadable but present (permissions, I/O error): treat
+                // as corrupt for this run, but do not delete — the entry
+                // may be fine once the I/O condition clears.
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                return StoreLookup::Corrupt(format!("read {}: {e}", path.display()));
+            }
+        };
+        match parse_entry(key, &bytes) {
+            Ok(result) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                StoreLookup::Hit(result)
+            }
+            Err(reason) => {
+                // Self-heal: drop the bad entry so the recompute's
+                // rewrite starts clean. Best-effort — a failed unlink
+                // just means the same diagnosis next run.
+                let _ = fs::remove_file(&path);
+                self.corrupt.fetch_add(1, Ordering::Relaxed);
+                StoreLookup::Corrupt(reason)
+            }
+        }
+    }
+
+    /// Persist `result` under `key` atomically (tmp file + rename in the
+    /// same directory). Callers treat errors as advisory: a full disk
+    /// must not poison a sweep that already has the result in memory.
+    pub fn save(&self, key: &str, result: &SimResult) -> io::Result<()> {
+        let path = self.entry_path(key).ok_or_else(|| {
+            io::Error::new(
+                ErrorKind::InvalidInput,
+                format!("malformed content key '{key}'"),
+            )
+        })?;
+        let payload = codec::encode_result(result);
+        let mut entry = Vec::with_capacity(HEADER_LEN + payload.len());
+        entry.extend_from_slice(STORE_MAGIC);
+        entry.extend_from_slice(&key_bytes(key).expect("entry_path validated the key"));
+        entry.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        let mut hasher = Sha256::new();
+        hasher.update(&payload);
+        entry.extend_from_slice(&hasher.finish());
+        entry.extend_from_slice(&payload);
+
+        let tmp = self.dir.join(format!(
+            ".{}.{}.{}.tmp",
+            &key[..16],
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        fs::write(&tmp, &entry)?;
+        match fs::rename(&tmp, &path) {
+            Ok(()) => {
+                self.writes.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(e) => {
+                let _ = fs::remove_file(&tmp);
+                Err(e)
+            }
+        }
+    }
+
+    /// This handle's lookup/write counters.
+    pub fn tally(&self) -> StoreTally {
+        StoreTally {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            corrupt: self.corrupt.load(Ordering::Relaxed),
+            writes: self.writes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// `(entry count, total entry bytes)` currently on disk.
+    pub fn disk_stats(&self) -> io::Result<(usize, u64)> {
+        let mut entries = 0usize;
+        let mut bytes = 0u64;
+        for name in self.entry_names()? {
+            entries += 1;
+            bytes += fs::metadata(self.dir.join(&name)).map(|m| m.len()).unwrap_or(0);
+        }
+        Ok((entries, bytes))
+    }
+
+    /// Read-only audit: verify every entry end-to-end (magic, key,
+    /// length, payload hash, codec decode) without modifying the store.
+    pub fn verify(&self) -> io::Result<VerifyReport> {
+        let mut report = VerifyReport::default();
+        for name in self.entry_names()? {
+            let key = name.trim_end_matches(&format!(".{ENTRY_EXT}")).to_string();
+            let outcome = fs::read(self.dir.join(&name))
+                .map_err(|e| format!("read: {e}"))
+                .and_then(|bytes| parse_entry(&key, &bytes));
+            match outcome {
+                Ok(_) => report.ok += 1,
+                Err(reason) => report.corrupt.push((name, reason)),
+            }
+        }
+        Ok(report)
+    }
+
+    /// Remove corrupt entries and orphaned tmp files; keep verified
+    /// entries untouched.
+    pub fn gc(&self) -> io::Result<GcReport> {
+        let mut report = GcReport::default();
+        let audit = self.verify()?;
+        report.kept = audit.ok;
+        for (name, _reason) in audit.corrupt {
+            if fs::remove_file(self.dir.join(&name)).is_ok() {
+                report.removed_corrupt += 1;
+            }
+        }
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".tmp") && fs::remove_file(entry.path()).is_ok() {
+                report.removed_tmp += 1;
+            }
+        }
+        Ok(report)
+    }
+
+    /// File names of every `<key>.laimr` entry in the store.
+    fn entry_names(&self) -> io::Result<Vec<String>> {
+        let mut names = Vec::new();
+        for entry in fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(stem) = name.strip_suffix(&format!(".{ENTRY_EXT}")) {
+                if key_bytes(stem).is_some() {
+                    names.push(name.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    /// Path for `key`, or `None` if the key is not 64 lowercase hex —
+    /// the validation doubles as a path-traversal guard (a key can never
+    /// contain separators or dots).
+    fn entry_path(&self, key: &str) -> Option<PathBuf> {
+        key_bytes(key)?;
+        Some(self.dir.join(format!("{key}.{ENTRY_EXT}")))
+    }
+}
+
+/// Decode a 64-lowercase-hex content key into its 32 raw bytes.
+fn key_bytes(key: &str) -> Option<[u8; 32]> {
+    let bytes = key.as_bytes();
+    if bytes.len() != 64 {
+        return None;
+    }
+    let mut out = [0u8; 32];
+    for (i, pair) in bytes.chunks(2).enumerate() {
+        let hi = hex_nibble(pair[0])?;
+        let lo = hex_nibble(pair[1])?;
+        out[i] = (hi << 4) | lo;
+    }
+    Some(out)
+}
+
+fn hex_nibble(c: u8) -> Option<u8> {
+    match c {
+        b'0'..=b'9' => Some(c - b'0'),
+        b'a'..=b'f' => Some(c - b'a' + 10),
+        _ => None, // uppercase rejected: content_key emits lowercase only
+    }
+}
+
+/// Verify and decode one raw entry. Every failure is a named diagnosis;
+/// the function never panics on hostile bytes.
+fn parse_entry(key: &str, bytes: &[u8]) -> Result<SimResult, String> {
+    if bytes.len() < HEADER_LEN {
+        return Err(format!(
+            "truncated header: {} bytes, need at least {HEADER_LEN}",
+            bytes.len()
+        ));
+    }
+    if bytes[..7] != STORE_MAGIC[..7] {
+        return Err("not a result-store entry (bad magic)".to_string());
+    }
+    if bytes[7] != STORE_MAGIC[7] {
+        return Err(format!(
+            "unknown store format version '{}'",
+            bytes[7] as char
+        ));
+    }
+    let embedded_key = &bytes[8..40];
+    let expect = key_bytes(key).ok_or_else(|| format!("malformed content key '{key}'"))?;
+    if embedded_key != expect.as_slice() {
+        return Err(format!(
+            "content-key mismatch: entry was written for {}",
+            hex(embedded_key)
+        ));
+    }
+    let payload_len =
+        u64::from_le_bytes(bytes[40..48].try_into().expect("8 bytes")) as usize;
+    let payload = &bytes[HEADER_LEN..];
+    if payload.len() != payload_len {
+        return Err(format!(
+            "payload length mismatch: header says {payload_len}, file has {} (truncated or torn write)",
+            payload.len()
+        ));
+    }
+    let mut hasher = Sha256::new();
+    hasher.update(payload);
+    if hasher.finish() != bytes[48..80] {
+        return Err("payload hash mismatch (bit flip or torn write)".to_string());
+    }
+    codec::decode_result(payload).map_err(|e| format!("payload codec: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "laimr-store-unit-{tag}-{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed),
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sample_key() -> String {
+        "ab".repeat(32)
+    }
+
+    fn sample_result() -> SimResult {
+        SimResult {
+            scenario_name: "store-unit".into(),
+            policy_name: "static".into(),
+            completed: vec![crate::sim::CompletedRequest {
+                id: 1,
+                arrived: 0.5,
+                finished: 1.25,
+                quality: crate::config::QualityClass::Balanced,
+                offloaded: false,
+            }],
+            generated: 1,
+            unfinished: 0,
+            unfinished_post_warmup: 0,
+            scale_outs: 0,
+            scale_ins: 0,
+            peak_replicas: 1,
+            mean_replicas: 1.0,
+            crashes: 0,
+            events: 10,
+            shed: Vec::new(),
+            tail: Default::default(),
+            fluid_batched: 0,
+            cache: Default::default(),
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_tally() {
+        let dir = temp_dir("roundtrip");
+        let store = ResultStore::open(&dir).unwrap();
+        let key = sample_key();
+        assert!(matches!(store.load(&key), StoreLookup::Miss));
+        store.save(&key, &sample_result()).unwrap();
+        match store.load(&key) {
+            StoreLookup::Hit(r) => assert_eq!(r.scenario_name, "store-unit"),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        assert_eq!(
+            store.tally(),
+            StoreTally {
+                hits: 1,
+                misses: 1,
+                corrupt: 0,
+                writes: 1
+            }
+        );
+        let (entries, bytes) = store.disk_stats().unwrap();
+        assert_eq!(entries, 1);
+        assert!(bytes > HEADER_LEN as u64);
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_keys_are_rejected_not_traversed() {
+        let dir = temp_dir("badkey");
+        let store = ResultStore::open(&dir).unwrap();
+        for key in [
+            "short",
+            &"AB".repeat(32),                   // uppercase
+            &format!("../{}", "ab".repeat(31)), // traversal attempt
+            &"zz".repeat(32),                   // non-hex
+        ] {
+            assert!(
+                matches!(store.load(key), StoreLookup::Corrupt(_)),
+                "key '{key}' must be rejected"
+            );
+            assert!(store.save(key, &sample_result()).is_err());
+        }
+        assert_eq!(store.disk_stats().unwrap().0, 0, "nothing written");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_entry_is_diagnosed_and_self_healed() {
+        let dir = temp_dir("heal");
+        let store = ResultStore::open(&dir).unwrap();
+        let key = sample_key();
+        store.save(&key, &sample_result()).unwrap();
+        let path = store.entry_path(&key).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        *bytes.last_mut().unwrap() ^= 0x01; // flip one payload bit
+        fs::write(&path, &bytes).unwrap();
+        match store.load(&key) {
+            StoreLookup::Corrupt(reason) => assert!(
+                reason.contains("hash mismatch"),
+                "unexpected reason: {reason}"
+            ),
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        assert!(!path.exists(), "bad entry removed (self-heal)");
+        // Recompute + rewrite restores a clean hit.
+        store.save(&key, &sample_result()).unwrap();
+        assert!(matches!(store.load(&key), StoreLookup::Hit(_)));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_and_gc_separate_good_from_bad() {
+        let dir = temp_dir("gc");
+        let store = ResultStore::open(&dir).unwrap();
+        let good = sample_key();
+        store.save(&good, &sample_result()).unwrap();
+        // A truncated sibling entry.
+        let bad = "cd".repeat(32);
+        let bad_path = store.entry_path(&bad).unwrap();
+        let full = fs::read(store.entry_path(&good).unwrap()).unwrap();
+        fs::write(&bad_path, &full[..HEADER_LEN + 3]).unwrap();
+        // An orphaned tmp file from an interrupted write.
+        fs::write(dir.join(".deadbeef.1.0.tmp"), b"junk").unwrap();
+
+        let audit = store.verify().unwrap();
+        assert_eq!(audit.ok, 1);
+        assert_eq!(audit.corrupt.len(), 1);
+        assert!(audit.corrupt[0].1.contains("mismatch"), "{:?}", audit.corrupt);
+        assert!(bad_path.exists(), "verify is read-only");
+
+        let gc = store.gc().unwrap();
+        assert_eq!((gc.kept, gc.removed_corrupt, gc.removed_tmp), (1, 1, 1));
+        assert!(!bad_path.exists());
+        assert!(matches!(store.load(&good), StoreLookup::Hit(_)));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn unknown_format_version_is_skipped_by_name() {
+        let dir = temp_dir("version");
+        let store = ResultStore::open(&dir).unwrap();
+        let key = sample_key();
+        store.save(&key, &sample_result()).unwrap();
+        let path = store.entry_path(&key).unwrap();
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[7] = b'9';
+        fs::write(&path, &bytes).unwrap();
+        match store.load(&key) {
+            StoreLookup::Corrupt(reason) => {
+                assert!(reason.contains("unknown store format version"), "{reason}")
+            }
+            other => panic!("expected corrupt, got {other:?}"),
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn concurrent_writers_racing_one_key_leave_a_complete_entry() {
+        let dir = temp_dir("race");
+        let store = Arc::new(ResultStore::open(&dir).unwrap());
+        let key = sample_key();
+        let result = sample_result();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                let store = Arc::clone(&store);
+                let key = key.clone();
+                let result = result.clone();
+                scope.spawn(move || {
+                    for _ in 0..4 {
+                        store.save(&key, &result).unwrap();
+                    }
+                });
+            }
+        });
+        match store.load(&key) {
+            StoreLookup::Hit(r) => assert_eq!(r.scenario_name, result.scenario_name),
+            other => panic!("expected hit after race, got {other:?}"),
+        }
+        let audit = store.verify().unwrap();
+        assert_eq!((audit.ok, audit.corrupt.len()), (1, 0));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

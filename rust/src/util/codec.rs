@@ -1,0 +1,689 @@
+//! Compact binary `SimResult` codec (ISSUE 10).
+//!
+//! Length-prefixed little-endian encoding of a full [`SimResult`], used
+//! by the persistent result store (`sim/store.rs`) and as the opt-in
+//! fabric worker frame payload (`--frame-format binary`). Floats are
+//! carried as raw IEEE-754 bit patterns (`to_le_bytes` of `to_bits()`),
+//! the event-log convention: byte-identical payloads mean bit-identical
+//! results, NaN/±inf/-0.0 included, and no decimal-formatting subtlety
+//! can smuggle a difference through. The encoding is differential-tested
+//! against the PR-9 `fabric::result_to_json`/`result_from_json` path
+//! (`tests/result_store.rs`).
+//!
+//! Robustness contract: [`decode_result`] never panics. Truncated,
+//! bit-flipped, or trailing-garbage input decodes to a named
+//! [`CodecError`]; declared lengths are sanity-checked against the
+//! remaining byte budget before any allocation, so a corrupted count
+//! cannot trigger an OOM.
+
+use crate::config::QualityClass;
+use crate::sim::{CompletedRequest, ShedRecord, ShedReason, SimResult, TailCounters};
+
+/// Format magic + version. Bump the trailing digit on any layout change;
+/// old entries then decode to [`CodecError::BadMagic`] and are treated
+/// as stale, never misread.
+pub const MAGIC: &[u8; 4] = b"LRC1";
+
+/// Minimum encoded size of one completed-request record
+/// (id + arrived + finished + quality + offloaded).
+const COMPLETED_RECORD_LEN: usize = 8 + 8 + 8 + 1 + 1;
+/// Minimum encoded size of one shed record
+/// (id + at + quality + reason + predicted).
+const SHED_RECORD_LEN: usize = 8 + 8 + 1 + 1 + 8;
+
+/// Named decode failure. Every variant is a *diagnosis*, not a panic:
+/// the store and the fabric treat any of these as "recompute the cell".
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CodecError {
+    /// Wrong magic/version prefix (stale format or not a codec payload).
+    BadMagic,
+    /// Input ended before `field` could be read in full.
+    Truncated {
+        field: &'static str,
+        need: usize,
+        have: usize,
+    },
+    /// A declared count/length exceeds the bytes actually present.
+    BadLength { field: &'static str },
+    /// An enum tag byte outside the known discriminants.
+    BadEnum { field: &'static str, value: u8 },
+    /// A boolean byte that is neither 0 nor 1.
+    BadBool { field: &'static str, value: u8 },
+    /// A string field that is not valid UTF-8.
+    BadUtf8 { field: &'static str },
+    /// Bytes left over after a complete result was decoded.
+    TrailingBytes { extra: usize },
+    /// Invalid base64 text (bad character, bad padding, or bad length).
+    BadBase64 { reason: &'static str },
+}
+
+impl std::fmt::Display for CodecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodecError::BadMagic => {
+                write!(f, "bad magic (not a {} payload or a stale format version)",
+                    String::from_utf8_lossy(MAGIC))
+            }
+            CodecError::Truncated { field, need, have } => {
+                write!(f, "truncated at '{field}': need {need} bytes, have {have}")
+            }
+            CodecError::BadLength { field } => {
+                write!(f, "declared length of '{field}' exceeds the payload")
+            }
+            CodecError::BadEnum { field, value } => {
+                write!(f, "unknown '{field}' discriminant {value}")
+            }
+            CodecError::BadBool { field, value } => {
+                write!(f, "'{field}' byte {value} is not a boolean (0|1)")
+            }
+            CodecError::BadUtf8 { field } => write!(f, "'{field}' is not valid UTF-8"),
+            CodecError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing byte(s) after a complete result")
+            }
+            CodecError::BadBase64 { reason } => write!(f, "bad base64: {reason}"),
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, x: f64) {
+    out.extend_from_slice(&x.to_bits().to_le_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    debug_assert!(s.len() <= u32::MAX as usize, "scenario/policy names are short");
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn quality_tag(q: QualityClass) -> u8 {
+    // Dispatch priority doubles as the stable wire discriminant.
+    q.priority() as u8
+}
+
+fn reason_tag(r: ShedReason) -> u8 {
+    match r {
+        ShedReason::DeadlineBreach => 0,
+        ShedReason::Unstable => 1,
+    }
+}
+
+/// Encode a full result. Infallible: every `SimResult` the engine can
+/// produce has a representation.
+pub fn encode_result(r: &SimResult) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        128 + r.scenario_name.len()
+            + r.policy_name.len()
+            + COMPLETED_RECORD_LEN * r.completed.len()
+            + SHED_RECORD_LEN * r.shed.len(),
+    );
+    out.extend_from_slice(MAGIC);
+    put_str(&mut out, &r.scenario_name);
+    put_str(&mut out, &r.policy_name);
+    put_u64(&mut out, r.generated as u64);
+    put_u64(&mut out, r.unfinished as u64);
+    put_u64(&mut out, r.unfinished_post_warmup as u64);
+    put_u64(&mut out, r.scale_outs);
+    put_u64(&mut out, r.scale_ins);
+    put_u32(&mut out, r.peak_replicas);
+    put_f64(&mut out, r.mean_replicas);
+    put_u64(&mut out, r.crashes);
+    put_u64(&mut out, r.events);
+    put_u64(&mut out, r.fluid_batched);
+    let t = &r.tail;
+    put_u64(&mut out, t.copies_enqueued);
+    put_u64(&mut out, t.hedges_launched);
+    put_u64(&mut out, t.shed);
+    put_u64(&mut out, t.wins);
+    put_u64(&mut out, t.losers_finished);
+    put_u64(&mut out, t.cancelled);
+    put_u64(&mut out, t.stale_dropped);
+    put_u64(&mut out, t.crash_tombstoned);
+    put_u64(&mut out, t.residual_copies);
+    put_f64(&mut out, t.busy_time);
+    put_f64(&mut out, t.wasted_time);
+    put_u64(&mut out, r.completed.len() as u64);
+    for c in &r.completed {
+        put_u64(&mut out, c.id);
+        put_f64(&mut out, c.arrived);
+        put_f64(&mut out, c.finished);
+        out.push(quality_tag(c.quality));
+        out.push(u8::from(c.offloaded));
+    }
+    put_u64(&mut out, r.shed.len() as u64);
+    for s in &r.shed {
+        put_u64(&mut out, s.id);
+        put_f64(&mut out, s.at);
+        out.push(quality_tag(s.quality));
+        out.push(reason_tag(s.reason));
+        put_f64(&mut out, s.predicted);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked reader over the payload. Every `take_*` returns a
+/// named error instead of indexing past the end.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, field: &'static str) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Truncated {
+                field,
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn take_u32(&mut self, field: &'static str) -> Result<u32, CodecError> {
+        let b = self.take(4, field)?;
+        Ok(u32::from_le_bytes(b.try_into().expect("4 bytes")))
+    }
+
+    fn take_u64(&mut self, field: &'static str) -> Result<u64, CodecError> {
+        let b = self.take(8, field)?;
+        Ok(u64::from_le_bytes(b.try_into().expect("8 bytes")))
+    }
+
+    fn take_f64(&mut self, field: &'static str) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.take_u64(field)?))
+    }
+
+    fn take_str(&mut self, field: &'static str) -> Result<String, CodecError> {
+        let len = self.take_u32(field)? as usize;
+        if len > self.remaining() {
+            return Err(CodecError::BadLength { field });
+        }
+        let bytes = self.take(len, field)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::BadUtf8 { field })
+    }
+
+    fn take_bool(&mut self, field: &'static str) -> Result<bool, CodecError> {
+        match self.take(1, field)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            value => Err(CodecError::BadBool { field, value }),
+        }
+    }
+
+    fn take_quality(&mut self, field: &'static str) -> Result<QualityClass, CodecError> {
+        match self.take(1, field)?[0] {
+            0 => Ok(QualityClass::LowLatency),
+            1 => Ok(QualityClass::Balanced),
+            2 => Ok(QualityClass::Precise),
+            value => Err(CodecError::BadEnum { field, value }),
+        }
+    }
+
+    fn take_reason(&mut self, field: &'static str) -> Result<ShedReason, CodecError> {
+        match self.take(1, field)?[0] {
+            0 => Ok(ShedReason::DeadlineBreach),
+            1 => Ok(ShedReason::Unstable),
+            value => Err(CodecError::BadEnum { field, value }),
+        }
+    }
+
+    /// A declared record count, capped by what could physically fit in
+    /// the remaining bytes — a corrupted count can neither over-allocate
+    /// nor spin the decode loop.
+    fn take_count(
+        &mut self,
+        field: &'static str,
+        min_record_len: usize,
+    ) -> Result<usize, CodecError> {
+        let n = self.take_u64(field)?;
+        if n > (self.remaining() / min_record_len) as u64 {
+            return Err(CodecError::BadLength { field });
+        }
+        Ok(n as usize)
+    }
+}
+
+/// Decode a payload produced by [`encode_result`], bit-identical to the
+/// original. Never panics; malformed input yields a named [`CodecError`].
+pub fn decode_result(bytes: &[u8]) -> Result<SimResult, CodecError> {
+    let mut c = Cursor::new(bytes);
+    if c.take(MAGIC.len(), "magic")? != MAGIC {
+        return Err(CodecError::BadMagic);
+    }
+    let scenario_name = c.take_str("scenario_name")?;
+    let policy_name = c.take_str("policy_name")?;
+    let generated = c.take_u64("generated")? as usize;
+    let unfinished = c.take_u64("unfinished")? as usize;
+    let unfinished_post_warmup = c.take_u64("unfinished_post_warmup")? as usize;
+    let scale_outs = c.take_u64("scale_outs")?;
+    let scale_ins = c.take_u64("scale_ins")?;
+    let peak_replicas = c.take_u32("peak_replicas")?;
+    let mean_replicas = c.take_f64("mean_replicas")?;
+    let crashes = c.take_u64("crashes")?;
+    let events = c.take_u64("events")?;
+    let fluid_batched = c.take_u64("fluid_batched")?;
+    let tail = TailCounters {
+        copies_enqueued: c.take_u64("tail.copies_enqueued")?,
+        hedges_launched: c.take_u64("tail.hedges_launched")?,
+        shed: c.take_u64("tail.shed")?,
+        wins: c.take_u64("tail.wins")?,
+        losers_finished: c.take_u64("tail.losers_finished")?,
+        cancelled: c.take_u64("tail.cancelled")?,
+        stale_dropped: c.take_u64("tail.stale_dropped")?,
+        crash_tombstoned: c.take_u64("tail.crash_tombstoned")?,
+        residual_copies: c.take_u64("tail.residual_copies")?,
+        busy_time: c.take_f64("tail.busy_time")?,
+        wasted_time: c.take_f64("tail.wasted_time")?,
+    };
+    let n_completed = c.take_count("completed.len", COMPLETED_RECORD_LEN)?;
+    let mut completed = Vec::with_capacity(n_completed);
+    for _ in 0..n_completed {
+        completed.push(CompletedRequest {
+            id: c.take_u64("completed.id")?,
+            arrived: c.take_f64("completed.arrived")?,
+            finished: c.take_f64("completed.finished")?,
+            quality: c.take_quality("completed.quality")?,
+            offloaded: c.take_bool("completed.offloaded")?,
+        });
+    }
+    let n_shed = c.take_count("shed.len", SHED_RECORD_LEN)?;
+    let mut shed = Vec::with_capacity(n_shed);
+    for _ in 0..n_shed {
+        shed.push(ShedRecord {
+            id: c.take_u64("shed.id")?,
+            at: c.take_f64("shed.at")?,
+            quality: c.take_quality("shed.quality")?,
+            reason: c.take_reason("shed.reason")?,
+            predicted: c.take_f64("shed.predicted")?,
+        });
+    }
+    if c.remaining() > 0 {
+        return Err(CodecError::TrailingBytes {
+            extra: c.remaining(),
+        });
+    }
+    Ok(SimResult {
+        scenario_name,
+        policy_name,
+        completed,
+        generated,
+        unfinished,
+        unfinished_post_warmup,
+        scale_outs,
+        scale_ins,
+        peak_replicas,
+        mean_replicas,
+        crashes,
+        events,
+        shed,
+        tail,
+        fluid_batched,
+        cache: Default::default(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Base64 (binary payloads inside line-delimited JSON frames)
+// ---------------------------------------------------------------------------
+
+const B64_ALPHABET: &[u8; 64] =
+    b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789+/";
+
+/// Standard base64 with `=` padding: the binary frame format rides the
+/// existing one-line JSON envelope, so the fabric's chaos/respawn
+/// machinery is format-agnostic.
+pub fn b64_encode(data: &[u8]) -> String {
+    let mut out = String::with_capacity(data.len().div_ceil(3) * 4);
+    for chunk in data.chunks(3) {
+        let b0 = chunk[0] as u32;
+        let b1 = chunk.get(1).copied().unwrap_or(0) as u32;
+        let b2 = chunk.get(2).copied().unwrap_or(0) as u32;
+        let triple = (b0 << 16) | (b1 << 8) | b2;
+        out.push(B64_ALPHABET[(triple >> 18) as usize & 63] as char);
+        out.push(B64_ALPHABET[(triple >> 12) as usize & 63] as char);
+        out.push(if chunk.len() > 1 {
+            B64_ALPHABET[(triple >> 6) as usize & 63] as char
+        } else {
+            '='
+        });
+        out.push(if chunk.len() > 2 {
+            B64_ALPHABET[triple as usize & 63] as char
+        } else {
+            '='
+        });
+    }
+    out
+}
+
+fn b64_value(c: u8) -> Option<u32> {
+    match c {
+        b'A'..=b'Z' => Some((c - b'A') as u32),
+        b'a'..=b'z' => Some((c - b'a' + 26) as u32),
+        b'0'..=b'9' => Some((c - b'0' + 52) as u32),
+        b'+' => Some(62),
+        b'/' => Some(63),
+        _ => None,
+    }
+}
+
+/// Decode standard padded base64; any malformation is a named error,
+/// never a panic.
+pub fn b64_decode(s: &str) -> Result<Vec<u8>, CodecError> {
+    let bytes = s.as_bytes();
+    if bytes.len() % 4 != 0 {
+        return Err(CodecError::BadBase64 {
+            reason: "length is not a multiple of 4",
+        });
+    }
+    let mut out = Vec::with_capacity(bytes.len() / 4 * 3);
+    for (k, quad) in bytes.chunks(4).enumerate() {
+        let last = k + 1 == bytes.len() / 4;
+        let pad = quad.iter().rev().take_while(|&&c| c == b'=').count();
+        if pad > 2 || (pad > 0 && !last) {
+            return Err(CodecError::BadBase64 {
+                reason: "padding only allowed at the end (at most 2 bytes)",
+            });
+        }
+        let mut triple: u32 = 0;
+        for &c in &quad[..4 - pad] {
+            let v = b64_value(c).ok_or(CodecError::BadBase64 {
+                reason: "character outside the base64 alphabet",
+            })?;
+            triple = (triple << 6) | v;
+        }
+        triple <<= 6 * pad as u32;
+        out.push((triple >> 16) as u8);
+        if pad < 2 {
+            out.push((triple >> 8) as u8);
+        }
+        if pad < 1 {
+            out.push(triple as u8);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A synthetic result exercising every field, including
+    /// non-representable float sums, specials, and u64 values past 2^53
+    /// (the cases the JSON wire format carries as strings).
+    fn sample() -> SimResult {
+        SimResult {
+            scenario_name: "codec-test".into(),
+            policy_name: "la-imr".into(),
+            completed: vec![
+                CompletedRequest {
+                    id: 3,
+                    arrived: 0.1 + 0.2,
+                    finished: 1.0 / 3.0,
+                    quality: QualityClass::LowLatency,
+                    offloaded: true,
+                },
+                CompletedRequest {
+                    id: (1 << 60) + 7,
+                    arrived: f64::MIN_POSITIVE,
+                    finished: 1e308,
+                    quality: QualityClass::Precise,
+                    offloaded: false,
+                },
+            ],
+            generated: 5,
+            unfinished: 1,
+            unfinished_post_warmup: 1,
+            scale_outs: 2,
+            scale_ins: 1,
+            peak_replicas: 4,
+            mean_replicas: 2.5000000000000004,
+            crashes: 1,
+            events: (1 << 53) + 1,
+            shed: vec![ShedRecord {
+                id: 9,
+                at: 2.5,
+                quality: QualityClass::Balanced,
+                reason: ShedReason::Unstable,
+                predicted: 0.30000000000000004,
+            }],
+            tail: TailCounters {
+                copies_enqueued: 7,
+                hedges_launched: 2,
+                shed: 1,
+                wins: 4,
+                losers_finished: 1,
+                cancelled: 1,
+                stale_dropped: 0,
+                crash_tombstoned: 1,
+                residual_copies: 0,
+                busy_time: 1.1,
+                wasted_time: 0.1 * 3.0,
+            },
+            fluid_batched: 3,
+            cache: Default::default(),
+        }
+    }
+
+    fn assert_bits_equal(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.scenario_name, b.scenario_name);
+        assert_eq!(a.policy_name, b.policy_name);
+        assert_eq!(a.generated, b.generated);
+        assert_eq!(a.unfinished, b.unfinished);
+        assert_eq!(a.unfinished_post_warmup, b.unfinished_post_warmup);
+        assert_eq!(a.scale_outs, b.scale_outs);
+        assert_eq!(a.scale_ins, b.scale_ins);
+        assert_eq!(a.peak_replicas, b.peak_replicas);
+        assert_eq!(a.mean_replicas.to_bits(), b.mean_replicas.to_bits());
+        assert_eq!(a.crashes, b.crashes);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.fluid_batched, b.fluid_batched);
+        assert_eq!(a.tail, b.tail);
+        assert_eq!(a.tail.busy_time.to_bits(), b.tail.busy_time.to_bits());
+        assert_eq!(a.tail.wasted_time.to_bits(), b.tail.wasted_time.to_bits());
+        assert_eq!(a.completed.len(), b.completed.len());
+        for (x, y) in a.completed.iter().zip(&b.completed) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.arrived.to_bits(), y.arrived.to_bits());
+            assert_eq!(x.finished.to_bits(), y.finished.to_bits());
+            assert_eq!(x.quality, y.quality);
+            assert_eq!(x.offloaded, y.offloaded);
+        }
+        assert_eq!(a.shed.len(), b.shed.len());
+        for (x, y) in a.shed.iter().zip(&b.shed) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.at.to_bits(), y.at.to_bits());
+            assert_eq!(x.quality, y.quality);
+            assert_eq!(x.reason, y.reason);
+            assert_eq!(x.predicted.to_bits(), y.predicted.to_bits());
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let r = sample();
+        let bytes = encode_result(&r);
+        let back = decode_result(&bytes).unwrap();
+        assert_bits_equal(&r, &back);
+        // Deterministic encoding: same result, same bytes.
+        assert_eq!(bytes, encode_result(&back));
+    }
+
+    #[test]
+    fn float_specials_roundtrip_by_bits() {
+        let mut r = sample();
+        r.mean_replicas = f64::NAN;
+        r.tail.busy_time = f64::INFINITY;
+        r.tail.wasted_time = f64::NEG_INFINITY;
+        r.completed[0].arrived = -0.0;
+        r.shed[0].predicted = f64::from_bits(0x7ff8_dead_beef_0001); // payload NaN
+        let back = decode_result(&encode_result(&r)).unwrap();
+        assert_bits_equal(&r, &back);
+    }
+
+    #[test]
+    fn empty_result_roundtrips() {
+        let mut r = sample();
+        r.completed.clear();
+        r.shed.clear();
+        r.scenario_name = String::new();
+        let back = decode_result(&encode_result(&r)).unwrap();
+        assert_bits_equal(&r, &back);
+    }
+
+    #[test]
+    fn every_truncation_is_a_named_error_not_a_panic() {
+        let bytes = encode_result(&sample());
+        for n in 0..bytes.len() {
+            let err = decode_result(&bytes[..n])
+                .expect_err("a strict prefix can never be a complete result");
+            // Any named variant is fine; the point is no panic and no Ok.
+            assert!(!err.to_string().is_empty(), "truncation at {n}");
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut bytes = encode_result(&sample());
+        bytes.push(0x00);
+        assert_eq!(
+            decode_result(&bytes),
+            Err(CodecError::TrailingBytes { extra: 1 })
+        );
+    }
+
+    #[test]
+    fn bad_magic_and_bad_enums_are_named() {
+        let mut bytes = encode_result(&sample());
+        bytes[0] ^= 0xFF;
+        assert_eq!(decode_result(&bytes), Err(CodecError::BadMagic));
+
+        // Corrupt the first completed record's quality tag (fixed offset:
+        // walk the header to find it).
+        let r = sample();
+        let bytes = encode_result(&r);
+        let header = MAGIC.len()
+            + 4 + r.scenario_name.len()
+            + 4 + r.policy_name.len()
+            + 8 * 7 + 4 + 8 // counters through mean_replicas
+            + 8 * 3 // crashes, events, fluid_batched
+            + 8 * 9 + 8 * 2 // tail
+            + 8; // completed.len
+        let quality_at = header + 8 + 8 + 8;
+        let mut bad = bytes.clone();
+        bad[quality_at] = 9;
+        match decode_result(&bad) {
+            Err(CodecError::BadEnum { field, value: 9 }) => {
+                assert_eq!(field, "completed.quality")
+            }
+            other => panic!("expected BadEnum, got {other:?}"),
+        }
+        let mut bad = bytes;
+        bad[quality_at + 1] = 7; // offloaded flag
+        match decode_result(&bad) {
+            Err(CodecError::BadBool { field, value: 7 }) => {
+                assert_eq!(field, "completed.offloaded")
+            }
+            other => panic!("expected BadBool, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn garbage_counts_cannot_overallocate() {
+        // Claim 2^62 completed records in an otherwise-valid header: the
+        // count is capped by the remaining byte budget and rejected.
+        let r = sample();
+        let bytes = encode_result(&r);
+        let count_at = MAGIC.len()
+            + 4 + r.scenario_name.len()
+            + 4 + r.policy_name.len()
+            + 8 * 7 + 4 + 8
+            + 8 * 3
+            + 8 * 9 + 8 * 2;
+        let mut bad = bytes;
+        bad[count_at..count_at + 8].copy_from_slice(&(1u64 << 62).to_le_bytes());
+        assert_eq!(
+            decode_result(&bad),
+            Err(CodecError::BadLength {
+                field: "completed.len"
+            })
+        );
+    }
+
+    #[test]
+    fn random_byte_flips_never_panic() {
+        // Fuzz-ish corpus: flip every byte of a valid encoding, one at a
+        // time. Each mutant must decode to Ok (benign flip, e.g. inside
+        // a float) or a named error — never panic.
+        let bytes = encode_result(&sample());
+        for i in 0..bytes.len() {
+            let mut m = bytes.clone();
+            m[i] ^= 0x5A;
+            let _ = decode_result(&m);
+        }
+    }
+
+    #[test]
+    fn base64_roundtrips() {
+        for data in [
+            &b""[..],
+            &b"f"[..],
+            &b"fo"[..],
+            &b"foo"[..],
+            &b"foob"[..],
+            &b"fooba"[..],
+            &b"foobar"[..],
+            &[0u8, 255, 128, 7, 63][..],
+        ] {
+            let enc = b64_encode(data);
+            assert_eq!(b64_decode(&enc).unwrap(), data, "corpus {data:?}");
+        }
+        // Known vector (RFC 4648).
+        assert_eq!(b64_encode(b"foobar"), "Zm9vYmFy");
+        assert_eq!(b64_encode(b"foob"), "Zm9vYg==");
+    }
+
+    #[test]
+    fn base64_rejects_malformed_input() {
+        assert!(b64_decode("abc").is_err(), "length not multiple of 4");
+        assert!(b64_decode("ab!=").is_err(), "bad character");
+        assert!(b64_decode("a===").is_err(), "over-padding");
+        assert!(b64_decode("ab==cdef").is_err(), "interior padding");
+    }
+
+    #[test]
+    fn encoded_result_survives_base64_transport() {
+        let r = sample();
+        let bytes = encode_result(&r);
+        let wire = b64_encode(&bytes);
+        let back = decode_result(&b64_decode(&wire).unwrap()).unwrap();
+        assert_bits_equal(&r, &back);
+    }
+}

@@ -2,9 +2,12 @@
 //! (only the `xla` crate's vendored tree is available), so the pieces a
 //! serving framework would normally pull from crates.io are implemented
 //! here: a JSON parser/serializer (config + artifact manifest), a CLI
-//! argument parser, and a micro-benchmark harness used by `cargo bench`.
+//! argument parser, a micro-benchmark harness used by `cargo bench`, and
+//! the compact binary `SimResult` codec backing the persistent result
+//! store and the opt-in binary fabric frame format (ISSUE 10).
 
 pub mod bench;
 pub mod cli;
+pub mod codec;
 pub mod json;
 pub mod sha256;

@@ -15,7 +15,9 @@
 //!    `DefaultHasher` output.
 
 use la_imr::config::{Config, ScenarioConfig};
-use la_imr::sim::{content_key, plan_cells, Cell, Fabric, FabricOptions, Policy, Runner};
+use la_imr::sim::{
+    content_key, plan_cells, Cell, Fabric, FabricOptions, FrameFormat, Policy, Runner,
+};
 use la_imr::util::sha256::{hex, Sha256};
 use std::time::Duration;
 
@@ -171,6 +173,38 @@ fn duplicate_cells_share_one_computation() {
     for (k, o) in out.iter().enumerate().skip(1) {
         let r = o.as_ref().expect("fanned duplicate must complete");
         assert_bit_identical(first, r, &format!("duplicate slot {k}"));
+    }
+}
+
+/// ISSUE 10: the opt-in compact binary worker frames are a pure
+/// transport change — the coordinator propagates the format to workers
+/// via argv, and the merged results match the default JSON frames
+/// bit-for-bit over the full acceptance grid.
+#[test]
+fn binary_frame_format_matches_json_bit_for_bit() {
+    let cfg = Config::default();
+    let cells = grid();
+    let json = Fabric::new(FabricOptions::with_command(2, worker_cmd(&[])))
+        .run(&cfg, &cells);
+    let binary = Fabric::new(
+        FabricOptions::with_command(2, worker_cmd(&[]))
+            .with_frame_format(FrameFormat::Binary),
+    )
+    .run(&cfg, &cells);
+    assert_eq!(binary.len(), cells.len());
+    for (k, (j, b)) in json.iter().zip(&binary).enumerate() {
+        let cell = &cells[k];
+        let ctx = format!(
+            "cell {k} (scenario={} policy={} seed={})",
+            cell.scenario.name,
+            cell.policy.name(),
+            cell.scenario.seed
+        );
+        assert_bit_identical(
+            j.as_ref().unwrap_or_else(|e| panic!("{ctx}: json frames: {e}")),
+            b.as_ref().unwrap_or_else(|e| panic!("{ctx}: binary frames: {e}")),
+            &ctx,
+        );
     }
 }
 

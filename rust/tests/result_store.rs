@@ -1,0 +1,353 @@
+//! Persistent content-addressed result store acceptance (ISSUE 10).
+//!
+//! The headline property, proven end-to-end against the real `laimr`
+//! binary: a warm re-run of the scenario-catalog sweep **computes zero
+//! cells** — every unique cell loads from the store — and emits a
+//! byte-identical report. Plus the supporting contracts:
+//!
+//! * **Cross-path key stability** — entries written by the multi-process
+//!   fabric warm-start the in-process serial runner (and vice versa),
+//!   because both key by `content_key`, never `Cell::cache_key`.
+//! * **Knob inertness** — with the store disabled, results are
+//!   bit-identical to a store-enabled cold run on every execution path.
+//! * **Corruption chaos** — bit-flipped, truncated, and misfiled entries
+//!   are diagnosed, recomputed bit-identically, and self-healed; they
+//!   never panic and never poison the sweep.
+//! * **Codec differential** — the compact binary codec and the ISSUE-9
+//!   JSON codec round-trip *computed* results to the same bits.
+
+use la_imr::config::{Config, ScenarioConfig};
+use la_imr::report::{fabric_sweep_report, scenario_catalog};
+use la_imr::sim::fabric::{result_from_json, result_to_json};
+use la_imr::sim::{
+    content_key, plan_cells, Cell, Fabric, FabricOptions, Policy, ResultStore, Runner,
+    SimResult, StoreLookup,
+};
+use la_imr::util::codec;
+use std::fs;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn worker_cmd() -> Vec<String> {
+    vec![
+        env!("CARGO_BIN_EXE_laimr").to_string(),
+        "sweep".to_string(),
+        "--worker".to_string(),
+    ]
+}
+
+/// Fresh (pre-cleaned) store directory under the system temp dir.
+fn temp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "laimr-result-store-{tag}-{}",
+        std::process::id()
+    ));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// The headline grid: the committed scenario catalog × two policies.
+fn catalog_grid() -> Vec<Cell> {
+    plan_cells(
+        &scenario_catalog(42),
+        &[Policy::LaImr, Policy::Static],
+        &[42],
+    )
+}
+
+/// A small fast grid for the chaos and differential tests.
+fn small_grid() -> Vec<Cell> {
+    let mut a = ScenarioConfig::bursty(3.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    a.name = "store-a".into();
+    let mut b = ScenarioConfig::poisson(2.0, 1)
+        .with_duration(40.0, 5.0)
+        .with_replicas(2);
+    b.name = "store-b".into();
+    plan_cells(&[a, b], &[Policy::LaImr, Policy::Static], &[301])
+}
+
+fn assert_bit_identical(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.scenario_name, b.scenario_name, "{ctx}: scenario name");
+    assert_eq!(a.policy_name, b.policy_name, "{ctx}: policy name");
+    assert_eq!(a.generated, b.generated, "{ctx}: generated");
+    assert_eq!(a.unfinished, b.unfinished, "{ctx}: unfinished");
+    assert_eq!(
+        a.unfinished_post_warmup, b.unfinished_post_warmup,
+        "{ctx}: unfinished_post_warmup"
+    );
+    assert_eq!(a.events, b.events, "{ctx}: event count");
+    assert_eq!(a.crashes, b.crashes, "{ctx}: crashes");
+    assert_eq!(a.scale_outs, b.scale_outs, "{ctx}: scale_outs");
+    assert_eq!(a.scale_ins, b.scale_ins, "{ctx}: scale_ins");
+    assert_eq!(a.peak_replicas, b.peak_replicas, "{ctx}: peak replicas");
+    assert_eq!(a.fluid_batched, b.fluid_batched, "{ctx}: fluid_batched");
+    assert_eq!(
+        a.mean_replicas.to_bits(),
+        b.mean_replicas.to_bits(),
+        "{ctx}: mean_replicas bits"
+    );
+    assert_eq!(a.tail, b.tail, "{ctx}: tail counters");
+    assert_eq!(a.completed.len(), b.completed.len(), "{ctx}: completions");
+    for (x, y) in a.completed.iter().zip(&b.completed) {
+        assert_eq!(x.id, y.id, "{ctx}: completion id");
+        assert_eq!(x.arrived.to_bits(), y.arrived.to_bits(), "{ctx}: arrived");
+        assert_eq!(x.finished.to_bits(), y.finished.to_bits(), "{ctx}: finished");
+        assert_eq!(x.quality, y.quality, "{ctx}: quality lane");
+        assert_eq!(x.offloaded, y.offloaded, "{ctx}: offload flag");
+    }
+    assert_eq!(a.shed.len(), b.shed.len(), "{ctx}: shed records");
+    for (x, y) in a.shed.iter().zip(&b.shed) {
+        assert_eq!(x.id, y.id, "{ctx}: shed id");
+        assert_eq!(x.at.to_bits(), y.at.to_bits(), "{ctx}: shed time bits");
+        assert_eq!(x.quality, y.quality, "{ctx}: shed quality");
+        assert_eq!(x.reason, y.reason, "{ctx}: shed reason");
+        assert_eq!(
+            x.predicted.to_bits(),
+            y.predicted.to_bits(),
+            "{ctx}: shed prediction bits"
+        );
+    }
+}
+
+/// Headline gate: cold catalog sweep populates the store; a warm re-run
+/// through a *fresh* fabric and a *fresh* store handle dispatches zero
+/// cells, reads every cell from disk, and prints a byte-identical
+/// report. The same directory then warm-starts the in-process serial
+/// runner — cross-path key stability.
+#[test]
+fn warm_catalog_sweep_computes_nothing_and_reports_identically() {
+    let cfg = Config::default();
+    let cells = catalog_grid();
+    assert_eq!(cells.len(), 18, "catalog grid shape changed");
+    let dir = temp_store("warm-gate");
+
+    // Cold: everything dispatched, everything written back.
+    let cold_store = Arc::new(ResultStore::open(&dir).unwrap());
+    let cold_opts = FabricOptions::with_command(2, worker_cmd())
+        .with_store(Arc::clone(&cold_store));
+    let (cold, cold_stats) = Fabric::new(cold_opts).run_with_stats(&cfg, &cells);
+    for (cell, o) in cells.iter().zip(&cold) {
+        assert!(
+            o.is_ok(),
+            "cold cell {} must compute: {:?}",
+            cell.scenario.name,
+            o.as_ref().err()
+        );
+    }
+    assert_eq!(cold_stats.dispatched, 18, "cold run computes every cell");
+    assert_eq!(cold_stats.store_hits, 0);
+    assert_eq!(cold_stats.store_writes, 18, "every result persisted");
+    let cold_report = fabric_sweep_report(&cfg, &cells, &cold);
+
+    // Warm: a fresh fabric over a fresh store handle — zero dispatches,
+    // and the fresh handle's own tally proves nothing was recomputed
+    // (hits only, no writes).
+    let warm_store = Arc::new(ResultStore::open(&dir).unwrap());
+    let warm_opts = FabricOptions::with_command(2, worker_cmd())
+        .with_store(Arc::clone(&warm_store));
+    let (warm, warm_stats) = Fabric::new(warm_opts).run_with_stats(&cfg, &cells);
+    assert_eq!(warm_stats.dispatched, 0, "warm run must compute nothing");
+    assert_eq!(warm_stats.store_hits, 18, "every cell loads from disk");
+    assert_eq!(warm_stats.store_writes, 0);
+    let t = warm_store.tally();
+    assert_eq!((t.hits, t.misses, t.corrupt, t.writes), (18, 0, 0, 0));
+    for (k, (c, w)) in cold.iter().zip(&warm).enumerate() {
+        let ctx = format!("warm cell {k} ({})", cells[k].scenario.name);
+        assert_bit_identical(
+            c.as_ref().unwrap(),
+            w.as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}")),
+            &ctx,
+        );
+    }
+    let warm_report = fabric_sweep_report(&cfg, &cells, &warm);
+    assert_eq!(cold_report, warm_report, "warm report must be byte-identical");
+
+    // Cross-path: the serial in-process runner keys by the same
+    // content_key, so fabric-written entries warm-start it too.
+    let serial_store = Arc::new(ResultStore::open(&dir).unwrap());
+    let serial = Runner::serial()
+        .with_store(Arc::clone(&serial_store))
+        .run(&cfg, &cells);
+    let t = serial_store.tally();
+    assert_eq!(
+        (t.hits, t.misses, t.corrupt, t.writes),
+        (18, 0, 0, 0),
+        "serial runner must load every cell from the fabric-written store"
+    );
+    for (k, (c, s)) in cold.iter().zip(&serial).enumerate() {
+        let ctx = format!("serial-from-store cell {k} ({})", cells[k].scenario.name);
+        assert_bit_identical(c.as_ref().unwrap(), s, &ctx);
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Knob inertness: with no `--cache-dir` nothing changes — a store-less
+/// serial run, a store-enabled cold serial run, and a store-enabled cold
+/// fabric run all agree bit-for-bit.
+#[test]
+fn disabled_store_is_bit_identical_to_cold_enabled_store() {
+    let cfg = Config::default();
+    let cells = small_grid();
+    let dir = temp_store("inert");
+
+    let plain = Runner::serial().run(&cfg, &cells);
+    let serial_cold = Runner::serial()
+        .with_store(Arc::new(ResultStore::open(dir.join("serial")).unwrap()))
+        .run(&cfg, &cells);
+    let fabric_opts = FabricOptions::with_command(2, worker_cmd())
+        .with_store(Arc::new(ResultStore::open(dir.join("fabric")).unwrap()));
+    let (fabric_cold, stats) = Fabric::new(fabric_opts).run_with_stats(&cfg, &cells);
+    assert_eq!(stats.dispatched, cells.len(), "cold fabric computes all");
+
+    for (k, ((p, s), f)) in plain.iter().zip(&serial_cold).zip(&fabric_cold).enumerate() {
+        let ctx = format!("inert cell {k} ({})", cells[k].scenario.name);
+        assert_bit_identical(p, s, &format!("{ctx} plain vs serial+store"));
+        assert_bit_identical(
+            p,
+            f.as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}")),
+            &format!("{ctx} plain vs fabric+store"),
+        );
+    }
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Corruption chaos: flip a bit in one entry, truncate a second, misfile
+/// a third under the wrong key. The warm run diagnoses all three,
+/// recomputes them bit-identically, rewrites clean entries, and serves
+/// the untouched fourth from disk.
+#[test]
+fn corrupt_entries_recompute_bit_identically_and_self_heal() {
+    let cfg = Config::default();
+    let cells = small_grid();
+    assert_eq!(cells.len(), 4, "chaos choreography needs exactly 4 cells");
+    let dir = temp_store("chaos");
+
+    let reference = Runner::serial()
+        .with_store(Arc::new(ResultStore::open(&dir).unwrap()))
+        .run(&cfg, &cells);
+    let keys: Vec<String> = cells.iter().map(|c| content_key(&cfg, c)).collect();
+    let entry = |key: &str| dir.join(format!("{key}.laimr"));
+
+    // Bit flip in cell 0's payload.
+    let mut bytes = fs::read(entry(&keys[0])).unwrap();
+    *bytes.last_mut().unwrap() ^= 0x80;
+    fs::write(entry(&keys[0]), &bytes).unwrap();
+    // Truncate cell 1 mid-payload (torn write).
+    let bytes = fs::read(entry(&keys[1])).unwrap();
+    fs::write(entry(&keys[1]), &bytes[..bytes.len() - 7]).unwrap();
+    // Misfile cell 2's (valid) entry under cell 3's key.
+    fs::copy(entry(&keys[2]), entry(&keys[3])).unwrap();
+
+    let store = Arc::new(ResultStore::open(&dir).unwrap());
+    // Direct probes name each failure; the bad files are self-healed.
+    for (i, want) in [(0, "hash mismatch"), (1, "length mismatch"), (3, "content-key mismatch")]
+    {
+        match store.load(&keys[i]) {
+            StoreLookup::Corrupt(reason) => {
+                assert!(reason.contains(want), "cell {i}: got '{reason}'")
+            }
+            other => panic!("cell {i}: expected corrupt, got {other:?}"),
+        }
+        assert!(!entry(&keys[i]).exists(), "cell {i}: bad entry removed");
+    }
+
+    // The sweep recomputes exactly the healed cells, bit-identically.
+    let rerun_store = Arc::new(ResultStore::open(&dir).unwrap());
+    let rerun = Runner::serial()
+        .with_store(Arc::clone(&rerun_store))
+        .run(&cfg, &cells);
+    for (k, (a, b)) in reference.iter().zip(&rerun).enumerate() {
+        assert_bit_identical(a, b, &format!("chaos cell {k}"));
+    }
+    let t = rerun_store.tally();
+    assert_eq!(t.hits, 1, "only the untouched entry survives as a hit");
+    assert_eq!(t.misses, 3, "healed entries read as clean misses");
+    assert_eq!(t.writes, 3, "every recompute is persisted");
+
+    // Store is fully healed: everything verifies and loads again.
+    let healed = ResultStore::open(&dir).unwrap();
+    let audit = healed.verify().unwrap();
+    assert_eq!((audit.ok, audit.corrupt.len()), (4, 0), "store self-healed");
+    fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Codec differential on *computed* results: the ISSUE-10 binary codec
+/// and the ISSUE-9 JSON codec round-trip every cell of a real grid to
+/// the same bits — and the binary encoding is smaller.
+#[test]
+fn binary_and_json_codecs_agree_on_computed_results() {
+    let cfg = Config::default();
+    let cells = small_grid();
+    let results = Runner::serial().run(&cfg, &cells);
+    for (k, r) in results.iter().enumerate() {
+        let ctx = format!("codec cell {k} ({})", cells[k].scenario.name);
+        let via_json = result_from_json(&result_to_json(r))
+            .unwrap_or_else(|e| panic!("{ctx}: json round-trip: {e}"));
+        let bin = codec::encode_result(r);
+        let via_bin = codec::decode_result(&bin)
+            .unwrap_or_else(|e| panic!("{ctx}: binary round-trip: {e}"));
+        assert_bit_identical(r, &via_json, &format!("{ctx}: json"));
+        assert_bit_identical(r, &via_bin, &format!("{ctx}: binary"));
+        assert_bit_identical(&via_json, &via_bin, &format!("{ctx}: json vs binary"));
+        let json_len = la_imr::util::json::to_compact_string(&result_to_json(r)).len();
+        assert!(
+            bin.len() < json_len,
+            "{ctx}: binary ({}) should beat JSON ({json_len})",
+            bin.len()
+        );
+    }
+}
+
+/// The `laimr cache` verbs drive the store end-to-end through the real
+/// binary and the `LAIMR_CACHE_DIR` env var: `stats` counts entries,
+/// `verify` exits non-zero while a corrupt entry exists, `gc` removes it
+/// and a subsequent `verify` is clean.
+#[test]
+fn cache_subcommand_stats_verify_gc_roundtrip() {
+    let cfg = Config::default();
+    let cells = small_grid();
+    let dir = temp_store("cli");
+    Runner::serial()
+        .with_store(Arc::new(ResultStore::open(&dir).unwrap()))
+        .run(&cfg, &cells);
+
+    let run = |verb: &str| {
+        std::process::Command::new(env!("CARGO_BIN_EXE_laimr"))
+            .args(["cache", verb])
+            .env("LAIMR_CACHE_DIR", &dir)
+            .output()
+            .expect("spawn laimr cache")
+    };
+
+    let stats = run("stats");
+    assert!(stats.status.success(), "cache stats must succeed");
+    let text = String::from_utf8_lossy(&stats.stdout).into_owned();
+    assert!(text.contains("entries    : 4"), "stats output:\n{text}");
+
+    // Corrupt one entry: verify fails loudly, gc heals, verify passes.
+    let key = content_key(&cfg, &cells[0]);
+    let path = dir.join(format!("{key}.laimr"));
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+
+    let verify = run("verify");
+    assert!(!verify.status.success(), "verify must fail on corruption");
+    let text = String::from_utf8_lossy(&verify.stdout).into_owned();
+    assert!(text.contains("ok         : 3"), "verify output:\n{text}");
+    assert!(text.contains("corrupt    : "), "verify output:\n{text}");
+
+    let gc = run("gc");
+    assert!(gc.status.success(), "gc must succeed");
+    let text = String::from_utf8_lossy(&gc.stdout).into_owned();
+    assert!(text.contains("kept       : 3"), "gc output:\n{text}");
+    assert!(
+        text.contains("removed    : 1 corrupt"),
+        "gc output:\n{text}"
+    );
+
+    let verify = run("verify");
+    assert!(verify.status.success(), "post-gc verify must pass");
+    fs::remove_dir_all(&dir).unwrap();
+}
